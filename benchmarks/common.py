@@ -1,0 +1,124 @@
+"""Shared benchmark harness: train small LMs on the synthetic corpus once,
+cache them, and expose calibration tapes + eval sets.
+
+The paper evaluates PTQ on pretrained LLaMA/Qwen checkpoints; offline we
+train small same-family models to convergence-ish on a deterministic corpus
+so that quantization-induced PPL degradation is meaningful and method
+orderings can be validated (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_smoke_config
+from repro.core.metrics import perplexity
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import ModelConfig, forward, init_params
+from repro.quant import calibrate, reduce_shared
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import OptConfig, init_opt_state
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+CKPT_DIR = os.path.join(RESULTS, "bench_models")
+
+VOCAB = 512
+
+
+def bench_config(name: str = "llama", scale: str = "small") -> ModelConfig:
+    """Small trainable analogues of the paper's eval models."""
+    base = {"llama": get_smoke_config("llama3_8b"),
+            "qwen": get_smoke_config("qwen15_7b")}[name]
+    dims = {"small": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                          head_dim=64, d_ff=512, vocab_size=VOCAB),
+            "large": dict(n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+                          head_dim=64, d_ff=1024, vocab_size=VOCAB)}[scale]
+    return base.reduced(**dims, dtype="float32")
+
+
+def get_trained_model(name: str = "llama", scale: str = "small",
+                      steps: int = 300, batch: int = 16, seq: int = 64):
+    """Train (or load cached) a small LM. Returns (cfg, params, corpus)."""
+    cfg = dataclasses.replace(bench_config(name, scale), remat=False)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tag = f"{name}_{scale}_{steps}"
+    mgr = CheckpointManager(os.path.join(CKPT_DIR, tag), keep=1)
+    params = init_params(jax.random.PRNGKey(42), cfg)
+    if mgr.latest_step() is not None:
+        _, st = mgr.restore_latest({"params": params})
+        return cfg, st["params"], corpus
+
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=20,
+                                     total_steps=steps))
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    opt = init_opt_state(params)
+    for i in range(steps):
+        b = {"tokens": corpus.sample(jnp.asarray(i), batch, seq + 1)}
+        params, opt, m = step_fn(params, opt, b)
+        if i % 100 == 0:
+            print(f"  [train {tag}] step {i} loss {float(m['loss']):.3f}",
+                  flush=True)
+    mgr.save(steps, {"params": params})
+    return cfg, params, corpus
+
+
+def get_tape(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
+             seq: int = 64):
+    tape = calibrate(params, cfg, corpus.calibration_batches(n_batches, batch, seq))
+    return reduce_shared(tape, cfg)
+
+
+def eval_ppl(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
+             seq: int = 64) -> float:
+    tot = 0.0
+    for i in range(n_batches):
+        toks = corpus.sample(jnp.asarray(10_000 + i), batch, seq)
+        lg, _, _ = forward(params, cfg, toks)
+        tot += float(perplexity(lg[:, :-1], toks[:, 1:]))
+    return tot / n_batches
+
+
+def eval_acc(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
+             seq: int = 64) -> float:
+    """Next-token top-1 accuracy — the offline stand-in for the zero-shot
+    accuracy columns."""
+    from repro.core.metrics import top1_accuracy
+    tot = 0.0
+    for i in range(n_batches):
+        toks = corpus.sample(jnp.asarray(20_000 + i), batch, seq)
+        lg, _, _ = forward(params, cfg, toks)
+        tot += float(top1_accuracy(lg[:, :-1], toks[:, 1:]))
+    return 100.0 * tot / n_batches
+
+
+def save_json(name: str, obj):
+    import json
+    os.makedirs(os.path.join(RESULTS, "bench"), exist_ok=True)
+    path = os.path.join(RESULTS, "bench", f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def layer_linears(params, cfg):
+    """Iterate (path, W [out,in]) over the scanned-group linear leaves,
+    flattened per layer. Yields numpy arrays with the group axis intact."""
+    out = []
+    for i, blk in enumerate(params["groups"]):
+        def walk(node, path):
+            if isinstance(node, dict):
+                if "w" in node and node["w"].ndim == 3:
+                    out.append((f"b{i}{path}", np.asarray(node["w"])))
+                else:
+                    for k, v in node.items():
+                        walk(v, f"{path}/{k}")
+        walk(blk, "")
+    return out

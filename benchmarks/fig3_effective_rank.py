@@ -1,0 +1,39 @@
+"""Fig. 3: effective rank of E_q·X across layers, MHSA vs FFN."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quantizers import W4, fake_quant_weight
+from repro.core.whitening import effective_rank
+from .common import get_trained_model, save_json
+
+
+def run(verbose=True):
+    cfg, params, corpus = get_trained_model("llama")
+    from repro.models import forward
+    toks = corpus.sample(jnp.asarray(5001), 8, 64)
+    tape = {}
+    forward(params, cfg, toks, tape=tape)
+
+    rows = []
+    bt = tape["groups"]["b0"]
+    blk = params["groups"][0]
+    for g in range(cfg.n_layers):
+        row = {"layer": g}
+        for label, (mod, leaf) in {"attn.wq": ("attn", "wq"),
+                                   "attn.wo": ("attn", "wo"),
+                                   "mlp.gate": ("mlp", "gate"),
+                                   "mlp.down": ("mlp", "down")}.items():
+            gram = np.asarray(bt[mod][leaf].gram)[g]
+            w = np.asarray(blk[mod][leaf]["w"])[g].T
+            e = w - np.asarray(fake_quant_weight(jnp.asarray(w), W4))
+            eig = np.sqrt(np.maximum(np.linalg.eigvalsh(e @ gram @ e.T), 0))
+            row[label] = float(effective_rank(jnp.asarray(eig)))
+        rows.append(row)
+        if verbose:
+            print("  ", row)
+    save_json("fig3_effective_rank", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Fig. 6: remaining output error ‖WX − ŴX_q‖_F per layer, by method."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.ref import w4a8_linear_ref
+from repro.models.layers import LinStats
+from repro.quant.apply import PTQConfig, _quantize_one
+from .common import get_tape, get_trained_model, save_json
+
+METHODS = ["rtn", "lorc", "l2qer", "aser", "aser_as"]
+
+
+def run(verbose=True):
+    cfg, params, corpus = get_trained_model("llama")
+    tape = get_tape(cfg, params, corpus)
+    toks = corpus.sample(jnp.asarray(7000), 8, 64)
+    from repro.models import forward
+    cap = {}
+    forward(params, cfg, toks, tape=cap)   # fresh single-batch stats for X
+
+    rows = []
+    bt, blk = tape["groups"]["b0"], params["groups"][0]
+    for g in range(cfg.n_layers):
+        for mod, leaf in [("attn", "wq"), ("attn", "wo"),
+                          ("mlp", "gate"), ("mlp", "down")]:
+            st_full = bt[mod][leaf]
+            st = LinStats(jnp.asarray(np.asarray(st_full.gram)[g]),
+                          jnp.asarray(np.asarray(st_full.abssum)[g]),
+                          jnp.asarray(np.asarray(st_full.absmax)[g]),
+                          jnp.asarray(np.asarray(st_full.count)[g]))
+            w = jnp.asarray(np.asarray(blk[mod][leaf]["w"])[g])  # [k, n]
+            row = {"layer": g, "linear": f"{mod}.{leaf}"}
+            gram = st.gram
+            for method in METHODS:
+                lf = _quantize_one(w, st, PTQConfig(method=method, rank=16,
+                                                    outlier_f=16))
+                # residual via Gram: ‖Δᵀ X‖² = Tr(Δ G Δᵀ) with Δ = w_eff - w
+                from repro.core.quantizers import unpack_int4
+                w_eff = (unpack_int4(lf["qw"].T).T.astype(jnp.float32)
+                         * lf["sw"][None, :]) / lf["m"][:, None] \
+                    + (lf["lb"] / lf["m"][:, None]) @ lf["la"]
+                delta = (w_eff - w.astype(jnp.float32)).T   # [n, k]
+                err = float(jnp.sqrt(jnp.abs(jnp.einsum(
+                    "ok,kl,ol->", delta, gram, delta))))
+                row[method] = err
+            rows.append(row)
+        if verbose and g == 0:
+            print("  layer0:", {k: round(v, 4) for k, v in rows[0].items()
+                                if k not in ("layer", "linear")})
+    save_json("fig6_compensation", rows)
+    # claim: ASER(w/ AS) ≤ LoRC ≤ RTN on average
+    means = {m: float(np.mean([r[m] for r in rows])) for m in METHODS}
+    if verbose:
+        print("  mean remaining error:", {k: round(v, 4) for k, v in means.items()})
+    assert means["aser_as"] < means["lorc"] < means["rtn"], means
+    return rows
+
+
+if __name__ == "__main__":
+    run()

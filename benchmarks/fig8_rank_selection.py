@@ -1,0 +1,37 @@
+"""Fig. 8 (appendix): per-layer rank selected by the α threshold."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quantizers import W4, fake_quant_weight
+from repro.core.whitening import cholesky_whitener, rank_from_alpha, whiten_svd
+from .common import get_tape, get_trained_model, save_json
+
+
+def run(verbose=True):
+    cfg, params, corpus = get_trained_model("llama")
+    tape = get_tape(cfg, params, corpus)
+    bt, blk = tape["groups"]["b0"], params["groups"][0]
+    alphas = (0.015, 0.03, 0.05, 0.1)
+    rows = []
+    for g in range(cfg.n_layers):
+        row = {"layer": g}
+        st = bt["mlp"]["gate"]
+        gram = jnp.asarray(np.asarray(st.gram)[g])
+        w = jnp.asarray(np.asarray(blk["mlp"]["gate"]["w"])[g]).T
+        e = w - fake_quant_weight(w, W4)
+        s = cholesky_whitener(gram, damp=1e-3)
+        _, sig, _ = whiten_svd(e, s)
+        for a in alphas:
+            row[f"alpha_{a}"] = int(rank_from_alpha(sig, a))
+        rows.append(row)
+        if verbose:
+            print("  ", row)
+    save_json("fig8_rank_selection", rows)
+    for r in rows:   # rank monotone in alpha per layer
+        vals = [r[f"alpha_{a}"] for a in alphas]
+        assert vals == sorted(vals), r
+    return rows
+
+
+if __name__ == "__main__":
+    run()

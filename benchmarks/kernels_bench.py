@@ -1,0 +1,60 @@
+"""Kernel benchmark: correctness sweep + modeled TPU tile economics.
+
+Wall-clock on CPU interpret mode is meaningless; instead we verify
+allclose across serving shapes and report the modeled VMEM footprint and
+arithmetic intensity per BlockSpec choice (what the TPU scheduler sees).
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import W4, pack_int4, quantize_weight
+from repro.kernels import act_quant, w4a8_gemm
+from repro.kernels import ref as kref
+from .common import save_json
+
+
+def vmem_bytes(bm, bn, bk, r):
+    """Per-step VMEM working set of the w4a8 kernel."""
+    return (bm * bk                    # xq int8
+            + bk // 2 * bn             # packed weights
+            + bm * bn * 4              # int32 accumulator
+            + bm * 4 + bn * 4          # scales
+            + bm * r * 4 + r * bn * 4  # low-rank epilogue
+            )
+
+
+def run(verbose=True):
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, k, n, r) in [(128, 2048, 2048, 64), (256, 4096, 4096, 64),
+                         (512, 2048, 8192, 64)]:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+        codes, sw = quantize_weight(w, W4)
+        qw = pack_int4(codes).T
+        mdiag = jnp.ones((k,), jnp.float32)
+        lb = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32) * 0.01)
+        la = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32) * 0.01)
+        y_ref = kref.w4a8_linear_ref(x, qw, sw[:, 0], mdiag, lb, la)
+        xq, sx, xlr = act_quant(x, mdiag, lb)
+        y = w4a8_gemm(xq, sx, qw, sw[:, 0], xlr, la)
+        err = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
+        for (bm, bn, bk) in [(256, 256, 512), (128, 512, 512), (256, 128, 1024)]:
+            vm = vmem_bytes(min(bm, m), min(bn, n), min(bk, k), r)
+            flops = 2 * min(bm, m) * min(bn, n) * min(bk, k)
+            ai = flops / vm
+            rows.append({"m": m, "k": k, "n": n, "r": r, "bm": bm, "bn": bn,
+                         "bk": bk, "vmem_kb": vm / 1024,
+                         "arith_intensity": ai, "max_rel_err": err})
+        if verbose:
+            print(f"  w4a8 {m}x{k}x{n} r{r}: rel err {err:.2e}, "
+                  f"vmem {vmem_bytes(256,256,512,r)/1e6:.2f}MB @ (256,256,512)")
+        assert err < 1e-4
+    save_json("kernels_bench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records(tag=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "dryrun", "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("_")
+        with open(p) as f:
+            r = json.load(f)
+        r["_file"] = base
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs, mesh="single"):
+    rows = [r for r in recs if r["mesh"] == mesh and "_" not in r["_file"].split(mesh)[-1]]
+    rows = [r for r in recs if r["mesh"] == mesh and r["_file"].endswith(mesh)]
+    lines = [
+        "| arch | cell | t_compute(s) | t_memory(s) | t_coll(s) | bottleneck "
+        "| MODEL_FLOPS/HLO | roofline frac | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["cell"])):
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['peak_mem_per_dev_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(verbose=True):
+    recs = load_records()
+    if not recs:
+        print("  (no dry-run records yet — run repro.launch.dryrun first)")
+        return []
+    if verbose:
+        print(markdown_table(recs, "single"))
+        print()
+        multi = [r for r in recs if r["mesh"] == "multi"]
+        print(f"  multi-pod cells passed: {len(multi)}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Run every paper-table/figure benchmark. ``python -m benchmarks.run``."""
+import argparse
+import sys
+import time
+import traceback
+
+from . import (fig2_singular_values, fig3_effective_rank, fig4_outliers,
+               fig5_w8ax, fig6_compensation, fig7_smoothing,
+               fig8_rank_selection, kernels_bench, roofline_report,
+               table3_scale, table4_rank, table12_main, table56_weight_only)
+
+BENCHES = [
+    ("fig2_singular_values", fig2_singular_values),
+    ("fig3_effective_rank", fig3_effective_rank),
+    ("fig4_outliers", fig4_outliers),
+    ("table12_main", table12_main),
+    ("table3_scale", table3_scale),
+    ("fig5_w8ax", fig5_w8ax),
+    ("fig6_compensation", fig6_compensation),
+    ("table4_rank", table4_rank),
+    ("table56_weight_only", table56_weight_only),
+    ("fig7_smoothing", fig7_smoothing),
+    ("fig8_rank_selection", fig8_rank_selection),
+    ("kernels_bench", kernels_bench),
+    ("roofline_report", roofline_report),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--isolate", action="store_true",
+                    help="run each benchmark in a fresh subprocess (XLA's "
+                         "CPU JIT can exhaust dylib slots after ~1e3 "
+                         "compilations in one process)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    if args.isolate:
+        import os
+        import subprocess
+        import sys as _sys
+        failures = []
+        for name, _ in BENCHES:
+            if only and name not in only:
+                continue
+            r = subprocess.run(
+                [_sys.executable, "-m", "benchmarks.run", "--only", name],
+                env=dict(os.environ))
+            if r.returncode:
+                failures.append(name)
+        if failures:
+            print("FAILURES:", failures)
+            _sys.exit(1)
+        print("\nAll benchmarks passed (isolated).")
+        return
+    failures = []
+    for name, mod in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"=== {name} OK ({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            print(f"=== {name} FAILED: {e}", flush=True)
+    if failures:
+        print("\nFAILURES:", failures)
+        sys.exit(1)
+    print("\nAll benchmarks passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Table 3: larger-model W4A8 evaluation (scaled-up bench model)."""
+from repro.kernels import ops
+from repro.quant import PTQConfig, quantize_model
+from .common import eval_acc, eval_ppl, get_tape, get_trained_model, save_json
+
+METHODS = ["llmint4", "smoothquant", "lorc", "l2qer", "aser", "aser_as"]
+
+
+def run(verbose=True):
+    cfg, params, corpus = get_trained_model("qwen", scale="large", steps=300)
+    tape = get_tape(cfg, params, corpus)
+    rows = [{"method": "fp16", "ppl": eval_ppl(cfg, params, corpus),
+             "acc": eval_acc(cfg, params, corpus)}]
+    ops.set_act_bits(8)
+    for method in METHODS:
+        qp = quantize_model(params, tape, PTQConfig(method=method, rank=32,
+                                                    outlier_f=16))
+        rows.append({"method": method, "ppl": eval_ppl(cfg, qp, corpus),
+                     "acc": eval_acc(cfg, qp, corpus)})
+        if verbose:
+            r = rows[-1]
+            print(f"  large W4A8 {method:12s} ppl={r['ppl']:8.3f} "
+                  f"acc={r['acc']:5.2f}")
+    save_json("table3_scale", rows)
+    q = {r["method"]: r["ppl"] for r in rows if r["method"] != "fp16"}
+    # at this scale W4A8 degradation is small and compensation methods tie
+    # within noise; assert the paper's robust ordering: ASER ≤ the
+    # no-compensation baselines, and within epsilon of the best.
+    assert q["aser_as"] <= q["smoothquant"] + 1e-6, q
+    assert q["aser"] <= min(q.values()) + 0.02, q
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Quickstart: quantize one linear layer with ASER and inspect the error.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AserConfig, gram, layer_forward, lorc, l2qer,
+                        quantize_layer)
+from repro.core.metrics import relative_output_error
+from repro.core.quantizers import A8, W4, fake_quant_activation, fake_quant_weight
+
+
+def main():
+    rng = np.random.default_rng(0)
+    d_in, d_out, tokens = 512, 384, 4096
+
+    # a weight matrix and activations with outlier channels (LLM-like)
+    w = jnp.asarray(rng.normal(size=(d_out, d_in)).astype(np.float32))
+    x = rng.normal(size=(d_in, tokens)).astype(np.float32)
+    x[rng.choice(d_in, 8, replace=False)] *= 15.0
+    x = jnp.asarray(x)
+
+    g = gram(x)
+    xbar = jnp.mean(jnp.abs(x), axis=1)
+
+    print("=== W4A8 per-channel quantization of one linear layer ===")
+    wq = fake_quant_weight(w, W4)
+    print(f"RTN            rel output error: "
+          f"{float(relative_output_error(w, wq, x)):.4f}")
+
+    c = lorc(w - wq, 32)
+    print(f"LoRC  (r=32)   rel output error: "
+          f"{float(relative_output_error(w, wq + c.l_a @ c.l_b, x)):.4f}")
+
+    c = l2qer(w - wq, xbar, 32)
+    print(f"L²QER (r=32)   rel output error: "
+          f"{float(relative_output_error(w, wq + c.l_a @ c.l_b, x)):.4f}")
+
+    for smooth in (False, True):
+        layer = quantize_layer(w, g, xbar, AserConfig(rank=32, smooth=smooth,
+                                                      outlier_f=16))
+        y = layer_forward(layer, x,
+                          act_fake_quant=lambda t: fake_quant_activation(t, A8))
+        err = float(jnp.linalg.norm(y - w @ x) / jnp.linalg.norm(w @ x))
+        tag = "w/ A.S." if smooth else "w/o A.S."
+        print(f"ASER {tag} (r=32, W4A8) rel output error: {err:.4f}")
+
+
+if __name__ == "__main__":
+    main()

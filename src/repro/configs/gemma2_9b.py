@@ -1,0 +1,15 @@
+"""Gemma2-9B — alternating local/global attention, logit softcaps,
+sandwich norms, GeGLU. [arXiv:2408.00118; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8,
+    head_dim=256, d_ff=14336, vocab_size=256000,
+    norm="rmsnorm", mlp="geglu",
+    post_block_norm=True, scale_embed=True,
+    sliding_window=4096, local_global_period=2,
+    attn_softcap=50.0, final_softcap=30.0,
+    rope_theta=10000.0, tie_embeddings=True,
+)
+SMOKE = CONFIG.reduced(local_global_period=2, n_layers=4)

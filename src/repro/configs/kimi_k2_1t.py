@@ -1,0 +1,15 @@
+"""Kimi-K2 1T-A32B — trillion-param MoE: 384 experts top-8, 61 layers.
+Assigned spec uses GQA kv=8 (the release uses MLA; we follow the assignment).
+[arXiv:2501.kimi2; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=18432, vocab_size=163840,          # dense lead layer d_ff
+    norm="rmsnorm", mlp="swiglu",
+    n_experts=384, top_k=8, moe_d_ff=2048, n_shared_experts=1,
+    n_dense_layers=1,
+    rope_theta=50000.0, tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced(n_experts=8, top_k=2)

@@ -1,0 +1,11 @@
+"""LLaMA3-8B — the paper's main evaluation model (Tables 1, 5)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256,
+    norm="rmsnorm", mlp="swiglu",
+    rope_theta=500000.0, tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,12 @@
+"""Mamba2-780m — attention-free SSD. [arXiv:2405.21060; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm",
+    n_layers=48, d_model=1536, n_heads=0, n_kv_heads=0, head_dim=1,
+    d_ff=0, vocab_size=50280,
+    norm="rmsnorm",
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv=4,
+    ssm_chunk=256, tie_embeddings=True,
+)
+SMOKE = CONFIG.reduced(n_heads=0, n_kv_heads=0, head_dim=1, d_ff=0)

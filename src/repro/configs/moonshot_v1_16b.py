@@ -1,0 +1,14 @@
+"""Moonshot-v1-16B-A3B (Moonlight) — MoE 64 experts top-6, 1 dense lead
+layer + shared expert (DeepSeek-style). [hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=11264, vocab_size=163840,          # d_ff used by dense lead layer
+    norm="rmsnorm", mlp="swiglu",
+    n_experts=64, top_k=6, moe_d_ff=1408, n_shared_experts=2,
+    n_dense_layers=1,
+    rope_theta=50000.0, tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced()

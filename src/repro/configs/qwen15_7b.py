@@ -1,0 +1,11 @@
+"""Qwen1.5-7B — the paper's second evaluation model (Table 2)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=151936,
+    norm="rmsnorm", mlp="swiglu", qkv_bias=True,
+    rope_theta=1000000.0, tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced()

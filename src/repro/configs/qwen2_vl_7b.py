@@ -1,0 +1,14 @@
+"""Qwen2-VL-7B — M-RoPE backbone; dynamic-resolution vision frontend is a
+stub (input_specs provides patch/token embeddings). [arXiv:2409.12191; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064,
+    norm="rmsnorm", mlp="swiglu", qkv_bias=True,
+    rope_theta=1000000.0,
+    mrope_sections=(16, 24, 24),   # t/h/w splits of hd//2 = 64
+    tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,75 @@
+"""Architecture registry + input-shape cells.
+
+Every assigned architecture gets an exact full config (dry-run only, never
+allocated) and a reduced smoke config (CPU tests). Shapes follow the
+assignment:
+    train_4k     seq 4096   global_batch 256   (train_step)
+    prefill_32k  seq 32768  global_batch 32    (serve prefill)
+    decode_32k   seq 32768  global_batch 128   (serve decode, 1 new token)
+    long_500k    seq 524288 global_batch 1     (long-context decode;
+                 only sub-quadratic archs: mamba2, zamba2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "stablelm_3b", "olmo_1b", "nemotron_4_340b", "gemma2_9b",
+    "whisper_medium", "qwen2_vl_7b", "mamba2_780m", "zamba2_7b",
+    "moonshot_v1_16b", "kimi_k2_1t",
+]
+
+# paper's own evaluation models (used by benchmarks, not the dry-run grid)
+PAPER_IDS = ["llama3_8b", "qwen15_7b"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str      # "train" | "prefill" | "decode"
+
+
+SHAPES: List[ShapeCell] = [
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+]
+
+# archs with sub-quadratic long-context support (run long_500k)
+LONG_CONTEXT_OK = {"mamba2_780m", "zamba2_7b"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return getattr(mod, "SMOKE", mod.CONFIG.reduced())
+
+
+def get_long_config(arch: str) -> ModelConfig:
+    """Config variant used for the long_500k cell (may cap attention windows)."""
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return getattr(mod, "LONG", mod.CONFIG)
+
+
+def cells(arch: str) -> List[ShapeCell]:
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+            continue
+        out.append(s)
+    return out
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s) for a in ARCH_IDS for s in cells(a)]

@@ -1,0 +1,13 @@
+"""StableLM-3B (stablelm-2 family) — dense MHA transformer.
+[hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=6912, vocab_size=50304,
+    norm="layernorm", mlp="swiglu",
+    rope_theta=10000.0, rope_fraction=0.25,   # stablelm partial rotary
+    tie_embeddings=False,
+)
+SMOKE = CONFIG.reduced()

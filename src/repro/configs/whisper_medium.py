@@ -1,0 +1,13 @@
+"""Whisper-medium — encoder-decoder; conv frontend is a stub (input_specs
+provides precomputed frame embeddings). [arXiv:2212.04356; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, n_encoder_layers=24, encoder_seq=1500,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51865,
+    norm="layernorm", mlp="gelu", scale_embed=True,
+    rope_theta=10000.0, tie_embeddings=True,
+)
+SMOKE = CONFIG.reduced(n_layers=2, n_encoder_layers=2, encoder_seq=64)

@@ -1,0 +1,19 @@
+"""Zamba2-7B — Mamba2 backbone + shared attention block every 9 layers
+(81 = 9 groups x 9; the released model interleaves two shared blocks every
+~6 layers — we use one shared block at a divisible period, see DESIGN.md).
+[arXiv:2411.15242; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, head_dim=112,
+    d_ff=14336, vocab_size=32000,
+    norm="rmsnorm", mlp="swiglu",
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=256,
+    shared_attn_period=9,
+    rope_theta=10000.0, tie_embeddings=True,
+)
+# long-context variant: shared attention gets a sliding window
+import dataclasses as _dc
+LONG = _dc.replace(CONFIG, sliding_window=4096)
+SMOKE = CONFIG.reduced(n_layers=4, shared_attn_period=2, head_dim=32)

@@ -1,0 +1,25 @@
+"""Core ASER algorithm + PTQ baselines (paper: AAAI 2025, ASER)."""
+from .quantizers import (QuantConfig, W4, W8, A4, A6, A8, quantize_weight,
+                         dequantize_weight, fake_quant_weight,
+                         quantize_activation, fake_quant_activation,
+                         pack_int4, unpack_int4)
+from .whitening import (gram, cholesky_whitener, whiten_svd, effective_rank,
+                        rank_from_alpha, low_rank_factors)
+from .smoothing import aser_smoothing, smoothquant_scales, outlier_indices
+from .reconstruction import LowRankComp, lorc, l2qer, aser_er, aser_er_alpha
+from .aser import AserConfig, AserLayer, quantize_layer, layer_forward
+from .gptq import gptq_quantize
+from .awq import awq_quantize
+from . import metrics
+
+__all__ = [
+    "QuantConfig", "W4", "W8", "A4", "A6", "A8",
+    "quantize_weight", "dequantize_weight", "fake_quant_weight",
+    "quantize_activation", "fake_quant_activation", "pack_int4", "unpack_int4",
+    "gram", "cholesky_whitener", "whiten_svd", "effective_rank",
+    "rank_from_alpha", "low_rank_factors",
+    "aser_smoothing", "smoothquant_scales", "outlier_indices",
+    "LowRankComp", "lorc", "l2qer", "aser_er", "aser_er_alpha",
+    "AserConfig", "AserLayer", "quantize_layer", "layer_forward",
+    "gptq_quantize", "awq_quantize", "metrics",
+]

@@ -1,0 +1,102 @@
+"""ASER Algorithm 1: per-layer quantization with activation smoothing and
+whitening-SVD error reconstruction.
+
+The layer convention is ``y = W @ x`` (W: [out, in]); calibration provides the
+activation Gram ``G = X Xᵀ`` ([in, in]) and per-channel absolute means X̄.
+The returned artifacts reproduce exactly the paper's serving decomposition:
+
+    y ≈ Q(W_s) (M^{-1} x) + L_A (L_B (M^{-1} x))
+
+where M is identity when activation smoothing is off. The ``m`` diagonal is
+meant to be *folded into the previous op* (norm scale / preceding weight) at
+deployment; the runtime in repro.quant applies it explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .quantizers import QuantConfig, W4, fake_quant_weight, quantize_weight
+from .reconstruction import aser_er, aser_er_alpha
+from .smoothing import aser_smoothing
+
+
+@dataclasses.dataclass(frozen=True)
+class AserConfig:
+    w_cfg: QuantConfig = W4
+    # rank selection: fixed rank if > 0, else α-threshold (Eq. 9)
+    rank: int = 64
+    alpha: float = 0.0
+    max_rank: int = 128
+    # activation smoothing
+    smooth: bool = True
+    outlier_f: int = 32
+    # Cholesky damping for the whitener
+    damp: float = 1e-2
+
+
+class AserLayer(NamedTuple):
+    """Quantized layer artifacts (per linear)."""
+
+    w_q: jnp.ndarray      # fake-quantized (dequantized) smooth weight [out, in]
+    codes: jnp.ndarray    # int codes of Q(W_s) [out, in] (int8 storage)
+    w_scale: jnp.ndarray  # per-channel scales [out, 1]
+    l_a: jnp.ndarray      # [out, r]
+    l_b: jnp.ndarray      # [r, in]
+    m: jnp.ndarray        # smoothing diagonal [in] (ones if smoothing off)
+    rank: jnp.ndarray     # selected rank (scalar int)
+
+
+def smooth_gram(g: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Gram of M^{-1} X given Gram of X: M^{-1} G M^{-1} (M diagonal)."""
+    inv = 1.0 / m
+    return g * inv[:, None] * inv[None, :]
+
+
+def quantize_layer(w: jnp.ndarray, g: jnp.ndarray, x_absmean: jnp.ndarray,
+                   cfg: AserConfig = AserConfig()) -> AserLayer:
+    """Run Algorithm 1 on one linear layer."""
+    w = w.astype(jnp.float32)
+    in_dim = w.shape[1]
+
+    if cfg.smooth:
+        sm = aser_smoothing(w, x_absmean, cfg.outlier_f)
+        m = sm.m
+        w_s = sm.w_smooth
+        # E_q^l = W M - Q(W_s) = (W_s - Q(W_s)) + W_o   (Eq. 12)
+        target_extra = sm.w_outlier
+        g_eff = smooth_gram(g, m)
+    else:
+        m = jnp.ones((in_dim,), jnp.float32)
+        w_s = w
+        target_extra = jnp.zeros_like(w)
+        g_eff = g
+
+    codes, w_scale = quantize_weight(w_s, cfg.w_cfg)
+    w_q = fake_quant_weight(w_s, cfg.w_cfg)
+    e_q = (w_s - w_q) + target_extra
+
+    if cfg.alpha > 0.0:
+        comp, r_sel = aser_er_alpha(e_q, g_eff, cfg.alpha, cfg.max_rank,
+                                    damp=cfg.damp)
+    else:
+        comp = aser_er(e_q, g_eff, cfg.rank, damp=cfg.damp)
+        r_sel = jnp.asarray(cfg.rank, jnp.int32)
+
+    return AserLayer(w_q=w_q, codes=codes, w_scale=w_scale,
+                     l_a=comp.l_a, l_b=comp.l_b, m=m, rank=r_sel)
+
+
+def layer_forward(layer: AserLayer, x: jnp.ndarray,
+                  act_fake_quant=None) -> jnp.ndarray:
+    """Reference forward of a quantized layer: x is [in, tokens].
+
+    ``act_fake_quant`` optionally simulates activation quantization applied to
+    the smoothed activation (the paper's A8/A6 path).
+    """
+    x_s = x / layer.m[:, None]
+    if act_fake_quant is not None:
+        x_s = act_fake_quant(x_s.T).T  # per-token quant expects [tokens, in]
+    return layer.w_q @ x_s + layer.l_a @ (layer.l_b @ x_s)

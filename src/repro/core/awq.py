@@ -1,0 +1,42 @@
+"""AWQ baseline (Lin et al. 2024): activation-aware per-channel weight scaling.
+
+Grid-search the exponent ``a`` of s_j = X̄_j^a, apply W' = W diag(s),
+x' = diag(s)^{-1} x, quantize W' and pick the ``a`` minimizing the output
+error on calibration statistics. Error is evaluated through the Gram matrix:
+
+    ‖(W − Ŵ diag(s)^{-1}) X‖_F² = Tr(Δ G Δᵀ),  Δ = W − Ŵ diag(s)^{-1}
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import QuantConfig, W4, fake_quant_weight
+
+
+def _gram_error(delta: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("oi,ij,oj->", delta, g, delta)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_grid"))
+def awq_quantize(w: jnp.ndarray, g: jnp.ndarray, x_absmean: jnp.ndarray,
+                 cfg: QuantConfig = W4, n_grid: int = 20):
+    """Returns (w_hat_effective [out,in], scales [in]) where
+    ``w_hat_effective = Q(W diag(s)) diag(s)^{-1}`` — drop-in replacement for W.
+    """
+    w = w.astype(jnp.float32)
+    xm = jnp.maximum(x_absmean.astype(jnp.float32), 1e-5)
+
+    def eval_alpha(a):
+        s = jnp.maximum(xm ** a, 1e-5)
+        wq = fake_quant_weight(w * s[None, :], cfg) / s[None, :]
+        return _gram_error(w - wq, g), s
+
+    alphas = jnp.linspace(0.0, 1.0, n_grid)
+    errs, scales = jax.vmap(eval_alpha)(alphas)
+    best = jnp.argmin(errs)
+    s = scales[best]
+    w_hat = fake_quant_weight(w * s[None, :], cfg) / s[None, :]
+    return w_hat, s

@@ -1,0 +1,61 @@
+"""GPTQ baseline (Frantar et al. 2022) in pure JAX.
+
+Column-by-column quantization with Hessian-based error propagation into the
+remaining (not yet quantized) columns. We implement the Cholesky formulation:
+
+    H = X Xᵀ + damp·I ;  Hinv = cholesky_inverse(H)  (upper form)
+    for each column j:   q_j = Q(w_j);  err = (w_j − q_j)/Hinv[j,j]
+                         w_{>j} -= err · Hinv[j, >j]
+
+The loop is a ``lax.fori_loop`` over columns; per-channel (row) scales are
+precomputed from the original W (as in the reference implementation for
+per-channel symmetric quantization).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import QuantConfig, W4
+
+
+def _hinv_cholesky(g: jnp.ndarray, damp: float) -> jnp.ndarray:
+    d = g.shape[0]
+    g = g.astype(jnp.float32)
+    g = g + (damp * jnp.mean(jnp.diag(g)) + 1e-8) * jnp.eye(d, dtype=jnp.float32)
+    # Hinv via Cholesky of the inverse: GPTQ uses chol(inv(H)) upper.
+    hinv = jnp.linalg.inv(g)
+    # upper-triangular factor: chol(hinv)ᵀ
+    l = jnp.linalg.cholesky(hinv)
+    return l.T  # upper
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def gptq_quantize(w: jnp.ndarray, g: jnp.ndarray,
+                  cfg: QuantConfig = W4, damp: float = 1e-2) -> jnp.ndarray:
+    """Returns the fake-quantized weight Ŵ ([out, in])."""
+    w = w.astype(jnp.float32)
+    out, inn = w.shape
+    hinv = _hinv_cholesky(g, damp)
+
+    # Per-channel symmetric scales from the original weights.
+    qmax = cfg.qmax
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=1, keepdims=True), 1e-8) / qmax
+
+    def body(j, carry):
+        w_cur, w_q = carry
+        col = w_cur[:, j]
+        q = jnp.clip(jnp.round(col[:, None] / scale), cfg.qmin, cfg.qmax)[:, 0]
+        deq = q * scale[:, 0]
+        w_q = w_q.at[:, j].set(deq)
+        err = (col - deq) / hinv[j, j]
+        # propagate to remaining columns (mask keeps already-done ones fixed)
+        row = hinv[j, :]
+        mask = (jnp.arange(inn) > j).astype(w_cur.dtype)
+        w_cur = w_cur - jnp.outer(err, row * mask)
+        return (w_cur, w_q)
+
+    _, w_q = jax.lax.fori_loop(0, inn, body, (w, jnp.zeros_like(w)))
+    return w_q

@@ -1,0 +1,51 @@
+"""Quantization quality metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .whitening import effective_rank
+
+
+def output_error(w: jnp.ndarray, w_hat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """‖W X − Ŵ X‖_F (the paper's objective, Eq. 1). x: [in, tokens]."""
+    return jnp.linalg.norm((w - w_hat).astype(jnp.float32) @ x.astype(jnp.float32))
+
+
+def relative_output_error(w, w_hat, x):
+    base = jnp.linalg.norm(w.astype(jnp.float32) @ x.astype(jnp.float32))
+    return output_error(w, w_hat, x) / jnp.maximum(base, 1e-12)
+
+
+def error_effective_rank(e: jnp.ndarray) -> jnp.ndarray:
+    sig = jnp.linalg.svd(e.astype(jnp.float32), compute_uv=False)
+    return effective_rank(sig)
+
+
+def perplexity(logits: jnp.ndarray, labels: jnp.ndarray,
+               mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """PPL from [..., seq, vocab] logits and [..., seq] int labels."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mean_nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.exp(mean_nll)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def top1_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones_like(hit)
+    return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)

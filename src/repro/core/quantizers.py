@@ -1,0 +1,142 @@
+"""Uniform integer quantizers used throughout the framework.
+
+Conventions (match the paper's experimental setup):
+  * Weights:     symmetric, per-output-channel (a row of W in ``y = W @ x``).
+  * Activations: symmetric, per-token (a row of X when X is ``[tokens, d]``).
+
+All functions are pure jnp and jit-able. ``fake_quant*`` returns the
+dequantized float tensor (the standard PTQ simulation); ``quantize*`` returns
+the integer codes + scales for the true-int serving path / Pallas kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization setup for one tensor class."""
+
+    bits: int = 4
+    symmetric: bool = True
+    # granularity: "per_channel" (axis=0 rows), "per_tensor", or
+    # "per_group" with group_size along the reduction axis.
+    granularity: str = "per_channel"
+    group_size: int = -1
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+
+W4 = QuantConfig(bits=4)
+W8 = QuantConfig(bits=8)
+A8 = QuantConfig(bits=8, granularity="per_token")
+A6 = QuantConfig(bits=6, granularity="per_token")
+A4 = QuantConfig(bits=4, granularity="per_token")
+
+
+def _absmax_scale(x: jnp.ndarray, axis, qmax: int) -> jnp.ndarray:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    # Guard all-zero rows; scale==0 would produce NaNs on divide.
+    amax = jnp.maximum(amax, 1e-8)
+    return amax / qmax
+
+
+def quantize_weight(w: jnp.ndarray, cfg: QuantConfig = W4):
+    """Symmetric quantization of a weight matrix ``w`` of shape [out, in].
+
+    Returns (codes int8, scale f32). Per-channel => one scale per out row.
+    Per-group => scales of shape [out, in//group_size].
+    """
+    if cfg.granularity == "per_tensor":
+        scale = _absmax_scale(w, axis=None, qmax=cfg.qmax)
+        codes = jnp.clip(jnp.round(w / scale), cfg.qmin, cfg.qmax)
+        return codes.astype(jnp.int8), scale.astype(jnp.float32)
+    if cfg.granularity == "per_group" and cfg.group_size > 0:
+        out, inn = w.shape
+        g = cfg.group_size
+        wg = w.reshape(out, inn // g, g)
+        scale = _absmax_scale(wg, axis=-1, qmax=cfg.qmax)
+        codes = jnp.clip(jnp.round(wg / scale), cfg.qmin, cfg.qmax)
+        return codes.reshape(out, inn).astype(jnp.int8), scale[..., 0].astype(jnp.float32)
+    # per_channel (paper's setting): one scale per output channel (row).
+    scale = _absmax_scale(w, axis=1, qmax=cfg.qmax)
+    codes = jnp.clip(jnp.round(w / scale), cfg.qmin, cfg.qmax)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_weight(codes: jnp.ndarray, scale: jnp.ndarray,
+                      cfg: QuantConfig = W4) -> jnp.ndarray:
+    if cfg.granularity == "per_group" and cfg.group_size > 0:
+        out, inn = codes.shape
+        g = cfg.group_size
+        return (codes.reshape(out, inn // g, g).astype(jnp.float32)
+                * scale[..., None]).reshape(out, inn)
+    return codes.astype(jnp.float32) * scale
+
+
+def fake_quant_weight(w: jnp.ndarray, cfg: QuantConfig = W4) -> jnp.ndarray:
+    """Quantize-dequantize in the weight's own dtype. This is ``Q(W)``."""
+    codes, scale = quantize_weight(w.astype(jnp.float32), cfg)
+    return dequantize_weight(codes, scale, cfg).astype(w.dtype)
+
+
+def quantize_activation(x: jnp.ndarray, cfg: QuantConfig = A8):
+    """Per-token symmetric quantization. ``x``: [..., tokens, d].
+
+    Returns (codes int8, scale f32 broadcastable against x).
+    """
+    scale = _absmax_scale(x, axis=-1, qmax=cfg.qmax)
+    codes = jnp.clip(jnp.round(x / scale), cfg.qmin, cfg.qmax)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def fake_quant_activation(x: jnp.ndarray, cfg: QuantConfig = A8) -> jnp.ndarray:
+    codes, scale = quantize_activation(x.astype(jnp.float32), cfg)
+    return (codes.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 codes (stored as int8 in [-8, 7]) pairwise into int8.
+
+    Packs along the LAST axis: out[..., k] holds (codes[..., 2k] & 0xF) in the
+    low nibble and codes[..., 2k+1] in the high nibble.
+    """
+    assert codes.shape[-1] % 2 == 0
+    lo = codes[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = (codes[..., 1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`; returns int8 codes in [-8, 7]."""
+    u = packed.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int8)
+    hi = ((u >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend nibbles
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+@partial(jax.jit, static_argnames=("w_cfg", "a_cfg"))
+def fake_quant_matmul(w: jnp.ndarray, x: jnp.ndarray,
+                      w_cfg: QuantConfig = W4,
+                      a_cfg: QuantConfig | None = A8) -> jnp.ndarray:
+    """Simulated quantized ``W @ X`` (weights [out,in], acts [in, tokens])."""
+    wq = fake_quant_weight(w, w_cfg)
+    if a_cfg is not None:
+        xq = fake_quant_activation(x.T, a_cfg).T
+    else:
+        xq = x
+    return wq @ xq

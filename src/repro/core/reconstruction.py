@@ -1,0 +1,60 @@
+"""Low-rank quantization-error reconstruction: LoRC, L²QER and ASER-ER.
+
+Every method returns LoRA-style factors (L_A: [out, r], L_B: [r, in]) such
+that the compensated layer computes ``W_q x + L_A (L_B x)``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .whitening import cholesky_whitener, low_rank_factors, rank_from_alpha, whiten_svd
+
+
+class LowRankComp(NamedTuple):
+    l_a: jnp.ndarray
+    l_b: jnp.ndarray
+
+
+def lorc(e_q: jnp.ndarray, rank: int) -> LowRankComp:
+    """LoRC (Yao et al. 2024): plain SVD of the *weight* error E_q."""
+    u, sig, vt = jnp.linalg.svd(e_q.astype(jnp.float32), full_matrices=False)
+    return LowRankComp(u[:, :rank] * sig[:rank][None, :], vt[:rank, :])
+
+
+def l2qer(e_q: jnp.ndarray, x_absmean: jnp.ndarray, rank: int) -> LowRankComp:
+    """L²QER (Zhang et al. 2024): scale E_q by an activation-magnitude diagonal
+    before SVD, unscale after. ``x_absmean``: [in]."""
+    d = jnp.maximum(x_absmean.astype(jnp.float32), 1e-8)
+    es = e_q.astype(jnp.float32) * d[None, :]
+    u, sig, vt = jnp.linalg.svd(es, full_matrices=False)
+    l_a = u[:, :rank] * sig[:rank][None, :]
+    l_b = vt[:rank, :] / d[None, :]
+    return LowRankComp(l_a, l_b)
+
+
+def aser_er(e_q: jnp.ndarray, g: jnp.ndarray, rank: int,
+            damp: float = 1e-2) -> LowRankComp:
+    """ASER error reconstruction: whitening SVD of E_q S with G = S Sᵀ."""
+    s = cholesky_whitener(g, damp=damp)
+    u, sig, vt = whiten_svd(e_q, s)
+    l_a, l_b = low_rank_factors(u, sig, vt, s, rank)
+    return LowRankComp(l_a, l_b)
+
+
+def aser_er_alpha(e_q: jnp.ndarray, g: jnp.ndarray, alpha: float,
+                  max_rank: int, damp: float = 1e-2):
+    """ASER-ER with Eq. 9 rank selection. Returns (comp, selected_rank).
+
+    Factors are computed at ``max_rank`` and the tail beyond the α-selected
+    rank is zeroed, keeping shapes static for jit while matching the paper's
+    adaptive-rank semantics.
+    """
+    s = cholesky_whitener(g, damp=damp)
+    u, sig, vt = whiten_svd(e_q, s)
+    r_sel = rank_from_alpha(sig, alpha)
+    r_sel = jnp.minimum(r_sel, max_rank)
+    l_a, l_b = low_rank_factors(u, sig, vt, s, max_rank)
+    keep = (jnp.arange(max_rank) < r_sel).astype(l_a.dtype)
+    return LowRankComp(l_a * keep[None, :], l_b * keep[:, None]), r_sel

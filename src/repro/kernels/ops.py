@@ -1,0 +1,65 @@
+"""jit'd public wrappers over the Pallas kernels with XLA fallbacks.
+
+``use_pallas(True/False)`` flips between the kernel path (interpret mode on
+CPU, compiled on TPU) and the pure-XLA path. The XLA fallback implements the
+identical math so quantized-model behavior is bitwise-comparable up to f32
+reduction order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .act_quant import act_quant as _act_quant_kernel
+from .w4a8_gemm import w4a8_gemm as _w4a8_kernel
+from .flash_attention import flash_attention as _flash_kernel
+
+_STATE = {"use_pallas": False, "interpret": True, "a_bits": 8}
+
+
+def use_pallas(flag: bool, interpret: bool = True):
+    _STATE["use_pallas"] = flag
+    _STATE["interpret"] = interpret
+
+
+def pallas_enabled() -> bool:
+    return _STATE["use_pallas"]
+
+
+def set_act_bits(bits: int):
+    """Global activation bit-width for the quantized serving path
+    (8 = paper's W4A8; 6/4 for the W4A6/W4A4 setups; 16 = weight-only)."""
+    _STATE["a_bits"] = bits
+
+
+def w4a8_linear(x, qw, sw, m_diag, lb, la, *, a_bits: int | None = None):
+    """Full quantized linear: smooth → quantize → int4×int8 GEMM → dequant
+    → low-rank compensation. x: [m, k] → [m, n] (f32)."""
+    bits = _STATE["a_bits"] if a_bits is None else a_bits
+    if bits >= 16:
+        # weight-only: dequantize W and run in float (no act quant)
+        from repro.core.quantizers import unpack_int4
+        x_s = x.astype(jnp.float32) / m_diag[None, :]
+        codes = (unpack_int4(qw.T).T if qw.shape[0] * 2 == m_diag.shape[0]
+                 else qw)
+        w = codes.astype(jnp.float32) * sw[None, :]
+        return x_s @ w + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
+    if _STATE["use_pallas"] and bits == 8 \
+            and qw.shape[0] * 2 == m_diag.shape[0]:
+        r = lb.shape[1]
+        if r == 0 or r % 8:
+            pad = 8 if r == 0 else (-r) % 8
+            lb = jnp.pad(lb, ((0, 0), (0, pad)))
+            la = jnp.pad(la, ((0, pad), (0, 0)))
+        xq, sx, xlr = _act_quant_kernel(x, m_diag, lb,
+                                        interpret=_STATE["interpret"])
+        return _w4a8_kernel(xq, sx, qw, sw, xlr, la,
+                            interpret=_STATE["interpret"])
+    return _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb, la, a_bits=bits)
+
+
+def attention(q, k, v, **kw):
+    if _STATE["use_pallas"]:
+        return _flash_kernel(q, k, v, interpret=_STATE["interpret"], **kw)
+    return _ref.flash_attention_ref(q, k, v, **kw)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel. Ground truth for tests.
+
+Layouts (serving path):
+  x        [m, k]   activations (bf16/f32)
+  qw       [k//2, n] int8 — int4 pairs packed along k (low nibble = even k)
+  sw       [n]      per-out-channel weight scale (f32)
+  m_diag   [k]      ASER smoothing diagonal (f32; ones when A.S. off)
+  lb       [k, r]   low-rank compensation (f32/bf16)
+  la       [r, n]
+Result:    [m, n]   f32
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import unpack_int4
+
+
+def w4a8_linear_ref(x, qw, sw, m_diag, lb, la, *, a_bits: int = 8):
+    """Reference: smooth → per-token int quant → int matmul → dequant → + LR.
+
+    ``qw`` is int4-packed ([k//2, n]) or plain int8 codes ([k, n]) — detected
+    by shape against ``m_diag`` (the W8 setups store unpacked codes)."""
+    x = x.astype(jnp.float32)
+    x_s = x / m_diag[None, :]
+    qmax = 2 ** (a_bits - 1) - 1
+    sx = jnp.maximum(jnp.max(jnp.abs(x_s), axis=1, keepdims=True), 1e-8) / qmax
+    xq = jnp.clip(jnp.round(x_s / sx), -qmax - 1, qmax).astype(jnp.int8)
+
+    if qw.shape[0] * 2 == m_diag.shape[0]:
+        w_codes = unpack_int4(qw.T).T        # [k, n] int8 in [-8, 7]
+    else:
+        w_codes = qw                          # already int8 codes [k, n]
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32), w_codes.astype(jnp.int32),
+        (((1,), (0,)), ((), ())))            # int32 [m, n]
+    y = acc.astype(jnp.float32) * sx * sw[None, :]
+    y = y + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
+    return y
+
+
+def act_quant_ref(x, m_diag, *, bits: int = 8):
+    """Per-token symmetric quant of smoothed activations.
+
+    Returns (codes int8 [m, k], scale f32 [m, 1])."""
+    x = x.astype(jnp.float32) / m_diag[None, :]
+    qmax = 2 ** (bits - 1) - 1
+    sx = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / sx), -qmax - 1, qmax).astype(jnp.int8)
+    return codes, sx
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        logit_cap: float = 0.0, kv_len=None):
+    """Dense softmax attention oracle. q: [b, sq, h, d]; k/v: [b, skv, hkv, d]."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    n_rep = h // k.shape[2]
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

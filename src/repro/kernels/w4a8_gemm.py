@@ -1,0 +1,92 @@
+"""W4A8 matmul Pallas kernel with fused dequant + ASER low-rank epilogue.
+
+TPU-native adaptation of CUDA W4A8 GEMMs (Marlin-style): the MXU consumes
+int8×int8→int32; int4 weights are stored packed 2-per-byte along K and
+unpacked to int8 on the VPU inside the kernel. Per-token activation scales
+``sx`` and per-channel weight scales ``sw`` are applied in the f32 epilogue,
+fused with the ASER compensation ``xlr @ la`` (xlr = smoothed activations
+pre-projected onto L_B by the act-quant kernel) so the low-rank path never
+round-trips HBM.
+
+Grid: (m_tiles, n_tiles, k_tiles); K is innermost so the int32 accumulator
+lives in a VMEM scratch across K steps.
+
+Weight packing: pairwise along K — packed[i, n] holds codes[2i, n] in the
+low nibble, codes[2i+1, n] in the high nibble (see repro.core.pack_int4
+applied along K).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _unpack_int4_block(packed):
+    """[bk//2, bn] int8 → [bk, bn] int8 (pairwise interleave along K)."""
+    u = packed.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int8)
+    hi = ((u >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.stack([lo, hi], axis=1)               # [bk//2, 2, bn]
+    return w.reshape(lo.shape[0] * 2, lo.shape[1])
+
+
+def _kernel(xq_ref, sx_ref, qw_ref, sw_ref, xlr_ref, la_ref, out_ref,
+            acc_ref, *, n_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _unpack_int4_block(qw_ref[...])
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...].astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * sx_ref[...] * sw_ref[...]
+        y = y + jnp.dot(xlr_ref[...].astype(jnp.float32),
+                        la_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def w4a8_gemm(xq, sx, qw, sw, xlr, la, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+              bk=DEFAULT_BK, interpret=True):
+    """xq: [m,k] int8; sx: [m,1] f32; qw: [k//2,n] int8 packed; sw: [n] f32;
+    xlr: [m,r] f32; la: [r,n] f32 → y [m,n] f32."""
+    m, k = xq.shape
+    n = qw.shape[1]
+    r = xlr.shape[1]
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    n_k = pl.cdiv(k, bk_)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_), n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm_, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk_ // 2, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((bm_, r), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((r, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(xq, sx, qw, sw.reshape(1, n), xlr, la)

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Per cell, THREE compiles:
+  1. full model, scan-over-layers  → memory_analysis (the "fits" proof) and
+     the compile-success proof for the production program;
+  2. probe with 1 repeating group, fully unrolled;
+  3. probe with 2 repeating groups, fully unrolled.
+XLA's HLO cost analysis counts while-loop bodies ONCE, so scanned stacks
+under-report FLOPs/bytes/collectives. The stacks are layer-homogeneous, so
+cost(G) = a + b·G exactly; probes (2) and (3) identify a and b and we report
+cost(G_full). Encoder-decoder archs scale encoder layers with the same k
+(whisper has equal encoder/decoder depth, so one slope suffices).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --cell train_4k
+
+Writes one JSON record per cell to results/dryrun/<arch>_<cell>_<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import (ARCH_IDS, ShapeCell, cells, get_config,
+                                    get_long_config)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline.analysis import (Roofline, collective_bytes,
+                                     model_flops_estimate)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _compile(arch, cell, mesh, **kw):
+    spec = build_cell(arch, cell, mesh, **kw)
+    with mesh:
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings)
+        lowered = jitted.lower(*spec.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_of(compiled):
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _probe_overrides(cfg, k: int):
+    ov = {"n_layers": cfg.n_dense_layers + k * cfg.group_size}
+    if cfg.family == "encdec":
+        ov["n_encoder_layers"] = k
+    return ov
+
+
+def _extrapolate(c1, c2, g_full: int):
+    """cost(G) = a + b·G from G=1,2 measurements."""
+    def lin(v1, v2):
+        b = v2 - v1
+        a = v1 - b
+        return max(a + b * g_full, 0.0)
+    kinds = set(c1["coll"]) | set(c2["coll"])
+    coll = {kk: lin(c1["coll"].get(kk, 0.0), c2["coll"].get(kk, 0.0))
+            for kk in kinds}
+    return {"flops": lin(c1["flops"], c2["flops"]),
+            "bytes": lin(c1["bytes"], c2["bytes"]),
+            "coll": coll}
+
+
+def run_cell(arch: str, cell: ShapeCell, mesh_name: str, *,
+             verbose: bool = True, out_dir: str = RESULTS_DIR,
+             build_kwargs: dict | None = None, tag: str = ""):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    bk = dict(build_kwargs or {})
+    cfg = get_long_config(arch) if cell.name == "long_500k" else get_config(arch)
+    g_full = (cfg.n_layers - cfg.n_dense_layers) // cfg.group_size
+
+    t0 = time.time()
+    compiled_full = _compile(arch, cell, mesh, unroll=False, **bk)
+    t_full = time.time() - t0
+    mem = compiled_full.memory_analysis()
+
+    t0 = time.time()
+    base_ov = bk.pop("overrides", {})
+    probes = {}
+    for k in (1, 2):
+        c = _compile(arch, cell, mesh, unroll=True,
+                     overrides={**base_ov, **_probe_overrides(cfg, k)}, **bk)
+        probes[k] = _cost_of(c)
+    t_probe = time.time() - t0
+
+    cost = _extrapolate(probes[1], probes[2], g_full)
+    mf = model_flops_estimate(cfg, cell)
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes + mem.generated_code_size_in_bytes)
+    roof = Roofline(arch=arch, cell=cell.name, mesh=mesh_name, chips=chips,
+                    flops=cost["flops"], bytes_accessed=cost["bytes"],
+                    coll_bytes=sum(cost["coll"].values()),
+                    coll_breakdown=cost["coll"], model_flops=mf,
+                    peak_mem_bytes=float(peak))
+    rec = roof.to_dict()
+    rec.update(t_compile_full_s=t_full, t_compile_probes_s=t_probe,
+               arg_bytes=mem.argument_size_in_bytes,
+               temp_bytes=mem.temp_size_in_bytes,
+               out_bytes=mem.output_size_in_bytes,
+               probe1=probes[1], probe2=probes[2], g_full=g_full)
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}_{cell.name}_{mesh_name}{('_' + tag) if tag else ''}"
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[OK] {arch:18s} {cell.name:12s} {mesh_name:6s} "
+              f"mem/dev={rec['peak_mem_per_dev_gb']:.2f}GB "
+              f"t_comp={rec['t_compute']:.4f}s t_mem={rec['t_memory']:.4f}s "
+              f"t_coll={rec['t_collective']:.4f}s "
+              f"bneck={rec['bottleneck'][:4]} "
+              f"useful={rec['useful_flops_ratio']:.2f} "
+              f"roofline={rec['roofline_fraction']:.3f} "
+              f"(compile {t_full:.0f}s+{t_probe:.0f}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch.split(",") if args.arch else ARCH_IDS
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for cell in cells(arch):
+            if args.cell and cell.name != args.cell:
+                continue
+            for mesh_name in meshes:
+                path = os.path.join(args.out, f"{arch}_{cell.name}_{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    run_cell(arch, cell, mesh_name, out_dir=args.out)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, cell.name, mesh_name, repr(e)))
+                    print(f"[FAIL] {arch} {cell.name} {mesh_name}: {e}",
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Mesh construction for the production fleet.
+
+IMPORTANT: functions only — importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / elastic restore)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def elastic_mesh(preferred=(("data", 16), ("model", 16))):
+    """Build the largest mesh the surviving device set supports — node
+    failures shrink the data axis first (model-parallel groups must stay
+    complete, so the model axis is preserved when divisible)."""
+    n = len(jax.devices())
+    model = dict(preferred).get("model", 1)
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,62 @@
+"""Quantized serving driver: calibrate → ASER-quantize → batched generate.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --smoke \
+        --method aser_as --requests 4 --gen 16
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="aser_as",
+                    choices=["fp16", "rtn", "llmint4", "smoothquant", "gptq",
+                             "awq", "lorc", "l2qer", "aser", "aser_as"])
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the Pallas kernel path (interpret on CPU)")
+    args = ap.parse_args()
+
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.kernels import ops
+    from repro.models import init_params
+    from repro.quant import PTQConfig, calibrate, quantize_model, reduce_shared
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype="float32" if args.smoke else cfg.dtype)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.method != "fp16":
+        print(f"[serve] calibrating + quantizing with {args.method} "
+              f"(W4A{args.a_bits}, rank {args.rank})")
+        tape = calibrate(params, cfg, corpus.calibration_batches(2, 4, 32))
+        tape = reduce_shared(tape, cfg)
+        params = quantize_model(params, tape,
+                                PTQConfig(method=args.method, rank=args.rank))
+        ops.set_act_bits(args.a_bits)
+    ops.use_pallas(args.pallas)
+
+    engine = Engine(params, cfg, ServeConfig(max_len=args.prompt_len + args.gen))
+    prompts = corpus.sample(jnp.asarray(777), args.requests, args.prompt_len)
+    out = engine.generate(prompts, n_steps=args.gen)
+    print("[serve] generations:")
+    for i in range(args.requests):
+        print("  req", i, ":", list(map(int, out[i])))
+    ops.use_pallas(False)
+    ops.set_act_bits(8)
+
+
+if __name__ == "__main__":
+    main()

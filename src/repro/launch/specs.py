@@ -1,0 +1,182 @@
+"""Input templates (ShapeDtypeStruct) + shardings for every dry-run cell.
+
+No device allocation happens here: params/opt/caches come from
+``jax.eval_shape``; quantized serving params are synthesized structurally
+(rank-64 compensation, int4-packed weights) — the calibration pass is an
+offline one-time cost and irrelevant to the lowered serving program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeCell, get_config, get_long_config
+from repro.models import ModelConfig, init_caches, init_params
+from repro.models.config import ModelConfig as MC
+from repro.sharding import rules
+from repro.train.optimizer import init_opt_state
+
+
+SDS = jax.ShapeDtypeStruct
+
+
+def params_template(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def quantized_template(params_sds, rank: int = 64, skip=("head", "router",
+                                                         "encoder")):
+    """Map fp linear leaves to W4A8+ASER serving leaves (structural only)."""
+    def walk(node, path=""):
+        if isinstance(node, dict):
+            if "w" in node and not any(s in path for s in skip):
+                w = node["w"]
+                if w.ndim >= 2:
+                    *lead, k, n = w.shape
+                    lead = tuple(lead)
+                    r = min(rank, k, n)
+                    out = {
+                        "qw": SDS(lead + (k // 2, n), jnp.int8),
+                        "sw": SDS(lead + (n,), jnp.float32),
+                        "m": SDS(lead + (k,), jnp.float32),
+                        "lb": SDS(lead + (k, r), jnp.float32),
+                        "la": SDS(lead + (r, n), jnp.float32),
+                    }
+                    if "b" in node:
+                        out["b"] = node["b"]
+                    return out
+            out = {}
+            for kk, v in node.items():
+                if kk == "experts" and not any(s in path for s in skip):
+                    out[kk] = _q_experts(v, rank)
+                else:
+                    out[kk] = walk(v, f"{path}/{kk}")
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{path}/{i}") for i, v in enumerate(node))
+        return node
+
+    return walk(params_sds)
+
+
+def _q_experts(experts: dict, rank: int):
+    out = {}
+    for name, arr in experts.items():
+        *lead, k, n = arr.shape
+        lead = tuple(lead)
+        r = min(rank, k, n)
+        out[name] = {
+            "qw": SDS(lead + (k // 2, n), jnp.int8),
+            "sw": SDS(lead + (n,), jnp.float32),
+            "m": SDS(lead + (k,), jnp.float32),
+            "lb": SDS(lead + (k, r), jnp.float32),
+            "la": SDS(lead + (r, n), jnp.float32),
+        }
+    return out
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+    fn: Any
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    arch: str = ""
+    cell: str = ""
+    donate: tuple = ()
+
+
+def _token_sds(b, s):
+    return SDS((b, s), jnp.int32)
+
+
+def _frames_sds(cfg, b):
+    return SDS((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+
+
+def _mrope_sds(b, s):
+    return SDS((3, b, s), jnp.int32)
+
+
+def build_cell(arch: str, cell: ShapeCell, mesh: Mesh, *,
+               fsdp_train: bool = True, expert_2d: Optional[bool] = None,
+               quant_serve: bool = True, rank: int = 64,
+               remat: bool = True, unroll: bool = True,
+               opt_state_dtype: str = "float32",
+               overrides: Optional[dict] = None) -> CellSpec:
+    from .steps import make_decode_step, make_prefill_step, make_train_step_fn
+
+    cfg = get_long_config(arch) if cell.name == "long_500k" else get_config(arch)
+    # serving decode shouldn't pay remat; train uses it.
+    # scan_unroll: XLA's cost analysis counts while-loop bodies once, so the
+    # dry-run unrolls the layer scan to get true FLOPs/bytes/collectives.
+    cfg = dataclasses.replace(cfg, remat=remat, scan_unroll=unroll)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if expert_2d is None:
+        expert_2d = cfg.n_experts >= 128 or cfg.d_model >= 8192
+    b, s = cell.global_batch, cell.seq_len
+
+    p_sds = params_template(cfg)
+    repl = NamedSharding(mesh, P())
+
+    if cell.kind == "train":
+        from repro.train.loop import TrainConfig
+        from repro.train.optimizer import OptConfig
+        fsdp = fsdp_train
+        p_shard = rules.param_shardings(p_sds, mesh, fsdp=fsdp,
+                                        expert_2d=expert_2d)
+        tcfg = TrainConfig(opt=OptConfig(state_dtype=opt_state_dtype))
+        sdt = jnp.bfloat16 if opt_state_dtype == "bfloat16" else jnp.float32
+        opt_sds = jax.eval_shape(lambda p: init_opt_state(p, sdt), p_sds)
+        opt_shard = rules.opt_shardings(opt_sds, p_shard)
+        batch = {"tokens": _token_sds(b, s + 1)}
+        batch_shard = {"tokens": rules.data_sharding(mesh, 2)}
+        if cfg.family == "encdec":
+            batch["frames"] = _frames_sds(cfg, b)
+            batch_shard["frames"] = rules.data_sharding(mesh, 3)
+        if cfg.mrope_sections:
+            batch["mrope_positions"] = _mrope_sds(b, s)
+            batch_shard["mrope_positions"] = NamedSharding(
+                mesh, P(None, rules.batch_axes(mesh), None))
+        fn = make_train_step_fn(cfg, tcfg)
+        return CellSpec(fn, (p_sds, opt_sds, batch),
+                        (p_shard, opt_shard, batch_shard), arch, cell.name)
+
+    # ---- serving ----------------------------------------------------------
+    q_sds = quantized_template(p_sds, rank=rank) if quant_serve else p_sds
+    p_shard = rules.param_shardings(q_sds, mesh, fsdp=False,
+                                    expert_2d=expert_2d)
+    seq_to_data = cell.name == "long_500k"
+    caches_sds = jax.eval_shape(lambda: init_caches(cfg, b, s))
+    c_shard = rules.cache_shardings(caches_sds, mesh, seq_to_data=seq_to_data)
+
+    if cell.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        args = [q_sds, _token_sds(b, s), caches_sds]
+        shards = [p_shard, rules.data_sharding(mesh, 2), c_shard]
+        if cfg.family == "encdec":
+            args.append(_frames_sds(cfg, b))
+            shards.append(rules.data_sharding(mesh, 3))
+        if cfg.mrope_sections:
+            args.append(_mrope_sds(b, s))
+            shards.append(NamedSharding(mesh, P(None, rules.batch_axes(mesh), None)))
+        return CellSpec(fn, tuple(args), tuple(shards), arch, cell.name)
+
+    # decode: one new token against a cache of length s
+    fn = make_decode_step(cfg)
+    tok = SDS((b,), jnp.int32)
+    args = [q_sds, tok, caches_sds]
+    tok_shard = NamedSharding(mesh, P(rules.batch_axes(mesh) if b > 1 else None))
+    shards = [p_shard, tok_shard, c_shard]
+    if cfg.mrope_sections:
+        args.append(_mrope_sds(b, 1))
+        shards.append(NamedSharding(
+            mesh, P(None, rules.batch_axes(mesh) if b > 1 else None, None)))
+    return CellSpec(fn, tuple(args), tuple(shards), arch, cell.name)

@@ -1,0 +1,80 @@
+"""Step functions lowered by the dry-run / drivers: train, prefill, decode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, encode, forward, prepare_cross_caches
+from repro.train.loop import TrainConfig, make_train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        def prefill(params, tokens, caches, frames):
+            enc_out = encode(params, cfg, frames)
+            caches = prepare_cross_caches(params, cfg, enc_out, caches)
+            logits, caches, _ = forward(params, cfg, tokens, caches=caches)
+            return logits[:, -1], caches
+        return prefill
+    if cfg.mrope_sections:
+        def prefill(params, tokens, caches, mrope_positions):
+            logits, caches, _ = forward(params, cfg, tokens, caches=caches,
+                                        mrope_positions=mrope_positions)
+            return logits[:, -1], caches
+        return prefill
+
+    def prefill(params, tokens, caches):
+        logits, caches, _ = forward(params, cfg, tokens, caches=caches)
+        return logits[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.mrope_sections:
+        def decode(params, tok, caches, mrope_positions):
+            logits, caches, _ = forward(params, cfg, tok[:, None], caches=caches,
+                                        mrope_positions=mrope_positions)
+            return logits[:, 0], caches
+        return decode
+
+    def decode(params, tok, caches):
+        logits, caches, _ = forward(params, cfg, tok[:, None], caches=caches)
+        return logits[:, 0], caches
+    return decode
+
+
+def make_train_step_fn(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig()
+    if cfg.family == "encdec":
+        from repro.core.metrics import cross_entropy
+        from repro.train.optimizer import adamw_update
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                enc_out = encode(p, cfg, batch["frames"])
+                logits, _, aux = forward(p, cfg, batch["tokens"][:, :-1],
+                                         train=True, encoder_out=enc_out)
+                return cross_entropy(logits, batch["tokens"][:, 1:]) \
+                    + tcfg.aux_weight * aux
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, m = adamw_update(tcfg.opt, params, grads, opt_state)
+            return params, opt_state, dict(m, loss=loss)
+        return step
+    if cfg.mrope_sections:
+        from repro.core.metrics import cross_entropy
+        from repro.train.optimizer import adamw_update
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                logits, _, aux = forward(
+                    p, cfg, batch["tokens"][:, :-1], train=True,
+                    mrope_positions=batch["mrope_positions"])
+                return cross_entropy(logits, batch["tokens"][:, 1:]) \
+                    + tcfg.aux_weight * aux
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, m = adamw_update(tcfg.opt, params, grads, opt_state)
+            return params, opt_state, dict(m, loss=loss)
+        return step
+    return make_train_step(cfg, tcfg)

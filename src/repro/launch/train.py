@@ -1,0 +1,95 @@
+"""Distributed training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --steps 100 \
+        --data-par 2 --model-par 1 --batch 8 --seq 64 --smoke
+
+On a real TPU fleet this binary runs once per host (jax.distributed
+initializes from the TPU environment); on CPU it runs the same SPMD program
+over ``--data-par × --model-par`` host devices. ``--smoke`` swaps in the
+reduced config so the driver is exercisable anywhere.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    ndev = args.data_par * args.model_par
+    if ndev > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={ndev}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import init_params, param_count
+    from repro.sharding import rules
+    from repro.train.loop import TrainConfig, make_train_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32" if args.smoke else cfg.dtype)
+    mesh = make_local_mesh(args.data_par, args.model_par)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"[train] {cfg.name}: {param_count(params)/1e6:.1f}M params, "
+          f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    p_sh = rules.param_shardings(params, mesh)
+    params = jax.device_put(params, p_sh)
+    opt = jax.device_put(init_opt_state(params),
+                         rules.opt_shardings(init_opt_state(params), p_sh))
+
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=10,
+                                     total_steps=args.steps),
+                       grad_accum=args.grad_accum)
+    step_fn = make_train_step(cfg, tcfg)
+
+    mgr = None
+    start = 0
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=True)
+        if mgr.latest_step() is not None:
+            start, st = mgr.restore_latest({"params": params, "opt": opt},
+                                           shardings={"params": p_sh,
+                                                      "opt": rules.opt_shardings(opt, p_sh)})
+            params, opt = st["params"], st["opt"]
+            print(f"[train] resumed from step {start}")
+
+    with mesh:
+        step_j = jax.jit(step_fn)
+        for i in range(start, args.steps):
+            toks = corpus.sample(jnp.asarray(i), args.batch, args.seq + 1)
+            batch = {"tokens": jax.device_put(
+                toks, rules.data_sharding(mesh, 2))}
+            params, opt, m = step_j(params, opt, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"[train] step {i:5d} loss {float(m['loss']):.4f} "
+                      f"lr {float(m['lr']):.2e}", flush=True)
+            if mgr and i and i % args.ckpt_every == 0:
+                mgr.save(i, {"params": params, "opt": opt})
+    if mgr:
+        mgr.save(args.steps, {"params": params, "opt": opt})
+        mgr.wait()
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

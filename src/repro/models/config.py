@@ -1,0 +1,135 @@
+"""Model configuration for the whole architecture zoo.
+
+One dataclass covers dense / MoE / SSM / hybrid / enc-dec families; per-arch
+files in ``repro.configs`` instantiate it with the exact assigned shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense | moe | ssm | hybrid | encdec
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0              # 0 => d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # block flavor
+    norm: str = "rmsnorm"          # rmsnorm | layernorm | nonparam_ln
+    mlp: str = "swiglu"            # swiglu | geglu | gelu | sq_relu
+    post_block_norm: bool = False  # gemma2 sandwich norms
+    scale_embed: bool = False      # multiply embeddings by sqrt(d) (gemma/whisper)
+    tie_embeddings: bool = True
+
+    # attention flavor
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0     # stablelm partial rotary
+    sliding_window: int = 0        # 0 => full attention
+    local_global_period: int = 0   # gemma2: alternate local/global every k layers
+    attn_softcap: float = 0.0      # gemma2 logit softcapping inside attention
+    final_softcap: float = 0.0     # gemma2 final-logit softcap
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) splits
+    qkv_bias: bool = False         # qwen2 uses qkv bias
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    n_dense_layers: int = 0        # leading dense FFN layers (kimi/moonshot style)
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    ssm_n_groups: int = 1
+
+    # hybrid (zamba2): one shared attention block applied every k layers
+    shared_attn_period: int = 0
+
+    # enc-dec (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500        # precomputed frame embeddings (conv stub)
+
+    # numerics / performance knobs
+    dtype: str = "bfloat16"
+    remat: bool = True             # checkpoint each block in train_step
+    attn_chunk_q: int = 512        # chunked-attention block sizes (prefill)
+    attn_chunk_kv: int = 1024
+    scan_layers: bool = True       # lax.scan over the repeating group stack
+    scan_unroll: bool = False      # fully unroll the group scan (dry-run cost
+                                   # analysis: XLA counts while bodies once)
+    seq_shard_residual: bool = False  # Megatron-SP style: shard the saved
+                                   # residual stream over the model axis on
+                                   # the sequence dim (remat memory /16)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def group_size(self) -> int:
+        """Layers per repeating scan group."""
+        if self.family == "hybrid" and self.shared_attn_period > 0:
+            return self.shared_attn_period
+        if self.local_global_period > 0:
+            return self.local_global_period
+        return 1
+
+    @property
+    def n_groups(self) -> int:
+        return max(self.n_layers // self.group_size, 1)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 * self.group_size),
+            d_model=128,
+            n_heads=max(min(self.n_heads, 4), 1),
+            n_kv_heads=max(min(self.n_kv_heads, 2), 1),
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            dtype="float32",
+        )
+        if self.n_experts:
+            small.update(n_experts=min(self.n_experts, 8),
+                         top_k=min(self.top_k, 2), moe_d_ff=64,
+                         n_shared_experts=min(self.n_shared_experts, 1),
+                         n_dense_layers=min(self.n_dense_layers, 1))
+        if self.ssm_state:
+            small.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+        if self.n_encoder_layers:
+            small.update(n_encoder_layers=2, encoder_seq=64)
+        if self.sliding_window:
+            small.update(sliding_window=64)
+        if self.mrope_sections:
+            small.update(mrope_sections=(8, 4, 4))
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,288 @@
+"""Shared layer primitives: norms, RoPE / M-RoPE, linear dispatch, MLPs.
+
+Every linear weight is a leaf dict so the quantization pass can swap a plain
+``{"w": [in, out]}`` for a quantized ``{"qw", "sw", "la", "lb", "m"}`` leaf
+without touching model code. ``dense()`` dispatches on the leaf contents.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import unpack_int4
+
+
+# ---------------------------------------------------------------------------
+# Sharding annotation (no-op without an active mesh)
+# ---------------------------------------------------------------------------
+
+def _active_mesh():
+    """Physical mesh from the trace-time context (``with mesh:``), if any."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint with axis cleaning: unknown mesh axes and
+    non-divisible dims are dropped, so model code can annotate logical
+    layouts unconditionally (pure no-op on CPU tests without a mesh)."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+            if hasattr(mesh, "devices") else dict(mesh.shape)
+        names = set(mesh.axis_names)
+
+        def clean_axis(ax, dim):
+            if ax is None:
+                return None
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            axs = tuple(a for a in axs if a in names)
+            total = 1
+            for a in axs:
+                total *= sizes[a]
+            if not axs or total == 0 or dim % total != 0:
+                return None
+            return axs if len(axs) > 1 else axs[0]
+
+        spec = tuple(spec)[:x.ndim]
+        spec = spec + (None,) * (x.ndim - len(spec))
+        clean = tuple(clean_axis(ax, d) for ax, d in zip(spec, x.shape))
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*clean)))
+        except Exception:
+            return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x
+
+
+BATCH = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# Calibration statistics (PTQ)
+# ---------------------------------------------------------------------------
+
+from typing import NamedTuple
+
+
+class LinStats(NamedTuple):
+    """Per-linear calibration stats: Gram = Σ xᵀx, absmean numerator, count."""
+    gram: jnp.ndarray      # [d_in, d_in] f32
+    abssum: jnp.ndarray    # [d_in] f32 (Σ|x|; divide by count for X̄)
+    absmax: jnp.ndarray    # [d_in] f32 (max |x|, for SmoothQuant)
+    count: jnp.ndarray     # [] f32 tokens
+
+
+def _stats_of(x: jnp.ndarray) -> LinStats:
+    d = x.shape[-1]
+    xf = x.reshape(-1, d).astype(jnp.float32)
+    ax = jnp.abs(xf)
+    return LinStats(xf.T @ xf, jnp.sum(ax, axis=0), jnp.max(ax, axis=0),
+                    jnp.asarray(xf.shape[0], jnp.float32))
+
+
+def record(tape, name: str, x: jnp.ndarray):
+    """Record the input distribution of linear ``name`` into ``tape``."""
+    if tape is None:
+        return
+    tape[name] = _stats_of(x)
+
+
+def record_stats(tape, name: str, st: LinStats):
+    if tape is None:
+        return
+    tape[name] = st
+
+
+def dense_c(p, name: str, x: jnp.ndarray, tape=None) -> jnp.ndarray:
+    """dense() + optional calibration capture of the layer input."""
+    record(tape, name, x)
+    return dense(p[name], x)
+
+
+# ---------------------------------------------------------------------------
+# Linear layers (fp + quantized dispatch)
+# ---------------------------------------------------------------------------
+
+def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+                  bias: bool = False, scale: float | None = None):
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply a (possibly quantized) linear layer. x: [..., d_in]."""
+    if "qw" in p:
+        return _quantized_dense(p, x)
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def _quantized_dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    """W4A8 serving path with ASER low-rank compensation.
+
+    Layout: qw int8 [d_in//2, d_out] (int4 pairs packed along d_in),
+    sw [d_out] per-out-channel weight scale, m [d_in] smoothing diagonal,
+    la [r, d_out], lb [d_in, r]. Per-token int8 activation quantization.
+    Uses the Pallas kernel path when enabled, else the pure-XLA reference.
+    """
+    from repro.kernels import ops as kops
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    y2 = kops.w4a8_linear(x2, p["qw"], p["sw"], p["m"], p["lb"], p["la"])
+    y2 = y2.astype(x.dtype)
+    if "b" in p:
+        y2 = y2 + p["b"].astype(y2.dtype)
+    return y2.reshape(*orig_shape[:-1], y2.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_params(kind: str, dim: int, dtype=jnp.bfloat16):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if kind == "nonparam_ln":   # OLMo: LN without affine params
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Statistics in f32, elementwise math in the input dtype.
+
+    Deliberately avoids materializing a full f32 copy of the residual
+    stream: the f32 upcast lives only inside the (fused) reductions, which
+    halves the dominant remat-saved buffer at 18k-wide models.
+    """
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.maximum(jnp.mean(xf * xf, axis=-1, keepdims=True) - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    out = (x - mu.astype(x.dtype)) * inv
+    if kind == "layernorm":
+        out = out * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard, partial, M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rot_dim: int | None = None):
+    rot = rot_dim if rot_dim is not None else head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # [rot//2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: [b, s, h, hd]; positions: [b, s] int32."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(hd, theta, rot)
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, None, :]  # [b,s,rot//2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions3: [3, b, s] (t, h, w) coords.
+
+    The rotary half-dim is split into ``sections`` (summing to hd//2); each
+    section uses its own positional stream.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)           # [hd//2]
+    assert sum(sections) == hd // 2, (sections, hd)
+    # section id per frequency slot
+    sec_id = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                              for i, s in enumerate(sections)])
+    pos = positions3.astype(jnp.float32)  # [3, b, s]
+    pos_per_slot = pos[sec_id]            # [hd//2, b, s]
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * inv[None, None, :]  # [b, s, hd//2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, kind: str, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"gate": linear_params(ks[0], d_model, d_ff, dtype),
+                "up": linear_params(ks[1], d_model, d_ff, dtype),
+                "down": linear_params(ks[2], d_ff, d_model, dtype)}
+    return {"up": linear_params(ks[0], d_model, d_ff, dtype),
+            "down": linear_params(ks[1], d_ff, d_model, dtype)}
+
+
+def apply_mlp(kind: str, p, x: jnp.ndarray, tape=None) -> jnp.ndarray:
+    def _c(h):
+        return constrain(h, *((BATCH,) + (None,) * (h.ndim - 2) + ("model",)))
+    if kind == "swiglu":
+        h = _c(jax.nn.silu(dense_c(p, "gate", x, tape)) * dense(p["up"], x))
+        if tape is not None:
+            tape["up"] = tape["gate"]  # same input distribution
+        return dense_c(p, "down", h, tape)
+    if kind == "geglu":
+        h = _c(jax.nn.gelu(dense_c(p, "gate", x, tape)) * dense(p["up"], x))
+        if tape is not None:
+            tape["up"] = tape["gate"]
+        return dense_c(p, "down", h, tape)
+    if kind == "gelu":
+        return dense_c(p, "down", _c(jax.nn.gelu(dense_c(p, "up", x, tape))), tape)
+    if kind == "sq_relu":   # Nemotron squared-ReLU
+        h = jax.nn.relu(dense_c(p, "up", x, tape))
+        return dense_c(p, "down", _c(h * h), tape)
+    raise ValueError(kind)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

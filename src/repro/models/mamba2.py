@@ -1,0 +1,199 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) block.
+
+Chunked SSD for train/prefill (block decomposition: quadratic intra-chunk +
+linear inter-chunk state recurrence) and an O(1)-per-token recurrent decode
+step. Selective linears (in_proj/out_proj) are quantizable ``dense`` leaves.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, linear_params
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # [b, d_conv-1, conv_dim] — rolling conv inputs
+    state: jnp.ndarray   # [b, n_heads, head_dim, d_state]
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, d_in = cfg.d_model, cfg.ssm_d_inner
+    nh, hd, ds, ng = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    conv_dim = d_in + 2 * ng * ds
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "in_proj": linear_params(ks[0], d, 2 * d_in + 2 * ng * ds + nh, dtype),
+        "out_proj": linear_params(ks[1], d_in, d, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * (cfg.ssm_conv * conv_dim) ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": (jax.random.uniform(ks[3], (nh,), jnp.float32,
+                                       minval=-4.6, maxval=-2.0)),
+        "norm_scale": jnp.ones((d_in,), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d_in, ng, ds, nh = cfg.ssm_d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * ng * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray | None = None):
+    """Depthwise causal conv1d. xbc: [b, l, c]; w: [k, c]. Returns (y, tail)."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    # y[t] = sum_i w[i] * xp[t + i]
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    tail = xp[:, xp.shape[1] - (k - 1):, :]
+    return jax.nn.silu(y + b[None, None, :]), tail
+
+
+def _gated_rmsnorm(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b_mat: jnp.ndarray, c_mat: jnp.ndarray, d_skip: jnp.ndarray,
+                chunk: int, init_state: jnp.ndarray | None = None):
+    """Chunked SSD scan.
+
+    x: [b, l, nh, hd]; dt: [b, l, nh] (post-softplus); b_mat/c_mat:
+    [b, l, ng, ds]; a_log: [nh]. Returns (y [b, l, nh, hd], final_state).
+    """
+    bsz, l, nh, hd = x.shape
+    ng, ds = b_mat.shape[2], b_mat.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = nh // ng
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # [nh], negative
+    dt = dt.astype(jnp.float32)
+    dA = dt * a[None, None, :]                                # [b, l, nh] (log decay)
+
+    xc = x.reshape(bsz, nc, chunk, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+    dAc = dA.reshape(bsz, nc, chunk, nh)
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, chunk, ng, ds), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, chunk, ng, ds), rep, axis=3).astype(jnp.float32)
+
+    seg = jnp.cumsum(dAc, axis=2)                             # [b, nc, T, nh]
+
+    # Intra-chunk (diagonal block): y_intra[t] = sum_{s<=t} C_t·B_s exp(seg_t-seg_s) dt_s x_s
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]     # [b,nc,T,S,nh]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, -jnp.inf)
+    cb = jnp.einsum("bnthd,bnshd->bntsh", cc, bc)             # [b,nc,T,S,nh]
+    gate = jnp.exp(decay)
+    y_intra = jnp.einsum("bntsh,bnsh,bnshp->bnthp", cb * gate, dtc, xc)
+
+    # Chunk-final states: S_n = sum_s exp(seg_T - seg_s) dt_s B_s x_s^T
+    last = seg[:, :, -1:, :]                                   # [b,nc,1,nh]
+    w_state = jnp.exp(last - seg) * dtc                        # [b,nc,T,nh]
+    chunk_states = jnp.einsum("bnshd,bnsh,bnshp->bnhpd", bc, w_state, xc)
+
+    # Inter-chunk recurrence over nc (sequential scan; nc is small)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                    # [b,nc,nh]
+
+    def scan_fn(state, inp):
+        s_new, dec = inp                                       # [b,nh,hd,ds], [b,nh]
+        state_out = state * dec[:, :, None, None] + s_new
+        return state_out, state                                # emit state BEFORE chunk
+
+    init = (jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+            if init_state is None else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [b,nc,nh,hd,ds]
+
+    # Inter-chunk contribution: C_t exp(seg_t) · prev_state
+    y_inter = jnp.einsum("bnthd,bnth,bnhpd->bnthp",
+                         cc, jnp.exp(seg), prev_states)
+    y = (y_intra + y_inter).reshape(bsz, l, nh, hd)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y, final_state
+
+
+def mamba2_block(p, cfg: ModelConfig, x: jnp.ndarray,
+                 cache: SSMCache | None = None, tape=None):
+    """Full Mamba-2 mixer. x: [b, l, d]. Returns (y, new_cache)."""
+    bsz, l, _ = x.shape
+    nh, hd, ds, ng = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    d_in = cfg.ssm_d_inner
+
+    from .layers import record
+    record(tape, "in_proj", x)
+    zxbcdt = dense(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+
+    prev_conv = cache.conv if cache is not None else None
+    xbc_conv, conv_tail = _causal_conv(xbc, p["conv_w"].astype(jnp.float32),
+                                       p["conv_b"].astype(jnp.float32), prev_conv)
+    xs, b_mat, c_mat = jnp.split(xbc_conv, [d_in, d_in + ng * ds], axis=-1)
+    xs = xs.reshape(bsz, l, nh, hd)
+    b_mat = b_mat.reshape(bsz, l, ng, ds)
+    c_mat = c_mat.reshape(bsz, l, ng, ds)
+
+    if cache is None or l > 1:
+        # pad to chunk multiple
+        chunk = min(cfg.ssm_chunk, max(l, 1))
+        pad = (-l) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        init_state = cache.state if cache is not None else None
+        y, final_state = ssd_chunked(xs, dt, p["A_log"], b_mat, c_mat,
+                                     p["D"], chunk, init_state)
+        y = y[:, :l]
+    else:
+        # single-token recurrent decode
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * a[None, :])                    # [b, nh]
+        bx = jnp.einsum("bhp,bgd,bh->bhpd",
+                        xs[:, 0].astype(jnp.float32),
+                        b_mat[:, 0].astype(jnp.float32),
+                        dt[:, 0]) if ng == 1 else None
+        if bx is None:
+            rep = nh // ng
+            b_rep = jnp.repeat(b_mat[:, 0], rep, axis=1)
+            bx = jnp.einsum("bhp,bhd,bh->bhpd", xs[:, 0].astype(jnp.float32),
+                            b_rep.astype(jnp.float32), dt[:, 0])
+        state = cache.state.astype(jnp.float32) * dA[:, :, None, None] + bx
+        rep = nh // ng
+        c_rep = jnp.repeat(c_mat[:, 0], rep, axis=1) if ng > 1 else \
+            jnp.broadcast_to(c_mat[:, 0], (bsz, nh, ds))
+        y = jnp.einsum("bhpd,bhd->bhp", state, c_rep.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y[:, None]                                          # [b, 1, nh, hd]
+        final_state = state
+
+    y = _gated_rmsnorm(y.reshape(bsz, l, d_in).astype(x.dtype), z, p["norm_scale"])
+    record(tape, "out_proj", y)
+    out = dense(p["out_proj"], y)
+    new_cache = SSMCache(conv_tail.astype(x.dtype), final_state)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return SSMCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32))

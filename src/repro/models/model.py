@@ -1,0 +1,350 @@
+"""LM wrapper: embeddings → (prefix + scanned groups [+ shared block]) → head.
+
+Decoder-only and encoder-decoder (whisper) variants share this module. The
+forward has three modes:
+  * ``forward(params, tokens)``                  — train / logits over full seq
+  * ``forward(..., caches=...)``                 — decode step with caches
+  * ``encode(params, frames)``                   — enc-dec encoder pass
+Calibration capture (for PTQ) lives in repro.quant.calibrate and reuses
+these same functions with probes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import KVCache, attention, attn_params, init_cache
+from .config import ModelConfig
+from .layers import apply_norm, apply_mlp, dense, linear_params, mlp_params, norm_params, softcap
+from .transformer import (BlockSpec, block_forward, block_params, group_blocks,
+                          group_params, init_block_cache, shared_block_forward,
+                          shared_block_params)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+from .layers import BATCH, constrain as _constrain_impl
+
+
+def _constrain(x, *spec):
+    return _constrain_impl(x, *spec)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, d), jnp.float32)
+                  * d ** -0.5).astype(dt),
+        "final_norm": norm_params(cfg.norm, d, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = linear_params(keys[1], d, cfg.vocab_size, dt)
+
+    specs = group_blocks(cfg)
+
+    # leading dense-FFN layers (MoE archs)
+    if cfg.n_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, n_experts=0)
+        p["prefix"] = [block_params(jax.random.fold_in(keys[2], i), dense_cfg,
+                                    BlockSpec("attn"), dt)
+                       for i in range(cfg.n_dense_layers)]
+
+    n_groups = _n_scanned_groups(cfg)
+    gkeys = jax.random.split(keys[3], n_groups)
+    p["groups"] = jax.vmap(lambda k: group_params(k, cfg, dt))(gkeys)
+
+    if cfg.family == "hybrid":
+        p["shared"] = shared_block_params(keys[4], cfg, dt)
+
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_encoder_layers,
+                                      local_global_period=0, sliding_window=0)
+        ekeys = jax.random.split(keys[5], cfg.n_encoder_layers)
+        p["encoder"] = {
+            "groups": jax.vmap(lambda k: group_params(k, enc_cfg, dt))(ekeys),
+            "final_norm": norm_params(cfg.norm, d, dt),
+            "pos_embed": (jax.random.normal(keys[6], (cfg.encoder_seq, d),
+                                            jnp.float32) * 0.02).astype(dt),
+        }
+        ckeys = jax.random.split(keys[7], _n_scanned_groups(cfg))
+        p["cross"] = jax.vmap(
+            lambda k: {"norm": norm_params(cfg.norm, d, dt),
+                       "attn": attn_params(k, cfg, dt)})(ckeys)
+    return p
+
+
+def _n_scanned_groups(cfg: ModelConfig) -> int:
+    n = cfg.n_layers - cfg.n_dense_layers
+    g = cfg.group_size
+    assert n % g == 0, f"{cfg.name}: {n} layers not divisible by group {g}"
+    return n // g
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree matching the forward structure."""
+    dt = _dtype(cfg)
+    specs = group_blocks(cfg)
+    caches: dict = {}
+    if cfg.n_dense_layers:
+        caches["prefix"] = [init_block_cache(cfg, BlockSpec("attn"), batch,
+                                             max_len, dt)
+                            for _ in range(cfg.n_dense_layers)]
+    n_groups = _n_scanned_groups(cfg)
+
+    def one_group(_):
+        out = [init_block_cache(cfg, s, batch, max_len, dt) for s in specs]
+        if cfg.family == "hybrid":
+            win = cfg.sliding_window
+            out.append(init_cache(cfg, batch, max_len, window=win, dtype=dt))
+        return out
+
+    caches["groups"] = jax.vmap(one_group)(jnp.arange(n_groups))
+    if cfg.family == "encdec":
+        # cross-attention KV computed at encode time, stored per group
+        def one_cross(_):
+            return init_cache(cfg, batch, cfg.encoder_seq, dtype=dt)
+        caches["cross"] = jax.vmap(one_cross)(jnp.arange(n_groups))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
+                 mrope_positions, caches, cross_ctx, train: bool,
+                 with_tape: bool = False):
+    """lax.scan over the stacked groups."""
+    specs = group_blocks(cfg)
+    shared_p = params.get("shared")
+    cross_p = params.get("cross")
+
+    def group_fn(carry, scanned):
+        h, aux = carry
+        h = _constrain(h, BATCH,
+                       "model" if cfg.seq_shard_residual else None, None)
+        gp = scanned["p"]
+        gc = scanned.get("c")
+        cp = scanned.get("cross_p")
+        cc = scanned.get("cross_c")
+        tape_g = {} if with_tape else None
+        new_caches = []
+        for i, spec in enumerate(specs):
+            c_i = gc[i] if gc is not None else None
+            btape = None
+            if tape_g is not None:
+                tape_g[f"b{i}"] = {}
+                btape = tape_g[f"b{i}"]
+            h, nc, a = block_forward(gp[i], cfg, spec, h, positions=positions,
+                                     mrope_positions=mrope_positions, cache=c_i,
+                                     tape=btape)
+            aux = aux + a
+            new_caches.append(nc if nc is not None else c_i)
+            if spec.shared_after and shared_p is not None:
+                sc = gc[len(specs)] if gc is not None else None
+                stape = None
+                if tape_g is not None:
+                    tape_g["shared"] = {}
+                    stape = tape_g["shared"]
+                h, nsc = shared_block_forward(
+                    shared_p, cfg, h, x0, positions=positions, cache=sc,
+                    window=cfg.sliding_window, tape=stape)
+                if gc is not None:
+                    new_caches.append(nsc if nsc is not None else sc)
+        if cp is not None:
+            # whisper decoder cross-attention (after self block, pre-norm)
+            hn = apply_norm(cfg.norm, cp["norm"], h)
+            if cc is not None:
+                kv = (cc.k, cc.v)
+            else:
+                b, es = cross_ctx.shape[0], cross_ctx.shape[1]
+                k = dense(cp["attn"]["wk"], cross_ctx).reshape(
+                    b, es, cfg.n_kv_heads, cfg.head_dim)
+                v = dense(cp["attn"]["wv"], cross_ctx).reshape(
+                    b, es, cfg.n_kv_heads, cfg.head_dim)
+                kv = (k, v)
+            a, _ = attention(cp["attn"], cfg, hn, positions=positions,
+                             cross_kv=kv)
+            h = h + a
+        out = {"c": new_caches} if gc is not None else {}
+        if tape_g is not None:
+            out["tape"] = tape_g
+        return (h, aux), out
+
+    scanned_in = {"p": params["groups"]}
+    if caches is not None:
+        scanned_in["c"] = caches["groups"]
+    if cross_p is not None:
+        scanned_in["cross_p"] = cross_p
+        if caches is not None and "cross" in caches:
+            scanned_in["cross_c"] = caches["cross"]
+
+    fn = group_fn
+    if train and cfg.remat:
+        fn = jax.checkpoint(group_fn, prevent_cse=False)
+    (x, aux), scanned_out = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)),
+                                         scanned_in,
+                                         unroll=(_n_scanned_groups(cfg)
+                                                 if cfg.scan_unroll else 1))
+    new_caches = scanned_out.get("c")
+    return x, aux, new_caches, scanned_out.get("tape")
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            positions: jnp.ndarray | None = None,
+            mrope_positions: jnp.ndarray | None = None,
+            caches=None, encoder_out: jnp.ndarray | None = None,
+            train: bool = False, tape=None):
+    """tokens: [b, s] int32 → logits [b, s, vocab].
+
+    Returns (logits, new_caches, aux_loss). If ``tape`` is a dict it is
+    filled with per-linear calibration stats (see repro.quant.calibrate).
+    """
+    b, s = tokens.shape
+    if positions is None:
+        self_caches = ({k: v for k, v in caches.items() if k != "cross"}
+                       if caches is not None else None)
+        start = caches_length(self_caches) if caches is not None else 0
+        positions = start + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    x = _constrain(x, BATCH, None, None)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # whisper/gemma scale
+    x0 = x
+
+    new_prefix = None
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, n_experts=0)
+        new_prefix = []
+        if tape is not None:
+            tape["prefix"] = []
+        for i, bp in enumerate(params["prefix"]):
+            c_i = caches["prefix"][i] if caches is not None else None
+            btape = {} if tape is not None else None
+            x, nc, a = block_forward(bp, dense_cfg, BlockSpec("attn"), x,
+                                     positions=positions,
+                                     mrope_positions=mrope_positions, cache=c_i,
+                                     tape=btape)
+            if tape is not None:
+                tape["prefix"].append(btape)
+            aux += a
+            new_prefix.append(nc)
+
+    cross_ctx = encoder_out if cfg.family == "encdec" else None
+
+    x, aux_s, new_group_caches, group_tape = _scan_groups(
+        params, cfg, x, x0, positions=positions,
+        mrope_positions=mrope_positions, caches=caches,
+        cross_ctx=cross_ctx, train=train, with_tape=tape is not None)
+    aux = aux + aux_s
+    if tape is not None:
+        tape["groups"] = group_tape
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = dense(params["head"], x)
+    # keep logits vocab-sharded on the model axis: the f32 softmax/CE path
+    # otherwise materializes [tokens, vocab] per device (75GB/dev at 4k×256)
+    logits = _constrain(logits, ("pod", "data"), None, "model")
+    logits = softcap(logits, cfg.final_softcap)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = dict(caches)
+        new_caches["groups"] = new_group_caches
+        if new_prefix is not None:
+            new_caches["prefix"] = new_prefix
+    return logits, new_caches, aux
+
+
+def caches_length(caches):
+    """Current decode position from any KV cache in the tree."""
+    nodes = jax.tree.leaves(caches, is_leaf=lambda x: isinstance(x, KVCache))
+    for c in nodes:
+        if isinstance(c, KVCache):
+            # scanned caches have a leading group axis on length
+            return c.length.reshape(-1)[0]
+    return jnp.zeros((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray, tape=None):
+    """frames: [b, enc_seq, d] precomputed conv-frontend embeddings (stub).
+
+    ``tape``: optional dict filled with per-layer calibration stats under
+    ["encoder"]["groups"] (same convention as forward()).
+    """
+    enc = params["encoder"]
+    x = frames.astype(_dtype(cfg)) + enc["pos_embed"][None].astype(_dtype(cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_encoder_layers,
+                                  local_global_period=0, sliding_window=0)
+    spec = BlockSpec("attn")
+
+    with_tape = tape is not None
+
+    def group_fn(h, gp):
+        # bidirectional: causal=False via cross_kv-style call on itself
+        t_b = {"attn": {}, "mlp": {}} if with_tape else None
+        hn = apply_norm(enc_cfg.norm, gp[0]["attn_norm"], h)
+        k = dense(gp[0]["attn"]["wk"], hn).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = dense(gp[0]["attn"]["wv"], hn).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        a, _ = attention(gp[0]["attn"], enc_cfg, hn, positions=positions,
+                         cross_kv=(k, v),
+                         tape=t_b["attn"] if with_tape else None)
+        h = h + a
+        m = apply_mlp(enc_cfg.mlp, gp[0]["mlp"],
+                      apply_norm(enc_cfg.norm, gp[0]["mlp_norm"], h),
+                      t_b["mlp"] if with_tape else None)
+        return h + m, (t_b if with_tape else {})
+
+    x, t_stack = jax.lax.scan(group_fn, x, enc["groups"])
+    if with_tape:
+        tape["encoder"] = {"groups": {"b0": t_stack}}
+    return apply_norm(cfg.norm, enc["final_norm"], x)
+
+
+def prepare_cross_caches(params, cfg: ModelConfig, encoder_out: jnp.ndarray,
+                         caches):
+    """Precompute per-decoder-group cross KV from encoder output."""
+    b, s, _ = encoder_out.shape
+
+    def one(cp, cc):
+        k = dense(cp["attn"]["wk"], encoder_out).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim).astype(cc.k.dtype)
+        v = dense(cp["attn"]["wv"], encoder_out).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim).astype(cc.v.dtype)
+        return KVCache(k, v, jnp.asarray(s, jnp.int32), cc.pos)
+
+    caches = dict(caches)
+    caches["cross"] = jax.vmap(one)(params["cross"], caches["cross"])
+    return caches

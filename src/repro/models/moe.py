@@ -1,0 +1,281 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Top-k softmax routing (renormalized over the selected experts), deterministic
+static shapes via per-expert capacity, scatter/gather dispatch (no [T, E, cap]
+one-hot einsum — that pattern inflates HLO FLOPs quadratically and would
+poison the roofline's useful-FLOPs ratio). Experts are stacked on the leading
+axis so they shard cleanly over the "model" mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, mlp_params, apply_mlp
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    e, d, dff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 2 + cfg.n_shared_experts)
+    std = d ** -0.5
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e), jnp.float32) * std
+                         ).astype(jnp.float32)},
+        # stacked expert weights [E, d, dff] / [E, dff, d] (swiglu)
+        "experts": {
+            "gate": (jax.random.normal(ks[1], (e, d, dff), jnp.float32) * std).astype(dtype),
+            "up": (jax.random.normal(jax.random.fold_in(ks[1], 1), (e, d, dff),
+                                     jnp.float32) * std).astype(dtype),
+            "down": (jax.random.normal(jax.random.fold_in(ks[1], 2), (e, dff, d),
+                                       jnp.float32) * dff ** -0.5).astype(dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(ks[2], "swiglu", d,
+                                 cfg.moe_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _positions_in_expert(flat_e: jnp.ndarray, e: int,
+                         chunk: int = 4096) -> jnp.ndarray:
+    """Exclusive rank of each entry within its expert, computed chunkwise."""
+    n = flat_e.shape[0]
+    if n <= chunk:
+        oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(oh, axis=0) - oh
+        return jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    pad = (-n) % chunk
+    fe = jnp.pad(flat_e, (0, pad), constant_values=e)  # e is out-of-range → 0 row
+    fec = fe.reshape(-1, chunk)
+
+    def step(counts, idx_chunk):
+        oh = jax.nn.one_hot(idx_chunk, e, dtype=jnp.int32)
+        within = jnp.cumsum(oh, axis=0) - oh + counts[None, :]
+        p = jnp.take_along_axis(within, jnp.clip(idx_chunk, 0, e - 1)[:, None],
+                                axis=1)[:, 0]
+        return counts + jnp.sum(oh, axis=0), p
+
+    _, pos = jax.lax.scan(step, jnp.zeros((e,), jnp.int32), fec)
+    return pos.reshape(-1)[:n]
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    # round up to a lane-friendly multiple
+    return max(8, -(-cap // 8) * 8)
+
+
+def _q_expert_mm(buf: jnp.ndarray, q: dict) -> jnp.ndarray:
+    """Per-expert W4A8 matmul: buf [e, cap, d] × quantized stack → [e, cap, f]."""
+    from repro.kernels import ops as kops
+    dt = buf.dtype
+    y = jax.vmap(lambda xb, qw, sw, m, lb, la:
+                 kops.w4a8_linear(xb, qw, sw, m, lb, la))(
+        buf, q["qw"], q["sw"], q["m"], q["lb"], q["la"])
+    return y.astype(dt)
+
+
+def moe_block(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
+    """x: [b, s, d] → [b, s, d]. Returns (y, aux) with load-balance aux loss.
+
+    Two dispatch paths:
+      * shard_map EP (production): experts stay sharded on the "model" mesh
+        axis; activations (replicated over "model" under TP) are dispatched
+        *locally* to the resident experts and partial outputs are psum'd —
+        the only collective is the same [tokens, d] all-reduce a dense TP
+        MLP already pays. Chosen when a mesh with a "model" axis is active
+        and the expert count divides it.
+      * global scatter (portable): single-device / CPU tests.
+    The scatter-into-sharded-buffer path is never used: XLA's SPMD partition
+    of token→expert scatter degenerates to all-gathering the dispatch buffer
+    (measured 236 s of collectives per step on kimi-k2 train_4k — see
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    from .layers import _active_mesh
+    mesh = _active_mesh()
+    if (mesh is not None and "model" in mesh.axis_names and tape is None
+            and cfg.n_experts % dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 0):
+        return _moe_block_shard_map(p, cfg, x, mesh)
+    return _moe_block_global(p, cfg, x, tape)
+
+
+def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
+    """Portable scatter-based dispatch (single device, calibration)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, t)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])       # [t, e]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [t, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue — chunked exclusive
+    # cumsum keeps the one-hot intermediate at [chunk, E] instead of [t*k, E]
+    flat_e = gate_idx.reshape(-1)                               # [t*k]
+    pos = _positions_in_expert(flat_e, e)
+    keep = pos < cap                                            # dropped beyond capacity
+
+    # scatter tokens into [e, cap, d]
+    dst = flat_e * cap + jnp.where(keep, pos, cap - 1)          # clamp; masked below
+    upd = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((e * cap, d), xt.dtype).at[dst].add(upd)
+    buf = buf.reshape(e, cap, d)
+
+    # per-expert SwiGLU on the stacked buffer
+    if tape is not None:
+        from .layers import LinStats
+        cnt = jnp.zeros((e,), jnp.float32).at[flat_e].add(keep.astype(jnp.float32))
+        bf = buf.astype(jnp.float32)
+        tape["experts"] = {
+            "gate": LinStats(jnp.einsum("ecd,ecf->edf", bf, bf),
+                             jnp.sum(jnp.abs(bf), axis=1),
+                             jnp.max(jnp.abs(bf), axis=1), cnt),
+        }
+    ge = p["experts"]["gate"]
+    if isinstance(ge, dict) and "qw" in ge:        # W4A8-quantized experts
+        h_gate = _q_expert_mm(buf, ge)
+        h_up = _q_expert_mm(buf, p["experts"]["up"])
+    else:
+        h_gate = jnp.einsum("ecd,edf->ecf", buf, ge.astype(buf.dtype))
+        h_up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"].astype(buf.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    if tape is not None:
+        from .layers import LinStats
+        hf = h.astype(jnp.float32)
+        tape["experts"]["up"] = tape["experts"]["gate"]
+        tape["experts"]["down"] = LinStats(
+            jnp.einsum("ecf,ecg->efg", hf, hf), jnp.sum(jnp.abs(hf), axis=1),
+            jnp.max(jnp.abs(hf), axis=1), tape["experts"]["gate"].count)
+    de = p["experts"]["down"]
+    if isinstance(de, dict) and "qw" in de:
+        y_e = _q_expert_mm(h, de)
+    else:
+        y_e = jnp.einsum("ecf,efd->ecd", h, de.astype(h.dtype))
+
+    # gather back with gate weights
+    y_flat = y_e.reshape(e * cap, d)
+    gathered = y_flat[dst] * (gate_vals.reshape(-1) * keep).astype(y_flat.dtype)[:, None]
+    y = jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+    if cfg.n_shared_experts:
+        shared_tape = {} if tape is not None else None
+        y = y + apply_mlp("swiglu", p["shared"], xt, shared_tape)
+        if tape is not None:
+            tape["shared"] = shared_tape
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel dispatch (production path)
+# ---------------------------------------------------------------------------
+
+def _moe_block_shard_map(p, cfg: ModelConfig, x: jnp.ndarray, mesh):
+    """EP dispatch under TP-replicated activations.
+
+    Each "model"-axis rank holds e_loc = E / tp experts. Activations x are
+    replicated over "model" (standard TP), so each rank scatters the tokens
+    routed to ITS experts into a local [e_loc, cap, d] buffer, runs the
+    expert FFN locally, combines locally, and psums partial outputs over
+    "model". Batch stays sharded over (pod, data) — those axes pass through.
+    """
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    names = mesh.axis_names
+    tp = dict(zip(names, mesh.devices.shape))["model"]
+    e_loc = e // tp
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    bspec = batch_axes if batch_axes else None
+
+    # router on replicated activations (outside shard_map: plain jit code)
+    xt = x.reshape(b * s, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    quant = isinstance(p["experts"]["gate"], dict)
+    # per-expert leaf specs: expert axis sharded on "model"
+    if quant:
+        espec = {"gate": _qspec(), "up": _qspec(), "down": _qspec()}
+    else:
+        espec = {"gate": P("model", None, None), "up": P("model", None, None),
+                 "down": P("model", None, None)}
+
+    sizes = dict(zip(names, mesh.devices.shape))
+    data_sh = 1
+    for a in batch_axes:
+        data_sh *= sizes[a]
+    t_local = (b * s) // data_sh          # tokens seen by each model-rank
+    cap = _capacity(cfg, t_local)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(espec,
+                       P(bspec, None),       # xt [t, d] (batch-sharded)
+                       P(bspec, None),       # gate_vals
+                       P(bspec, None)),      # gate_idx
+             out_specs=P(bspec, None),
+             check_rep=False)
+    def ep(experts, xt_l, gv_l, gi_l):
+        rank = jax.lax.axis_index("model")
+        t_l = xt_l.shape[0]
+        lo = rank * e_loc
+        flat_e = gi_l.reshape(-1)
+        local = (flat_e >= lo) & (flat_e < lo + e_loc)
+        le = jnp.where(local, flat_e - lo, e_loc)       # e_loc = out of range
+        pos = _positions_in_expert(le, e_loc)
+        keep = local & (pos < cap)
+        dst = jnp.where(keep, le * cap + pos, e_loc * cap)
+        upd = jnp.repeat(xt_l, k, axis=0) * keep[:, None].astype(xt_l.dtype)
+        buf = jnp.zeros((e_loc * cap + 1, xt_l.shape[1]), xt_l.dtype
+                        ).at[dst].add(upd)[:-1].reshape(e_loc, cap, -1)
+
+        if quant:
+            h = jax.nn.silu(_q_expert_mm(buf, experts["gate"])) \
+                * _q_expert_mm(buf, experts["up"])
+            y_e = _q_expert_mm(h.astype(buf.dtype), experts["down"])
+        else:
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                       experts["gate"].astype(buf.dtype))) \
+                * jnp.einsum("ecd,edf->ecf", buf, experts["up"].astype(buf.dtype))
+            y_e = jnp.einsum("ecf,efd->ecd", h, experts["down"].astype(h.dtype))
+
+        y_flat = jnp.concatenate(
+            [y_e.reshape(e_loc * cap, -1),
+             jnp.zeros((1, y_e.shape[-1]), y_e.dtype)], axis=0)
+        gathered = y_flat[dst] * (gv_l.reshape(-1)
+                                  * keep.astype(jnp.float32)
+                                  ).astype(y_flat.dtype)[:, None]
+        y_partial = jnp.sum(gathered.reshape(t_l, k, -1), axis=1)
+        return jax.lax.psum(y_partial, "model")
+
+    y = ep(p["experts"], xt, gate_vals.astype(jnp.float32), gate_idx)
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp("swiglu", p["shared"], xt)
+    return y.reshape(b, s, d), aux
+
+
+def _qspec():
+    from jax.sharding import PartitionSpec as P
+    return {"qw": P("model", None, None), "sw": P("model", None),
+            "m": P("model", None), "lb": P("model", None, None),
+            "la": P("model", None, None)}

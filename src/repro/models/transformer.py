@@ -1,0 +1,158 @@
+"""Block assembly: repeating groups, scan-over-layers, block forward.
+
+A model is: [prefix blocks (python-level, e.g. leading dense-FFN layers of
+MoE archs)] + [n_groups × scanned group] (+ one shared attention block for
+zamba2-style hybrids, whose params live outside the scan).
+
+Block kinds:
+  attn   — GQA attention (+ optional sliding window) + MLP (dense or MoE)
+  mamba  — Mamba-2 mixer (no MLP; mamba2/zamba2 style)
+  shared — hybrid shared attention block invocation (params shared across
+           groups, per-invocation KV cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import KVCache, attention, attn_params, init_cache
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, dense, linear_params, mlp_params, norm_params
+from .mamba2 import SSMCache, init_ssm_cache, mamba2_block, mamba2_params
+from .moe import moe_block, moe_params
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str            # attn | mamba
+    window: int = 0      # sliding window (0 = full)
+    moe: bool = False
+    shared_after: bool = False   # invoke the shared block after this one
+
+
+def group_blocks(cfg: ModelConfig) -> List[BlockSpec]:
+    """Block specs for one repeating group."""
+    if cfg.family == "ssm":
+        return [BlockSpec("mamba")]
+    if cfg.family == "hybrid":
+        blocks = [BlockSpec("mamba") for _ in range(cfg.group_size)]
+        return blocks[:-1] + [dataclasses.replace(blocks[-1], shared_after=True)]
+    if cfg.local_global_period > 0:
+        # gemma2: alternate sliding-window and full attention
+        out = []
+        for i in range(cfg.local_global_period):
+            win = cfg.sliding_window if i % 2 == 0 else 0
+            out.append(BlockSpec("attn", window=win, moe=bool(cfg.n_experts)))
+        return out
+    return [BlockSpec("attn", window=cfg.sliding_window, moe=bool(cfg.n_experts))]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def block_params(key, cfg: ModelConfig, spec: BlockSpec, dtype):
+    ks = jax.random.split(key, 4)
+    if spec.kind == "mamba":
+        p = {"norm": norm_params(cfg.norm, cfg.d_model, dtype),
+             "mixer": mamba2_params(ks[0], cfg, dtype)}
+        return p
+    p = {"attn_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+         "attn": attn_params(ks[0], cfg, dtype),
+         "mlp_norm": norm_params(cfg.norm, cfg.d_model, dtype)}
+    if spec.moe:
+        p["moe"] = moe_params(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_params(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_block_norm:
+        p["post_attn_norm"] = norm_params(cfg.norm, cfg.d_model, dtype)
+        p["post_mlp_norm"] = norm_params(cfg.norm, cfg.d_model, dtype)
+    return p
+
+
+def shared_block_params(key, cfg: ModelConfig, dtype):
+    """Zamba2-style shared block: input is concat([h, h_embed]) (2d → d)."""
+    ks = jax.random.split(key, 4)
+    scfg = dataclasses.replace(cfg, qkv_bias=False)
+    return {
+        "in_norm": norm_params(cfg.norm, 2 * cfg.d_model, dtype),
+        "in_proj": linear_params(ks[0], 2 * cfg.d_model, cfg.d_model, dtype),
+        "attn": attn_params(ks[1], scfg, dtype),
+        "mlp_norm": norm_params(cfg.norm, cfg.d_model, dtype),
+        "mlp": mlp_params(ks[2], cfg.mlp, cfg.d_model, cfg.d_ff, dtype),
+        "out_proj": linear_params(ks[3], cfg.d_model, cfg.d_model, dtype),
+    }
+
+
+def group_params(key, cfg: ModelConfig, dtype):
+    specs = group_blocks(cfg)
+    ks = jax.random.split(key, len(specs))
+    return [block_params(k, cfg, s, dtype) for k, s in zip(ks, specs)]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def block_forward(p, cfg: ModelConfig, spec: BlockSpec, x: jnp.ndarray, *,
+                  positions, mrope_positions=None, cache=None, tape=None):
+    """One block. Returns (y, new_cache, aux)."""
+    if spec.kind == "mamba":
+        h = apply_norm(cfg.norm, p["norm"], x)
+        mtape = _sub(tape, "mixer")
+        y, new_cache = mamba2_block(p["mixer"], cfg, h, cache, tape=mtape)
+        return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+    h = apply_norm(cfg.norm, p["attn_norm"], x)
+    a, new_cache = attention(p["attn"], cfg, h, positions=positions,
+                             layer_window=spec.window,
+                             mrope_positions=mrope_positions, cache=cache,
+                             tape=_sub(tape, "attn"))
+    if cfg.post_block_norm:
+        a = apply_norm(cfg.norm, p["post_attn_norm"], a)
+    x = x + a
+    h = apply_norm(cfg.norm, p["mlp_norm"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        m, aux = moe_block(p["moe"], cfg, h, tape=_sub(tape, "moe"))
+    else:
+        m = apply_mlp(cfg.mlp, p["mlp"], h, tape=_sub(tape, "mlp"))
+    if cfg.post_block_norm:
+        m = apply_norm(cfg.norm, p["post_mlp_norm"], m)
+    return x + m, new_cache, aux
+
+
+def _sub(tape, name: str):
+    """Child tape dict (None-propagating)."""
+    if tape is None:
+        return None
+    tape[name] = {}
+    return tape[name]
+
+
+def shared_block_forward(p, cfg: ModelConfig, x, x0, *, positions,
+                         cache=None, window: int = 0, tape=None):
+    """Shared attention block on concat([x, x0]) (zamba2)."""
+    from .layers import record
+    h = apply_norm(cfg.norm, p["in_norm"], jnp.concatenate([x, x0], axis=-1))
+    record(tape, "in_proj", h)
+    h = dense(p["in_proj"], h)
+    a, new_cache = attention(p["attn"], cfg, h, positions=positions,
+                             layer_window=window, cache=cache,
+                             tape=_sub(tape, "attn"))
+    h = h + a
+    m = apply_mlp(cfg.mlp, p["mlp"], apply_norm(cfg.norm, p["mlp_norm"], h),
+                  tape=_sub(tape, "mlp"))
+    h = h + m
+    record(tape, "out_proj", h)
+    return x + dense(p["out_proj"], h), new_cache
+
+
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     max_len: int, dtype=jnp.bfloat16):
+    if spec.kind == "mamba":
+        return init_ssm_cache(cfg, batch, dtype)
+    return init_cache(cfg, batch, max_len, window=spec.window, dtype=dtype)

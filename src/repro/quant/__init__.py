@@ -1,0 +1,6 @@
+"""Model-level PTQ integration: calibration, quantization, serving."""
+from .calibrate import calibrate, accumulate, reduce_shared
+from .apply import PTQConfig, quantize_model
+
+__all__ = ["calibrate", "accumulate", "reduce_shared", "PTQConfig",
+           "quantize_model"]

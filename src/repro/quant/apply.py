@@ -1,0 +1,207 @@
+"""Whole-model PTQ: turn fp params + calibration tape into quantized params.
+
+Every quantizable linear leaf ``{"w": [k, n]}`` becomes a serving leaf::
+
+    {"qw":  int8 [k//2, n]   # int4 pairs packed along k
+     "sw":  f32 [n]          # per-out-channel weight scale
+     "m":   f32 [k]          # smoothing diagonal (ones when off)
+     "lb":  f32 [k, r]       # low-rank compensation (r may be 0)
+     "la":  f32 [r, n]}
+
+Methods: fp16 (no-op), rtn, llmint4, smoothquant, gptq, awq, lorc, l2qer,
+aser (w/o A.S.), aser_as (w/ A.S.), plus base-quantizer composition
+aser(base="gptq"/"awq") — the paper notes ER is orthogonal to the weight
+quantizer; we implement that compositionality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (QuantConfig, W4, aser_smoothing, awq_quantize,
+                        cholesky_whitener, gptq_quantize, l2qer,
+                        lorc, low_rank_factors, pack_int4, quantize_weight,
+                        rank_from_alpha, smoothquant_scales, whiten_svd)
+from repro.core.aser import smooth_gram
+from repro.models.layers import LinStats
+
+
+@dataclasses.dataclass(frozen=True)
+class PTQConfig:
+    method: str = "aser_as"
+    w_bits: int = 4
+    rank: int = 64              # fixed rank (alpha=0) for lorc/l2qer/aser
+    alpha: float = 0.0          # >0: Eq. 9 adaptive rank, capped at ``rank``
+    outlier_f: int = 32
+    damp: float = 1e-2
+    base: str = "rtn"           # weight quantizer under aser: rtn|gptq|awq
+
+
+def _w_cfg(cfg: PTQConfig) -> QuantConfig:
+    return QuantConfig(bits=cfg.w_bits)
+
+
+def _empty_lr(k: int, n: int):
+    return jnp.zeros((k, 0), jnp.float32), jnp.zeros((0, n), jnp.float32)
+
+
+def _quantize_one(w: jnp.ndarray, st: LinStats, cfg: PTQConfig):
+    """w: [k, n] (model layout). Returns serving leaf dict."""
+    k, n = w.shape
+    wt = w.astype(jnp.float32).T                    # paper layout [out, in]
+    count = jnp.maximum(st.count, 1.0)
+    g = st.gram
+    absmean = st.abssum / count
+    wq_cfg = _w_cfg(cfg)
+    m = jnp.ones((k,), jnp.float32)
+    la = lb = None
+    method = cfg.method
+
+    if method in ("rtn", "llmint4"):
+        codes, sc = quantize_weight(wt, wq_cfg)
+    elif method == "smoothquant":
+        w_absmax_in = jnp.max(jnp.abs(wt), axis=0)
+        m = smoothquant_scales(st.absmax, w_absmax_in, alpha=0.5)
+        codes, sc = quantize_weight(wt * m[None, :], wq_cfg)
+    elif method == "gptq":
+        w_hat = gptq_quantize(wt, g, wq_cfg, damp=cfg.damp)
+        codes, sc = _recode(w_hat, wt, wq_cfg)
+    elif method == "awq":
+        _, s = awq_quantize(wt, g, absmean, wq_cfg)
+        m = s
+        codes, sc = quantize_weight(wt * s[None, :], wq_cfg)
+    elif method in ("lorc", "l2qer"):
+        codes, sc = quantize_weight(wt, wq_cfg)
+        w_deq = codes.astype(jnp.float32) * sc
+        e_q = wt - w_deq
+        r = min(cfg.rank, k, n)
+        comp = (lorc(e_q, r) if method == "lorc" else l2qer(e_q, absmean, r))
+        la, lb = comp.l_a, comp.l_b
+    elif method.startswith("aser"):
+        smooth = method == "aser_as"
+        if smooth:
+            sm = aser_smoothing(wt, absmean, cfg.outlier_f)
+            m = sm.m
+            w_s = sm.w_smooth
+            extra = sm.w_outlier
+            g_eff = smooth_gram(g, m)
+        else:
+            w_s, extra, g_eff = wt, jnp.zeros_like(wt), g
+        codes, sc, w_deq = _base_quant(w_s, g_eff, wq_cfg, cfg)
+        e_q = (w_s - w_deq) + extra
+        r = min(cfg.rank, k, n)
+        s_chol = cholesky_whitener(g_eff, damp=cfg.damp)
+        u, sig, vt = whiten_svd(e_q, s_chol)
+        if cfg.alpha > 0:
+            r_sel = jnp.minimum(rank_from_alpha(sig, cfg.alpha), r)
+            la_f, lb_f = low_rank_factors(u, sig, vt, s_chol, r)
+            keepm = (jnp.arange(r) < r_sel).astype(jnp.float32)
+            la, lb = la_f * keepm[None, :], lb_f * keepm[:, None]
+        else:
+            la, lb = low_rank_factors(u, sig, vt, s_chol, r)
+    else:
+        raise ValueError(method)
+
+    if la is None:
+        lb_m, la_m = _empty_lr(k, n)
+    else:
+        # convert paper layout (L_A [out,r], L_B [r,in]) to model layout
+        lb_m, la_m = lb.T, la.T                      # [k, r], [r, n]
+
+    qw = pack_int4(codes).T if cfg.w_bits == 4 else codes.T   # [k/2, n] | [k, n]
+    return {"qw": qw.astype(jnp.int8), "sw": sc[:, 0].astype(jnp.float32),
+            "m": m.astype(jnp.float32), "lb": lb_m.astype(jnp.float32),
+            "la": la_m.astype(jnp.float32)}
+
+
+def _recode(w_hat, wt, wq_cfg):
+    """Recover int codes + scales from a fake-quantized weight (GPTQ)."""
+    qmax = wq_cfg.qmax
+    sc = jnp.maximum(jnp.max(jnp.abs(wt), axis=1, keepdims=True), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(w_hat / sc), wq_cfg.qmin, wq_cfg.qmax)
+    return codes.astype(jnp.int8), sc.astype(jnp.float32)
+
+
+def _base_quant(w_s, g_eff, wq_cfg, cfg: PTQConfig):
+    """Weight quantizer under ASER (orthogonality: rtn | gptq | awq)."""
+    if cfg.base == "gptq":
+        w_hat = gptq_quantize(w_s, g_eff, wq_cfg, damp=cfg.damp)
+        codes, sc = _recode(w_hat, w_s, wq_cfg)
+        return codes, sc, codes.astype(jnp.float32) * sc
+    if cfg.base == "awq":
+        # AWQ scale folds into m upstream only for pure awq; under ASER we
+        # keep base=rtn semantics for awq to avoid double-smoothing.
+        pass
+    codes, sc = quantize_weight(w_s, wq_cfg)
+    return codes, sc, codes.astype(jnp.float32) * sc
+
+
+def _q_leaf(wdict: dict, st: LinStats, cfg: PTQConfig):
+    w = wdict["w"]
+    if w.ndim > 2:
+        lead = w.shape[:-2]
+        flat_w = w.reshape((-1,) + w.shape[-2:])
+        flat_st = jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[len(lead):]), st)
+        out = jax.vmap(lambda wi, sti: _quantize_one(wi, sti, cfg))(
+            flat_w, flat_st)
+        out = {kk: vv.reshape(lead + vv.shape[1:]) for kk, vv in out.items()}
+    else:
+        out = _quantize_one(w, st, cfg)
+    if "b" in wdict:
+        out["b"] = wdict["b"]
+    return out
+
+
+def _q_expert_stack(earr: jnp.ndarray, st: LinStats, cfg: PTQConfig):
+    """Stacked expert weights [..., e, d, f] + per-expert stats."""
+    return _q_leaf({"w": earr}, st, cfg)
+
+
+def quantize_model(params, tape, cfg: PTQConfig):
+    """Return a new param tree with every calibrated linear quantized."""
+    if cfg.method == "fp16":
+        return params
+
+    def walk(p, t):
+        if isinstance(t, LinStats):
+            if isinstance(p, dict) and "w" in p:
+                return _q_leaf(p, t, cfg)
+            if isinstance(p, jnp.ndarray):               # stacked experts
+                return _q_expert_stack(p, t, cfg)
+            raise ValueError(f"stats for non-linear node: {type(p)}")
+        if isinstance(t, dict):
+            assert isinstance(p, (dict,)), (type(p), list(t))
+            out = dict(p)
+            for kk, tv in t.items():
+                out[kk] = walk(p[kk], tv)
+            return out
+        if isinstance(t, (list, tuple)):
+            return type(t)(walk(pi, ti) for pi, ti in zip(p, t))
+        return p
+
+    new = dict(params)
+    if "prefix" in (tape or {}):
+        new["prefix"] = [walk(pb, tb) for pb, tb
+                         in zip(params["prefix"], tape["prefix"])]
+    if "groups" in (tape or {}):
+        gt = tape["groups"]
+        blocks = params["groups"]           # list of block dicts
+        new_blocks = []
+        for i, pb in enumerate(blocks):
+            tb = gt.get(f"b{i}")
+            new_blocks.append(walk(pb, tb) if tb is not None else pb)
+        new["groups"] = new_blocks
+        if "shared" in gt and "shared" in params:
+            new["shared"] = walk(params["shared"], gt["shared"])
+    if "encoder" in (tape or {}) and "encoder" in params:
+        enc = dict(params["encoder"])
+        egt = tape["encoder"]["groups"]
+        enc["groups"] = [walk(pb, egt.get(f"b{i}")) if egt.get(f"b{i}")
+                         is not None else pb
+                         for i, pb in enumerate(params["encoder"]["groups"])]
+        new["encoder"] = enc
+    return new

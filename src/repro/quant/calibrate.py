@@ -1,0 +1,67 @@
+"""Calibration: run the model over a calibration stream, accumulate per-linear
+activation statistics (Gram XXᵀ, Σ|x|, absmax, token count).
+
+The paper uses 128 samples × 2048 tokens; smoke-scale tests use less. Stats
+for weight-shared modules (zamba2's shared block) and per-expert MoE stats
+come back stacked and are reduced here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, forward
+from repro.models.layers import LinStats
+
+
+def _combine(a: LinStats, b: LinStats) -> LinStats:
+    return LinStats(a.gram + b.gram, a.abssum + b.abssum,
+                    jnp.maximum(a.absmax, b.absmax), a.count + b.count)
+
+
+def _is_stats(x) -> bool:
+    return isinstance(x, LinStats)
+
+
+def accumulate(total, new):
+    """Merge a new batch's tape into the running total (None → copy)."""
+    if total is None:
+        return new
+    return jax.tree.map(_combine, total, new,
+                        is_leaf=lambda x: isinstance(x, LinStats))
+
+
+def calibrate(params, cfg: ModelConfig, batches, **fwd_kwargs):
+    """batches: iterable of token arrays [b, s]. Returns the summed tape."""
+    total = None
+
+    def one(tokens, extra):
+        tape: Dict[str, Any] = {}
+        forward(params, cfg, tokens, tape=tape, **extra)
+        return tape
+
+    for item in batches:
+        tokens, extra = (item if isinstance(item, tuple) else (item, {}))
+        merged = {**fwd_kwargs, **extra}
+        tape = one(tokens, merged)
+        total = accumulate(total, tape)
+    return total
+
+
+def reduce_shared(tape, cfg: ModelConfig):
+    """Sum the shared-block stats over the group axis (weight sharing ⇒ the
+    calibration Gram aggregates over every call site)."""
+    if cfg.family != "hybrid" or "groups" not in tape:
+        return tape
+    g = tape["groups"]
+    if "shared" in g:
+        g = dict(g)
+        g["shared"] = jax.tree.map(
+            lambda s: LinStats(jnp.sum(s.gram, 0), jnp.sum(s.abssum, 0),
+                               jnp.max(s.absmax, 0), jnp.sum(s.count, 0)),
+            g["shared"], is_leaf=_is_stats)
+        tape = dict(tape)
+        tape["groups"] = g
+    return tape

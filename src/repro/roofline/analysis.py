@@ -1,0 +1,184 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs/bytes: ``compiled.cost_analysis()`` — NOTE: these are PER-DEVICE
+(the SPMD executable one chip runs), so the terms divide by per-chip peaks.
+collective_bytes: parsed from the compiled HLO text — sum of operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([\w\[\]{}(), ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of (possibly tuple) shape text like 'f32[128,256]'."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes per collective kind (−start/−done dedup'd)."""
+    out: Dict[str, float] = {}
+    seen_start = set()
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{}, ]+?))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+            r"(-start|-done)?\(", hlo_text, re.M):
+        name, shape_str, kind, phase = m.groups()
+        if phase == "-done":
+            continue                      # counted at -start
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    flops: float                  # whole-program HLO FLOPs
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float = 0.0      # 6·N_active·D analytic
+    peak_mem_bytes: float = 0.0   # per-device from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS          # per-device program
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        per_dev_model = self.model_flops / self.chips
+        return per_dev_model / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / total modeled time (how close to roofline)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / t if t > 0 else 0.0
+
+    def to_dict(self):
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "chips": self.chips, "flops": self.flops,
+            "bytes": self.bytes_accessed, "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_per_dev_gb": self.peak_mem_bytes / 1e9,
+        }
+
+
+def analyze(compiled, *, arch: str, cell: str, mesh_name: str, chips: int,
+            model_flops: float = 0.0, hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(txt)
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes + mem.generated_code_size_in_bytes)
+    return Roofline(
+        arch=arch, cell=cell, mesh=mesh_name, chips=chips,
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=sum(coll.values()), coll_breakdown=coll,
+        model_flops=model_flops, peak_mem_bytes=float(peak))
+
+
+def model_flops_estimate(cfg, cell) -> float:
+    """6·N_active·D for training; 2·N_active·D for inference forward.
+
+    N_active counts routed-expert params once per activated expert.
+    """
+    d, v = cfg.d_model, cfg.vocab_size
+    # per-layer active params
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d \
+        if cfg.n_heads else 0
+    if cfg.n_experts:
+        ff_active = 3 * d * cfg.moe_d_ff * (cfg.top_k + cfg.n_shared_experts)
+        dense_ff = 3 * d * cfg.d_ff
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        layer_params = cfg.n_layers * attn + n_moe * ff_active \
+            + cfg.n_dense_layers * dense_ff
+    elif cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_d_inner
+        conv_dim = d_in + 2 * cfg.ssm_n_groups * cfg.ssm_state
+        mamba = d * (2 * d_in + 2 * cfg.ssm_n_groups * cfg.ssm_state
+                     + cfg.ssm_n_heads) + d_in * d
+        if cfg.family == "hybrid":
+            n_shared = cfg.n_layers // cfg.shared_attn_period
+            shared = 2 * d * d + attn + 3 * d * cfg.d_ff + d * d
+            layer_params = cfg.n_layers * mamba + n_shared * shared
+        else:
+            layer_params = cfg.n_layers * mamba
+    else:
+        ff_mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        layer_params = cfg.n_layers * (attn + ff_mult * d * cfg.d_ff)
+        if cfg.family == "encdec":
+            layer_params += cfg.n_encoder_layers * (attn + 2 * d * cfg.d_ff) \
+                + cfg.n_layers * (2 * d * cfg.kv_dim + d * cfg.q_dim)
+    n_active = layer_params + v * d * (1 if cfg.tie_embeddings else 2)
+
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

@@ -1,0 +1,74 @@
+"""Serving engine: batched prefill + decode with KV caches.
+
+Designed for the quantized (W4A8 + ASER compensation) model but works for fp
+params identically — the ``dense`` dispatch picks the path per leaf. Requests
+are padded into fixed batch slots (static shapes ⇒ one compiled program per
+(batch, max_len) bucket, the standard TPU serving discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (ModelConfig, encode, forward, init_caches,
+                          prepare_cross_caches)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    batch_slots: int = 8
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int = -1               # -1 = never stop early
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig = ServeConfig()):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- compiled steps ----------------------------------------------------
+    def _prefill_impl(self, params, tokens, caches, encoder_out=None):
+        """tokens: [b, s_prompt]. Runs the prompt through, filling caches."""
+        logits, caches, _ = forward(params, self.cfg, tokens, caches=caches,
+                                    encoder_out=encoder_out)
+        return logits[:, -1], caches
+
+    def _decode_impl(self, params, last_tok, caches, key):
+        logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
+                                    caches=caches)
+        lg = logits[:, 0]
+        if self.scfg.temperature > 0:
+            nxt = jax.random.categorical(key, lg / self.scfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32), caches
+
+    # -- public API ----------------------------------------------------------
+    def generate(self, prompts: jnp.ndarray, n_steps: int,
+                 frames: Optional[jnp.ndarray] = None, seed: int = 0):
+        """prompts: [b, s]. Returns generated tokens [b, n_steps]."""
+        b = prompts.shape[0]
+        caches = init_caches(self.cfg, b, self.scfg.max_len)
+        enc_out = None
+        if self.cfg.family == "encdec":
+            assert frames is not None
+            enc_out = encode(self.params, self.cfg, frames)
+            caches = prepare_cross_caches(self.params, self.cfg, enc_out, caches)
+        last, caches = self._prefill(self.params, prompts, caches)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        out = [tok]
+        key = jax.random.PRNGKey(seed)
+        for i in range(n_steps - 1):
+            key, sub = jax.random.split(key)
+            tok, caches = self._decode(self.params, tok, caches, sub)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,278 @@
+"""Logical-axis sharding rules: params, activations, caches → mesh axes.
+
+Mesh axes: optional "pod" (slow inter-pod links), "data" (DP / sequence
+parallelism for long-context), "model" (TP / EP). The rules map every param
+leaf by its role, inferred from the leaf path. Replicated-by-default keeps
+the dry-run robust; hot leaves get explicit layouts:
+
+  embed / head           : vocab → model
+  attention wq/wk/wv     : out (heads) → model       [k, n] => (None, model)
+  attention wo           : in  (heads) → model       => (model, None)
+  mlp gate/up            : out (d_ff) → model
+  mlp down               : in  (d_ff) → model
+  moe experts            : expert axis → model (EP)
+  mamba in_proj          : out (d_inner…) → model
+  mamba out_proj         : in  (d_inner) → model
+  quantized leaves       : qw/sw/la/lb follow the same axis as their w;
+                           lb/la replicated when r is small (cheaper than
+                           shard + all-gather of a skinny GEMM)
+
+Batch: ("pod", "data"); long-context decode (batch 1): KV cache seq → data.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis(mesh: Mesh, name: str) -> Optional[str]:
+    return name if name in mesh.axis_names else None
+
+
+def batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _spec_for_path(path: str, ndim: int, mesh: Mesh, shard_lr: bool,
+                   fsdp: bool = False, expert_2d: bool = False) -> P:
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data") if fsdp else None
+    edata = _axis(mesh, "data") if expert_2d else None
+    if model is None:
+        return P()
+
+    def last2(in_ax, out_ax):
+        """Spec for a [..., in, out] leaf with leading stack dims replicated."""
+        return P(*([None] * (ndim - 2) + [in_ax, out_ax]))
+
+    def last1(ax):
+        return P(*([None] * (ndim - 1) + [ax]))
+
+    p = path
+    # ---- moe stacked experts: expert axis → model (EP) --------------------
+    if "/experts/" in p:
+        leaf = p.rsplit("/", 1)[-1]
+        per_expert_rank = {"qw": 2, "w": 2, "la": 2, "lb": 2,
+                           "sw": 1, "m": 1, "b": 1}.get(leaf, 2)
+        if leaf in ("gate", "up", "down"):
+            per_expert_rank = 2           # fp stacked arrays keep their name
+        spec = [None] * ndim
+        e_ax = ndim - per_expert_rank - 1
+        if 0 <= e_ax < ndim:
+            spec[e_ax] = model
+        if edata is not None and per_expert_rank == 2:
+            # shard the d_ff dim over data too (huge-MoE serving: kimi-k2)
+            is_down = "/down" in p
+            name = p.rsplit("/", 1)[-1]
+            two_d = name in ("qw", "w", "la", "lb")
+            if name in ("gate", "up", "down"):
+                two_d = True
+            if two_d:
+                # gate/up: [.., e, d, f] → f is out; down: [.., e, f, d] → f is in
+                f_ax = ndim - 1 if not is_down else ndim - 2
+                if name == "lb":        # [.., k, r] — k is the in dim
+                    f_ax = ndim - 2 if is_down else None
+                if name == "la":        # [.., r, n] — n is the out dim
+                    f_ax = ndim - 1 if not is_down else None
+                if name == "qw":        # [.., k/2, n]
+                    f_ax = ndim - 1 if not is_down else ndim - 2
+                if f_ax is not None and spec[f_ax] is None:
+                    spec[f_ax] = edata
+        return P(*spec)
+
+    # ---- quantized leaves ------------------------------------------------
+    if p.endswith("/qw") or p.endswith("/sw") or p.endswith("/la") \
+            or p.endswith("/lb") or p.endswith("/m"):
+        base = p.rsplit("/", 1)[0]
+        out_sharded = _col_sharded(base)
+        in_sharded = _row_sharded(base)
+        leaf = p.rsplit("/", 1)[1]
+        if leaf == "qw":   # [k(/2), n]
+            return last2(model if in_sharded else (data if out_sharded else None),
+                         model if out_sharded else (data if in_sharded else None))
+        if leaf == "sw":   # [n]
+            return last1(model if out_sharded else None)
+        if leaf == "m":    # [k]
+            return last1(model if in_sharded else None)
+        if leaf == "lb":   # [k, r]
+            return last2(model if (in_sharded and shard_lr) else None, None)
+        if leaf == "la":   # [r, n]
+            return last2(None, model if (out_sharded and shard_lr) else None)
+
+    # ---- embeddings ------------------------------------------------------
+    if p.endswith("pos_embed"):
+        return P(*([None] * ndim))
+    if p.endswith("embed"):
+        return P(model, data)
+    if "/head/" in p or p.endswith("head/w"):
+        return last2(data, model)
+
+    # ---- fp linears ------------------------------------------------------
+    if p.endswith("/w"):
+        base = p[:-2]
+        if _col_sharded(base):
+            return last2(data, model)
+        if _row_sharded(base):
+            return last2(model, data)
+        return P()
+    if p.endswith("/b"):
+        base = p[:-2]
+        if _col_sharded(base):
+            return last1(model)
+        return P()
+
+    # ---- mamba conv / norms / scalars: replicated ------------------------
+    return P()
+
+
+_COL = ("wq", "wk", "wv", "gate", "up", "in_proj")     # out-dim sharded
+_ROW = ("wo", "down", "out_proj")                      # in-dim sharded
+
+
+def _col_sharded(base: str) -> bool:
+    return base.rsplit("/", 1)[-1] in _COL
+
+
+def _row_sharded(base: str) -> bool:
+    return base.rsplit("/", 1)[-1] in _ROW
+
+
+def _paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out += _paths(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _paths(v, f"{prefix}/{i}")
+    elif hasattr(tree, "_fields"):        # NamedTuple
+        for k in tree._fields:
+            out += _paths(getattr(tree, k), f"{prefix}/{k}")
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def _map_with_paths(fn, tree, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _map_with_paths(fn, v, f"{prefix}/{k}") for k, v in tree.items()}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return type(tree)(*[_map_with_paths(fn, getattr(tree, k), f"{prefix}/{k}")
+                            for k in tree._fields])
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_with_paths(fn, v, f"{prefix}/{i}")
+                          for i, v in enumerate(tree))
+    return fn(prefix, tree)
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes whose mesh size doesn't divide the dim (e.g. odd vocabs)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, ax in enumerate(tuple(spec)):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axs]))
+        if shape[i] % total:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def param_shardings(params, mesh: Mesh, shard_lr: bool = False,
+                    fsdp: bool = False, expert_2d: bool = False):
+    """NamedSharding tree matching ``params``."""
+    def one(path, leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        # scanned group stacks have a leading group axis -> replicated
+        spec = _spec_for_path(path, ndim, mesh, shard_lr, fsdp, expert_2d)
+        if len(spec) > ndim:
+            spec = P(*spec[:ndim])
+        spec = _sanitize(spec, getattr(leaf, "shape", ()), mesh)
+        return NamedSharding(mesh, spec)
+    return _map_with_paths(one, params)
+
+
+def opt_shardings(opt_sds, param_shardings_tree):
+    """Optimizer state shardings: mu/nu follow the params; step replicated."""
+    from repro.train.optimizer import OptState
+    mesh = jax.tree.leaves(
+        param_shardings_tree,
+        is_leaf=lambda x: isinstance(x, NamedSharding))[0].mesh
+    return OptState(NamedSharding(mesh, P()),
+                    param_shardings_tree, param_shardings_tree)
+
+
+def data_sharding(mesh: Mesh, ndim: int = 2, *, seq_axis: Optional[int] = None,
+                  batch_sharded: bool = True):
+    """Sharding for [batch, seq, ...] inputs."""
+    spec = [None] * ndim
+    if batch_sharded:
+        spec[0] = batch_axes(mesh)
+    if seq_axis is not None:
+        spec[seq_axis] = "data" if "data" in mesh.axis_names else None
+        if spec[0] == ("pod", "data") or spec[0] == ("data",):
+            spec[0] = "pod" if "pod" in mesh.axis_names else None
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(caches, mesh: Mesh, *, seq_to_data: bool = False):
+    """Shard KV caches: kv-heads → model; optionally cache seq → data (SP
+    long-context decode). SSM caches: heads → model."""
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data")
+    batch = batch_axes(mesh)
+
+    model_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                              if a == "model"])) if model else 1
+
+    def one(path, leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        spec = [None] * ndim
+        if path.endswith("/k") or path.endswith("/v"):
+            # [*, b, cache_len, n_kv, hd]
+            off = ndim - 4
+            n_kv = leaf.shape[off + 2]
+            hd = leaf.shape[off + 3]
+            cache_len = leaf.shape[off + 1]
+            if not seq_to_data and batch is not None:
+                spec[off + 0] = batch
+            if seq_to_data and data is not None:
+                spec[off + 1] = data
+            if model is not None:
+                if n_kv % model_size == 0:
+                    spec[off + 2] = model
+                elif hd % model_size == 0:
+                    # few-KV-head archs (n_kv < TP): shard head_dim. The
+                    # decode cache write (dynamic-update-slice at a dynamic
+                    # seq position) stays LOCAL; attention contractions over
+                    # hd psum across model. Sharding cache_len instead makes
+                    # XLA "involuntarily fully rematerialize" (all-gather)
+                    # the cache every layer — 310 GB/step on nemotron decode
+                    # (EXPERIMENTS.md §Perf iteration 3).
+                    spec[off + 3] = model
+                elif spec[off + 1] is None and cache_len % model_size == 0:
+                    spec[off + 1] = model
+        elif path.endswith("/conv"):
+            # [*, b, k-1, conv_dim]
+            if not seq_to_data and batch is not None:
+                spec[ndim - 3] = batch
+            if model is not None:
+                spec[ndim - 1] = model
+        elif path.endswith("/state"):
+            # [*, b, nh, hd, ds]
+            if not seq_to_data and batch is not None:
+                spec[ndim - 4] = batch
+            if model is not None:
+                spec[ndim - 3] = model
+        return NamedSharding(mesh, _sanitize(P(*spec), getattr(leaf, "shape", ()),
+                                             mesh))
+
+    return _map_with_paths(one, caches)

@@ -1,0 +1,80 @@
+"""Training step + loop: CE loss, gradient accumulation, aux-loss weighting.
+
+``make_train_step`` builds the jit-able step used both by the CPU examples
+and the multi-pod dry-run (pjit with explicit shardings from repro.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import cross_entropy
+from repro.models import ModelConfig, forward
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    aux_weight: float = 0.01       # MoE load-balance loss weight
+    grad_accum: int = 1            # microbatches per step
+    loss_dtype: str = "float32"
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, aux_weight: float,
+            encoder_out=None, mrope_positions=None):
+    tokens = batch["tokens"]
+    logits, _, aux = forward(params, cfg, tokens[:, :-1], train=True,
+                             encoder_out=encoder_out,
+                             mrope_positions=mrope_positions)
+    ce = cross_entropy(logits, tokens[:, 1:],
+                       batch.get("mask", None))
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    With grad_accum > 1 the batch's leading axis is split into microbatches
+    scanned sequentially (activation memory / straggler smoothing), gradients
+    averaged before the optimizer update.
+    """
+    def grads_of(params, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch,
+                                   aux_weight=tcfg.aux_weight)
+        return loss, ce, aux, grads
+
+    def step(params, opt_state: OptState, batch):
+        if tcfg.grad_accum > 1:
+            na = tcfg.grad_accum
+            micro = jax.tree.map(
+                lambda x: x.reshape((na, x.shape[0] // na) + x.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mb):
+                g_sum, l_sum = carry
+                loss, ce, aux, g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_sum, g), l_sum + ce), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (g_sum, ce_sum), _ = jax.lax.scan(acc_fn, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / na, g_sum)
+            ce = ce_sum / na
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            _, ce, aux, grads = grads_of(params, batch)
+        params, opt_state, m = adamw_update(tcfg.opt, params, grads, opt_state)
+        m = dict(m, loss=ce, aux=aux)
+        return params, opt_state, m
+
+    return step
+
+
+def train_step_for_dryrun(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """(params, opt_state, batch) signature used by launch/dryrun.py."""
+    return make_train_step(cfg, tcfg)

@@ -1,0 +1,59 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+
+
+def test_deterministic_by_step():
+    c = SyntheticCorpus(CorpusConfig(vocab_size=128))
+    a = c.sample(jnp.asarray(5), 4, 16)
+    b = c.sample(jnp.asarray(5), 4, 16)
+    assert jnp.all(a == b)
+    assert not jnp.all(a == c.sample(jnp.asarray(6), 4, 16))
+
+
+def test_learnable_structure():
+    """Bigram structure exists: successor entropy ≪ uniform."""
+    c = SyntheticCorpus(CorpusConfig(vocab_size=128))
+    toks = np.asarray(c.sample(jnp.asarray(0), 16, 256)).reshape(-1)
+    # count empirical successors of the most common token
+    tok = np.bincount(toks).argmax()
+    succ = toks[1:][toks[:-1] == tok]
+    if len(succ) > 10:
+        uniq = len(np.unique(succ))
+        assert uniq <= c.cfg.branching
+
+
+def test_calibration_disjoint_from_training():
+    c = SyntheticCorpus(CorpusConfig(vocab_size=128))
+    cal = list(c.calibration_batches(2, 4, 16))
+    train0 = c.sample(jnp.asarray(0), 4, 16)
+    assert not jnp.all(cal[0] == train0)
+
+
+def test_entropy_floor_positive():
+    c = SyntheticCorpus(CorpusConfig(vocab_size=128))
+    assert 1.0 < c.entropy_floor() < 128
+
+
+def test_pipeline_prefetch_and_resume():
+    from repro.data.pipeline import DataPipeline
+    c = SyntheticCorpus(CorpusConfig(vocab_size=64))
+    p = DataPipeline(c, batch=4, seq=8, prefetch=2,
+                     process_index=0, process_count=1)
+    run1 = {s: b for s, b in p.iterate(0, 5)}
+    # resume from step 3 reproduces identical batches
+    run2 = {s: b for s, b in p.iterate(3, 2)}
+    for s in (3, 4):
+        assert jnp.all(run1[s] == run2[s])
+
+
+def test_pipeline_host_slicing():
+    from repro.data.pipeline import DataPipeline
+    c = SyntheticCorpus(CorpusConfig(vocab_size=64))
+    full = DataPipeline(c, batch=8, seq=8, process_index=0, process_count=1)
+    h0 = DataPipeline(c, batch=8, seq=8, process_index=0, process_count=2)
+    h1 = DataPipeline(c, batch=8, seq=8, process_index=1, process_count=2)
+    fb = full.batch_at(7)
+    assert jnp.all(h0.batch_at(7) == fb[:4])
+    assert jnp.all(h1.batch_at(7) == fb[4:])

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/rank sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import W4, pack_int4, quantize_weight
+from repro.kernels import act_quant, flash_attention, w4a8_gemm
+from repro.kernels import ref as kref
+from repro.kernels import ops
+
+
+def _quant_setup(rng, m, k, n, r, dtype=np.float32):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(dtype))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    codes, sw = quantize_weight(w, W4)
+    qw = pack_int4(codes).T
+    mdiag = jnp.asarray(rng.uniform(0.5, 2.0, size=(k,)).astype(np.float32))
+    lb = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32) * 0.02)
+    la = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32) * 0.02)
+    return x, qw, sw[:, 0], mdiag, lb, la
+
+
+def _exact_gemm_oracle(xq, sx, qw, sw, xlr, la):
+    """Exact-integer oracle for the GEMM kernel given ITS inputs (the e2e
+    ref path quantizes independently; 1-ulp scale ties would flip codes)."""
+    from repro.core.quantizers import unpack_int4
+    wc = unpack_int4(qw.T).T
+    acc = np.asarray(xq, np.int64) @ np.asarray(wc, np.int64)
+    return (acc * np.asarray(sx) * np.asarray(sw)[None, :]
+            + np.asarray(xlr) @ np.asarray(la))
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (8, 128, 128, 8), (64, 256, 128, 16), (130, 512, 384, 32),
+    (256, 1024, 256, 64), (32, 384, 640, 8),
+])
+def test_w4a8_gemm_shapes(rng, m, k, n, r):
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, m, k, n, r)
+    xq, sx, xlr = act_quant(x, mdiag, lb)
+    y_ref = _exact_gemm_oracle(xq, sx, qw, sw, xlr, la)
+    y = w4a8_gemm(xq, sx, qw, sw, xlr, la)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_w4a8_end_to_end_close(rng):
+    """Kernel pipeline vs the independent e2e ref: close up to rounding-tie
+    flips (bounded by one code step per element)."""
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 64, 512, 256, 16)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    xq, sx, xlr = act_quant(x, mdiag, lb)
+    y = w4a8_gemm(xq, sx, qw, sw, xlr, la)
+    denom = np.abs(np.asarray(y_ref)).max()
+    assert np.abs(np.asarray(y) - np.asarray(y_ref)).max() / denom < 2e-2
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 128), (128, 128, 256),
+                                      (256, 128, 512)])
+def test_w4a8_gemm_block_shapes(rng, bm, bn, bk):
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 200, 512, 256, 16)
+    xq, sx, xlr = act_quant(x, mdiag, lb)
+    y_ref = _exact_gemm_oracle(xq, sx, qw, sw, xlr, la)
+    y = w4a8_gemm(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_act_quant_dtypes(rng, dtype):
+    x = jnp.asarray(rng.normal(size=(48, 256)).astype(np.float32)).astype(dtype)
+    mdiag = jnp.asarray(rng.uniform(0.5, 2.0, size=(256,)).astype(np.float32))
+    lb = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32) * 0.02)
+    xq, sx, xlr = act_quant(x, mdiag, lb)
+    xq_r, sx_r = kref.act_quant_ref(x, mdiag)
+    assert int(jnp.sum(jnp.abs(xq.astype(jnp.int32) - xq_r.astype(jnp.int32)) > 1)) == 0
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sx_r), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(xlr),
+        np.asarray((x.astype(jnp.float32) / mdiag[None]) @ lb),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("sq,skv,h,hkv,d,causal,window,cap", [
+    (128, 128, 4, 4, 64, True, 0, 0.0),
+    (200, 200, 8, 2, 64, True, 0, 0.0),
+    (256, 256, 4, 1, 128, True, 64, 0.0),
+    (64, 64, 2, 2, 256, False, 0, 0.0),
+    (128, 128, 4, 2, 64, True, 0, 50.0),
+    (100, 100, 4, 4, 32, True, 32, 30.0),
+])
+def test_flash_attention_sweep(rng, sq, skv, h, hkv, d, causal, window, cap):
+    b = 2
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, d)).astype(np.float32))
+    o = flash_attention(q, k, v, causal=causal, window=window, logit_cap=cap)
+    o_ref = kref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                     logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_bf16(rng):
+    b, s, h, d = 2, 128, 4, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32)).astype(jnp.bfloat16)
+    o = flash_attention(q, k, v)
+    o_ref = kref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ops_dispatch_consistency(rng):
+    """pallas path == XLA fallback through the public ops API."""
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 64, 256, 128, 16)
+    ops.use_pallas(False)
+    y_xla = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
+    ops.use_pallas(True)
+    y_pl = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
+    ops.use_pallas(False)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ops_rank_zero_pallas(rng):
+    x, qw, sw, mdiag, _, _ = _quant_setup(rng, 32, 128, 64, 8)
+    lb = jnp.zeros((128, 0), jnp.float32)
+    la = jnp.zeros((0, 64), jnp.float32)
+    ops.use_pallas(True)
+    y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
+    ops.use_pallas(False)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_weight_only_a16_path(rng):
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 16, 128, 64, 8)
+    y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la, a_bits=16)
+    from repro.core.quantizers import unpack_int4
+    w = unpack_int4(qw.T).T.astype(jnp.float32) * sw[None, :]
+    x_s = x / mdiag[None, :]
+    y_ref = x_s @ w + (x_s @ lb) @ la
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)

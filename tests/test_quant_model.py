@@ -1,0 +1,110 @@
+"""End-to-end model quantization: calibrate → quantize → serve."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.metrics import perplexity
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.kernels import ops
+from repro.models import forward, init_params
+from repro.quant import PTQConfig, calibrate, quantize_model, reduce_shared
+
+ARCHS = ["llama3_8b", "mamba2_780m", "moonshot_v1_16b", "zamba2_7b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def quantized(request):
+    arch = request.param
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = calibrate(params, cfg, corpus.calibration_batches(2, 4, 32))
+    tape = reduce_shared(tape, cfg)
+    toks = corpus.sample(jnp.asarray(99), 4, 32)
+    return arch, cfg, params, tape, toks
+
+
+def test_quantize_all_methods_finite(quantized):
+    arch, cfg, params, tape, toks = quantized
+    ref, _, _ = forward(params, cfg, toks)
+    for method in ["rtn", "smoothquant", "lorc", "l2qer", "aser", "aser_as"]:
+        qp = quantize_model(params, tape, PTQConfig(method=method, rank=8,
+                                                    outlier_f=8))
+        lg, _, _ = forward(qp, cfg, toks)
+        assert bool(jnp.all(jnp.isfinite(lg))), (arch, method)
+        # quantized model is a perturbation, not garbage
+        rel = float(jnp.linalg.norm(lg - ref) / jnp.linalg.norm(ref))
+        assert rel < 1.0, (arch, method, rel)
+
+
+def test_aser_closer_than_rtn(quantized):
+    arch, cfg, params, tape, toks = quantized
+    ref, _, _ = forward(params, cfg, toks)
+
+    def dist(method, **kw):
+        qp = quantize_model(params, tape, PTQConfig(method=method, **kw))
+        lg, _, _ = forward(qp, cfg, toks)
+        return float(jnp.linalg.norm(lg - ref))
+
+    d_rtn = dist("rtn")
+    d_aser = dist("aser_as", rank=16, outlier_f=8)
+    assert d_aser < d_rtn, arch
+
+
+def test_pallas_path_matches_xla(quantized):
+    arch, cfg, params, tape, toks = quantized
+    if arch != "llama3_8b":
+        pytest.skip("one arch suffices (slow in interpret mode)")
+    qp = quantize_model(params, tape, PTQConfig(method="aser_as", rank=8,
+                                                outlier_f=8))
+    ops.use_pallas(False)
+    lg_xla, _, _ = forward(qp, cfg, toks[:1, :16])
+    ops.use_pallas(True)
+    lg_pl, _, _ = forward(qp, cfg, toks[:1, :16])
+    ops.use_pallas(False)
+    np.testing.assert_allclose(np.asarray(lg_pl), np.asarray(lg_xla),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_act_bits_sweep(quantized):
+    """W4Ax: lower activation bits → larger deviation (Fig. 5 trend)."""
+    arch, cfg, params, tape, toks = quantized
+    if arch != "llama3_8b":
+        pytest.skip("one arch suffices")
+    ref, _, _ = forward(params, cfg, toks)
+    qp = quantize_model(params, tape, PTQConfig(method="aser_as", rank=16,
+                                                outlier_f=8))
+    dists = {}
+    for bits in (16, 8, 6):
+        ops.set_act_bits(bits)
+        lg, _, _ = forward(qp, cfg, toks)
+        dists[bits] = float(jnp.linalg.norm(lg - ref))
+    ops.set_act_bits(8)
+    assert dists[16] <= dists[8] <= dists[6]
+
+
+def test_quantized_decode_consistency(quantized):
+    """Quantized model decode == quantized full forward."""
+    arch, cfg, params, tape, toks = quantized
+    if arch == "moonshot_v1_16b":
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    from repro.models import init_caches
+    qp = quantize_model(params, tape, PTQConfig(method="aser_as", rank=8,
+                                                outlier_f=8))
+    toks = toks[:2, :6]
+    full, _, _ = forward(qp, cfg, toks)
+    caches = init_caches(cfg, 2, max_len=8)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, caches, _ = forward(qp, cfg, toks[:, t:t + 1], caches=caches)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    # per-token act quant discretizes: tiny chunked-vs-recurrent numeric
+    # differences (SSD path) can flip a code by ±1, so the tolerance is
+    # looser than the fp decode test (which is exact to 2e-6).
+    assert float(jnp.max(jnp.abs(dec - full))) < 1.5e-2 * float(
+        jnp.max(jnp.abs(full)) + 1)

@@ -1,0 +1,75 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import (A6, A8, W4, W8, QuantConfig,
+                                   dequantize_weight, fake_quant_activation,
+                                   fake_quant_weight, pack_int4,
+                                   quantize_activation, quantize_weight,
+                                   unpack_int4)
+
+
+def test_pack_unpack_roundtrip(rng):
+    codes = jnp.asarray(rng.integers(-8, 8, size=(64, 128)), jnp.int8)
+    assert jnp.all(unpack_int4(pack_int4(codes)) == codes)
+
+
+def test_pack_halves_size(rng):
+    codes = jnp.asarray(rng.integers(-8, 8, size=(32, 64)), jnp.int8)
+    assert pack_int4(codes).shape == (32, 32)
+
+
+@pytest.mark.parametrize("cfg", [W4, W8, QuantConfig(bits=4, granularity="per_tensor"),
+                                 QuantConfig(bits=4, granularity="per_group",
+                                             group_size=32)])
+def test_weight_roundtrip_error_bound(rng, cfg):
+    w = jnp.asarray(rng.normal(size=(48, 64)).astype(np.float32))
+    codes, scale = quantize_weight(w, cfg)
+    deq = dequantize_weight(codes, scale, cfg)
+    # error bounded by half a quantization step everywhere
+    if cfg.granularity == "per_tensor":
+        step = scale
+    elif cfg.granularity == "per_group":
+        step = jnp.repeat(scale, cfg.group_size, axis=-1)
+    else:
+        step = scale
+    assert jnp.all(jnp.abs(w - deq) <= step * 0.5 + 1e-6)
+
+
+def test_weight_codes_in_range(rng):
+    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32) * 100)
+    codes, _ = quantize_weight(w, W4)
+    assert codes.min() >= -8 and codes.max() <= 7
+
+
+def test_activation_per_token_scales(rng):
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    x = x.at[3].mul(100.0)
+    codes, scale = quantize_activation(x, A8)
+    assert scale.shape == (8, 1)
+    assert scale[3] > 10 * scale[0]
+
+
+def test_fake_quant_monotone_bits(rng):
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    e8 = jnp.linalg.norm(x - fake_quant_activation(x, A8))
+    e6 = jnp.linalg.norm(x - fake_quant_activation(x, A6))
+    assert e8 < e6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 64), st.integers(2, 64))
+def test_weight_quant_property(bits, out, inn):
+    rng = np.random.default_rng(bits * 1000 + out * 10 + inn)
+    w = jnp.asarray(rng.normal(size=(out, inn)).astype(np.float32))
+    cfg = QuantConfig(bits=bits)
+    wq = fake_quant_weight(w, cfg)
+    # error bounded by half a step per element
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=1, keepdims=True), 1e-8) / cfg.qmax
+    assert jnp.all(jnp.abs(w - wq) <= scale * 0.5 + 1e-6)
+    # idempotence: quantizing a quantized weight is (near-)identity
+    wq2 = fake_quant_weight(wq, cfg)
+    assert float(jnp.max(jnp.abs(wq - wq2))) < 1e-5
+    # zero maps to zero (symmetric)
+    assert jnp.all(fake_quant_weight(jnp.zeros_like(w), cfg) == 0)

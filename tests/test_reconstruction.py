@@ -1,0 +1,68 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (aser_er, aser_er_alpha, l2qer, lorc, gram)
+from repro.core.metrics import relative_output_error
+from repro.core.quantizers import W4, fake_quant_weight
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(7)
+    d_in, d_out, t = 128, 96, 1024
+    w = jnp.asarray(rng.normal(size=(d_out, d_in)).astype(np.float32))
+    x = rng.normal(size=(d_in, t)).astype(np.float32)
+    x[rng.choice(d_in, 6, replace=False)] *= 12
+    x = jnp.asarray(x)
+    wq = fake_quant_weight(w, W4)
+    return w, x, wq, w - wq, gram(x), jnp.mean(jnp.abs(x), axis=1)
+
+
+def test_method_ordering(setup):
+    """Paper's central claim: data-aware whitening beats activation scaling
+    beats plain weight-SVD beats no compensation."""
+    w, x, wq, e_q, g, xm = setup
+    r = 24
+    err = {"rtn": relative_output_error(w, wq, x)}
+    c = lorc(e_q, r)
+    err["lorc"] = relative_output_error(w, wq + c.l_a @ c.l_b, x)
+    c = l2qer(e_q, xm, r)
+    err["l2qer"] = relative_output_error(w, wq + c.l_a @ c.l_b, x)
+    c = aser_er(e_q, g, r, damp=1e-4)
+    err["aser"] = relative_output_error(w, wq + c.l_a @ c.l_b, x)
+    assert err["aser"] < err["l2qer"] < err["lorc"] < err["rtn"]
+
+
+def test_rank_monotone(setup):
+    w, x, wq, e_q, g, _ = setup
+    errs = []
+    for r in (4, 16, 48, 96):
+        c = aser_er(e_q, g, r, damp=1e-4)
+        errs.append(float(relative_output_error(w, wq + c.l_a @ c.l_b, x)))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_full_rank_recovers_error(setup):
+    w, x, wq, e_q, g, _ = setup
+    c = aser_er(e_q, g, min(e_q.shape), damp=1e-8)
+    assert float(relative_output_error(w, wq + c.l_a @ c.l_b, x)) < 1e-4
+
+
+def test_alpha_selects_rank(setup):
+    _, _, _, e_q, g, _ = setup
+    comp_lo, r_lo = aser_er_alpha(e_q, g, alpha=0.1, max_rank=96)
+    comp_hi, r_hi = aser_er_alpha(e_q, g, alpha=0.9, max_rank=96)
+    assert int(r_lo) <= int(r_hi)
+    # masked tail rows/cols are zero
+    assert jnp.allclose(comp_lo.l_a[:, int(r_lo):], 0)
+    assert jnp.allclose(comp_lo.l_b[int(r_lo):, :], 0)
+
+
+def test_lorc_optimal_for_weight_error(setup):
+    """LoRC minimizes ‖E−Ẽ‖_F (not ‖(E−Ẽ)X‖_F): check Eckart-Young holds."""
+    _, _, _, e_q, _, _ = setup
+    c = lorc(e_q, 16)
+    sig = jnp.linalg.svd(e_q, compute_uv=False)
+    resid = jnp.linalg.norm(e_q - c.l_a @ c.l_b)
+    assert abs(float(resid) - float(jnp.sqrt(jnp.sum(sig[16:] ** 2)))) < 1e-2

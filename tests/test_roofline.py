@@ -1,0 +1,55 @@
+"""Roofline machinery: HLO collective parsing, term arithmetic."""
+import pytest
+
+from repro.roofline.analysis import (Roofline, _shape_bytes, collective_bytes,
+                                     model_flops_estimate)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[8,1,2048]{2,1,0}") == 8 * 2048 * 2
+    assert _shape_bytes("(f32[4,4], s8[16])") == 64 + 16
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_collective_parse():
+    hlo = """
+  %all-reduce.97 = f32[8,1,2048]{2,1,0} all-reduce(%fusion), channel_id=4
+  %ag = bf16[64,64]{1,0} all-gather(%x), dimensions={0}
+  ROOT %rs = f32[32]{0} reduce-scatter(%y), dimensions={0}
+  %cp-start = bf16[16,16]{1,0} collective-permute-start(%z)
+  %cp-done = bf16[16,16]{1,0} collective-permute-done(%cp-start)
+  %not-a-coll = f32[4]{0} add(%a, %b)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 8 * 2048 * 4
+    assert got["all-gather"] == 64 * 64 * 2
+    assert got["reduce-scatter"] == 32 * 4
+    assert got["collective-permute"] == 16 * 16 * 2  # start only, done skipped
+    assert "add" not in got
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", cell="c", mesh="single", chips=256,
+                 flops=197e12, bytes_accessed=819e9 * 2,
+                 coll_bytes=50e9 * 0.5, coll_breakdown={},
+                 model_flops=197e12 * 256 * 0.5)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.roofline_fraction - 0.25) < 1e-9
+
+
+def test_model_flops_estimates_sane():
+    from repro.configs.registry import SHAPES, get_config
+    train = SHAPES[0]
+    f_dense = model_flops_estimate(get_config("olmo_1b"), train)
+    # olmo-1b ≈ 1.3B params → 6·N·D ≈ 6 × 1.3e9 × 1e6 tokens
+    assert 5e15 < f_dense < 1.5e16
+    f_moe = model_flops_estimate(get_config("kimi_k2_1t"), train)
+    # active ≈ 32B → ~2e17
+    assert 8e16 < f_moe < 5e17
+    decode = SHAPES[2]
+    f_dec = model_flops_estimate(get_config("olmo_1b"), decode)
+    assert f_dec < f_dense / 1000

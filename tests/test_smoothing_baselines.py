@@ -1,0 +1,97 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AserConfig, aser_smoothing, awq_quantize, gptq_quantize,
+                        gram, layer_forward, outlier_indices, quantize_layer,
+                        smoothquant_scales)
+from repro.core.metrics import relative_output_error
+from repro.core.quantizers import (A6, A8, W4, fake_quant_activation,
+                                   fake_quant_weight)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(3)
+    d_in, d_out, t = 128, 96, 1024
+    w = jnp.asarray(rng.normal(size=(d_out, d_in)).astype(np.float32))
+    x = rng.normal(size=(d_in, t)).astype(np.float32)
+    x[rng.choice(d_in, 6, replace=False)] *= 15
+    x = jnp.asarray(x)
+    return w, x, gram(x), jnp.mean(jnp.abs(x), axis=1)
+
+
+def test_outlier_indices_topf(setup):
+    w, x, _, xm = setup
+    mask = outlier_indices(xm, jnp.mean(jnp.abs(w), axis=0), f=8)
+    assert int(mask.sum()) == 8
+
+
+def test_smoothing_decomposition_exact(setup):
+    """W M = W_s + W_o exactly, and the smoothed activation range shrinks."""
+    w, x, _, xm = setup
+    sm = aser_smoothing(w, xm, f=8)
+    assert jnp.allclose(sm.w_scaled, sm.w_smooth + sm.w_outlier, atol=1e-5)
+    x_s = x / sm.m[:, None]
+    assert float(jnp.max(jnp.abs(x_s))) < float(jnp.max(jnp.abs(x)))
+    # smoothing preserves the product: (W M)(M^{-1} X) == W X
+    y0 = w @ x
+    y1 = sm.w_scaled @ (x / sm.m[:, None])
+    assert jnp.allclose(y0, y1, rtol=1e-4, atol=1e-3)
+
+
+def test_activation_smoothing_helps_low_bit(setup):
+    """Paper Fig. 5/Table claims: A.S. matters most at low activation bits."""
+    w, x, g, xm = setup
+    ref = w @ x
+    errs = {}
+    for smooth in (False, True):
+        lay = quantize_layer(w, g, xm, AserConfig(rank=16, smooth=smooth,
+                                                  outlier_f=8, damp=1e-4))
+        y = layer_forward(lay, x,
+                          act_fake_quant=lambda t: fake_quant_activation(t, A6))
+        errs[smooth] = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert errs[True] < errs[False]
+
+
+def test_smoothquant_scales_shift_difficulty(setup):
+    w, x, _, _ = setup
+    s = smoothquant_scales(jnp.max(jnp.abs(x), axis=1), jnp.max(jnp.abs(w), axis=0))
+    x_s = x / s[:, None]
+    # per-channel dynamic range is flattened
+    assert float(jnp.std(jnp.max(jnp.abs(x_s), axis=1))) < \
+        float(jnp.std(jnp.max(jnp.abs(x), axis=1)))
+
+
+def test_gptq_beats_rtn(setup):
+    w, x, g, _ = setup
+    w_rtn = fake_quant_weight(w, W4)
+    w_gptq = gptq_quantize(w, g, W4)
+    assert relative_output_error(w, w_gptq, x) < relative_output_error(w, w_rtn, x)
+
+
+def test_awq_beats_rtn(setup):
+    w, x, g, xm = setup
+    w_rtn = fake_quant_weight(w, W4)
+    w_awq, s = awq_quantize(w, g, xm, W4)
+    assert relative_output_error(w, w_awq, x) < relative_output_error(w, w_rtn, x)
+    assert jnp.all(s > 0)
+
+
+def test_aser_on_gptq_base(setup):
+    """ER is orthogonal to the weight quantizer (paper: 'not limited to RTN')."""
+    from repro.quant.apply import PTQConfig, _quantize_one
+    from repro.models.layers import LinStats
+    w, x, g, xm = setup
+    t = x.shape[1]
+    st = LinStats(g, jnp.abs(x).sum(1), jnp.abs(x).max(1), jnp.asarray(float(t)))
+    ref = w @ x
+    outs = {}
+    for base in ("rtn", "gptq"):
+        leaf = _quantize_one(w.T, st, PTQConfig(method="aser_as", rank=16,
+                                                outlier_f=8, base=base))
+        from repro.kernels.ref import w4a8_linear_ref
+        y = w4a8_linear_ref(x.T, leaf["qw"], leaf["sw"], leaf["m"],
+                            leaf["lb"], leaf["la"]).T
+        outs[base] = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert outs["gptq"] < outs["rtn"] * 1.2   # gptq base at least comparable

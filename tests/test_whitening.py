@@ -1,0 +1,70 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import W4, fake_quant_weight
+from repro.core.whitening import (cholesky_whitener, effective_rank, gram,
+                                  low_rank_factors, rank_from_alpha,
+                                  whiten_svd)
+
+
+def _data(rng, d=64, t=512, out=48, outliers=4):
+    w = rng.normal(size=(out, d)).astype(np.float32)
+    x = rng.normal(size=(d, t)).astype(np.float32)
+    x[rng.choice(d, outliers, replace=False)] *= 10
+    return jnp.asarray(w), jnp.asarray(x)
+
+
+def test_whitening_identity(rng):
+    _, x = _data(rng)
+    g = gram(x)
+    s = cholesky_whitener(g, damp=1e-9)
+    xw = jnp.linalg.solve(s, x)
+    gw = xw @ xw.T
+    assert jnp.allclose(gw, jnp.eye(x.shape[0]), atol=2e-2)
+
+
+def test_eq8_truncation_loss_equals_singular_values(rng):
+    """Paper Eq. 8: residual after rank-r compensation = sqrt(Σ_{i>r} σ_i²)."""
+    w, x = _data(rng)
+    g = gram(x)
+    wq = fake_quant_weight(w, W4)
+    e_q = w - wq
+    s = cholesky_whitener(g, damp=1e-8)
+    u, sig, vt = whiten_svd(e_q, s)
+    for r in (4, 16, 32):
+        la, lb = low_rank_factors(u, sig, vt, s, r)
+        resid = jnp.linalg.norm((e_q - la @ lb) @ x)
+        pred = jnp.sqrt(jnp.sum(sig[r:] ** 2))
+        assert abs(float(resid - pred)) / float(pred) < 1e-3
+
+
+def test_effective_rank_bounds(rng):
+    # identity-like spectrum → eff rank ≈ n; one dominant value → ≈ 1
+    n = 32
+    flat = effective_rank(jnp.ones((n,)))
+    assert abs(float(flat) - n) < 1e-2
+    spiked = effective_rank(jnp.asarray([1e6] + [1e-9] * (n - 1)))
+    assert float(spiked) < 1.5
+
+
+def test_rank_from_alpha_monotone():
+    sig = jnp.asarray(np.linspace(10, 0.1, 50).astype(np.float32))
+    r1 = int(rank_from_alpha(sig, 0.1))
+    r2 = int(rank_from_alpha(sig, 0.5))
+    r3 = int(rank_from_alpha(sig, 0.9))
+    assert 1 <= r1 <= r2 <= r3 <= 50
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 48), st.floats(0.05, 0.95))
+def test_rank_alpha_property(n, alpha):
+    rng = np.random.default_rng(n)
+    sig = jnp.sort(jnp.asarray(rng.uniform(0.01, 1, n).astype(np.float32)))[::-1]
+    r = int(rank_from_alpha(sig, alpha))
+    cum = jnp.cumsum(sig) / jnp.sum(sig)
+    # r is maximal with cumulative fraction below alpha (clamped to >=1)
+    if r > 1:
+        assert float(cum[r - 2]) < alpha
+    if r < n:
+        assert float(cum[r]) >= alpha
