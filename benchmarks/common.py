@@ -77,24 +77,25 @@ def get_tape(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
 
 
 def eval_ppl(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
-             seq: int = 64) -> float:
+             seq: int = 64, rt=None) -> float:
+    """``rt``: RuntimeConfig for the quantized serving path (None = default)."""
     tot = 0.0
     for i in range(n_batches):
         toks = corpus.sample(jnp.asarray(10_000 + i), batch, seq)
-        lg, _, _ = forward(params, cfg, toks)
+        lg, _, _ = forward(params, cfg, toks, rt=rt)
         tot += float(perplexity(lg[:, :-1], toks[:, 1:]))
     return tot / n_batches
 
 
 def eval_acc(cfg, params, corpus, n_batches: int = 4, batch: int = 8,
-             seq: int = 64) -> float:
+             seq: int = 64, rt=None) -> float:
     """Next-token top-1 accuracy — the offline stand-in for the zero-shot
     accuracy columns."""
     from repro.core.metrics import top1_accuracy
     tot = 0.0
     for i in range(n_batches):
         toks = corpus.sample(jnp.asarray(20_000 + i), batch, seq)
-        lg, _, _ = forward(params, cfg, toks)
+        lg, _, _ = forward(params, cfg, toks, rt=rt)
         tot += float(top1_accuracy(lg[:, :-1], toks[:, 1:]))
     return 100.0 * tot / n_batches
 

@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
+from repro.runtime import RuntimeConfig
 from repro.train.loop import TrainConfig, make_train_step
 from repro.train.optimizer import OptConfig, init_opt_state
 from .common import eval_ppl, get_tape, get_trained_model, save_json
@@ -64,25 +64,23 @@ def run(verbose=True):
     cfg, params, corpus = get_trained_model("qwen")
     params = outlier_model(cfg, params, corpus)
     tape = get_tape(cfg, params, corpus)
-    ops.set_act_bits(16)
-    fp = eval_ppl(cfg, params, corpus)
+    fp = eval_ppl(cfg, params, corpus, rt=RuntimeConfig(a_bits=16))
     rows = [{"method": "fp16", "w_bits": 16, "a_bits": 16, "ppl": fp}]
     if verbose:
         print(f"  fp16 ppl={fp:.3f}")
     for w_bits in (8, 4):
         for method in METHODS:
             qp = quantize_model(params, tape,
-                                PTQConfig(method=method, w_bits=w_bits,
-                                          rank=48, outlier_f=16))
+                                registry.resolve(method, w_bits=w_bits,
+                                                 rank=48, outlier_f=16))
             for a_bits in (8, 6, 4):
-                ops.set_act_bits(a_bits)
-                ppl = eval_ppl(cfg, qp, corpus)
+                ppl = eval_ppl(cfg, qp, corpus,
+                               rt=RuntimeConfig(a_bits=a_bits))
                 rows.append({"method": method, "w_bits": w_bits,
                              "a_bits": a_bits, "ppl": ppl})
                 if verbose:
                     print(f"  W{w_bits}A{a_bits:<2d} {method:12s} "
                           f"ppl={ppl:9.3f}")
-            ops.set_act_bits(8)
     save_json("fig5_w8ax", rows)
     # paper claim: with real(istic) outliers, ASER w/ A.S. degrades least
     # at low activation bits in the W4 regime

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 
 from repro.kernels.ref import w4a8_linear_ref
 from repro.models.layers import LinStats
-from repro.quant.apply import PTQConfig, _quantize_one
+from repro.quant import registry
+from repro.quant.apply import _quantize_one
 from .common import get_tape, get_trained_model, save_json
 
 METHODS = ["rtn", "lorc", "l2qer", "aser", "aser_as"]
@@ -32,8 +33,8 @@ def run(verbose=True):
             row = {"layer": g, "linear": f"{mod}.{leaf}"}
             gram = st.gram
             for method in METHODS:
-                lf = _quantize_one(w, st, PTQConfig(method=method, rank=16,
-                                                    outlier_f=16))
+                lf = _quantize_one(w, st, registry.resolve(method, rank=16,
+                                                           outlier_f=16))
                 # residual via Gram: ‖Δᵀ X‖² = Tr(Δ G Δᵀ) with Δ = w_eff - w
                 from repro.core.quantizers import unpack_int4
                 w_eff = (unpack_int4(lf["qw"].T).T.astype(jnp.float32)

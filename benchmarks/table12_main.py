@@ -8,9 +8,9 @@ separations only exist in the outlier regime its LLaMA/Qwen checkpoints
 inhabit."""
 import jax.numpy as jnp
 
-from repro.kernels import ops
 from repro.models import forward
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
+from repro.runtime import RuntimeConfig
 from .common import (eval_acc, eval_ppl, get_tape, get_trained_model,
                      save_json)
 from .fig5_w8ax import outlier_model
@@ -22,27 +22,26 @@ def run_model(name: str, verbose=True):
     cfg, params, corpus = get_trained_model(name)
     params = outlier_model(cfg, params, corpus, seed=hash(name) % 1000)
     tape = get_tape(cfg, params, corpus)
-    ops.set_act_bits(16)
+    rt16 = RuntimeConfig(a_bits=16)
     rows = [{"model": name, "method": "fp16", "w": 16, "a": 16,
-             "ppl": eval_ppl(cfg, params, corpus),
-             "acc": eval_acc(cfg, params, corpus)}]
+             "ppl": eval_ppl(cfg, params, corpus, rt=rt16),
+             "acc": eval_acc(cfg, params, corpus, rt=rt16)}]
     if verbose:
         print(f"  {name} fp16 ppl={rows[0]['ppl']:8.3f} acc={rows[0]['acc']:6.2f}")
     cache = {m: quantize_model(params, tape,
-                               PTQConfig(method=m, rank=48, outlier_f=16))
+                               registry.resolve(m, rank=48, outlier_f=16))
              for m in METHODS}
     for a_bits in (8, 6):
-        ops.set_act_bits(a_bits)
+        rt = RuntimeConfig(a_bits=a_bits)
         for method in METHODS:
             qp = cache[method]
-            ppl = eval_ppl(cfg, qp, corpus)
-            acc = eval_acc(cfg, qp, corpus)
+            ppl = eval_ppl(cfg, qp, corpus, rt=rt)
+            acc = eval_acc(cfg, qp, corpus, rt=rt)
             rows.append({"model": name, "method": method, "w": 4,
                          "a": a_bits, "ppl": ppl, "acc": acc})
             if verbose:
                 print(f"  {name} W4A{a_bits} {method:12s} "
                       f"ppl={ppl:8.3f} acc={acc:6.2f}")
-    ops.set_act_bits(8)
     return rows
 
 

@@ -1,6 +1,6 @@
 """Table 3: larger-model W4A8 evaluation (scaled-up bench model)."""
-from repro.kernels import ops
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
+from repro.runtime import RuntimeConfig
 from .common import eval_acc, eval_ppl, get_tape, get_trained_model, save_json
 
 METHODS = ["llmint4", "smoothquant", "lorc", "l2qer", "aser", "aser_as"]
@@ -11,12 +11,12 @@ def run(verbose=True):
     tape = get_tape(cfg, params, corpus)
     rows = [{"method": "fp16", "ppl": eval_ppl(cfg, params, corpus),
              "acc": eval_acc(cfg, params, corpus)}]
-    ops.set_act_bits(8)
+    rt = RuntimeConfig(a_bits=8)
     for method in METHODS:
-        qp = quantize_model(params, tape, PTQConfig(method=method, rank=32,
-                                                    outlier_f=16))
-        rows.append({"method": method, "ppl": eval_ppl(cfg, qp, corpus),
-                     "acc": eval_acc(cfg, qp, corpus)})
+        qp = quantize_model(params, tape,
+                            registry.resolve(method, rank=32, outlier_f=16))
+        rows.append({"method": method, "ppl": eval_ppl(cfg, qp, corpus, rt=rt),
+                     "acc": eval_acc(cfg, qp, corpus, rt=rt)})
         if verbose:
             r = rows[-1]
             print(f"  large W4A8 {method:12s} ppl={r['ppl']:8.3f} "

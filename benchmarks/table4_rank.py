@@ -3,7 +3,7 @@ downstream quality."""
 import numpy as np
 import jax.numpy as jnp
 
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
 from .common import eval_acc, eval_ppl, get_tape, get_trained_model, save_json
 
 
@@ -14,8 +14,8 @@ def run(verbose=True):
     rows = []
     for alpha in (0.1, 0.075, 0.05, 0.03, 0.015):
         qp = quantize_model(params, tape,
-                            PTQConfig(method="aser_as", rank=d // 2,
-                                      alpha=alpha, outlier_f=16))
+                            registry.resolve("aser_as", rank=d // 2,
+                                             alpha=alpha, outlier_f=16))
         # measure selected ranks: count nonzero columns of la per linear
         ranks = []
         def walk(node):

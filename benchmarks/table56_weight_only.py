@@ -1,6 +1,6 @@
 """Tables 5-6: weight-only (W4A16) comparison incl. GPTQ and AWQ."""
-from repro.kernels import ops
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
+from repro.runtime import RuntimeConfig
 from .common import eval_acc, eval_ppl, get_tape, get_trained_model, save_json
 
 METHODS = ["rtn", "gptq", "awq", "aser", "aser_as"]
@@ -8,23 +8,23 @@ METHODS = ["rtn", "gptq", "awq", "aser", "aser_as"]
 
 def run(verbose=True):
     rows = []
+    rt = RuntimeConfig(a_bits=16)       # weight-only
     for name in ("llama", "qwen"):
         cfg, params, corpus = get_trained_model(name)
         tape = get_tape(cfg, params, corpus)
-        ops.set_act_bits(16)        # weight-only
-        fp = eval_ppl(cfg, params, corpus)
+        fp = eval_ppl(cfg, params, corpus, rt=rt)
         rows.append({"model": name, "method": "fp16", "ppl": fp,
-                     "acc": eval_acc(cfg, params, corpus)})
+                     "acc": eval_acc(cfg, params, corpus, rt=rt)})
         for method in METHODS:
-            qp = quantize_model(params, tape,
-                                PTQConfig(method=method, rank=16, outlier_f=16))
-            ppl = eval_ppl(cfg, qp, corpus)
-            acc = eval_acc(cfg, qp, corpus)
+            recipe = registry.resolve(method, rank=16, outlier_f=16,
+                                      a_bits=16)
+            qp = quantize_model(params, tape, recipe)
+            ppl = eval_ppl(cfg, qp, corpus, rt=rt)
+            acc = eval_acc(cfg, qp, corpus, rt=rt)
             rows.append({"model": name, "method": method, "ppl": ppl,
                          "acc": acc})
             if verbose:
                 print(f"  {name} W4A16 {method:10s} ppl={ppl:8.3f} acc={acc:5.2f}")
-        ops.set_act_bits(8)
     save_json("table56_weight_only", rows)
     for name in ("llama", "qwen"):
         sub = {r["method"]: r["ppl"] for r in rows if r["model"] == name

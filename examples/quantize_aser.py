@@ -1,6 +1,10 @@
 """Quantize a trained model with ASER and every baseline; print the Table-1
 style comparison.
 
+Demonstrates the recipe API end to end: resolve every legacy method name to
+a QuantRecipe, quantize once per recipe, then evaluate under explicit
+per-deployment RuntimeConfigs (no process-global state).
+
     PYTHONPATH=src python examples/quantize_aser.py
 """
 import os
@@ -10,8 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import (eval_acc, eval_ppl, get_tape,
                                get_trained_model)
-from repro.kernels import ops
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
+from repro.runtime import RuntimeConfig
 
 
 def main():
@@ -21,16 +25,15 @@ def main():
     ppl = eval_ppl(cfg, params, corpus)
     acc = eval_acc(cfg, params, corpus)
     print(f"{'fp16':14s} {16:3d} {16:3d} {ppl:9.3f} {acc:7.2f}")
-    for a_bits in (8, 6):
-        ops.set_act_bits(a_bits)
-        for method in ("llmint4", "smoothquant", "gptq", "awq",
-                       "lorc", "l2qer", "aser", "aser_as"):
-            qp = quantize_model(params, tape,
-                                PTQConfig(method=method, rank=16, outlier_f=16))
-            ppl = eval_ppl(cfg, qp, corpus)
-            acc = eval_acc(cfg, qp, corpus)
+    for method in ("llmint4", "smoothquant", "gptq", "awq",
+                   "lorc", "l2qer", "aser", "aser_as"):
+        recipe = registry.resolve(method, rank=16, outlier_f=16)
+        qp = quantize_model(params, tape, recipe)
+        for a_bits in (8, 6):
+            rt = RuntimeConfig(a_bits=a_bits)
+            ppl = eval_ppl(cfg, qp, corpus, rt=rt)
+            acc = eval_acc(cfg, qp, corpus, rt=rt)
             print(f"{method:14s} {4:3d} {a_bits:3d} {ppl:9.3f} {acc:7.2f}")
-    ops.set_act_bits(8)
 
 
 if __name__ == "__main__":

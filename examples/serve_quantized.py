@@ -12,16 +12,15 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import get_tape, get_trained_model
-from repro.kernels import ops
-from repro.quant import PTQConfig, quantize_model
+from repro.quant import quantize_model, registry
 from repro.serve.engine import Engine, ServeConfig
 
 
 def main():
     cfg, params, corpus = get_trained_model("llama", steps=300)
     tape = get_tape(cfg, params, corpus)
-    qp = quantize_model(params, tape, PTQConfig(method="aser_as", rank=16,
-                                                outlier_f=16))
+    recipe = registry.resolve("aser_as", rank=16, outlier_f=16)
+    qp = quantize_model(params, tape, recipe)
 
     prompts = corpus.sample(jnp.asarray(31337), 4, 12)
     scfg = ServeConfig(max_len=64)
@@ -29,8 +28,8 @@ def main():
     fp_engine = Engine(params, cfg, scfg)
     fp_out = fp_engine.generate(prompts, n_steps=16)
 
-    ops.set_act_bits(8)
-    q_engine = Engine(qp, cfg, scfg)
+    # the recipe records its serving setup: act.runtime() → RuntimeConfig
+    q_engine = Engine(qp, cfg, scfg, rt=recipe.act.runtime())
     q_out = q_engine.generate(prompts, n_steps=16)
 
     match = float(jnp.mean((fp_out == q_out).astype(jnp.float32)))
@@ -38,10 +37,10 @@ def main():
     print("W4A8+ASER generations:\n", q_out)
     print(f"token agreement: {100*match:.1f}%")
 
-    # optional: exercise the Pallas kernel path (interpret mode on CPU)
-    ops.use_pallas(True)
-    q_out_pl = Engine(qp, cfg, scfg).generate(prompts[:1], n_steps=4)
-    ops.use_pallas(False)
+    # exercise the Pallas kernel path (interpret mode on CPU) — just another
+    # engine with its own RuntimeConfig, no process-global toggles
+    rt_pl = recipe.act.runtime(use_pallas=True)
+    q_out_pl = Engine(qp, cfg, scfg, rt=rt_pl).generate(prompts[:1], n_steps=4)
     print("pallas-path sample:", q_out_pl)
 
 

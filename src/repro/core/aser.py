@@ -25,6 +25,14 @@ from .smoothing import aser_smoothing
 
 @dataclasses.dataclass(frozen=True)
 class AserConfig:
+    """Per-layer Algorithm-1 config (reference implementation).
+
+    Whole-model quantization uses the composable
+    :class:`repro.quant.recipe.QuantRecipe` pipeline instead; use
+    :meth:`from_recipe` to run this single-layer reference under the same
+    settings a recipe describes.
+    """
+
     w_cfg: QuantConfig = W4
     # rank selection: fixed rank if > 0, else α-threshold (Eq. 9)
     rank: int = 64
@@ -35,6 +43,28 @@ class AserConfig:
     outlier_f: int = 32
     # Cholesky damping for the whitener
     damp: float = 1e-2
+
+    @classmethod
+    def from_recipe(cls, recipe) -> "AserConfig":
+        """Project an ASER-shaped QuantRecipe onto the per-layer config.
+
+        Only recipes this reference implements are accepted: an RTN base
+        with whitened-SVD reconstruction, with or without the aser-outlier
+        smoother.
+        """
+        if (recipe.base.kind != "rtn"
+                or recipe.reconstructor.kind != "whitened-svd"
+                or recipe.smoother.kind not in ("none", "aser-outlier")):
+            raise ValueError(
+                "AserConfig.from_recipe needs an ASER-shaped recipe "
+                "(rtn base + whitened-svd reconstructor, optional "
+                f"aser-outlier smoother); got {recipe}")
+        er = recipe.reconstructor
+        return cls(w_cfg=QuantConfig(bits=recipe.base.bits),
+                   rank=0 if er.alpha > 0 else er.rank,
+                   alpha=er.alpha, max_rank=er.rank,
+                   smooth=recipe.smoother.kind == "aser-outlier",
+                   outlier_f=recipe.smoother.outlier_f, damp=er.damp)
 
 
 class AserLayer(NamedTuple):

@@ -1,42 +1,75 @@
 """jit'd public wrappers over the Pallas kernels with XLA fallbacks.
 
-``use_pallas(True/False)`` flips between the kernel path (interpret mode on
-CPU, compiled on TPU) and the pure-XLA path. The XLA fallback implements the
-identical math so quantized-model behavior is bitwise-comparable up to f32
-reduction order.
+Kernel selection and activation bit-width are explicit: every entry point
+takes an ``rt:`` :class:`repro.runtime.RuntimeConfig`. ``rt=None`` falls back
+to the module default, which exists only so the deprecated ``use_pallas`` /
+``set_act_bits`` shims (kept for one release) still have something to poke —
+new code should construct a ``RuntimeConfig`` and pass it down (see
+``serve.Engine`` / ``models.forward``).
+
+The XLA fallback implements the identical math so quantized-model behavior
+is bitwise-comparable up to f32 reduction order.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
+
+from repro.runtime import DEFAULT_RUNTIME, RuntimeConfig
 
 from . import ref as _ref
 from .act_quant import act_quant as _act_quant_kernel
 from .w4a8_gemm import w4a8_gemm as _w4a8_kernel
 from .flash_attention import flash_attention as _flash_kernel
 
-_STATE = {"use_pallas": False, "interpret": True, "a_bits": 8}
+# Mutated ONLY by the deprecated shims below; read when rt is not supplied.
+_default_runtime: RuntimeConfig = DEFAULT_RUNTIME
 
+
+def default_runtime() -> RuntimeConfig:
+    """The RuntimeConfig used when callers don't pass one explicitly."""
+    return _default_runtime
+
+
+# -- deprecated shims (one release) -----------------------------------------
 
 def use_pallas(flag: bool, interpret: bool = True):
-    _STATE["use_pallas"] = flag
-    _STATE["interpret"] = interpret
-
-
-def pallas_enabled() -> bool:
-    return _STATE["use_pallas"]
+    """Deprecated: construct a RuntimeConfig(use_pallas=...) and pass it to
+    Engine / forward instead of mutating process state."""
+    warnings.warn("ops.use_pallas() is deprecated; pass a RuntimeConfig "
+                  "(rt=...) to Engine/forward instead", DeprecationWarning,
+                  stacklevel=2)
+    global _default_runtime
+    _default_runtime = _default_runtime.replace(use_pallas=flag,
+                                                interpret=interpret)
 
 
 def set_act_bits(bits: int):
-    """Global activation bit-width for the quantized serving path
-    (8 = paper's W4A8; 6/4 for the W4A6/W4A4 setups; 16 = weight-only)."""
-    _STATE["a_bits"] = bits
+    """Deprecated: construct a RuntimeConfig(a_bits=...) and pass it to
+    Engine / forward instead of mutating process state."""
+    warnings.warn("ops.set_act_bits() is deprecated; pass a RuntimeConfig "
+                  "(rt=...) to Engine/forward instead", DeprecationWarning,
+                  stacklevel=2)
+    global _default_runtime
+    _default_runtime = _default_runtime.replace(a_bits=bits)
 
 
-def w4a8_linear(x, qw, sw, m_diag, lb, la, *, a_bits: int | None = None):
+def pallas_enabled() -> bool:
+    return _default_runtime.use_pallas
+
+
+# -- public kernel entry points ---------------------------------------------
+
+def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
+                rt: RuntimeConfig | None = None, a_bits: int | None = None):
     """Full quantized linear: smooth → quantize → int4×int8 GEMM → dequant
-    → low-rank compensation. x: [m, k] → [m, n] (f32)."""
-    bits = _STATE["a_bits"] if a_bits is None else a_bits
+    → low-rank compensation. x: [m, k] → [m, n] (f32).
+
+    ``a_bits`` overrides ``rt.a_bits`` (kept for per-call sweeps)."""
+    rt = _default_runtime if rt is None else rt
+    bits = rt.a_bits if a_bits is None else a_bits
     if bits >= 16:
         # weight-only: dequantize W and run in float (no act quant)
         from repro.core.quantizers import unpack_int4
@@ -45,21 +78,21 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *, a_bits: int | None = None):
                  else qw)
         w = codes.astype(jnp.float32) * sw[None, :]
         return x_s @ w + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
-    if _STATE["use_pallas"] and bits == 8 \
+    if rt.use_pallas and bits == 8 and rt.act_granularity == "per_token" \
             and qw.shape[0] * 2 == m_diag.shape[0]:
         r = lb.shape[1]
         if r == 0 or r % 8:
             pad = 8 if r == 0 else (-r) % 8
             lb = jnp.pad(lb, ((0, 0), (0, pad)))
             la = jnp.pad(la, ((0, pad), (0, 0)))
-        xq, sx, xlr = _act_quant_kernel(x, m_diag, lb,
-                                        interpret=_STATE["interpret"])
-        return _w4a8_kernel(xq, sx, qw, sw, xlr, la,
-                            interpret=_STATE["interpret"])
-    return _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb, la, a_bits=bits)
+        xq, sx, xlr = _act_quant_kernel(x, m_diag, lb, interpret=rt.interpret)
+        return _w4a8_kernel(xq, sx, qw, sw, xlr, la, interpret=rt.interpret)
+    return _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb, la, a_bits=bits,
+                                granularity=rt.act_granularity)
 
 
-def attention(q, k, v, **kw):
-    if _STATE["use_pallas"]:
-        return _flash_kernel(q, k, v, interpret=_STATE["interpret"], **kw)
+def attention(q, k, v, *, rt: RuntimeConfig | None = None, **kw):
+    rt = _default_runtime if rt is None else rt
+    if rt.use_pallas:
+        return _flash_kernel(q, k, v, interpret=rt.interpret, **kw)
     return _ref.flash_attention_ref(q, k, v, **kw)

@@ -17,15 +17,21 @@ import jax.numpy as jnp
 from repro.core.quantizers import unpack_int4
 
 
-def w4a8_linear_ref(x, qw, sw, m_diag, lb, la, *, a_bits: int = 8):
+def w4a8_linear_ref(x, qw, sw, m_diag, lb, la, *, a_bits: int = 8,
+                    granularity: str = "per_token"):
     """Reference: smooth → per-token int quant → int matmul → dequant → + LR.
 
     ``qw`` is int4-packed ([k//2, n]) or plain int8 codes ([k, n]) — detected
-    by shape against ``m_diag`` (the W8 setups store unpacked codes)."""
+    by shape against ``m_diag`` (the W8 setups store unpacked codes).
+    ``granularity``: "per_token" (one scale per row of x, paper setup) or
+    "per_tensor" (one scale for the whole activation block)."""
     x = x.astype(jnp.float32)
     x_s = x / m_diag[None, :]
     qmax = 2 ** (a_bits - 1) - 1
-    sx = jnp.maximum(jnp.max(jnp.abs(x_s), axis=1, keepdims=True), 1e-8) / qmax
+    amax = (jnp.max(jnp.abs(x_s), axis=1, keepdims=True)
+            if granularity == "per_token"
+            else jnp.max(jnp.abs(x_s)))
+    sx = jnp.maximum(amax, 1e-8) / qmax
     xq = jnp.clip(jnp.round(x_s / sx), -qmax - 1, qmax).astype(jnp.int8)
 
     if qw.shape[0] * 2 == m_diag.shape[0]:

@@ -12,10 +12,14 @@ def main():
     ap.add_argument("--arch", default="llama3_8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--method", default="aser_as",
-                    choices=["fp16", "rtn", "llmint4", "smoothquant", "gptq",
-                             "awq", "lorc", "l2qer", "aser", "aser_as"])
-    ap.add_argument("--rank", type=int, default=16)
-    ap.add_argument("--a-bits", type=int, default=8)
+                    help="registered recipe name, optionally with overrides "
+                         "— e.g. aser_as, 'aser(base=gptq)' "
+                         "(see repro.quant.registry.available())")
+    ap.add_argument("--rank", type=int, default=None,
+                    help="reconstruction rank (default 16 unless the method "
+                         "string sets one inline)")
+    ap.add_argument("--a-bits", type=int, default=None,
+                    help="activation bits (default 8 unless set inline)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
@@ -28,9 +32,9 @@ def main():
     import jax.numpy as jnp
     from repro.configs.registry import get_config, get_smoke_config
     from repro.data.synthetic import CorpusConfig, SyntheticCorpus
-    from repro.kernels import ops
     from repro.models import init_params
-    from repro.quant import PTQConfig, calibrate, quantize_model, reduce_shared
+    from repro.quant import calibrate, quantize_model, reduce_shared, registry
+    from repro.runtime import RuntimeConfig
     from repro.serve.engine import Engine, ServeConfig
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -38,24 +42,34 @@ def main():
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
     params = init_params(jax.random.PRNGKey(0), cfg)
 
-    if args.method != "fp16":
+    # flags act as defaults; inline overrides in --method win (passing both
+    # a flag and the same key inline is an explicit registry error)
+    overrides = {}
+    if args.rank is not None:
+        overrides["rank"] = args.rank
+    elif "rank" not in args.method:
+        overrides["rank"] = 16
+    if args.a_bits is not None:
+        overrides["a_bits"] = args.a_bits
+    elif "a_bits" not in args.method:
+        overrides["a_bits"] = 8
+    recipe = registry.resolve(args.method, **overrides)
+    rt = recipe.act.runtime(use_pallas=args.pallas)
+    if not recipe.is_noop:
         print(f"[serve] calibrating + quantizing with {args.method} "
-              f"(W4A{args.a_bits}, rank {args.rank})")
+              f"(W{recipe.base.bits}A{recipe.act.bits}, "
+              f"rank {recipe.reconstructor.rank})")
         tape = calibrate(params, cfg, corpus.calibration_batches(2, 4, 32))
         tape = reduce_shared(tape, cfg)
-        params = quantize_model(params, tape,
-                                PTQConfig(method=args.method, rank=args.rank))
-        ops.set_act_bits(args.a_bits)
-    ops.use_pallas(args.pallas)
+        params = quantize_model(params, tape, recipe)
 
-    engine = Engine(params, cfg, ServeConfig(max_len=args.prompt_len + args.gen))
+    engine = Engine(params, cfg,
+                    ServeConfig(max_len=args.prompt_len + args.gen), rt=rt)
     prompts = corpus.sample(jnp.asarray(777), args.requests, args.prompt_len)
     out = engine.generate(prompts, n_steps=args.gen)
     print("[serve] generations:")
     for i in range(args.requests):
         print("  req", i, ":", list(map(int, out[i])))
-    ops.use_pallas(False)
-    ops.set_act_bits(8)
 
 
 if __name__ == "__main__":

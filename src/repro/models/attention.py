@@ -129,7 +129,7 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
               cache: KVCache | None = None,
               mrope_positions: jnp.ndarray | None = None,
               cross_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-              tape=None):
+              tape=None, rt=None):
     """Self (or cross) attention. x: [b, s, d].
 
     Returns (out, new_cache). Train/prefill: cache=None builds nothing unless
@@ -142,7 +142,7 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
     if tape is not None:
         tape["wk"] = tape["wq"]
         tape["wv"] = tape["wq"]
-    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = dense(p["wq"], x, rt=rt).reshape(b, s, cfg.n_heads, cfg.head_dim)
     q = constrain(q, BATCH, None, "model", None)
 
     if cross_kv is not None:
@@ -153,10 +153,10 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
                                 chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
         o_in = out.reshape(b, s, cfg.q_dim)
         record(tape, "wo", o_in)
-        return dense(p["wo"], o_in), None
+        return dense(p["wo"], o_in, rt=rt), None
 
-    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    k = dense(p["wk"], x, rt=rt).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = dense(p["wv"], x, rt=rt).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
     k = constrain(k, BATCH, None, "model", None)
     v = constrain(v, BATCH, None, "model", None)
 
@@ -211,7 +211,7 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
 
     o_in = out.reshape(b, s, cfg.q_dim)
     record(tape, "wo", o_in)
-    return dense(p["wo"], o_in), new_cache
+    return dense(p["wo"], o_in, rt=rt), new_cache
 
 
 def _masked_attention(q, k, v, mask, logit_cap=0.0):

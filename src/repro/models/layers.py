@@ -112,10 +112,10 @@ def record_stats(tape, name: str, st: LinStats):
     tape[name] = st
 
 
-def dense_c(p, name: str, x: jnp.ndarray, tape=None) -> jnp.ndarray:
+def dense_c(p, name: str, x: jnp.ndarray, tape=None, rt=None) -> jnp.ndarray:
     """dense() + optional calibration capture of the layer input."""
     record(tape, name, x)
-    return dense(p[name], x)
+    return dense(p[name], x, rt=rt)
 
 
 # ---------------------------------------------------------------------------
@@ -131,17 +131,20 @@ def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
     return p
 
 
-def dense(p, x: jnp.ndarray) -> jnp.ndarray:
-    """Apply a (possibly quantized) linear layer. x: [..., d_in]."""
+def dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
+    """Apply a (possibly quantized) linear layer. x: [..., d_in].
+
+    ``rt``: optional :class:`repro.runtime.RuntimeConfig` steering the
+    quantized path (act bits, pallas vs XLA); None → the process default."""
     if "qw" in p:
-        return _quantized_dense(p, x)
+        return _quantized_dense(p, x, rt)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
 
 
-def _quantized_dense(p, x: jnp.ndarray) -> jnp.ndarray:
+def _quantized_dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
     """W4A8 serving path with ASER low-rank compensation.
 
     Layout: qw int8 [d_in//2, d_out] (int4 pairs packed along d_in),
@@ -152,7 +155,8 @@ def _quantized_dense(p, x: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels import ops as kops
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
-    y2 = kops.w4a8_linear(x2, p["qw"], p["sw"], p["m"], p["lb"], p["la"])
+    y2 = kops.w4a8_linear(x2, p["qw"], p["sw"], p["m"], p["lb"], p["la"],
+                          rt=rt)
     y2 = y2.astype(x.dtype)
     if "b" in p:
         y2 = y2 + p["b"].astype(y2.dtype)
@@ -261,24 +265,28 @@ def mlp_params(key, kind: str, d_model: int, d_ff: int, dtype=jnp.bfloat16):
             "down": linear_params(ks[1], d_ff, d_model, dtype)}
 
 
-def apply_mlp(kind: str, p, x: jnp.ndarray, tape=None) -> jnp.ndarray:
+def apply_mlp(kind: str, p, x: jnp.ndarray, tape=None, rt=None) -> jnp.ndarray:
     def _c(h):
         return constrain(h, *((BATCH,) + (None,) * (h.ndim - 2) + ("model",)))
     if kind == "swiglu":
-        h = _c(jax.nn.silu(dense_c(p, "gate", x, tape)) * dense(p["up"], x))
+        h = _c(jax.nn.silu(dense_c(p, "gate", x, tape, rt))
+               * dense(p["up"], x, rt=rt))
         if tape is not None:
             tape["up"] = tape["gate"]  # same input distribution
-        return dense_c(p, "down", h, tape)
+        return dense_c(p, "down", h, tape, rt)
     if kind == "geglu":
-        h = _c(jax.nn.gelu(dense_c(p, "gate", x, tape)) * dense(p["up"], x))
+        h = _c(jax.nn.gelu(dense_c(p, "gate", x, tape, rt))
+               * dense(p["up"], x, rt=rt))
         if tape is not None:
             tape["up"] = tape["gate"]
-        return dense_c(p, "down", h, tape)
+        return dense_c(p, "down", h, tape, rt)
     if kind == "gelu":
-        return dense_c(p, "down", _c(jax.nn.gelu(dense_c(p, "up", x, tape))), tape)
+        return dense_c(p, "down",
+                       _c(jax.nn.gelu(dense_c(p, "up", x, tape, rt))),
+                       tape, rt)
     if kind == "sq_relu":   # Nemotron squared-ReLU
-        h = jax.nn.relu(dense_c(p, "up", x, tape))
-        return dense_c(p, "down", _c(h * h), tape)
+        h = jax.nn.relu(dense_c(p, "up", x, tape, rt))
+        return dense_c(p, "down", _c(h * h), tape, rt)
     raise ValueError(kind)
 
 

@@ -129,7 +129,7 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
 
 
 def mamba2_block(p, cfg: ModelConfig, x: jnp.ndarray,
-                 cache: SSMCache | None = None, tape=None):
+                 cache: SSMCache | None = None, tape=None, rt=None):
     """Full Mamba-2 mixer. x: [b, l, d]. Returns (y, new_cache)."""
     bsz, l, _ = x.shape
     nh, hd, ds, ng = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
@@ -137,7 +137,7 @@ def mamba2_block(p, cfg: ModelConfig, x: jnp.ndarray,
 
     from .layers import record
     record(tape, "in_proj", x)
-    zxbcdt = dense(p["in_proj"], x)
+    zxbcdt = dense(p["in_proj"], x, rt=rt)
     z, xbc, dt = _split_proj(cfg, zxbcdt)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
 
@@ -186,7 +186,7 @@ def mamba2_block(p, cfg: ModelConfig, x: jnp.ndarray,
 
     y = _gated_rmsnorm(y.reshape(bsz, l, d_in).astype(x.dtype), z, p["norm_scale"])
     record(tape, "out_proj", y)
-    out = dense(p["out_proj"], y)
+    out = dense(p["out_proj"], y, rt=rt)
     new_cache = SSMCache(conv_tail.astype(x.dtype), final_state)
     return out, new_cache
 

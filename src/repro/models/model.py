@@ -133,7 +133,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
 
 def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                  mrope_positions, caches, cross_ctx, train: bool,
-                 with_tape: bool = False):
+                 with_tape: bool = False, rt=None):
     """lax.scan over the stacked groups."""
     specs = group_blocks(cfg)
     shared_p = params.get("shared")
@@ -157,7 +157,7 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                 btape = tape_g[f"b{i}"]
             h, nc, a = block_forward(gp[i], cfg, spec, h, positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     tape=btape)
+                                     tape=btape, rt=rt)
             aux = aux + a
             new_caches.append(nc if nc is not None else c_i)
             if spec.shared_after and shared_p is not None:
@@ -168,7 +168,7 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                     stape = tape_g["shared"]
                 h, nsc = shared_block_forward(
                     shared_p, cfg, h, x0, positions=positions, cache=sc,
-                    window=cfg.sliding_window, tape=stape)
+                    window=cfg.sliding_window, tape=stape, rt=rt)
                 if gc is not None:
                     new_caches.append(nsc if nsc is not None else sc)
         if cp is not None:
@@ -178,13 +178,13 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                 kv = (cc.k, cc.v)
             else:
                 b, es = cross_ctx.shape[0], cross_ctx.shape[1]
-                k = dense(cp["attn"]["wk"], cross_ctx).reshape(
+                k = dense(cp["attn"]["wk"], cross_ctx, rt=rt).reshape(
                     b, es, cfg.n_kv_heads, cfg.head_dim)
-                v = dense(cp["attn"]["wv"], cross_ctx).reshape(
+                v = dense(cp["attn"]["wv"], cross_ctx, rt=rt).reshape(
                     b, es, cfg.n_kv_heads, cfg.head_dim)
                 kv = (k, v)
             a, _ = attention(cp["attn"], cfg, hn, positions=positions,
-                             cross_kv=kv)
+                             cross_kv=kv, rt=rt)
             h = h + a
         out = {"c": new_caches} if gc is not None else {}
         if tape_g is not None:
@@ -214,11 +214,14 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             positions: jnp.ndarray | None = None,
             mrope_positions: jnp.ndarray | None = None,
             caches=None, encoder_out: jnp.ndarray | None = None,
-            train: bool = False, tape=None):
+            train: bool = False, tape=None, rt=None):
     """tokens: [b, s] int32 → logits [b, s, vocab].
 
     Returns (logits, new_caches, aux_loss). If ``tape`` is a dict it is
     filled with per-linear calibration stats (see repro.quant.calibrate).
+    ``rt``: optional :class:`repro.runtime.RuntimeConfig` steering the
+    quantized-leaf serving path (act bits, pallas vs XLA). It is plain
+    Python config consumed at trace time — never a traced value.
     """
     b, s = tokens.shape
     if positions is None:
@@ -247,7 +250,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             x, nc, a = block_forward(bp, dense_cfg, BlockSpec("attn"), x,
                                      positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     tape=btape)
+                                     tape=btape, rt=rt)
             if tape is not None:
                 tape["prefix"].append(btape)
             aux += a
@@ -258,7 +261,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     x, aux_s, new_group_caches, group_tape = _scan_groups(
         params, cfg, x, x0, positions=positions,
         mrope_positions=mrope_positions, caches=caches,
-        cross_ctx=cross_ctx, train=train, with_tape=tape is not None)
+        cross_ctx=cross_ctx, train=train, with_tape=tape is not None, rt=rt)
     aux = aux + aux_s
     if tape is not None:
         tape["groups"] = group_tape
@@ -267,7 +270,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     if cfg.tie_embeddings:
         logits = x @ params["embed"].T.astype(x.dtype)
     else:
-        logits = dense(params["head"], x)
+        logits = dense(params["head"], x, rt=rt)
     # keep logits vocab-sharded on the model axis: the f32 softmax/CE path
     # otherwise materializes [tokens, vocab] per device (75GB/dev at 4k×256)
     logits = _constrain(logits, ("pod", "data"), None, "model")
@@ -296,7 +299,7 @@ def caches_length(caches):
 # Encoder (whisper)
 # ---------------------------------------------------------------------------
 
-def encode(params, cfg: ModelConfig, frames: jnp.ndarray, tape=None):
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray, tape=None, rt=None):
     """frames: [b, enc_seq, d] precomputed conv-frontend embeddings (stub).
 
     ``tape``: optional dict filled with per-layer calibration stats under
@@ -316,15 +319,17 @@ def encode(params, cfg: ModelConfig, frames: jnp.ndarray, tape=None):
         # bidirectional: causal=False via cross_kv-style call on itself
         t_b = {"attn": {}, "mlp": {}} if with_tape else None
         hn = apply_norm(enc_cfg.norm, gp[0]["attn_norm"], h)
-        k = dense(gp[0]["attn"]["wk"], hn).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
-        v = dense(gp[0]["attn"]["wv"], hn).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        k = dense(gp[0]["attn"]["wk"], hn, rt=rt).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = dense(gp[0]["attn"]["wv"], hn, rt=rt).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim)
         a, _ = attention(gp[0]["attn"], enc_cfg, hn, positions=positions,
                          cross_kv=(k, v),
-                         tape=t_b["attn"] if with_tape else None)
+                         tape=t_b["attn"] if with_tape else None, rt=rt)
         h = h + a
         m = apply_mlp(enc_cfg.mlp, gp[0]["mlp"],
                       apply_norm(enc_cfg.norm, gp[0]["mlp_norm"], h),
-                      t_b["mlp"] if with_tape else None)
+                      t_b["mlp"] if with_tape else None, rt=rt)
         return h + m, (t_b if with_tape else {})
 
     x, t_stack = jax.lax.scan(group_fn, x, enc["groups"])
@@ -334,14 +339,14 @@ def encode(params, cfg: ModelConfig, frames: jnp.ndarray, tape=None):
 
 
 def prepare_cross_caches(params, cfg: ModelConfig, encoder_out: jnp.ndarray,
-                         caches):
+                         caches, rt=None):
     """Precompute per-decoder-group cross KV from encoder output."""
     b, s, _ = encoder_out.shape
 
     def one(cp, cc):
-        k = dense(cp["attn"]["wk"], encoder_out).reshape(
+        k = dense(cp["attn"]["wk"], encoder_out, rt=rt).reshape(
             b, s, cfg.n_kv_heads, cfg.head_dim).astype(cc.k.dtype)
-        v = dense(cp["attn"]["wv"], encoder_out).reshape(
+        v = dense(cp["attn"]["wv"], encoder_out, rt=rt).reshape(
             b, s, cfg.n_kv_heads, cfg.head_dim).astype(cc.v.dtype)
         return KVCache(k, v, jnp.asarray(s, jnp.int32), cc.pos)
 

@@ -66,17 +66,17 @@ def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(8, -(-cap // 8) * 8)
 
 
-def _q_expert_mm(buf: jnp.ndarray, q: dict) -> jnp.ndarray:
+def _q_expert_mm(buf: jnp.ndarray, q: dict, rt=None) -> jnp.ndarray:
     """Per-expert W4A8 matmul: buf [e, cap, d] × quantized stack → [e, cap, f]."""
     from repro.kernels import ops as kops
     dt = buf.dtype
     y = jax.vmap(lambda xb, qw, sw, m, lb, la:
-                 kops.w4a8_linear(xb, qw, sw, m, lb, la))(
+                 kops.w4a8_linear(xb, qw, sw, m, lb, la, rt=rt))(
         buf, q["qw"], q["sw"], q["m"], q["lb"], q["la"])
     return y.astype(dt)
 
 
-def moe_block(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
+def moe_block(p, cfg: ModelConfig, x: jnp.ndarray, tape=None, rt=None):
     """x: [b, s, d] → [b, s, d]. Returns (y, aux) with load-balance aux loss.
 
     Two dispatch paths:
@@ -96,11 +96,11 @@ def moe_block(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
     mesh = _active_mesh()
     if (mesh is not None and "model" in mesh.axis_names and tape is None
             and cfg.n_experts % dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 0):
-        return _moe_block_shard_map(p, cfg, x, mesh)
-    return _moe_block_global(p, cfg, x, tape)
+        return _moe_block_shard_map(p, cfg, x, mesh, rt=rt)
+    return _moe_block_global(p, cfg, x, tape, rt=rt)
 
 
-def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
+def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None, rt=None):
     """Portable scatter-based dispatch (single device, calibration)."""
     b, s, d = x.shape
     t = b * s
@@ -138,8 +138,8 @@ def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
         }
     ge = p["experts"]["gate"]
     if isinstance(ge, dict) and "qw" in ge:        # W4A8-quantized experts
-        h_gate = _q_expert_mm(buf, ge)
-        h_up = _q_expert_mm(buf, p["experts"]["up"])
+        h_gate = _q_expert_mm(buf, ge, rt)
+        h_up = _q_expert_mm(buf, p["experts"]["up"], rt)
     else:
         h_gate = jnp.einsum("ecd,edf->ecf", buf, ge.astype(buf.dtype))
         h_up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"].astype(buf.dtype))
@@ -153,7 +153,7 @@ def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
             jnp.max(jnp.abs(hf), axis=1), tape["experts"]["gate"].count)
     de = p["experts"]["down"]
     if isinstance(de, dict) and "qw" in de:
-        y_e = _q_expert_mm(h, de)
+        y_e = _q_expert_mm(h, de, rt)
     else:
         y_e = jnp.einsum("ecf,efd->ecd", h, de.astype(h.dtype))
 
@@ -164,7 +164,7 @@ def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
 
     if cfg.n_shared_experts:
         shared_tape = {} if tape is not None else None
-        y = y + apply_mlp("swiglu", p["shared"], xt, shared_tape)
+        y = y + apply_mlp("swiglu", p["shared"], xt, shared_tape, rt=rt)
         if tape is not None:
             tape["shared"] = shared_tape
 
@@ -179,7 +179,7 @@ def _moe_block_global(p, cfg: ModelConfig, x: jnp.ndarray, tape=None):
 # shard_map expert-parallel dispatch (production path)
 # ---------------------------------------------------------------------------
 
-def _moe_block_shard_map(p, cfg: ModelConfig, x: jnp.ndarray, mesh):
+def _moe_block_shard_map(p, cfg: ModelConfig, x: jnp.ndarray, mesh, rt=None):
     """EP dispatch under TP-replicated activations.
 
     Each "model"-axis rank holds e_loc = E / tp experts. Activations x are
@@ -249,9 +249,9 @@ def _moe_block_shard_map(p, cfg: ModelConfig, x: jnp.ndarray, mesh):
                         ).at[dst].add(upd)[:-1].reshape(e_loc, cap, -1)
 
         if quant:
-            h = jax.nn.silu(_q_expert_mm(buf, experts["gate"])) \
-                * _q_expert_mm(buf, experts["up"])
-            y_e = _q_expert_mm(h.astype(buf.dtype), experts["down"])
+            h = jax.nn.silu(_q_expert_mm(buf, experts["gate"], rt)) \
+                * _q_expert_mm(buf, experts["up"], rt)
+            y_e = _q_expert_mm(h.astype(buf.dtype), experts["down"], rt)
         else:
             h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
                                        experts["gate"].astype(buf.dtype))) \
@@ -270,7 +270,7 @@ def _moe_block_shard_map(p, cfg: ModelConfig, x: jnp.ndarray, mesh):
     y = ep(p["experts"], xt, gate_vals.astype(jnp.float32), gate_idx)
 
     if cfg.n_shared_experts:
-        y = y + apply_mlp("swiglu", p["shared"], xt)
+        y = y + apply_mlp("swiglu", p["shared"], xt, rt=rt)
     return y.reshape(b, s, d), aux
 
 

@@ -98,28 +98,30 @@ def group_params(key, cfg: ModelConfig, dtype):
 # ---------------------------------------------------------------------------
 
 def block_forward(p, cfg: ModelConfig, spec: BlockSpec, x: jnp.ndarray, *,
-                  positions, mrope_positions=None, cache=None, tape=None):
+                  positions, mrope_positions=None, cache=None, tape=None,
+                  rt=None):
     """One block. Returns (y, new_cache, aux)."""
     if spec.kind == "mamba":
         h = apply_norm(cfg.norm, p["norm"], x)
         mtape = _sub(tape, "mixer")
-        y, new_cache = mamba2_block(p["mixer"], cfg, h, cache, tape=mtape)
+        y, new_cache = mamba2_block(p["mixer"], cfg, h, cache, tape=mtape,
+                                    rt=rt)
         return x + y, new_cache, jnp.zeros((), jnp.float32)
 
     h = apply_norm(cfg.norm, p["attn_norm"], x)
     a, new_cache = attention(p["attn"], cfg, h, positions=positions,
                              layer_window=spec.window,
                              mrope_positions=mrope_positions, cache=cache,
-                             tape=_sub(tape, "attn"))
+                             tape=_sub(tape, "attn"), rt=rt)
     if cfg.post_block_norm:
         a = apply_norm(cfg.norm, p["post_attn_norm"], a)
     x = x + a
     h = apply_norm(cfg.norm, p["mlp_norm"], x)
     aux = jnp.zeros((), jnp.float32)
     if spec.moe:
-        m, aux = moe_block(p["moe"], cfg, h, tape=_sub(tape, "moe"))
+        m, aux = moe_block(p["moe"], cfg, h, tape=_sub(tape, "moe"), rt=rt)
     else:
-        m = apply_mlp(cfg.mlp, p["mlp"], h, tape=_sub(tape, "mlp"))
+        m = apply_mlp(cfg.mlp, p["mlp"], h, tape=_sub(tape, "mlp"), rt=rt)
     if cfg.post_block_norm:
         m = apply_norm(cfg.norm, p["post_mlp_norm"], m)
     return x + m, new_cache, aux
@@ -134,21 +136,21 @@ def _sub(tape, name: str):
 
 
 def shared_block_forward(p, cfg: ModelConfig, x, x0, *, positions,
-                         cache=None, window: int = 0, tape=None):
+                         cache=None, window: int = 0, tape=None, rt=None):
     """Shared attention block on concat([x, x0]) (zamba2)."""
     from .layers import record
     h = apply_norm(cfg.norm, p["in_norm"], jnp.concatenate([x, x0], axis=-1))
     record(tape, "in_proj", h)
-    h = dense(p["in_proj"], h)
+    h = dense(p["in_proj"], h, rt=rt)
     a, new_cache = attention(p["attn"], cfg, h, positions=positions,
                              layer_window=window, cache=cache,
-                             tape=_sub(tape, "attn"))
+                             tape=_sub(tape, "attn"), rt=rt)
     h = h + a
     m = apply_mlp(cfg.mlp, p["mlp"], apply_norm(cfg.norm, p["mlp_norm"], h),
-                  tape=_sub(tape, "mlp"))
+                  tape=_sub(tape, "mlp"), rt=rt)
     h = h + m
     record(tape, "out_proj", h)
-    return x + dense(p["out_proj"], h), new_cache
+    return x + dense(p["out_proj"], h, rt=rt), new_cache
 
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,

@@ -1,177 +1,222 @@
 """Whole-model PTQ: turn fp params + calibration tape into quantized params.
 
+The pipeline is recipe-driven: a :class:`repro.quant.recipe.QuantRecipe`
+composes four pluggable stages, each a pure function of the fp weight and
+the calibration statistics —
+
+    1. Smoother            → diagonal m, smoothed weight W_s, outlier split
+    2. BaseQuantizer       → int codes + scales of Q(W_s)
+    3. ErrorReconstructor  → low-rank factors compensating E_q = W_s − Q(W_s)
+    4. ActQuantSpec        → recorded serving-time activation setup
+
+Legacy method strings (``rtn``, ``smoothquant``, ``gptq``, ``awq``,
+``lorc``, ``l2qer``, ``aser``, ``aser_as``, ``aser(base=gptq)``) resolve to
+recipes through :mod:`repro.quant.registry`; new stage combinations compose
+without touching this module. ``PTQConfig`` remains as a deprecated shim.
+
 Every quantizable linear leaf ``{"w": [k, n]}`` becomes a serving leaf::
 
-    {"qw":  int8 [k//2, n]   # int4 pairs packed along k
+    {"qw":  int8 [k//2, n]   # int4 pairs packed along k (or [k, n] for W>4)
      "sw":  f32 [n]          # per-out-channel weight scale
      "m":   f32 [k]          # smoothing diagonal (ones when off)
      "lb":  f32 [k, r]       # low-rank compensation (r may be 0)
      "la":  f32 [r, n]}
-
-Methods: fp16 (no-op), rtn, llmint4, smoothquant, gptq, awq, lorc, l2qer,
-aser (w/o A.S.), aser_as (w/ A.S.), plus base-quantizer composition
-aser(base="gptq"/"awq") — the paper notes ER is orthogonal to the weight
-quantizer; we implement that compositionality.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (QuantConfig, W4, aser_smoothing, awq_quantize,
-                        cholesky_whitener, gptq_quantize, l2qer,
-                        lorc, low_rank_factors, pack_int4, quantize_weight,
-                        rank_from_alpha, smoothquant_scales, whiten_svd)
+from repro.core import (QuantConfig, awq_quantize, cholesky_whitener,
+                        gptq_quantize, l2qer, lorc, low_rank_factors,
+                        pack_int4, quantize_weight, rank_from_alpha,
+                        smoothquant_scales, whiten_svd)
 from repro.core.aser import smooth_gram
+from repro.core.smoothing import aser_smoothing
 from repro.models.layers import LinStats
+
+from . import registry
+from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
+                     QuantRecipe, Smoother)
 
 
 @dataclasses.dataclass(frozen=True)
 class PTQConfig:
+    """Deprecated legacy config — a thin veneer over the recipe registry.
+
+    Prefer ``registry.resolve(name, ...)`` or constructing a
+    :class:`QuantRecipe` directly; this shim exists for one release so
+    pre-recipe callsites keep working unchanged.
+    """
     method: str = "aser_as"
     w_bits: int = 4
     rank: int = 64              # fixed rank (alpha=0) for lorc/l2qer/aser
     alpha: float = 0.0          # >0: Eq. 9 adaptive rank, capped at ``rank``
     outlier_f: int = 32
     damp: float = 1e-2
-    base: str = "rtn"           # weight quantizer under aser: rtn|gptq|awq
+    base: str = "rtn"           # weight quantizer under aser: rtn|gptq
 
-
-def _w_cfg(cfg: PTQConfig) -> QuantConfig:
-    return QuantConfig(bits=cfg.w_bits)
+    def to_recipe(self) -> QuantRecipe:
+        return registry.resolve(self.method, w_bits=self.w_bits,
+                                rank=self.rank, alpha=self.alpha,
+                                outlier_f=self.outlier_f, damp=self.damp,
+                                base=self.base)
 
 
 def _empty_lr(k: int, n: int):
     return jnp.zeros((k, 0), jnp.float32), jnp.zeros((0, n), jnp.float32)
 
 
-def _quantize_one(w: jnp.ndarray, st: LinStats, cfg: PTQConfig):
-    """w: [k, n] (model layout). Returns serving leaf dict."""
+# ---------------------------------------------------------------------------
+# Pipeline stages (paper layout: W [out, in], Gram [in, in])
+# ---------------------------------------------------------------------------
+
+def _apply_smoother(sm: Smoother, wt: jnp.ndarray, g: jnp.ndarray,
+                    absmean: jnp.ndarray, absmax: jnp.ndarray,
+                    wq_cfg: QuantConfig):
+    """→ (m [in], W_s, W_outlier | None, G_eff)."""
+    if sm.kind == "none":
+        return jnp.ones((wt.shape[1],), jnp.float32), wt, None, g
+    if sm.kind == "smoothquant":
+        w_absmax_in = jnp.max(jnp.abs(wt), axis=0)
+        m = smoothquant_scales(absmax, w_absmax_in, alpha=sm.alpha)
+        return m, wt * m[None, :], None, smooth_gram(g, m)
+    if sm.kind == "awq-scale":
+        _, s = awq_quantize(wt, g, absmean, wq_cfg)
+        return s, wt * s[None, :], None, smooth_gram(g, s)
+    if sm.kind == "aser-outlier":
+        res = aser_smoothing(wt, absmean, sm.outlier_f)
+        return res.m, res.w_smooth, res.w_outlier, smooth_gram(g, res.m)
+    raise ValueError(sm.kind)       # unreachable: recipe validates kinds
+
+
+def _apply_base(bq: BaseQuantizer, w_s: jnp.ndarray, g_eff: jnp.ndarray,
+                wq_cfg: QuantConfig):
+    """→ (codes int8, scales f32 [out, 1], dequantized W)."""
+    if bq.kind == "gptq":
+        w_hat = gptq_quantize(w_s, g_eff, wq_cfg, damp=bq.damp)
+        codes, sc = _recode(w_hat, w_s, wq_cfg)
+        return codes, sc, codes.astype(jnp.float32) * sc
+    codes, sc = quantize_weight(w_s, wq_cfg)
+    return codes, sc, codes.astype(jnp.float32) * sc
+
+
+def _apply_reconstructor(er: ErrorReconstructor, e_q: jnp.ndarray,
+                         g_eff: jnp.ndarray, absmean: jnp.ndarray):
+    """→ (L_A [out, r], L_B [r, in]) or None."""
+    if er.kind == "none":
+        return None
+    out, inn = e_q.shape
+    r = min(er.rank, out, inn)
+    if er.kind == "lorc":
+        comp = lorc(e_q, r)
+        return comp.l_a, comp.l_b
+    if er.kind == "l2qer":
+        comp = l2qer(e_q, absmean, r)
+        return comp.l_a, comp.l_b
+    # whitened-svd (ASER-ER)
+    s_chol = cholesky_whitener(g_eff, damp=er.damp)
+    u, sig, vt = whiten_svd(e_q, s_chol)
+    la, lb = low_rank_factors(u, sig, vt, s_chol, r)
+    if er.alpha > 0:
+        r_sel = jnp.minimum(rank_from_alpha(sig, er.alpha), r)
+        keep = (jnp.arange(r) < r_sel).astype(jnp.float32)
+        la, lb = la * keep[None, :], lb * keep[:, None]
+    return la, lb
+
+
+def _recode(w_hat, w_ref, wq_cfg):
+    """Recover int codes + scales from a fake-quantized weight (GPTQ)."""
+    qmax = wq_cfg.qmax
+    sc = jnp.maximum(jnp.max(jnp.abs(w_ref), axis=1, keepdims=True), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(w_hat / sc), wq_cfg.qmin, wq_cfg.qmax)
+    return codes.astype(jnp.int8), sc.astype(jnp.float32)
+
+
+def _quantize_one(w: jnp.ndarray, st: LinStats, recipe):
+    """w: [k, n] (model layout). Runs the stage pipeline, returns a leaf.
+
+    ``recipe``: QuantRecipe | method string | legacy PTQConfig."""
+    recipe = registry.resolve(recipe)
+    if recipe.is_noop:
+        raise ValueError(
+            "noop (fp-passthrough) recipe has no per-leaf quantization; "
+            "quantize_model returns the params unchanged for it")
     k, n = w.shape
     wt = w.astype(jnp.float32).T                    # paper layout [out, in]
     count = jnp.maximum(st.count, 1.0)
-    g = st.gram
     absmean = st.abssum / count
-    wq_cfg = _w_cfg(cfg)
-    m = jnp.ones((k,), jnp.float32)
-    la = lb = None
-    method = cfg.method
+    wq_cfg = QuantConfig(bits=recipe.base.bits)
 
-    if method in ("rtn", "llmint4"):
-        codes, sc = quantize_weight(wt, wq_cfg)
-    elif method == "smoothquant":
-        w_absmax_in = jnp.max(jnp.abs(wt), axis=0)
-        m = smoothquant_scales(st.absmax, w_absmax_in, alpha=0.5)
-        codes, sc = quantize_weight(wt * m[None, :], wq_cfg)
-    elif method == "gptq":
-        w_hat = gptq_quantize(wt, g, wq_cfg, damp=cfg.damp)
-        codes, sc = _recode(w_hat, wt, wq_cfg)
-    elif method == "awq":
-        _, s = awq_quantize(wt, g, absmean, wq_cfg)
-        m = s
-        codes, sc = quantize_weight(wt * s[None, :], wq_cfg)
-    elif method in ("lorc", "l2qer"):
-        codes, sc = quantize_weight(wt, wq_cfg)
-        w_deq = codes.astype(jnp.float32) * sc
-        e_q = wt - w_deq
-        r = min(cfg.rank, k, n)
-        comp = (lorc(e_q, r) if method == "lorc" else l2qer(e_q, absmean, r))
-        la, lb = comp.l_a, comp.l_b
-    elif method.startswith("aser"):
-        smooth = method == "aser_as"
-        if smooth:
-            sm = aser_smoothing(wt, absmean, cfg.outlier_f)
-            m = sm.m
-            w_s = sm.w_smooth
-            extra = sm.w_outlier
-            g_eff = smooth_gram(g, m)
-        else:
-            w_s, extra, g_eff = wt, jnp.zeros_like(wt), g
-        codes, sc, w_deq = _base_quant(w_s, g_eff, wq_cfg, cfg)
-        e_q = (w_s - w_deq) + extra
-        r = min(cfg.rank, k, n)
-        s_chol = cholesky_whitener(g_eff, damp=cfg.damp)
-        u, sig, vt = whiten_svd(e_q, s_chol)
-        if cfg.alpha > 0:
-            r_sel = jnp.minimum(rank_from_alpha(sig, cfg.alpha), r)
-            la_f, lb_f = low_rank_factors(u, sig, vt, s_chol, r)
-            keepm = (jnp.arange(r) < r_sel).astype(jnp.float32)
-            la, lb = la_f * keepm[None, :], lb_f * keepm[:, None]
-        else:
-            la, lb = low_rank_factors(u, sig, vt, s_chol, r)
-    else:
-        raise ValueError(method)
+    m, w_s, w_outlier, g_eff = _apply_smoother(
+        recipe.smoother, wt, st.gram, absmean, st.absmax, wq_cfg)
+    codes, sc, w_deq = _apply_base(recipe.base, w_s, g_eff, wq_cfg)
 
-    if la is None:
+    comp = None
+    if recipe.reconstructor.kind != "none":
+        e_q = w_s - w_deq
+        if w_outlier is not None:       # Eq. 12: fold W_o into the ER target
+            e_q = e_q + w_outlier
+        comp = _apply_reconstructor(recipe.reconstructor, e_q, g_eff, absmean)
+
+    if comp is None:
         lb_m, la_m = _empty_lr(k, n)
     else:
         # convert paper layout (L_A [out,r], L_B [r,in]) to model layout
+        la, lb = comp
         lb_m, la_m = lb.T, la.T                      # [k, r], [r, n]
 
-    qw = pack_int4(codes).T if cfg.w_bits == 4 else codes.T   # [k/2, n] | [k, n]
+    qw = pack_int4(codes).T if recipe.base.bits == 4 else codes.T
     return {"qw": qw.astype(jnp.int8), "sw": sc[:, 0].astype(jnp.float32),
             "m": m.astype(jnp.float32), "lb": lb_m.astype(jnp.float32),
             "la": la_m.astype(jnp.float32)}
 
 
-def _recode(w_hat, wt, wq_cfg):
-    """Recover int codes + scales from a fake-quantized weight (GPTQ)."""
-    qmax = wq_cfg.qmax
-    sc = jnp.maximum(jnp.max(jnp.abs(wt), axis=1, keepdims=True), 1e-8) / qmax
-    codes = jnp.clip(jnp.round(w_hat / sc), wq_cfg.qmin, wq_cfg.qmax)
-    return codes.astype(jnp.int8), sc.astype(jnp.float32)
+# ---------------------------------------------------------------------------
+# Tree walk
+# ---------------------------------------------------------------------------
 
-
-def _base_quant(w_s, g_eff, wq_cfg, cfg: PTQConfig):
-    """Weight quantizer under ASER (orthogonality: rtn | gptq | awq)."""
-    if cfg.base == "gptq":
-        w_hat = gptq_quantize(w_s, g_eff, wq_cfg, damp=cfg.damp)
-        codes, sc = _recode(w_hat, w_s, wq_cfg)
-        return codes, sc, codes.astype(jnp.float32) * sc
-    if cfg.base == "awq":
-        # AWQ scale folds into m upstream only for pure awq; under ASER we
-        # keep base=rtn semantics for awq to avoid double-smoothing.
-        pass
-    codes, sc = quantize_weight(w_s, wq_cfg)
-    return codes, sc, codes.astype(jnp.float32) * sc
-
-
-def _q_leaf(wdict: dict, st: LinStats, cfg: PTQConfig):
+def _q_leaf(wdict: dict, st: LinStats, recipe: QuantRecipe):
     w = wdict["w"]
     if w.ndim > 2:
         lead = w.shape[:-2]
         flat_w = w.reshape((-1,) + w.shape[-2:])
         flat_st = jax.tree.map(
             lambda x: x.reshape((-1,) + x.shape[len(lead):]), st)
-        out = jax.vmap(lambda wi, sti: _quantize_one(wi, sti, cfg))(
+        out = jax.vmap(lambda wi, sti: _quantize_one(wi, sti, recipe))(
             flat_w, flat_st)
         out = {kk: vv.reshape(lead + vv.shape[1:]) for kk, vv in out.items()}
     else:
-        out = _quantize_one(w, st, cfg)
+        out = _quantize_one(w, st, recipe)
     if "b" in wdict:
         out["b"] = wdict["b"]
     return out
 
 
-def _q_expert_stack(earr: jnp.ndarray, st: LinStats, cfg: PTQConfig):
+def _q_expert_stack(earr: jnp.ndarray, st: LinStats, recipe: QuantRecipe):
     """Stacked expert weights [..., e, d, f] + per-expert stats."""
-    return _q_leaf({"w": earr}, st, cfg)
+    return _q_leaf({"w": earr}, st, recipe)
 
 
-def quantize_model(params, tape, cfg: PTQConfig):
-    """Return a new param tree with every calibrated linear quantized."""
-    if cfg.method == "fp16":
+def quantize_model(params, tape, recipe):
+    """Return a new param tree with every calibrated linear quantized.
+
+    ``recipe`` may be a :class:`QuantRecipe`, a registered method name
+    (string, optionally with overrides — ``"aser(base=gptq)"``), or a legacy
+    :class:`PTQConfig`.
+    """
+    recipe = registry.resolve(recipe)
+    if recipe.is_noop:
         return params
 
     def walk(p, t):
         if isinstance(t, LinStats):
             if isinstance(p, dict) and "w" in p:
-                return _q_leaf(p, t, cfg)
+                return _q_leaf(p, t, recipe)
             if isinstance(p, jnp.ndarray):               # stacked experts
-                return _q_expert_stack(p, t, cfg)
+                return _q_expert_stack(p, t, recipe)
             raise ValueError(f"stats for non-linear node: {type(p)}")
         if isinstance(t, dict):
             assert isinstance(p, (dict,)), (type(p), list(t))

@@ -1,0 +1,193 @@
+"""Composable PTQ recipes: pluggable stages + a serializable container.
+
+The ASER paper stresses that error reconstruction is *orthogonal* to the base
+weight quantizer and that smoothing / compensation are independently
+toggleable. The API mirrors that decomposition: a :class:`QuantRecipe` is a
+frozen composition of four stages,
+
+    Smoother           none | smoothquant | awq-scale | aser-outlier
+    BaseQuantizer      rtn | gptq
+    ErrorReconstructor none | lorc | l2qer | whitened-svd
+    ActQuantSpec       bits + per_token / per_tensor granularity
+
+executed by :func:`repro.quant.apply.quantize_model`. Every legacy method
+name (``rtn``, ``smoothquant``, ``gptq``, ``awq``, ``lorc``, ``l2qer``,
+``aser``, ``aser_as``) resolves to a recipe through
+:mod:`repro.quant.registry`, and new combinations compose for free
+(e.g. awq-scale smoothing + GPTQ base + whitened-SVD reconstruction).
+
+Recipes validate at construction — an unsupported stage combination raises
+``ValueError`` immediately rather than silently falling back — and
+round-trip through JSON via :meth:`QuantRecipe.to_dict` /
+:meth:`QuantRecipe.from_dict` so quantized checkpoints can record exactly
+how they were produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict
+
+from repro.runtime import ACT_GRANULARITIES, SUPPORTED_ACT_BITS
+
+SMOOTHER_KINDS = ("none", "smoothquant", "awq-scale", "aser-outlier")
+BASE_KINDS = ("none", "rtn", "gptq")
+ER_KINDS = ("none", "lorc", "l2qer", "whitened-svd")
+
+_RECIPE_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Smoother:
+    """Diagonal activation-smoothing stage: produces ``m`` with
+    ``W X = (W M)(M^{-1} X)``; the runtime divides activations by ``m``."""
+
+    kind: str = "none"
+    alpha: float = 0.5      # smoothquant migration strength
+    outlier_f: int = 32     # aser-outlier: |I_f| top channels of X̄ ⊙ W̄
+
+    def __post_init__(self):
+        if self.kind not in SMOOTHER_KINDS:
+            raise ValueError(
+                f"unknown smoother kind {self.kind!r}; one of {SMOOTHER_KINDS}")
+        if self.kind == "smoothquant" and not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(f"smoothquant alpha must be in [0, 1]: {self.alpha}")
+        if self.kind == "aser-outlier" and self.outlier_f < 1:
+            raise ValueError(f"aser-outlier needs outlier_f >= 1: {self.outlier_f}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseQuantizer:
+    """Weight quantizer applied to the (smoothed) weight matrix.
+
+    ``none`` is the fp passthrough (no quantization at all). AWQ is *not* a
+    base kind: its scale search folds into the smoothing diagonal, so it is
+    expressed as ``Smoother("awq-scale")`` over an RTN/GPTQ base — asking for
+    ``BaseQuantizer("awq")`` raises with that pointer instead of silently
+    degrading to RTN (the seed implementation's dead branch).
+    """
+
+    kind: str = "rtn"
+    bits: int = 4
+    damp: float = 1e-2      # GPTQ Hessian dampening
+
+    def __post_init__(self):
+        if self.kind == "awq":
+            raise ValueError(
+                "awq is not a base quantizer: its scale folds into the "
+                "smoothing diagonal. Use Smoother(kind='awq-scale') composed "
+                "with a 'rtn' or 'gptq' base instead.")
+        if self.kind not in BASE_KINDS:
+            raise ValueError(
+                f"unknown base quantizer {self.kind!r}; one of {BASE_KINDS}")
+        if self.kind != "none" and not 2 <= self.bits <= 8:
+            raise ValueError(f"weight bits must be in [2, 8]: {self.bits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorReconstructor:
+    """Low-rank reconstruction of the quantization error E_q.
+
+    ``whitened-svd`` is ASER's Gram-whitened SVD; ``alpha > 0`` switches to
+    the paper's Eq. 9 adaptive rank selection, capped at ``rank``.
+    """
+
+    kind: str = "none"
+    rank: int = 64
+    alpha: float = 0.0
+    damp: float = 1e-2      # Cholesky whitener damping
+
+    def __post_init__(self):
+        if self.kind not in ER_KINDS:
+            raise ValueError(
+                f"unknown reconstructor {self.kind!r}; one of {ER_KINDS}")
+        if self.kind != "none" and self.rank < 1:
+            raise ValueError(f"reconstruction rank must be >= 1: {self.rank}")
+        if self.alpha < 0.0:
+            raise ValueError(f"rank-selection alpha must be >= 0: {self.alpha}")
+        if self.alpha > 0.0 and self.kind in ("lorc", "l2qer"):
+            raise ValueError(
+                f"{self.kind} has no adaptive-rank variant (alpha must be 0)")
+
+
+@dataclasses.dataclass(frozen=True)
+class ActQuantSpec:
+    """Serving-time activation quantization the recipe was produced for
+    (8 = paper's W4A8; 6/4 for W4A6/W4A4; 16 = weight-only)."""
+
+    bits: int = 8
+    granularity: str = "per_token"
+
+    def __post_init__(self):
+        if self.bits not in SUPPORTED_ACT_BITS:
+            raise ValueError(f"activation bits must be one of "
+                             f"{SUPPORTED_ACT_BITS}: {self.bits}")
+        if self.granularity not in ACT_GRANULARITIES:
+            raise ValueError(
+                f"unknown act granularity {self.granularity!r}; "
+                f"one of {ACT_GRANULARITIES}")
+
+    def runtime(self, **kw):
+        """The matching serving :class:`repro.runtime.RuntimeConfig`."""
+        from repro.runtime import RuntimeConfig
+        return RuntimeConfig(a_bits=self.bits,
+                             act_granularity=self.granularity, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """One fully-specified PTQ pipeline. Frozen, validated, serializable."""
+
+    smoother: Smoother = Smoother()
+    base: BaseQuantizer = BaseQuantizer()
+    reconstructor: ErrorReconstructor = ErrorReconstructor()
+    act: ActQuantSpec = ActQuantSpec()
+    name: str = ""          # provenance label (e.g. the legacy method name)
+
+    def __post_init__(self):
+        if self.base.kind == "none":
+            if self.smoother.kind != "none" or self.reconstructor.kind != "none":
+                raise ValueError(
+                    "base 'none' (fp passthrough) cannot be combined with "
+                    "smoothing or error reconstruction")
+        if (self.smoother.kind == "aser-outlier"
+                and self.reconstructor.kind == "none"):
+            raise ValueError(
+                "aser-outlier smoothing moves the outlier columns of W into "
+                "the reconstruction target; without an error reconstructor "
+                "that weight would be silently dropped. Add a reconstructor "
+                "(e.g. kind='whitened-svd') or use a different smoother.")
+
+    @property
+    def is_noop(self) -> bool:
+        return self.base.kind == "none"
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form (JSON-safe) with a format version stamp."""
+        d = dataclasses.asdict(self)
+        d["format_version"] = _RECIPE_FORMAT_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "QuantRecipe":
+        d = dict(d)
+        version = d.pop("format_version", _RECIPE_FORMAT_VERSION)
+        if version != _RECIPE_FORMAT_VERSION:
+            raise ValueError(f"unsupported recipe format version: {version}")
+        return cls(smoother=Smoother(**d["smoother"]),
+                   base=BaseQuantizer(**d["base"]),
+                   reconstructor=ErrorReconstructor(**d["reconstructor"]),
+                   act=ActQuantSpec(**d["act"]),
+                   name=d.get("name", ""))
+
+    def to_json(self, **json_kw) -> str:
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "QuantRecipe":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **kw) -> "QuantRecipe":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,207 @@
+"""Method registry: legacy method names → :class:`QuantRecipe`.
+
+Every string the old ``PTQConfig(method=...)`` API accepted resolves here to
+a composable recipe, so existing callers migrate mechanically and new stage
+combinations need no registry entry at all — construct a ``QuantRecipe``
+directly. Names support a call-style override syntax::
+
+    resolve("aser")                      # defaults
+    resolve("aser", base="gptq", rank=32)
+    resolve("aser(base=gptq, rank=32)")  # same thing, string form
+    resolve("aser_as(outlier_f=16)")
+
+Overrides use the legacy ``PTQConfig`` field names (``w_bits``, ``rank``,
+``alpha``, ``outlier_f``, ``damp``, ``base``, ``a_bits``) so the migration
+is a rename, not a remapping.
+"""
+from __future__ import annotations
+
+import inspect
+import re
+from typing import Callable, Dict
+
+from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
+                     QuantRecipe, Smoother)
+
+_REGISTRY: Dict[str, Callable[..., QuantRecipe]] = {}
+
+
+def register(name: str):
+    """Register a recipe factory under ``name`` (decorator)."""
+    def deco(fn: Callable[..., QuantRecipe]):
+        if name in _REGISTRY:
+            raise ValueError(f"method {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def available() -> list:
+    """Sorted registered method names."""
+    return sorted(_REGISTRY)
+
+
+_CALL_RE = re.compile(r"^([\w.+-]+)\((.*)\)$")
+
+
+def _parse_overrides(argstr: str) -> dict:
+    out = {}
+    for part in filter(None, (p.strip() for p in argstr.split(","))):
+        if "=" not in part:
+            raise ValueError(f"malformed recipe override {part!r} "
+                             "(expected key=value)")
+        key, val = (s.strip() for s in part.split("=", 1))
+        val = val.strip("'\"")
+        try:
+            out[key] = int(val)
+        except ValueError:
+            try:
+                out[key] = float(val)
+            except ValueError:
+                out[key] = val
+        if isinstance(out[key], str) and out[key] in ("True", "False"):
+            out[key] = out[key] == "True"
+    return out
+
+
+# Shared override vocabulary — the legacy PTQConfig fields plus activation
+# spec. A factory may ignore keys that don't apply to its method (so sweeps
+# like resolve(m, rank=48) work across heterogeneous methods, exactly like
+# PTQConfig did), but a key outside both this vocabulary and the factory's
+# own signature is a typo and raises.
+_OVERRIDE_VOCAB = frozenset({"w_bits", "rank", "alpha", "outlier_f", "damp",
+                             "base", "a_bits", "a_granularity", "sq_alpha"})
+
+
+def _check_overrides(name: str, fn: Callable, overrides: dict):
+    own = {n for n, p in inspect.signature(fn).parameters.items()
+           if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)}
+    unknown = set(overrides) - _OVERRIDE_VOCAB - own
+    if unknown:
+        raise ValueError(
+            f"unknown override(s) {sorted(unknown)} for method {name!r}; "
+            f"recognized: {sorted(_OVERRIDE_VOCAB | own)}")
+
+
+def resolve(spec, **overrides) -> QuantRecipe:
+    """Resolve a method name / recipe / legacy config into a QuantRecipe."""
+    if isinstance(spec, QuantRecipe):
+        if overrides:
+            raise ValueError("overrides only apply to method names; "
+                             "use recipe.replace(...) on a QuantRecipe")
+        return spec
+    if hasattr(spec, "to_recipe"):            # legacy PTQConfig shim
+        if overrides:
+            raise ValueError("overrides only apply to method names; "
+                             "dataclasses.replace(...) the PTQConfig instead")
+        return spec.to_recipe()
+    if not isinstance(spec, str):
+        raise TypeError(f"cannot resolve a recipe from {type(spec)!r}")
+    name = spec
+    m = _CALL_RE.match(spec)
+    if m:
+        name = m.group(1)
+        inline = _parse_overrides(m.group(2))
+        clash = set(inline) & set(overrides)
+        if clash:
+            raise ValueError(f"override(s) given twice: {sorted(clash)}")
+        overrides = {**inline, **overrides}
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown quantization method {name!r}; available: {available()}")
+    fn = _REGISTRY[name]
+    _check_overrides(name, fn, overrides)
+    return fn(**overrides)
+
+
+# ---------------------------------------------------------------------------
+# Built-in methods (the legacy PTQConfig vocabulary)
+# ---------------------------------------------------------------------------
+
+def _base_stage(base: str, w_bits: int, damp: float) -> BaseQuantizer:
+    # BaseQuantizer rejects "awq" itself with a pointer to Smoother("awq-scale")
+    return BaseQuantizer(kind=base, bits=w_bits, damp=damp)
+
+
+def _act(a_bits: int, a_granularity: str = "per_token") -> ActQuantSpec:
+    return ActQuantSpec(bits=a_bits, granularity=a_granularity)
+
+
+@register("fp16")
+def _fp16(a_bits: int = 16, a_granularity: str = "per_token", **_ignored):
+    return QuantRecipe(smoother=Smoother("none"), base=BaseQuantizer("none"),
+                       reconstructor=ErrorReconstructor("none"),
+                       act=_act(a_bits, a_granularity), name="fp16")
+
+
+def _plain(name):
+    @register(name)
+    def _f(w_bits: int = 4, a_bits: int = 8, a_granularity: str = "per_token",
+           **_ignored):
+        return QuantRecipe(base=BaseQuantizer("rtn", bits=w_bits),
+                           act=_act(a_bits, a_granularity), name=name)
+    return _f
+
+
+_plain("rtn")
+_plain("llmint4")       # paper's LLM.int4() row == per-channel RTN here
+
+
+@register("smoothquant")
+def _smoothquant(w_bits: int = 4, sq_alpha: float = 0.5, a_bits: int = 8,
+                 a_granularity: str = "per_token", **_ignored):
+    return QuantRecipe(smoother=Smoother("smoothquant", alpha=sq_alpha),
+                       base=BaseQuantizer("rtn", bits=w_bits),
+                       act=_act(a_bits, a_granularity), name="smoothquant")
+
+
+@register("gptq")
+def _gptq(w_bits: int = 4, damp: float = 1e-2, a_bits: int = 8,
+          a_granularity: str = "per_token", **_ignored):
+    return QuantRecipe(base=BaseQuantizer("gptq", bits=w_bits, damp=damp),
+                       act=_act(a_bits, a_granularity), name="gptq")
+
+
+@register("awq")
+def _awq(w_bits: int = 4, a_bits: int = 8, a_granularity: str = "per_token",
+         **_ignored):
+    return QuantRecipe(smoother=Smoother("awq-scale"),
+                       base=BaseQuantizer("rtn", bits=w_bits),
+                       act=_act(a_bits, a_granularity), name="awq")
+
+
+def _compensated(name):
+    @register(name)
+    def _f(w_bits: int = 4, rank: int = 64, a_bits: int = 8,
+           a_granularity: str = "per_token", **_ignored):
+        return QuantRecipe(base=BaseQuantizer("rtn", bits=w_bits),
+                           reconstructor=ErrorReconstructor(name, rank=rank),
+                           act=_act(a_bits, a_granularity), name=name)
+    return _f
+
+
+_compensated("lorc")
+_compensated("l2qer")
+
+
+@register("aser")
+def _aser(w_bits: int = 4, rank: int = 64, alpha: float = 0.0,
+          damp: float = 1e-2, base: str = "rtn", a_bits: int = 8,
+          a_granularity: str = "per_token", **_ignored):
+    return QuantRecipe(
+        base=_base_stage(base, w_bits, damp),
+        reconstructor=ErrorReconstructor("whitened-svd", rank=rank,
+                                         alpha=alpha, damp=damp),
+        act=_act(a_bits, a_granularity), name="aser")
+
+
+@register("aser_as")
+def _aser_as(w_bits: int = 4, rank: int = 64, alpha: float = 0.0,
+             outlier_f: int = 32, damp: float = 1e-2, base: str = "rtn",
+             a_bits: int = 8, a_granularity: str = "per_token", **_ignored):
+    return QuantRecipe(
+        smoother=Smoother("aser-outlier", outlier_f=outlier_f),
+        base=_base_stage(base, w_bits, damp),
+        reconstructor=ErrorReconstructor("whitened-svd", rank=rank,
+                                         alpha=alpha, damp=damp),
+        act=_act(a_bits, a_granularity), name="aser_as")

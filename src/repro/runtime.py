@@ -1,0 +1,56 @@
+"""Explicit serving-runtime configuration.
+
+Replaces the old process-global ``_STATE`` dict in ``repro.kernels.ops``:
+activation bit-width, activation-quant granularity, and the pallas-vs-XLA
+kernel choice are now carried by an immutable :class:`RuntimeConfig` that is
+threaded explicitly through ``serve.Engine``, ``models.forward`` and the
+benchmark harnesses. Per-deployment configuration (e.g. a sharded server
+running W4A8 next to a weight-only W4A16 replica in the same process) falls
+out of this: each engine holds its own ``RuntimeConfig`` instead of racing
+on module state.
+
+``RuntimeConfig`` is plain Python data, never traced: it only steers
+Python-level branching at trace time, so two engines with different configs
+simply compile different programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Single source of truth for what the serving runtime implements; recipe
+# validation (repro.quant.recipe.ActQuantSpec) references these too.
+SUPPORTED_ACT_BITS = (4, 6, 8, 16)
+ACT_GRANULARITIES = ("per_token", "per_tensor")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """How quantized leaves execute at serving time.
+
+    a_bits: activation bit-width (8 = paper's W4A8; 6/4 for W4A6/W4A4;
+        >=16 = weight-only, no activation quantization).
+    act_granularity: "per_token" (paper setup) or "per_tensor".
+    use_pallas: Pallas kernel path vs the pure-XLA reference (identical math
+        up to f32 reduction order).
+    interpret: run Pallas kernels in interpret mode (CPU) vs compiled (TPU).
+    """
+
+    a_bits: int = 8
+    act_granularity: str = "per_token"
+    use_pallas: bool = False
+    interpret: bool = True
+
+    def __post_init__(self):
+        if self.a_bits not in SUPPORTED_ACT_BITS:
+            raise ValueError(f"activation bits must be one of "
+                             f"{SUPPORTED_ACT_BITS}: {self.a_bits}")
+        if self.act_granularity not in ACT_GRANULARITIES:
+            raise ValueError(
+                f"unknown act granularity {self.act_granularity!r}; "
+                f"one of {ACT_GRANULARITIES}")
+
+    def replace(self, **kw) -> "RuntimeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_RUNTIME = RuntimeConfig()

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.models import (ModelConfig, encode, forward, init_caches,
                           prepare_cross_caches)
+from repro.runtime import RuntimeConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,10 +29,21 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig = ServeConfig()):
+    """Per-deployment engine: holds its own :class:`RuntimeConfig`, so two
+    engines in one process can serve e.g. W4A8-pallas next to W4A16-XLA
+    without racing on process state. ``rt=None`` follows the process
+    default runtime, read when the engine first traces — the seed
+    semantics, so legacy callers that construct an Engine and *then* call
+    the deprecated ``ops.set_act_bits``/``ops.use_pallas`` shims before the
+    first ``generate()`` still get what they asked for."""
+
+    def __init__(self, params, cfg: ModelConfig,
+                 scfg: ServeConfig = ServeConfig(),
+                 rt: Optional[RuntimeConfig] = None):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self.rt = rt                # None → ops.default_runtime() at trace
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
 
@@ -39,12 +51,12 @@ class Engine:
     def _prefill_impl(self, params, tokens, caches, encoder_out=None):
         """tokens: [b, s_prompt]. Runs the prompt through, filling caches."""
         logits, caches, _ = forward(params, self.cfg, tokens, caches=caches,
-                                    encoder_out=encoder_out)
+                                    encoder_out=encoder_out, rt=self.rt)
         return logits[:, -1], caches
 
     def _decode_impl(self, params, last_tok, caches, key):
         logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
-                                    caches=caches)
+                                    caches=caches, rt=self.rt)
         lg = logits[:, 0]
         if self.scfg.temperature > 0:
             nxt = jax.random.categorical(key, lg / self.scfg.temperature, axis=-1)
@@ -61,8 +73,9 @@ class Engine:
         enc_out = None
         if self.cfg.family == "encdec":
             assert frames is not None
-            enc_out = encode(self.params, self.cfg, frames)
-            caches = prepare_cross_caches(self.params, self.cfg, enc_out, caches)
+            enc_out = encode(self.params, self.cfg, frames, rt=self.rt)
+            caches = prepare_cross_caches(self.params, self.cfg, enc_out,
+                                          caches, rt=self.rt)
         last, caches = self._prefill(self.params, prompts, caches)
         tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         out = [tok]

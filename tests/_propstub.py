@@ -1,0 +1,61 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The real library is preferred (it shrinks failures and explores the space);
+this shim keeps the property tests *collectable and meaningful* without it by
+expanding ``@given`` into a ``pytest.mark.parametrize`` over deterministic
+representative samples of each strategy (bounds, midpoint, and a couple of
+interior points). Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                     # pragma: no cover - env dependent
+        from _propstub import given, settings, st
+"""
+from __future__ import annotations
+
+import inspect
+import itertools
+
+import pytest
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class st:
+    """Subset of ``hypothesis.strategies`` used by this test suite."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        span = max_value - min_value
+        pts = {min_value, max_value, min_value + span // 2,
+               min_value + span // 3, min_value + (2 * span) // 3}
+        return _Strategy(sorted(pts))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        mid = (min_value + max_value) / 2
+        return _Strategy([min_value, mid, max_value])
+
+
+def settings(**_kw):
+    """All hypothesis settings (max_examples, deadline, ...) are no-ops."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Expand strategy samples into parametrized cases.
+
+    Mirrors hypothesis' convention that positional strategies fill the test
+    function's *last* parameters (leading ones stay pytest fixtures).
+    """
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)
+        names = params[len(params) - len(strategies):]
+        cases = list(itertools.product(*[s.examples for s in strategies]))
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+    return deco

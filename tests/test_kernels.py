@@ -113,23 +113,23 @@ def test_flash_attention_bf16(rng):
 
 def test_ops_dispatch_consistency(rng):
     """pallas path == XLA fallback through the public ops API."""
+    from repro.runtime import RuntimeConfig
     x, qw, sw, mdiag, lb, la = _quant_setup(rng, 64, 256, 128, 16)
-    ops.use_pallas(False)
-    y_xla = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
-    ops.use_pallas(True)
-    y_pl = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
-    ops.use_pallas(False)
+    y_xla = ops.w4a8_linear(x, qw, sw, mdiag, lb, la,
+                            rt=RuntimeConfig(use_pallas=False))
+    y_pl = ops.w4a8_linear(x, qw, sw, mdiag, lb, la,
+                           rt=RuntimeConfig(use_pallas=True))
     np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_xla),
                                rtol=1e-4, atol=1e-3)
 
 
 def test_ops_rank_zero_pallas(rng):
+    from repro.runtime import RuntimeConfig
     x, qw, sw, mdiag, _, _ = _quant_setup(rng, 32, 128, 64, 8)
     lb = jnp.zeros((128, 0), jnp.float32)
     la = jnp.zeros((0, 64), jnp.float32)
-    ops.use_pallas(True)
-    y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la)
-    ops.use_pallas(False)
+    y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la,
+                        rt=RuntimeConfig(use_pallas=True))
     y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-3)

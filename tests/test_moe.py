@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
 
 from repro.models.config import ModelConfig
 from repro.models.moe import _capacity, _positions_in_expert, moe_block, moe_params

@@ -9,9 +9,9 @@ import pytest
 from repro.configs.registry import get_smoke_config
 from repro.core.metrics import perplexity
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
-from repro.kernels import ops
 from repro.models import forward, init_params
 from repro.quant import PTQConfig, calibrate, quantize_model, reduce_shared
+from repro.runtime import RuntimeConfig
 
 ARCHS = ["llama3_8b", "mamba2_780m", "moonshot_v1_16b", "zamba2_7b"]
 
@@ -61,11 +61,10 @@ def test_pallas_path_matches_xla(quantized):
         pytest.skip("one arch suffices (slow in interpret mode)")
     qp = quantize_model(params, tape, PTQConfig(method="aser_as", rank=8,
                                                 outlier_f=8))
-    ops.use_pallas(False)
-    lg_xla, _, _ = forward(qp, cfg, toks[:1, :16])
-    ops.use_pallas(True)
-    lg_pl, _, _ = forward(qp, cfg, toks[:1, :16])
-    ops.use_pallas(False)
+    lg_xla, _, _ = forward(qp, cfg, toks[:1, :16],
+                           rt=RuntimeConfig(use_pallas=False))
+    lg_pl, _, _ = forward(qp, cfg, toks[:1, :16],
+                          rt=RuntimeConfig(use_pallas=True))
     np.testing.assert_allclose(np.asarray(lg_pl), np.asarray(lg_xla),
                                rtol=1e-3, atol=1e-3)
 
@@ -80,10 +79,8 @@ def test_act_bits_sweep(quantized):
                                                 outlier_f=8))
     dists = {}
     for bits in (16, 8, 6):
-        ops.set_act_bits(bits)
-        lg, _, _ = forward(qp, cfg, toks)
+        lg, _, _ = forward(qp, cfg, toks, rt=RuntimeConfig(a_bits=bits))
         dists[bits] = float(jnp.linalg.norm(lg - ref))
-    ops.set_act_bits(8)
     assert dists[16] <= dists[8] <= dists[6]
 
 

@@ -1,7 +1,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
 
 from repro.core.quantizers import (A6, A8, W4, W8, QuantConfig,
                                    dequantize_weight, fake_quant_activation,

@@ -1,0 +1,372 @@
+"""Recipe API: registry resolution, golden parity with the seed PTQ
+implementation, JSON round-trip, and RuntimeConfig propagation."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, aser_smoothing, awq_quantize,
+                        cholesky_whitener, gptq_quantize, l2qer, lorc,
+                        low_rank_factors, pack_int4, quantize_weight,
+                        rank_from_alpha, smoothquant_scales, whiten_svd)
+from repro.core.aser import smooth_gram
+from repro.kernels import ops
+from repro.kernels.ref import w4a8_linear_ref
+from repro.models.layers import LinStats
+from repro.quant import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
+                         PTQConfig, QuantRecipe, Smoother, quantize_model,
+                         registry)
+from repro.quant.apply import _quantize_one
+from repro.runtime import RuntimeConfig
+
+LEGACY_METHODS = ["rtn", "llmint4", "smoothquant", "gptq", "awq",
+                  "lorc", "l2qer", "aser", "aser_as"]
+
+
+# ---------------------------------------------------------------------------
+# Golden reference: the seed (pre-recipe) _quantize_one, copied verbatim from
+# commit 2a80fd1 (string dispatch + PTQConfig). The registry-resolved recipe
+# pipeline must reproduce its output leaf-for-leaf.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _SeedCfg:
+    method: str = "aser_as"
+    w_bits: int = 4
+    rank: int = 64
+    alpha: float = 0.0
+    outlier_f: int = 32
+    damp: float = 1e-2
+    base: str = "rtn"
+
+
+def _seed_recode(w_hat, wt, wq_cfg):
+    qmax = wq_cfg.qmax
+    sc = jnp.maximum(jnp.max(jnp.abs(wt), axis=1, keepdims=True), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(w_hat / sc), wq_cfg.qmin, wq_cfg.qmax)
+    return codes.astype(jnp.int8), sc.astype(jnp.float32)
+
+
+def _seed_base_quant(w_s, g_eff, wq_cfg, cfg: _SeedCfg):
+    if cfg.base == "gptq":
+        w_hat = gptq_quantize(w_s, g_eff, wq_cfg, damp=cfg.damp)
+        codes, sc = _seed_recode(w_hat, w_s, wq_cfg)
+        return codes, sc, codes.astype(jnp.float32) * sc
+    codes, sc = quantize_weight(w_s, wq_cfg)
+    return codes, sc, codes.astype(jnp.float32) * sc
+
+
+def _seed_quantize_one(w, st: LinStats, cfg: _SeedCfg):
+    k, n = w.shape
+    wt = w.astype(jnp.float32).T
+    count = jnp.maximum(st.count, 1.0)
+    g = st.gram
+    absmean = st.abssum / count
+    wq_cfg = QuantConfig(bits=cfg.w_bits)
+    m = jnp.ones((k,), jnp.float32)
+    la = lb = None
+    method = cfg.method
+
+    if method in ("rtn", "llmint4"):
+        codes, sc = quantize_weight(wt, wq_cfg)
+    elif method == "smoothquant":
+        w_absmax_in = jnp.max(jnp.abs(wt), axis=0)
+        m = smoothquant_scales(st.absmax, w_absmax_in, alpha=0.5)
+        codes, sc = quantize_weight(wt * m[None, :], wq_cfg)
+    elif method == "gptq":
+        w_hat = gptq_quantize(wt, g, wq_cfg, damp=cfg.damp)
+        codes, sc = _seed_recode(w_hat, wt, wq_cfg)
+    elif method == "awq":
+        _, s = awq_quantize(wt, g, absmean, wq_cfg)
+        m = s
+        codes, sc = quantize_weight(wt * s[None, :], wq_cfg)
+    elif method in ("lorc", "l2qer"):
+        codes, sc = quantize_weight(wt, wq_cfg)
+        w_deq = codes.astype(jnp.float32) * sc
+        e_q = wt - w_deq
+        r = min(cfg.rank, k, n)
+        comp = (lorc(e_q, r) if method == "lorc" else l2qer(e_q, absmean, r))
+        la, lb = comp.l_a, comp.l_b
+    elif method.startswith("aser"):
+        smooth = method == "aser_as"
+        if smooth:
+            sm = aser_smoothing(wt, absmean, cfg.outlier_f)
+            m = sm.m
+            w_s = sm.w_smooth
+            extra = sm.w_outlier
+            g_eff = smooth_gram(g, m)
+        else:
+            w_s, extra, g_eff = wt, jnp.zeros_like(wt), g
+        codes, sc, w_deq = _seed_base_quant(w_s, g_eff, wq_cfg, cfg)
+        e_q = (w_s - w_deq) + extra
+        r = min(cfg.rank, k, n)
+        s_chol = cholesky_whitener(g_eff, damp=cfg.damp)
+        u, sig, vt = whiten_svd(e_q, s_chol)
+        if cfg.alpha > 0:
+            r_sel = jnp.minimum(rank_from_alpha(sig, cfg.alpha), r)
+            la_f, lb_f = low_rank_factors(u, sig, vt, s_chol, r)
+            keepm = (jnp.arange(r) < r_sel).astype(jnp.float32)
+            la, lb = la_f * keepm[None, :], lb_f * keepm[:, None]
+        else:
+            la, lb = low_rank_factors(u, sig, vt, s_chol, r)
+    else:
+        raise ValueError(method)
+
+    if la is None:
+        lb_m = jnp.zeros((k, 0), jnp.float32)
+        la_m = jnp.zeros((0, n), jnp.float32)
+    else:
+        lb_m, la_m = lb.T, la.T
+    qw = pack_int4(codes).T if cfg.w_bits == 4 else codes.T
+    return {"qw": qw.astype(jnp.int8), "sw": sc[:, 0].astype(jnp.float32),
+            "m": m.astype(jnp.float32), "lb": lb_m.astype(jnp.float32),
+            "la": la_m.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: a synthetic linear layer + calibration stats with outliers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def leaf_data():
+    rng = np.random.default_rng(7)
+    k, n, t = 64, 48, 512
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)) * 0.1
+    x = rng.normal(size=(t, k)).astype(np.float32)
+    x[:, rng.choice(k, 4, replace=False)] *= 12.0      # activation outliers
+    xj = jnp.asarray(x)
+    st = LinStats(xj.T @ xj, jnp.sum(jnp.abs(xj), axis=0),
+                  jnp.max(jnp.abs(xj), axis=0),
+                  jnp.asarray(float(t), jnp.float32))
+    return w, st
+
+
+def _assert_leaves_equal(got, want, method):
+    assert set(got) == set(want), method
+    for key in want:
+        np.testing.assert_allclose(
+            np.asarray(got[key], np.float32), np.asarray(want[key], np.float32),
+            rtol=1e-6, atol=1e-6, err_msg=f"{method}/{key}")
+
+
+# ---------------------------------------------------------------------------
+# Golden parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", LEGACY_METHODS)
+def test_registry_parity_with_seed(leaf_data, method):
+    """Registry-resolved recipes reproduce the seed implementation
+    leaf-for-leaf for every legacy method string."""
+    w, st = leaf_data
+    seed = _seed_quantize_one(w, st, _SeedCfg(method=method, rank=8,
+                                              outlier_f=8))
+    recipe = registry.resolve(method, rank=8, outlier_f=8)
+    got = _quantize_one(w, st, recipe)
+    _assert_leaves_equal(got, seed, method)
+
+
+def test_parity_aser_base_gptq(leaf_data):
+    w, st = leaf_data
+    seed = _seed_quantize_one(w, st, _SeedCfg(method="aser", base="gptq",
+                                              rank=8))
+    got = _quantize_one(w, st, registry.resolve("aser(base=gptq)", rank=8))
+    _assert_leaves_equal(got, seed, "aser(base=gptq)")
+
+
+def test_parity_adaptive_rank(leaf_data):
+    w, st = leaf_data
+    seed = _seed_quantize_one(w, st, _SeedCfg(method="aser_as", rank=16,
+                                              alpha=0.3, outlier_f=8))
+    got = _quantize_one(w, st, registry.resolve("aser_as", rank=16,
+                                                alpha=0.3, outlier_f=8))
+    _assert_leaves_equal(got, seed, "aser_as(alpha)")
+
+
+def test_ptqconfig_shim_matches_recipe(leaf_data):
+    """The deprecated PTQConfig path goes through the same pipeline."""
+    w, st = leaf_data
+    cfg = PTQConfig(method="aser_as", rank=8, outlier_f=8)
+    got = _quantize_one(w, st, cfg.to_recipe())
+    want = _quantize_one(w, st, registry.resolve("aser_as", rank=8,
+                                                 outlier_f=8))
+    _assert_leaves_equal(got, want, "ptqconfig-shim")
+
+
+# ---------------------------------------------------------------------------
+# Registry + recipe construction semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_legacy_names():
+    names = set(registry.available())
+    assert set(LEGACY_METHODS + ["fp16"]) <= names
+
+
+def test_string_override_syntax():
+    r = registry.resolve("aser(base=gptq, rank=32)")
+    assert r.base.kind == "gptq" and r.reconstructor.rank == 32
+    with pytest.raises(ValueError):        # same override twice
+        registry.resolve("aser(rank=8)", rank=16)
+    with pytest.raises(ValueError):
+        registry.resolve("no_such_method")
+
+
+def test_mistyped_overrides_raise():
+    """Typo'd override keys must not be silently swallowed."""
+    with pytest.raises(ValueError, match="rnk"):
+        registry.resolve("aser", rnk=8)
+    with pytest.raises(ValueError, match="w_bit"):
+        registry.resolve("aser(w_bit=8)")
+    # irrelevant-but-recognized keys are still tolerated (PTQConfig-style
+    # sweeps across heterogeneous methods)
+    assert registry.resolve("rtn", rank=8, outlier_f=4).name == "rtn"
+    # overrides on an already-resolved spec raise instead of being dropped
+    with pytest.raises(ValueError):
+        registry.resolve(PTQConfig(method="aser"), rank=8)
+
+
+def test_quantize_one_rejects_noop_recipe(leaf_data):
+    w, st = leaf_data
+    with pytest.raises(ValueError, match="noop"):
+        _quantize_one(w, st, registry.resolve("fp16"))
+
+
+def test_unsupported_combos_raise_at_construction():
+    with pytest.raises(ValueError):        # dead seed branch, now explicit
+        registry.resolve("aser", base="awq")
+    with pytest.raises(ValueError):
+        registry.resolve("aser_as", base="awq")
+    with pytest.raises(ValueError):        # outlier weight would be dropped
+        QuantRecipe(smoother=Smoother("aser-outlier"),
+                    reconstructor=ErrorReconstructor("none"))
+    with pytest.raises(ValueError):        # fp passthrough composes nothing
+        QuantRecipe(base=BaseQuantizer("none"),
+                    reconstructor=ErrorReconstructor("lorc"))
+    with pytest.raises(ValueError):
+        Smoother("totally-new-kind")
+    with pytest.raises(ValueError):
+        ActQuantSpec(bits=5)
+
+
+def test_new_combination_composes(leaf_data):
+    """Stage composition the string API never offered: awq-scale smoothing
+    under GPTQ with whitened-SVD reconstruction."""
+    w, st = leaf_data
+    recipe = QuantRecipe(
+        smoother=Smoother("awq-scale"),
+        base=BaseQuantizer("gptq"),
+        reconstructor=ErrorReconstructor("whitened-svd", rank=8))
+    leaf = _quantize_one(w, st, recipe)
+    assert leaf["lb"].shape[1] == 8
+    assert not bool(jnp.all(leaf["m"] == 1.0))      # smoothing engaged
+    for v in leaf.values():
+        assert bool(jnp.all(jnp.isfinite(v.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def test_recipe_json_round_trip_identity():
+    r = registry.resolve("aser_as", rank=24, alpha=0.1, outlier_f=16)
+    r2 = QuantRecipe.from_dict(json.loads(json.dumps(r.to_dict())))
+    assert r2 == r
+
+
+def test_round_tripped_recipe_quantizes_identically(leaf_data):
+    w, st = leaf_data
+    recipe = registry.resolve("aser_as", rank=8, outlier_f=8)
+    recipe2 = QuantRecipe.from_json(recipe.to_json())
+    a = _quantize_one(w, st, recipe)
+    b = _quantize_one(w, st, recipe2)
+    for key in a:
+        assert bool(jnp.all(a[key] == b[key])), key
+
+
+def test_from_dict_rejects_unknown_version():
+    d = registry.resolve("rtn").to_dict()
+    d["format_version"] = 99
+    with pytest.raises(ValueError):
+        QuantRecipe.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig propagation
+# ---------------------------------------------------------------------------
+
+def test_runtime_config_act_bits_through_w4a8_linear(leaf_data, rng):
+    """rt.a_bits reaches the kernel: explicit rt == explicit a_bits= ==
+    reference at each bit-width, and differs across bit-widths."""
+    w, st = leaf_data
+    leaf = _quantize_one(w, st, registry.resolve("aser_as", rank=8,
+                                                 outlier_f=8))
+    x = jnp.asarray(rng.normal(size=(16, w.shape[0])).astype(np.float32))
+    args = (x, leaf["qw"], leaf["sw"], leaf["m"], leaf["lb"], leaf["la"])
+    outs = {}
+    for bits in (8, 6):
+        y_rt = ops.w4a8_linear(*args, rt=RuntimeConfig(a_bits=bits))
+        y_ref = w4a8_linear_ref(*args, a_bits=bits)
+        np.testing.assert_allclose(np.asarray(y_rt), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+        outs[bits] = np.asarray(y_rt)
+    assert not np.allclose(outs[8], outs[6])
+    # >=16 = weight-only path: no activation quantization at all
+    outs[16] = np.asarray(ops.w4a8_linear(*args, rt=RuntimeConfig(a_bits=16)))
+    assert np.all(np.isfinite(outs[16]))
+    assert not np.allclose(outs[16], outs[8])
+
+
+def test_runtime_config_per_tensor_granularity(leaf_data, rng):
+    w, st = leaf_data
+    leaf = _quantize_one(w, st, registry.resolve("rtn"))
+    x = jnp.asarray(rng.normal(size=(16, w.shape[0])).astype(np.float32))
+    args = (x, leaf["qw"], leaf["sw"], leaf["m"], leaf["lb"], leaf["la"])
+    y_tok = ops.w4a8_linear(*args, rt=RuntimeConfig(a_bits=8))
+    y_ten = ops.w4a8_linear(
+        *args, rt=RuntimeConfig(a_bits=8, act_granularity="per_tensor"))
+    assert y_tok.shape == y_ten.shape
+    assert not np.allclose(np.asarray(y_tok), np.asarray(y_ten))
+
+
+def test_runtime_config_threads_through_forward():
+    """forward(rt=...) reproduces what the deprecated global shim did."""
+    import warnings
+    from repro.configs.registry import get_smoke_config
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.models import forward, init_params
+    from repro.quant import calibrate, reduce_shared
+
+    cfg = dataclasses.replace(get_smoke_config("llama3_8b"), dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(1, 2, 16)), cfg)
+    qp = quantize_model(params, tape, registry.resolve("aser_as", rank=8,
+                                                       outlier_f=8))
+    toks = corpus.sample(jnp.asarray(5), 2, 16)
+    lg_rt, _, _ = forward(qp, cfg, toks, rt=RuntimeConfig(a_bits=6))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ops.set_act_bits(6)
+        lg_shim, _, _ = forward(qp, cfg, toks)
+        ops.set_act_bits(8)
+    np.testing.assert_allclose(np.asarray(lg_rt), np.asarray(lg_shim),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_deprecated_shims_warn():
+    import warnings
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.set_act_bits(8)
+        ops.use_pallas(False)
+    assert sum(issubclass(r.category, DeprecationWarning) for r in rec) == 2
+
+
+def test_fp16_recipe_is_noop(leaf_data):
+    recipe = registry.resolve("fp16")
+    assert recipe.is_noop
+    params = {"groups": []}
+    assert quantize_model(params, {}, recipe) is params

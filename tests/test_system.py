@@ -10,9 +10,9 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_smoke_config
 from repro.core.metrics import perplexity
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
-from repro.kernels import ops
 from repro.models import forward, init_params
 from repro.quant import PTQConfig, calibrate, quantize_model
+from repro.runtime import RuntimeConfig
 from repro.serve.engine import Engine, ServeConfig
 from repro.train.loop import TrainConfig, make_train_step
 from repro.train.optimizer import OptConfig, init_opt_state
@@ -66,9 +66,9 @@ def test_full_system(tmp_path):
     out2 = eng.generate(prompts, n_steps=6)
     assert out1.shape == (2, 6) and bool(jnp.all(out1 == out2))
 
-    # 6. pallas kernel path agrees on the generation
-    ops.use_pallas(True)
-    out_pl = Engine(qp, cfg, ServeConfig(max_len=32)).generate(
+    # 6. pallas kernel path agrees on the generation (per-engine runtime,
+    #    no process-global toggles)
+    out_pl = Engine(qp, cfg, ServeConfig(max_len=32),
+                    rt=RuntimeConfig(use_pallas=True)).generate(
         prompts, n_steps=6)
-    ops.use_pallas(False)
     assert float(jnp.mean((out_pl == out1).astype(jnp.float32))) > 0.8

@@ -1,6 +1,9 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
 
 from repro.core.quantizers import W4, fake_quant_weight
 from repro.core.whitening import (cholesky_whitener, effective_rank, gram,
