@@ -3,6 +3,9 @@
 Wall-clock on CPU interpret mode is meaningless; instead we verify
 allclose across serving shapes and report the modeled VMEM footprint and
 arithmetic intensity per BlockSpec choice (what the TPU scheduler sees).
+The cost model itself lives in ``repro.kernels.tuning`` — the same one the
+serving dispatch uses for block selection and fused-decode routing — so
+the numbers reported here are the numbers the router acts on.
 """
 import time
 
@@ -10,47 +13,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantizers import W4, pack_int4, quantize_weight
-from repro.kernels import act_quant, w4a8_gemm
+from repro.kernels import act_quant, w4a8_fused, w4a8_gemm
 from repro.kernels import ref as kref
+from repro.kernels.tuning import (fused_bn, fused_vmem_bytes,
+                                  select_gemm_blocks, use_fused_decode,
+                                  vmem_bytes)
 from .common import save_json
 
 
-def vmem_bytes(bm, bn, bk, r):
-    """Per-step VMEM working set of the w4a8 kernel."""
-    return (bm * bk                    # xq int8
-            + bk // 2 * bn             # packed weights
-            + bm * bn * 4              # int32 accumulator
-            + bm * 4 + bn * 4          # scales
-            + bm * r * 4 + r * bn * 4  # low-rank epilogue
-            )
+def _setup(rng, m, k, n, r):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    codes, sw = quantize_weight(w, W4)
+    qw = pack_int4(codes).T
+    mdiag = jnp.ones((k,), jnp.float32)
+    lb = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32) * 0.01)
+    la = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32) * 0.01)
+    return x, qw, sw[:, 0], mdiag, lb, la
 
 
 def run(verbose=True):
     rng = np.random.default_rng(0)
     rows = []
+
+    # -- tiled GEMM path: prefill/batch shapes ------------------------------
     for (m, k, n, r) in [(128, 2048, 2048, 64), (256, 4096, 4096, 64),
                          (512, 2048, 8192, 64)]:
-        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
-        w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
-        codes, sw = quantize_weight(w, W4)
-        qw = pack_int4(codes).T
-        mdiag = jnp.ones((k,), jnp.float32)
-        lb = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32) * 0.01)
-        la = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32) * 0.01)
-        y_ref = kref.w4a8_linear_ref(x, qw, sw[:, 0], mdiag, lb, la)
+        x, qw, sw, mdiag, lb, la = _setup(rng, m, k, n, r)
+        y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
         xq, sx, xlr = act_quant(x, mdiag, lb)
-        y = w4a8_gemm(xq, sx, qw, sw[:, 0], xlr, la)
+        y = w4a8_gemm(xq, sx, qw, sw, xlr, la)
         err = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
-        for (bm, bn, bk) in [(256, 256, 512), (128, 512, 512), (256, 128, 1024)]:
+        chosen = select_gemm_blocks(m, k, n, r)
+        candidates = [(256, 256, 512), (128, 512, 512), (256, 128, 1024)]
+        if chosen not in candidates:    # always report what the router acts on
+            candidates.append(chosen)
+        for (bm, bn, bk) in candidates:
             vm = vmem_bytes(min(bm, m), min(bn, n), min(bk, k), r)
             flops = 2 * min(bm, m) * min(bn, n) * min(bk, k)
             ai = flops / vm
-            rows.append({"m": m, "k": k, "n": n, "r": r, "bm": bm, "bn": bn,
-                         "bk": bk, "vmem_kb": vm / 1024,
-                         "arith_intensity": ai, "max_rel_err": err})
+            rows.append({"kernel": "w4a8_gemm", "m": m, "k": k, "n": n,
+                         "r": r, "bm": bm, "bn": bn, "bk": bk,
+                         "vmem_kb": vm / 1024, "arith_intensity": ai,
+                         "chosen": list(chosen) == [min(bm, m), min(bn, n),
+                                                    min(bk, k)],
+                         "max_rel_err": err})
         if verbose:
             print(f"  w4a8 {m}x{k}x{n} r{r}: rel err {err:.2e}, "
-                  f"vmem {vmem_bytes(256,256,512,r)/1e6:.2f}MB @ (256,256,512)")
+                  f"vmem {vmem_bytes(256,256,512,r)/1e6:.2f}MB @ (256,256,512)"
+                  f", router picks {chosen}")
+        assert err < 1e-4
+
+    # -- fused decode path: small-m GEMV shapes -----------------------------
+    for (m, k, n, r) in [(1, 2048, 2048, 64), (4, 4096, 4096, 64),
+                         (8, 2048, 8192, 64), (1, 4096, 11008, 64)]:
+        assert use_fused_decode(m, k, n, r), (m, k, n, r)
+        x, qw, sw, mdiag, lb, la = _setup(rng, m, k, n, r)
+        y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+        y = w4a8_fused(x, mdiag, qw, sw, lb, la)
+        err = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
+        bn = fused_bn(m, k, n, r)
+        vm = fused_vmem_bytes(m, k, bn, r)
+        # HBM bytes the two-kernel pipeline round-trips between calls
+        saved = m * k + m * 4 + m * r * 4
+        rows.append({"kernel": "w4a8_fused", "m": m, "k": k, "n": n, "r": r,
+                     "bn": bn, "vmem_kb": vm / 1024,
+                     "hbm_roundtrip_saved_b": saved, "max_rel_err": err})
+        if verbose:
+            print(f"  fused {m}x{k}x{n} r{r}: rel err {err:.2e}, "
+                  f"bn {bn}, vmem {vm/1e6:.2f}MB, "
+                  f"saves {saved/1024:.1f}KB xq/sx/xlr round-trip")
         assert err < 1e-4
     save_json("kernels_bench", rows)
     return rows

@@ -7,7 +7,8 @@ import traceback
 from . import (fig2_singular_values, fig3_effective_rank, fig4_outliers,
                fig5_w8ax, fig6_compensation, fig7_smoothing,
                fig8_rank_selection, kernels_bench, roofline_report,
-               table3_scale, table4_rank, table12_main, table56_weight_only)
+               serve_bench, table3_scale, table4_rank, table12_main,
+               table56_weight_only)
 
 BENCHES = [
     ("fig2_singular_values", fig2_singular_values),
@@ -23,6 +24,7 @@ BENCHES = [
     ("fig8_rank_selection", fig8_rank_selection),
     ("kernels_bench", kernels_bench),
     ("roofline_report", roofline_report),
+    ("serve_bench", serve_bench),
 ]
 
 

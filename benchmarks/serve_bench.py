@@ -1,0 +1,195 @@
+"""Serving-latency benchmark: prefill, per-token decode, tokens/sec.
+
+Times the engine end-to-end for fp vs W4A8(+ASER) across (batch, prompt)
+buckets, for both decode loops:
+
+  * ``scan`` — the device-resident ``lax.scan`` loop with donated caches
+    (one dispatch per generation), the serving hot path;
+  * ``step`` — the per-token Python dispatch loop (debug mode), kept as the
+    baseline that the scan loop's dispatch-overhead win is measured against.
+
+Per-token decode latency is derived dispatch-noise-free as
+``(t(n_steps) − t(1)) / (n_steps − 1)`` — a 1-step generate is exactly
+prefill + first-token sampling, so the difference isolates the decode loop.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v1``)
+so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
+seconds-scale variant with the same schema for CI. Latency rows use the
+XLA serving path (interpret-mode Pallas wall-clock is meaningless on CPU);
+kernel-level tile economics live in ``kernels_bench``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import common  # noqa: F401  (sys.path side effect for src/)
+from repro.configs.registry import get_smoke_config
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import init_params
+from repro.quant import calibrate, quantize_model, reduce_shared
+from repro.runtime import RuntimeConfig
+from repro.serve.engine import Engine, ServeConfig
+
+SCHEMA = "serve_bench/v1"
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+ROW_FIELDS = ("mode", "batch", "prompt", "n_steps", "prefill_ms",
+              "decode_ms_per_tok", "tokens_per_s", "scan_decode_ms_per_tok",
+              "step_decode_ms_per_tok", "dispatch_overhead_ms_per_tok",
+              "scan_speedup")
+
+
+def _bench_cfg(smoke: bool):
+    base = get_smoke_config("llama3_8b")
+    if smoke:
+        return base.reduced(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                            head_dim=32, d_ff=128, vocab_size=128,
+                            dtype="float32")
+    return base.reduced(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                        head_dim=64, d_ff=512, vocab_size=512,
+                        dtype="float32")
+
+
+def _best_time(fn, reps: int) -> float:
+    """Best-of-``reps`` wall-clock seconds of ``fn()`` (one untimed
+    warmup/compile rep). Min, not mean: scheduler noise only ever adds."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _time_engine(params, cfg, rt, b, prompt, n_steps, max_len, reps):
+    corpus_key = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(corpus_key, (b, prompt), 0, cfg.vocab_size)
+    out = {}
+    for loop in ("scan", "step"):
+        eng = Engine(params, cfg, ServeConfig(max_len=max_len,
+                                              decode_loop=loop), rt=rt)
+        t1 = _best_time(lambda: eng.generate(prompts, 1), reps)
+        tn = _best_time(lambda: eng.generate(prompts, n_steps), reps)
+        out[loop] = {"prefill_s": t1,
+                     "decode_s_per_tok": max(tn - t1, 1e-9) / (n_steps - 1),
+                     "total_s": tn}
+    return out
+
+
+def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True):
+    cfg = dataclasses.replace(_bench_cfg(smoke), remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(2, 4, 32)), cfg)
+    qparams = quantize_model(params, tape, "aser_as")
+    rt = RuntimeConfig(use_pallas=False)     # XLA serving path (CPU-honest)
+
+    buckets = [(1, 16), (4, 16)] if smoke else [(1, 32), (4, 64), (8, 64)]
+    n_steps = 16 if smoke else 64
+    reps = 3 if smoke else 5
+    max_len = 64 if smoke else 128
+
+    rows = []
+    for mode, p in (("fp", params), ("w4a8_aser", qparams)):
+        for (b, prompt) in buckets:
+            t = _time_engine(p, cfg, rt, b, prompt, n_steps, max_len, reps)
+            scan_tok = t["scan"]["decode_s_per_tok"]
+            step_tok = t["step"]["decode_s_per_tok"]
+            row = {
+                "mode": mode, "batch": b, "prompt": prompt,
+                "n_steps": n_steps,
+                "prefill_ms": 1e3 * t["scan"]["prefill_s"],
+                "decode_ms_per_tok": 1e3 * scan_tok,
+                "tokens_per_s": b * n_steps / t["scan"]["total_s"],
+                "scan_decode_ms_per_tok": 1e3 * scan_tok,
+                "step_decode_ms_per_tok": 1e3 * step_tok,
+                "dispatch_overhead_ms_per_tok": 1e3 * (step_tok - scan_tok),
+                "scan_speedup": step_tok / max(scan_tok, 1e-12),
+            }
+            rows.append(row)
+            if verbose:
+                print(f"  {mode:>10} b={b} s={prompt}: "
+                      f"prefill {row['prefill_ms']:7.2f}ms  "
+                      f"decode {row['decode_ms_per_tok']:6.2f}ms/tok "
+                      f"(step {row['step_decode_ms_per_tok']:6.2f})  "
+                      f"{row['tokens_per_s']:8.1f} tok/s  "
+                      f"scan×{row['scan_speedup']:.2f}", flush=True)
+
+    report = {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "model": {"name": cfg.name, "n_layers": cfg.n_layers,
+                  "d_model": cfg.d_model, "vocab_size": cfg.vocab_size},
+        "decode_loop_default": "scan",
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    if verbose:
+        print(f"  wrote {os.path.abspath(out_path)}")
+    return report
+
+
+# -- schema validation (CI smoke gate) --------------------------------------
+
+def validate(report: dict):
+    """Raise ValueError unless ``report`` matches the serve_bench/v1 schema
+    and contains both fp and quantized rows with finite latencies."""
+    if report.get("schema") != SCHEMA:
+        raise ValueError(f"schema mismatch: {report.get('schema')!r}")
+    rows = report.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no benchmark rows")
+    modes = set()
+    for row in rows:
+        missing = [f for f in ROW_FIELDS if f not in row]
+        if missing:
+            raise ValueError(f"row missing fields {missing}: {row}")
+        for f in ROW_FIELDS[4:]:
+            v = row[f]
+            if not isinstance(v, (int, float)) or not (v == v and
+                                                       abs(v) < 1e12):
+                raise ValueError(f"non-finite {f}={v!r} in {row}")
+        # deltas (dispatch_overhead, speedup) may dip negative/below-1 on a
+        # noisy CI machine; absolute latencies must be positive
+        for f in ("prefill_ms", "decode_ms_per_tok", "tokens_per_s"):
+            if row[f] <= 0:
+                raise ValueError(f"non-positive {f}={row[f]!r} in {row}")
+        modes.add(row["mode"])
+    if not {"fp", "w4a8_aser"} <= modes:
+        raise ValueError(f"need fp and w4a8_aser rows, got {modes}")
+    return True
+
+
+def validate_file(path: str = ROOT_OUT):
+    with open(path) as f:
+        validate(json.load(f))
+    print(f"{path}: serve_bench schema OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI variant (same schema)")
+    ap.add_argument("--out", default=ROOT_OUT)
+    ap.add_argument("--validate", metavar="PATH", default=None,
+                    help="validate an existing BENCH_serve.json and exit")
+    args = ap.parse_args()
+    if args.validate:
+        validate_file(args.validate)
+        return
+    report = run(smoke=args.smoke, out_path=args.out)
+    validate(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + XLA fallbacks."""
-from . import ops, ref
+from . import ops, ref, tuning
 from .w4a8_gemm import w4a8_gemm
+from .w4a8_fused import w4a8_fused
 from .act_quant import act_quant
 from .flash_attention import flash_attention
 
-__all__ = ["ops", "ref", "w4a8_gemm", "act_quant", "flash_attention"]
+__all__ = ["ops", "ref", "tuning", "w4a8_gemm", "w4a8_fused", "act_quant",
+           "flash_attention"]

@@ -18,11 +18,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, m_ref, lb_ref, xq_ref, sx_ref, xlr_ref, *, qmax: int):
-    x = x_ref[...].astype(jnp.float32) / m_ref[...]
+def smooth_quant_block(x, m_diag, qmax: int):
+    """Smooth → per-token scale → symmetric quantize, shared between this
+    kernel and the fused decode kernel so the epsilon / clip conventions
+    cannot drift apart. Returns (x_s f32, sx f32 [rows,1], codes f32)."""
+    x = x.astype(jnp.float32) / m_diag
     amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
     sx = jnp.maximum(amax, 1e-8) / qmax
-    xq_ref[...] = jnp.clip(jnp.round(x / sx), -qmax - 1, qmax).astype(jnp.int8)
+    codes = jnp.clip(jnp.round(x / sx), -qmax - 1, qmax)
+    return x, sx, codes
+
+
+def _kernel(x_ref, m_ref, lb_ref, xq_ref, sx_ref, xlr_ref, *, qmax: int):
+    x, sx, codes = smooth_quant_block(x_ref[...], m_ref[...], qmax)
+    xq_ref[...] = codes.astype(jnp.int8)
     sx_ref[...] = sx
     xlr_ref[...] = jnp.dot(x, lb_ref[...].astype(jnp.float32),
                            preferred_element_type=jnp.float32)

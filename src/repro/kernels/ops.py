@@ -20,9 +20,32 @@ import jax.numpy as jnp
 from repro.runtime import DEFAULT_RUNTIME, RuntimeConfig
 
 from . import ref as _ref
+from . import tuning as _tuning
 from .act_quant import act_quant as _act_quant_kernel
 from .w4a8_gemm import w4a8_gemm as _w4a8_kernel
+from .w4a8_fused import w4a8_fused as _w4a8_fused_kernel
 from .flash_attention import flash_attention as _flash_kernel
+
+# Pallas kernels tile the low-rank factors along r; decode-path BlockSpecs
+# assume r is lane-aligned to this multiple. quantize-time packing
+# (repro.quant.apply) emits already-padded factors; pad_lowrank here is the
+# fallback for hand-built leaves coming through the public API.
+LOWRANK_MULTIPLE = 8
+
+
+def pad_lowrank(lb, la, multiple: int = LOWRANK_MULTIPLE):
+    """Zero-pad the rank axis of (lb [k,r], la [r,n]) up to ``multiple``.
+
+    Rank 0 (no compensation) is padded to one full multiple of zeros so the
+    kernels never see an empty block. Zero columns/rows are mathematically
+    inert. No-op when already aligned."""
+    r = lb.shape[-1]
+    pad = multiple if r == 0 else (-r) % multiple
+    if pad == 0:
+        return lb, la
+    lb = jnp.pad(lb, ((0, 0),) * (lb.ndim - 1) + ((0, pad),))
+    la = jnp.pad(la, ((0, pad),) + ((0, 0),) * (la.ndim - 1))
+    return lb, la
 
 # Mutated ONLY by the deprecated shims below; read when rt is not supplied.
 _default_runtime: RuntimeConfig = DEFAULT_RUNTIME
@@ -80,13 +103,19 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
         return x_s @ w + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
     if rt.use_pallas and bits == 8 and rt.act_granularity == "per_token" \
             and qw.shape[0] * 2 == m_diag.shape[0]:
+        lb, la = pad_lowrank(lb, la)    # no-op for pack-time-padded leaves
+        m, kd = x.shape
+        n = qw.shape[1]
         r = lb.shape[1]
-        if r == 0 or r % 8:
-            pad = 8 if r == 0 else (-r) % 8
-            lb = jnp.pad(lb, ((0, 0), (0, pad)))
-            la = jnp.pad(la, ((0, pad), (0, 0)))
+        if rt.fused_decode and _tuning.use_fused_decode(m, kd, n, r):
+            # decode/GEMV fast path: one pallas_call, no xq/sx/xlr HBM
+            # round-trip between kernels
+            return _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la,
+                                      interpret=rt.interpret)
+        bm, bn, bk = _tuning.select_gemm_blocks(m, kd, n, r)
         xq, sx, xlr = _act_quant_kernel(x, m_diag, lb, interpret=rt.interpret)
-        return _w4a8_kernel(xq, sx, qw, sw, xlr, la, interpret=rt.interpret)
+        return _w4a8_kernel(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk,
+                            interpret=rt.interpret)
     return _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb, la, a_bits=bits,
                                 granularity=rt.act_granularity)
 

@@ -1,0 +1,120 @@
+"""Block-size selection for the W4A8 kernels: modeled VMEM tile economics.
+
+Wall-clock autotuning on CPU interpret mode is meaningless, so kernel
+routing is driven by the same static cost model the benchmark harness
+reports (``benchmarks/kernels_bench.py`` imports it from here): per-step
+VMEM working set and arithmetic intensity per BlockSpec choice. Two
+decisions live here:
+
+  * ``use_fused_decode(m, k, n, r)`` — small-m (decode / GEMV) calls route
+    to the single-pass fused kernel (``w4a8_fused``) when its whole-K
+    working set fits the VMEM budget; everything else takes the two-kernel
+    act_quant → w4a8_gemm pipeline.
+  * ``select_gemm_blocks(m, k, n, r)`` — (bm, bn, bk) for the tiled GEMM:
+    an explicit table of known-good shapes first, then a modeled search
+    maximizing arithmetic intensity under the VMEM budget.
+
+Both are pure Python over static shapes — resolved at trace time, never
+traced.
+"""
+from __future__ import annotations
+
+import functools
+
+# Per-core VMEM is ~16 MB; leave half for double buffering + the compiler's
+# own spills. All budgets in bytes.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+# Largest m that still counts as a decode/GEMV shape (one to a few tokens
+# per sequence in the batch). Above this the MXU is fed well enough by the
+# tiled path that recomputing the quant per n-tile stops paying for itself.
+DECODE_M_MAX = 16
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, r: int) -> int:
+    """Per-grid-step VMEM working set of the tiled w4a8 GEMM kernel."""
+    return (bm * bk                    # xq int8
+            + bk // 2 * bn             # packed weights
+            + bk * bn                  # VPU-unpacked int8 weight tile
+            + bm * bn * 4              # int32 accumulator
+            + bm * 4 + bn * 4          # scales
+            + bm * r * 4 + r * bn * 4  # low-rank epilogue
+            )
+
+
+def fused_vmem_bytes(m: int, k: int, bn: int, r: int) -> int:
+    """Per-grid-step VMEM working set of the fused decode kernel.
+
+    K is kept whole (per-token absmax needs the full row), so the
+    activations, smoothing diagonal, and L_B all ride along in VMEM. The
+    VPU-unpacked int8 weight tile (k·bn) dominates at whole-K — it must be
+    counted or the "fits VMEM" gate that justifies fusion overcommits."""
+    return (m * k * 4                  # x (f32 working copy)
+            + k * 4                    # m_diag
+            + m * k * 4                # xq (int32 codes feeding the dot)
+            + k // 2 * bn              # packed weights
+            + k * bn                   # VPU-unpacked int8 weight tile
+            + m * bn * 4               # f32 accumulator / output tile
+            + bn * 4                   # sw
+            + k * r * 4 + r * bn * 4   # lb, la
+            + m * r * 4                # xlr
+            )
+
+
+def use_fused_decode(m: int, k: int, n: int, r: int,
+                     budget: int = VMEM_BUDGET) -> bool:
+    """Route small-m calls to the fused single-pass kernel when it fits."""
+    if m > DECODE_M_MAX:
+        return False
+    bn = fused_bn(m, k, n, r, budget=budget)
+    return bn is not None
+
+
+def fused_bn(m: int, k: int, n: int, r: int,
+             budget: int = VMEM_BUDGET) -> int | None:
+    """Largest n-tile (multiple of 128, capped at n) that keeps the fused
+    kernel's working set under budget; None if even bn=128 doesn't fit."""
+    for bn in (2048, 1024, 512, 256, 128):
+        bn_ = min(bn, n)
+        if fused_vmem_bytes(m, k, bn_, r) <= budget:
+            return bn_
+    return None
+
+
+# Known-good BlockSpecs for recurring serving shapes, keyed by
+# (m_bucket, k, n, r_padded). m is bucketed to the next power of two so one
+# entry covers a range of batch sizes. Filled from the modeled sweep in
+# benchmarks/kernels_bench.py; the heuristic below is the fallback.
+GEMM_BLOCK_TABLE: dict[tuple[int, int, int, int], tuple[int, int, int]] = {
+    (128, 2048, 2048, 64): (128, 512, 512),
+    (256, 4096, 4096, 64): (256, 256, 512),
+    (512, 2048, 8192, 64): (256, 256, 1024),
+}
+
+
+def _m_bucket(m: int) -> int:
+    b = 1
+    while b < m:
+        b *= 2
+    return b
+
+
+@functools.lru_cache(maxsize=512)
+def select_gemm_blocks(m: int, k: int, n: int, r: int,
+                       budget: int = VMEM_BUDGET) -> tuple[int, int, int]:
+    """(bm, bn, bk) for the tiled GEMM: table hit, else modeled search."""
+    hit = GEMM_BLOCK_TABLE.get((_m_bucket(m), k, n, r))
+    if hit is not None:
+        return hit
+    best, best_ai = (256, 256, 512), -1.0
+    for bm in (128, 256, 512):
+        for bn in (128, 256, 512):
+            for bk in (256, 512, 1024):
+                bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+                vm = vmem_bytes(bm_, bn_, bk_, r)
+                if vm > budget:
+                    continue
+                ai = (2 * bm_ * bn_ * bk_) / vm   # flops per VMEM byte
+                if ai > best_ai:
+                    best, best_ai = (bm_, bn_, bk_), ai
+    return best

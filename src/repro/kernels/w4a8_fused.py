@@ -1,0 +1,82 @@
+"""Fused W4A8 decode kernel: one VMEM pass for the whole quantized linear.
+
+For decode / GEMV shapes (m tokens, m small) the two-kernel pipeline
+(act_quant → w4a8_gemm) round-trips ``xq``/``sx``/``xlr`` through HBM
+between the calls — at m ∈ {1..8} that traffic and the second dispatch
+dominate the actual math. This kernel does the full chain in a single
+``pallas_call``::
+
+    x_s  = x / m_diag                     (ASER activation smoothing)
+    sx   = absmax(x_s, rows) / qmax       (per-token scale)
+    xq   = round(x_s / sx)                (int8 codes)
+    acc  = xq · unpack_int4(qw)           (MXU int32 GEMM)
+    y    = acc * sx * sw + (x_s @ L_B) @ L_A   (dequant + ASER epilogue)
+
+Grid is over n-tiles only; K is kept whole per step (the per-token absmax
+needs the full row, and at decode m the whole-K working set fits VMEM —
+``repro.kernels.tuning.use_fused_decode`` gates routing on exactly that).
+The smooth/quant stage is recomputed per n-tile; at decode m that is a few
+KFLOP against the saved HBM round-trip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .act_quant import smooth_quant_block
+from .tuning import fused_bn
+from .w4a8_gemm import unpack_int4_block
+
+
+def _kernel(x_ref, m_ref, qw_ref, sw_ref, lb_ref, la_ref, out_ref, *,
+            qmax: int):
+    x, sx, codes = smooth_quant_block(x_ref[...], m_ref[...], qmax)
+    xq = codes.astype(jnp.int32)
+    w = unpack_int4_block(qw_ref[...])
+    acc = jax.lax.dot_general(
+        xq, w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * sx * sw_ref[...]
+    xlr = jnp.dot(x, lb_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    y = y + jnp.dot(xlr, la_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+def w4a8_fused(x, m_diag, qw, sw, lb, la, *, bits: int = 8,
+               bn: int | None = None, interpret: bool = True):
+    """x: [m,k]; m_diag: [k]; qw: [k//2,n] int8 packed; sw: [n]; lb: [k,r];
+    la: [r,n] → y [m,n] f32. Decode shapes: m small, K whole in VMEM."""
+    m, k = x.shape
+    n = qw.shape[1]
+    r = lb.shape[1]
+    qmax = 2 ** (bits - 1) - 1
+    if bn is None:
+        bn = fused_bn(m, k, n, r)
+        if bn is None:
+            raise ValueError(
+                f"fused decode working set over VMEM budget for shape "
+                f"(m={m}, k={k}, n={n}, r={r}); route through the tiled "
+                f"act_quant → w4a8_gemm pipeline instead")
+    bn_ = min(bn, n)
+    grid = (pl.cdiv(n, bn_),)
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((1, k), lambda j: (0, 0)),
+            pl.BlockSpec((k // 2, bn_), lambda j: (0, j)),
+            pl.BlockSpec((1, bn_), lambda j: (0, j)),
+            pl.BlockSpec((k, r), lambda j: (0, 0)),
+            pl.BlockSpec((r, bn_), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn_), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, m_diag.reshape(1, k), qw, sw.reshape(1, n), lb, la)

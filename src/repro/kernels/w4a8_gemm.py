@@ -29,8 +29,10 @@ DEFAULT_BN = 256
 DEFAULT_BK = 512
 
 
-def _unpack_int4_block(packed):
-    """[bk//2, bn] int8 → [bk, bn] int8 (pairwise interleave along K)."""
+def unpack_int4_block(packed):
+    """[bk//2, bn] int8 → [bk, bn] int8 (pairwise interleave along K).
+
+    VPU-side unpack shared by the tiled and fused W4A8 kernels."""
     u = packed.astype(jnp.uint8)
     lo = (u & 0xF).astype(jnp.int8)
     hi = ((u >> 4) & 0xF).astype(jnp.int8)
@@ -48,7 +50,7 @@ def _kernel(xq_ref, sx_ref, qw_ref, sw_ref, xlr_ref, la_ref, out_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = _unpack_int4_block(qw_ref[...])
+    w = unpack_int4_block(qw_ref[...])
     acc_ref[...] += jax.lax.dot_general(
         xq_ref[...].astype(jnp.int32), w.astype(jnp.int32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)

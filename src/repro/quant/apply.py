@@ -21,6 +21,13 @@ Every quantizable linear leaf ``{"w": [k, n]}`` becomes a serving leaf::
      "m":   f32 [k]          # smoothing diagonal (ones when off)
      "lb":  f32 [k, r]       # low-rank compensation (r may be 0)
      "la":  f32 [r, n]}
+
+Non-zero ranks are zero-padded here, once, to the kernel lane multiple
+(``repro.kernels.ops.LOWRANK_MULTIPLE``) so the serving hot path never
+re-pads ``lb``/``la`` per call; padded columns/rows are zero and thus
+mathematically inert. ``r == 0`` (no compensation) stays empty — the leaf
+remains introspectable as "no reconstruction" and ops pads the degenerate
+case at dispatch.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.core import (QuantConfig, awq_quantize, cholesky_whitener,
                         smoothquant_scales, whiten_svd)
 from repro.core.aser import smooth_gram
 from repro.core.smoothing import aser_smoothing
+from repro.kernels.ops import LOWRANK_MULTIPLE, pad_lowrank
 from repro.models.layers import LinStats
 
 from . import registry
@@ -166,7 +174,8 @@ def _quantize_one(w: jnp.ndarray, st: LinStats, recipe):
     else:
         # convert paper layout (L_A [out,r], L_B [r,in]) to model layout
         la, lb = comp
-        lb_m, la_m = lb.T, la.T                      # [k, r], [r, n]
+        lb_m, la_m = pad_lowrank(lb.T, la.T)         # [k, r8], [r8, n]
+        assert lb_m.shape[1] % LOWRANK_MULTIPLE == 0, lb_m.shape
 
     qw = pack_int4(codes).T if recipe.base.bits == 4 else codes.T
     return {"qw": qw.astype(jnp.int8), "sw": sc[:, 0].astype(jnp.float32),

@@ -33,12 +33,18 @@ class RuntimeConfig:
     use_pallas: Pallas kernel path vs the pure-XLA reference (identical math
         up to f32 reduction order).
     interpret: run Pallas kernels in interpret mode (CPU) vs compiled (TPU).
+    fused_decode: route small-m (decode/GEMV) quantized linears to the
+        single-pass fused kernel (``repro.kernels.w4a8_fused``) instead of
+        the two-kernel act_quant → w4a8_gemm pipeline. Only consulted when
+        ``use_pallas`` is on; turn off to pin the tiled pipeline for A/B
+        debugging.
     """
 
     a_bits: int = 8
     act_granularity: str = "per_token"
     use_pallas: bool = False
     interpret: bool = True
+    fused_decode: bool = True
 
     def __post_init__(self):
         if self.a_bits not in SUPPORTED_ACT_BITS:

@@ -4,6 +4,13 @@ Designed for the quantized (W4A8 + ASER compensation) model but works for fp
 params identically — the ``dense`` dispatch picks the path per leaf. Requests
 are padded into fixed batch slots (static shapes ⇒ one compiled program per
 (batch, max_len) bucket, the standard TPU serving discipline).
+
+Decode runs as a device-resident ``lax.scan`` over steps: one dispatch for
+the whole generation instead of one per token, with the KV caches donated
+into the compiled loop so the buffers are updated in place rather than
+copied every token. The per-step Python loop survives as
+``decode_loop="step"`` — the debug mode whose parity with the scan path is
+pinned in tests.
 """
 from __future__ import annotations
 
@@ -19,6 +26,8 @@ from repro.models import (ModelConfig, encode, forward, init_caches,
                           prepare_cross_caches)
 from repro.runtime import RuntimeConfig
 
+DECODE_LOOPS = ("scan", "step")
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
@@ -26,6 +35,12 @@ class ServeConfig:
     batch_slots: int = 8
     temperature: float = 0.0       # 0 = greedy
     eos_id: int = -1               # -1 = never stop early
+    decode_loop: str = "scan"      # "scan" (device-resident) | "step" (debug)
+
+    def __post_init__(self):
+        if self.decode_loop not in DECODE_LOOPS:
+            raise ValueError(f"decode_loop must be one of {DECODE_LOOPS}: "
+                             f"{self.decode_loop!r}")
 
 
 class Engine:
@@ -46,6 +61,12 @@ class Engine:
         self.rt = rt                # None → ops.default_runtime() at trace
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
+        # caches are donated: the loop updates the KV buffers in place
+        # instead of copying max_len·layers of cache every token. n_steps
+        # is static — one compiled program per generation-length bucket.
+        self._decode_loop = jax.jit(self._decode_loop_impl,
+                                    static_argnames=("n_steps",),
+                                    donate_argnums=(2,))
 
     # -- compiled steps ----------------------------------------------------
     def _prefill_impl(self, params, tokens, caches, encoder_out=None):
@@ -54,21 +75,63 @@ class Engine:
                                     encoder_out=encoder_out, rt=self.rt)
         return logits[:, -1], caches
 
+    def _sample(self, lg, key):
+        if self.scfg.temperature > 0:
+            nxt = jax.random.categorical(key, lg / self.scfg.temperature,
+                                         axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32)
+
     def _decode_impl(self, params, last_tok, caches, key):
         logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
                                     caches=caches, rt=self.rt)
-        lg = logits[:, 0]
-        if self.scfg.temperature > 0:
-            nxt = jax.random.categorical(key, lg / self.scfg.temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(lg, axis=-1)
-        return nxt.astype(jnp.int32), caches
+        return self._sample(logits[:, 0], key), caches
+
+    def _decode_loop_impl(self, params, tok0, caches, key, done0, *,
+                          n_steps: int):
+        """Device-resident decode: [b] tok0 → [b, n_steps] next tokens.
+
+        Finished slots (``done``) keep emitting ``eos_id`` and stop
+        advancing their sampled continuation; once every slot is done the
+        whole forward is skipped on device (``jnp.all(done)`` cond)."""
+        eos = self.scfg.eos_id
+
+        def step(carry, _):
+            tok, caches, key, done = carry
+            key, sub = jax.random.split(key)
+            logits, new_caches, _ = forward(params, self.cfg, tok[:, None],
+                                            caches=caches, rt=self.rt)
+            nxt = self._sample(logits[:, 0], sub)
+            if eos >= 0:
+                nxt = jnp.where(done, jnp.int32(eos), nxt)
+                done = done | (nxt == eos)
+            return (nxt, new_caches, key, done), nxt
+
+        def body(carry, _):
+            if eos < 0:
+                return step(carry, _)
+            # early-stop: skip the whole forward once every slot finished
+            return jax.lax.cond(
+                jnp.all(carry[3]),
+                lambda c: (c, jnp.full_like(c[0], eos)),
+                lambda c: step(c, _),
+                carry)
+
+        (tok, caches, key, done), toks = jax.lax.scan(
+            body, (tok0, caches, key, done0), None, length=n_steps)
+        return toks.T, caches                     # [b, n_steps]
 
     # -- public API ----------------------------------------------------------
     def generate(self, prompts: jnp.ndarray, n_steps: int,
                  frames: Optional[jnp.ndarray] = None, seed: int = 0):
-        """prompts: [b, s]. Returns generated tokens [b, n_steps]."""
+        """prompts: [b, s]. Returns generated tokens [b, n_steps].
+
+        With ``eos_id >= 0``, slots that emit eos keep emitting it for the
+        remaining steps (masked continuation) — output shape stays static.
+        """
         b = prompts.shape[0]
+        eos = self.scfg.eos_id
         caches = init_caches(self.cfg, b, self.scfg.max_len)
         enc_out = None
         if self.cfg.family == "encdec":
@@ -78,10 +141,21 @@ class Engine:
                                           caches, rt=self.rt)
         last, caches = self._prefill(self.params, prompts, caches)
         tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        out = [tok]
         key = jax.random.PRNGKey(seed)
+        done = (tok == eos) if eos >= 0 else jnp.zeros((b,), bool)
+
+        if self.scfg.decode_loop == "scan":
+            toks, _ = self._decode_loop(self.params, tok, caches, key, done,
+                                        n_steps=max(n_steps - 1, 0))
+            return jnp.concatenate([tok[:, None], toks], axis=1)
+
+        out = [tok]
         for i in range(n_steps - 1):
             key, sub = jax.random.split(key)
-            tok, caches = self._decode(self.params, tok, caches, sub)
+            nxt, caches = self._decode(self.params, tok, caches, sub)
+            if eos >= 0:
+                nxt = jnp.where(done, jnp.int32(eos), nxt)
+                done = done | (nxt == eos)
+            tok = nxt
             out.append(tok)
         return jnp.stack(out, axis=1)

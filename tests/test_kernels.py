@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.quantizers import W4, pack_int4, quantize_weight
-from repro.kernels import act_quant, flash_attention, w4a8_gemm
+from repro.kernels import (act_quant, flash_attention, tuning, w4a8_fused,
+                           w4a8_gemm)
 from repro.kernels import ref as kref
 from repro.kernels import ops
 
@@ -62,6 +63,66 @@ def test_w4a8_gemm_block_shapes(rng, bm, bn, bk):
     y_ref = _exact_gemm_oracle(xq, sx, qw, sw, xlr, la)
     y = w4a8_gemm(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk)
     np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("m", [1, 4, 8])
+@pytest.mark.parametrize("r", [3, 7, 16, 19])
+def test_w4a8_fused_decode_shapes(rng, m, r):
+    """Fused decode kernel == e2e reference across decode m and odd ranks."""
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, m, 256, 384, r)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    y = w4a8_fused(x, mdiag, qw, sw, lb, la)
+    denom = float(jnp.max(jnp.abs(y_ref)))
+    assert float(jnp.max(jnp.abs(y - y_ref))) / denom < 1e-4
+
+
+@pytest.mark.parametrize("bn", [128, 256, 512])
+def test_w4a8_fused_block_sizes(rng, bn):
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 4, 512, 640, 16)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    y = w4a8_fused(x, mdiag, qw, sw, lb, la, bn=bn)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_w4a8_fused_bf16_activations(rng):
+    """bf16 activations: fused pass == two-kernel pipeline on the SAME
+    input (vs f32 the quant codes legitimately flip with bf16 rounding)."""
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 2, 256, 128, 8)
+    xbf = x.astype(jnp.bfloat16)
+    y_fused = w4a8_fused(xbf, mdiag, qw, sw, lb, la)
+    xq, sx, xlr = act_quant(xbf, mdiag, lb)
+    y_pipe = w4a8_gemm(xq, sx, qw, sw, xlr, la)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_pipe),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fused_decode_routing(rng):
+    """ops routes small-m to the fused kernel; fused_decode=False pins the
+    tiled pipeline; both agree with the reference."""
+    from repro.runtime import RuntimeConfig
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, 2, 256, 128, 16)
+    assert tuning.use_fused_decode(2, 256, 128, 16)
+    assert not tuning.use_fused_decode(64, 256, 128, 16)   # m over decode cap
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    for fused in (True, False):
+        y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la,
+                            rt=RuntimeConfig(use_pallas=True,
+                                             fused_decode=fused))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=str(fused))
+
+
+def test_tuning_blocks_fit_budget():
+    """Selected BlockSpecs always respect the VMEM budget model."""
+    for (m, k, n, r) in [(1, 4096, 11008, 64), (8, 2048, 8192, 64),
+                         (256, 4096, 4096, 64), (512, 2048, 8192, 128)]:
+        bm, bn, bk = tuning.select_gemm_blocks(m, k, n, r)
+        assert tuning.vmem_bytes(bm, bn, bk, r) <= tuning.VMEM_BUDGET
+        if tuning.use_fused_decode(m, k, n, r):
+            bn_f = tuning.fused_bn(m, k, n, r)
+            assert tuning.fused_vmem_bytes(m, k, bn_f, r) \
+                <= tuning.VMEM_BUDGET
 
 
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
