@@ -1,19 +1,32 @@
-"""Serving-latency benchmark: prefill, per-token decode, tokens/sec.
+"""Serving-latency benchmark: prefill, per-token decode, tokens/sec, goodput.
 
-Times the engine end-to-end for fp vs W4A8(+ASER) across (batch, prompt)
-buckets, for both decode loops:
+Two workloads:
 
-  * ``scan`` — the device-resident ``lax.scan`` loop with donated caches
-    (one dispatch per generation), the serving hot path;
-  * ``step`` — the per-token Python dispatch loop (debug mode), kept as the
-    baseline that the scan loop's dispatch-overhead win is measured against.
+* **static** — times the engine end-to-end for fp vs W4A8(+ASER) across
+  (batch, prompt) buckets, for both decode loops:
 
-Per-token decode latency is derived dispatch-noise-free as
-``(t(n_steps) − t(1)) / (n_steps − 1)`` — a 1-step generate is exactly
-prefill + first-token sampling, so the difference isolates the decode loop.
+    - ``scan`` — the device-resident ``lax.scan`` loop with donated caches
+      (one dispatch per generation), the serving hot path;
+    - ``step`` — the per-token Python dispatch loop (debug mode), kept as
+      the baseline that the scan loop's dispatch-overhead win is measured
+      against.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v1``)
-so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
+  Per-token decode latency is derived dispatch-noise-free as
+  ``(t(n_steps) − t(1)) / (n_steps − 1)`` — a 1-step generate is exactly
+  prefill + first-token sampling, so the difference isolates the decode
+  loop.
+
+* **continuous** — a mixed prompt-length / mixed output-length request set
+  served two ways: static batching (requests grouped into ``batch_slots``-
+  sized ragged batches, every batch running ``max(max_new)`` steps) vs the
+  continuous-batching :class:`repro.serve.scheduler.Scheduler` (retire on
+  budget, backfill from the queue). Reported as **goodput**: requested
+  tokens / wall-clock second — the static baseline burns steps on retired
+  rows, the scheduler backfills them.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v2`` =
+v1's static rows + ``continuous_rows``; the validator still accepts v1
+files) so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
 seconds-scale variant with the same schema for CI. Latency rows use the
 XLA serving path (interpret-mode Pallas wall-clock is meaningless on CPU);
 kernel-level tile economics live in ``kernels_bench``.
@@ -28,6 +41,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import common  # noqa: F401  (sys.path side effect for src/)
 from repro.configs.registry import get_smoke_config
@@ -36,14 +50,24 @@ from repro.models import init_params
 from repro.quant import calibrate, quantize_model, reduce_shared
 from repro.runtime import RuntimeConfig
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Scheduler
 
-SCHEMA = "serve_bench/v1"
+SCHEMA = "serve_bench/v2"
+SCHEMA_V1 = "serve_bench/v1"
+SCHEMA_PROBE = "serve_bench/probe"     # partial (continuous-only) runs
 ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 ROW_FIELDS = ("mode", "batch", "prompt", "n_steps", "prefill_ms",
               "decode_ms_per_tok", "tokens_per_s", "scan_decode_ms_per_tok",
               "step_decode_ms_per_tok", "dispatch_overhead_ms_per_tok",
               "scan_speedup")
+
+# goodput fields added by serve_bench/v2 continuous rows
+CONT_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk",
+                   "prompt_len_min", "prompt_len_max", "new_tokens_min",
+                   "new_tokens_max", "useful_tokens", "static_s",
+                   "continuous_s", "static_goodput_tok_s", "goodput_tok_s",
+                   "goodput_speedup")
 
 
 def _bench_cfg(smoke: bool):
@@ -84,7 +108,65 @@ def _time_engine(params, cfg, rt, b, prompt, n_steps, max_len, reps):
     return out
 
 
-def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True):
+# -- continuous-batching goodput --------------------------------------------
+
+def _workload(n_requests, p_lo, p_hi, n_lo, n_hi, vocab, seed=13,
+              straggler_frac=0.25):
+    """Heavy-tailed mixed-length traffic: mostly short generations
+    (``n_lo``..) with a ``straggler_frac`` tail of long ones (..``n_hi``) —
+    the realistic chat mix, and the shape static batching handles worst
+    (every batch runs at its straggler's length)."""
+    rng = np.random.default_rng(seed)
+    n_mid = max(n_lo + 1, (n_lo + n_hi) // 6)
+    n_tail = max(n_mid + 1, (3 * n_hi) // 4)
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.integers(p_lo, p_hi + 1))
+        if rng.random() < straggler_frac:
+            n = int(rng.integers(n_tail, n_hi + 1))
+        else:
+            n = int(rng.integers(n_lo, n_mid + 1))
+        reqs.append((rng.integers(0, vocab, size=plen).astype(np.int32), n))
+    return reqs
+
+
+def _run_static(engine, reqs):
+    """Static baseline: slots-sized ragged batches, each running until its
+    LONGEST request finishes (the pre-scheduler serving discipline, with the
+    pad-position bug fixed via prompt_lens)."""
+    slots = engine.scfg.batch_slots
+    for group in (reqs[i:i + slots] for i in range(0, len(reqs), slots)):
+        width = max(p.size for p, _ in group)
+        padded = np.zeros((len(group), width), np.int32)
+        for j, (p, _) in enumerate(group):
+            padded[j, :p.size] = p
+        lens = np.asarray([p.size for p, _ in group], np.int32)
+        n_steps = max(n for _, n in group)
+        jax.block_until_ready(engine.generate(
+            jnp.asarray(padded), n_steps, prompt_lens=lens))
+
+
+def _run_continuous(engine, reqs, chunk):
+    sched = Scheduler(engine, chunk_size=chunk)
+    handles = [sched.submit(p, n) for p, n in reqs]
+    sched.run()
+    return handles
+
+
+def _time_continuous(params, cfg, rt, *, slots, max_len, chunk, reqs, reps):
+    eng = Engine(params, cfg, ServeConfig(max_len=max_len,
+                                          batch_slots=slots), rt=rt)
+    handles = _run_continuous(eng, reqs, chunk)    # correctness gate + warm
+    assert all(h.done for h in handles)
+    # both legs through _best_time: one timing policy for the comparison
+    static_s = _best_time(lambda: _run_static(eng, reqs), reps)
+    cont_s = _best_time(lambda: _run_continuous(eng, reqs, chunk), reps)
+    useful = sum(n for _, n in reqs)      # eos disabled ⇒ budget == useful
+    return static_s, cont_s, useful
+
+
+def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
+        mode: str = "both"):
     cfg = dataclasses.replace(_bench_cfg(smoke), remat=False)
     params = init_params(jax.random.PRNGKey(0), cfg)
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
@@ -99,39 +181,80 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True):
     max_len = 64 if smoke else 128
 
     rows = []
-    for mode, p in (("fp", params), ("w4a8_aser", qparams)):
-        for (b, prompt) in buckets:
-            t = _time_engine(p, cfg, rt, b, prompt, n_steps, max_len, reps)
-            scan_tok = t["scan"]["decode_s_per_tok"]
-            step_tok = t["step"]["decode_s_per_tok"]
-            row = {
-                "mode": mode, "batch": b, "prompt": prompt,
-                "n_steps": n_steps,
-                "prefill_ms": 1e3 * t["scan"]["prefill_s"],
-                "decode_ms_per_tok": 1e3 * scan_tok,
-                "tokens_per_s": b * n_steps / t["scan"]["total_s"],
-                "scan_decode_ms_per_tok": 1e3 * scan_tok,
-                "step_decode_ms_per_tok": 1e3 * step_tok,
-                "dispatch_overhead_ms_per_tok": 1e3 * (step_tok - scan_tok),
-                "scan_speedup": step_tok / max(scan_tok, 1e-12),
-            }
-            rows.append(row)
-            if verbose:
-                print(f"  {mode:>10} b={b} s={prompt}: "
-                      f"prefill {row['prefill_ms']:7.2f}ms  "
-                      f"decode {row['decode_ms_per_tok']:6.2f}ms/tok "
-                      f"(step {row['step_decode_ms_per_tok']:6.2f})  "
-                      f"{row['tokens_per_s']:8.1f} tok/s  "
-                      f"scan×{row['scan_speedup']:.2f}", flush=True)
+    cont_rows = []
+    for m, p in (("fp", params), ("w4a8_aser", qparams)):
+        if mode in ("both", "static"):
+            for (b, prompt) in buckets:
+                t = _time_engine(p, cfg, rt, b, prompt, n_steps, max_len,
+                                 reps)
+                scan_tok = t["scan"]["decode_s_per_tok"]
+                step_tok = t["step"]["decode_s_per_tok"]
+                row = {
+                    "mode": m, "batch": b, "prompt": prompt,
+                    "n_steps": n_steps,
+                    "prefill_ms": 1e3 * t["scan"]["prefill_s"],
+                    "decode_ms_per_tok": 1e3 * scan_tok,
+                    "tokens_per_s": b * n_steps / t["scan"]["total_s"],
+                    "scan_decode_ms_per_tok": 1e3 * scan_tok,
+                    "step_decode_ms_per_tok": 1e3 * step_tok,
+                    "dispatch_overhead_ms_per_tok": 1e3 * (step_tok
+                                                           - scan_tok),
+                    "scan_speedup": step_tok / max(scan_tok, 1e-12),
+                }
+                rows.append(row)
+                if verbose:
+                    print(f"  {m:>10} b={b} s={prompt}: "
+                          f"prefill {row['prefill_ms']:7.2f}ms  "
+                          f"decode {row['decode_ms_per_tok']:6.2f}ms/tok "
+                          f"(step {row['step_decode_ms_per_tok']:6.2f})  "
+                          f"{row['tokens_per_s']:8.1f} tok/s  "
+                          f"scan×{row['scan_speedup']:.2f}", flush=True)
 
+        if mode in ("both", "continuous"):
+            slots = 2 if smoke else 8
+            chunk = 4 if smoke else 8
+            n_req = 8 if smoke else 32
+            p_lo, p_hi = (2, 10) if smoke else (4, 32)
+            n_lo, n_hi = (2, 12) if smoke else (4, 56)
+            c_reps = 2 if smoke else 3
+            reqs = _workload(n_req, p_lo, p_hi, n_lo, n_hi, cfg.vocab_size)
+            static_s, cont_s, useful = _time_continuous(
+                p, cfg, rt, slots=slots, max_len=max_len, chunk=chunk,
+                reqs=reqs, reps=c_reps)
+            crow = {
+                "mode": m, "requests": n_req, "batch_slots": slots,
+                "chunk": chunk,
+                "prompt_len_min": p_lo, "prompt_len_max": p_hi,
+                "new_tokens_min": n_lo, "new_tokens_max": n_hi,
+                "useful_tokens": useful,
+                "static_s": static_s, "continuous_s": cont_s,
+                "static_goodput_tok_s": useful / static_s,
+                "goodput_tok_s": useful / cont_s,
+                "goodput_speedup": static_s / cont_s,
+            }
+            cont_rows.append(crow)
+            if verbose:
+                print(f"  {m:>10} continuous: {n_req} reqs on {slots} slots "
+                      f"(chunk {chunk}): goodput "
+                      f"{crow['goodput_tok_s']:7.1f} tok/s vs static "
+                      f"{crow['static_goodput_tok_s']:7.1f} "
+                      f"(×{crow['goodput_speedup']:.2f})", flush=True)
+
+    # partial runs must self-describe honestly: static-only is a valid v1
+    # file; continuous-only matches no released schema and is stamped as a
+    # probe (the validator rejects it by design — it is not a baseline)
+    schema = {"static": SCHEMA_V1, "continuous": SCHEMA_PROBE}.get(mode,
+                                                                   SCHEMA)
     report = {
-        "schema": SCHEMA,
+        "schema": schema,
         "smoke": smoke,
         "model": {"name": cfg.name, "n_layers": cfg.n_layers,
                   "d_model": cfg.d_model, "vocab_size": cfg.vocab_size},
         "decode_loop_default": "scan",
         "rows": rows,
     }
+    if mode != "static":
+        report["continuous_rows"] = cont_rows
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     if verbose:
@@ -141,32 +264,63 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True):
 
 # -- schema validation (CI smoke gate) --------------------------------------
 
-def validate(report: dict):
-    """Raise ValueError unless ``report`` matches the serve_bench/v1 schema
-    and contains both fp and quantized rows with finite latencies."""
-    if report.get("schema") != SCHEMA:
-        raise ValueError(f"schema mismatch: {report.get('schema')!r}")
-    rows = report.get("rows")
+def _check_finite(row, fields, positive=()):
+    missing = [f for f in fields if f not in row]
+    if missing:
+        raise ValueError(f"row missing fields {missing}: {row}")
+    for f in fields:
+        if f == "mode":                    # the one legitimate string field
+            continue
+        v = row[f]
+        if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                or not (v == v and abs(v) < 1e12):
+            raise ValueError(f"non-finite {f}={v!r} in {row}")
+        if f in positive and v <= 0:
+            raise ValueError(f"non-positive {f}={v!r} in {row}")
+
+
+def _validate_static_rows(rows):
     if not isinstance(rows, list) or not rows:
         raise ValueError("no benchmark rows")
     modes = set()
     for row in rows:
-        missing = [f for f in ROW_FIELDS if f not in row]
-        if missing:
-            raise ValueError(f"row missing fields {missing}: {row}")
-        for f in ROW_FIELDS[4:]:
-            v = row[f]
-            if not isinstance(v, (int, float)) or not (v == v and
-                                                       abs(v) < 1e12):
-                raise ValueError(f"non-finite {f}={v!r} in {row}")
         # deltas (dispatch_overhead, speedup) may dip negative/below-1 on a
         # noisy CI machine; absolute latencies must be positive
-        for f in ("prefill_ms", "decode_ms_per_tok", "tokens_per_s"):
-            if row[f] <= 0:
-                raise ValueError(f"non-positive {f}={row[f]!r} in {row}")
+        _check_finite(row, ROW_FIELDS,
+                      positive=("prefill_ms", "decode_ms_per_tok",
+                                "tokens_per_s"))
         modes.add(row["mode"])
     if not {"fp", "w4a8_aser"} <= modes:
         raise ValueError(f"need fp and w4a8_aser rows, got {modes}")
+
+
+def _validate_continuous_rows(rows):
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no continuous rows (serve_bench/v2 requires them)")
+    modes = set()
+    for row in rows:
+        _check_finite(row, CONT_ROW_FIELDS,
+                      positive=("useful_tokens", "static_s", "continuous_s",
+                                "static_goodput_tok_s", "goodput_tok_s"))
+        modes.add(row["mode"])
+    if not {"fp", "w4a8_aser"} <= modes:
+        raise ValueError(f"need fp and w4a8_aser continuous rows, "
+                         f"got {modes}")
+
+
+def validate(report: dict):
+    """Raise ValueError unless ``report`` is a valid serve_bench file.
+
+    Accepts both schema generations: ``serve_bench/v1`` (static rows only)
+    and ``serve_bench/v2`` (static rows + continuous goodput rows), so old
+    baselines keep validating.
+    """
+    schema = report.get("schema")
+    if schema not in (SCHEMA, SCHEMA_V1):
+        raise ValueError(f"schema mismatch: {schema!r}")
+    _validate_static_rows(report.get("rows"))
+    if schema == SCHEMA:
+        _validate_continuous_rows(report.get("continuous_rows"))
     return True
 
 
@@ -180,6 +334,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI variant (same schema)")
+    ap.add_argument("--mode", choices=("both", "static", "continuous"),
+                    default="both",
+                    help="which workloads to run (default: both; partial "
+                    "modes are probes and must write somewhere other than "
+                    "the checked-in baseline)")
     ap.add_argument("--out", default=ROOT_OUT)
     ap.add_argument("--validate", metavar="PATH", default=None,
                     help="validate an existing BENCH_serve.json and exit")
@@ -187,8 +346,13 @@ def main():
     if args.validate:
         validate_file(args.validate)
         return
-    report = run(smoke=args.smoke, out_path=args.out)
-    validate(report)
+    if args.mode != "both" and (os.path.abspath(args.out)
+                                == os.path.abspath(ROOT_OUT)):
+        ap.error(f"--mode {args.mode} would overwrite the checked-in "
+                 f"baseline with a partial report; pass an explicit --out")
+    report = run(smoke=args.smoke, out_path=args.out, mode=args.mode)
+    if args.mode != "continuous":      # continuous-only lacks static rows
+        validate(report)
 
 
 if __name__ == "__main__":

@@ -6,15 +6,22 @@ device state (the dry-run sets XLA_FLAGS before importing anything).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    """jax.make_mesh across versions (axis_types grew in newer releases)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -22,8 +29,7 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))
 
 
 def elastic_mesh(preferred=(("data", 16), ("model", 16))):
@@ -35,5 +41,4 @@ def elastic_mesh(preferred=(("data", 16), ("model", 16))):
     while model > 1 and n % model:
         model //= 2
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))

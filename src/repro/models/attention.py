@@ -52,8 +52,10 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """Memory-bounded attention via online softmax over KV chunks.
 
     q: [b, sq, hq, hd]; k/v: [b, skv, hkv, hd] (hq % hkv == 0).
-    ``q_offset``: global position of q[0] (decode: cache length).
-    ``kv_len``: valid prefix length of k/v (decode with preallocated cache).
+    ``q_offset``: global position of q[0] (decode: cache length). Scalar, or
+    per-row ``[b]`` for ragged batches (each row at its own position).
+    ``kv_len``: valid prefix length of k/v (decode with preallocated cache);
+    scalar or per-row ``[b]``.
     """
     b, sq, hq, hd = q.shape
     skv = k.shape[1]
@@ -83,9 +85,16 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     q_pos_base = jnp.asarray(q_offset, jnp.int32)
     valid_kv = jnp.asarray(skv if kv_len is None else kv_len, jnp.int32)
+    # per-row offsets/lengths ([b]) ⇒ masks gain a batch dim
+    per_row = q_pos_base.ndim > 0 or valid_kv.ndim > 0
+    if per_row:
+        q_pos_base = jnp.broadcast_to(q_pos_base, (b,))
+        valid_kv = jnp.broadcast_to(valid_kv, (b,))
 
     def q_block(qi, q_i):
-        q_pos = q_pos_base + qi * cq + jnp.arange(cq, dtype=jnp.int32)
+        q_rel = qi * cq + jnp.arange(cq, dtype=jnp.int32)
+        q_pos = (q_pos_base[:, None] + q_rel[None] if per_row
+                 else q_pos_base + q_rel)            # [b, cq] | [cq]
 
         def kv_step(carry, inp):
             m, l, acc = carry
@@ -95,12 +104,21 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            k_j.astype(jnp.float32)) * scale
             if logit_cap > 0:
                 s = logit_cap * jnp.tanh(s / logit_cap)
-            mask = kv_pos[None, :] < valid_kv
-            if causal:
-                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
-            if window > 0:
-                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
-            s = jnp.where(mask[None, None], s, -1e30)
+            if per_row:
+                mask = kv_pos[None, None, :] < valid_kv[:, None, None]
+                if causal:
+                    mask = mask & (kv_pos[None, None, :] <= q_pos[:, :, None])
+                if window > 0:
+                    mask = mask & (kv_pos[None, None, :]
+                                   > q_pos[:, :, None] - window)
+                s = jnp.where(mask[:, None], s, -1e30)   # [b,1,cq,ckv]
+            else:
+                mask = kv_pos[None, :] < valid_kv
+                if causal:
+                    mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+                if window > 0:
+                    mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+                s = jnp.where(mask[None, None], s, -1e30)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -129,12 +147,18 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
               cache: KVCache | None = None,
               mrope_positions: jnp.ndarray | None = None,
               cross_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-              tape=None, rt=None):
+              ragged: bool = False, tape=None, rt=None):
     """Self (or cross) attention. x: [b, s, d].
 
     Returns (out, new_cache). Train/prefill: cache=None builds nothing unless
     a preallocated cache is given. Decode: s is small (usually 1) and cache
     holds past KV (ring buffer when layer_window > 0).
+
+    ``ragged=True`` (decode with cache): each batch row sits at its own
+    position — ``positions`` [b, s] gives the per-row global positions, KV is
+    scattered into the cache at those row positions (not at a shared
+    ``cache.length`` offset), and the causal mask is built per row, so a row
+    never attends past its own frontier into another row's padding.
     """
     from .layers import record
     b, s, _ = x.shape
@@ -173,6 +197,36 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
             logit_cap=cfg.attn_softcap,
             chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
         new_cache = None
+    elif ragged:
+        cache_len = cache.k.shape[1]
+        if layer_window > 0 and cache_len <= layer_window:
+            raise NotImplementedError(
+                "ragged decode does not support ring-buffer (sliding-window) "
+                "KV caches")
+        # per-row positioned writes: row i's token lands at positions[i],
+        # progressively overwriting whatever prefill padding left there.
+        # Out-of-bounds rows (retired slots past max_len) drop their writes.
+        row_pos = positions.astype(jnp.int32)                    # [b, s]
+        b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        k_all = cache.k.at[b_idx, row_pos].set(
+            k.astype(cache.k.dtype), mode="drop", unique_indices=True)
+        v_all = cache.v.at[b_idx, row_pos].set(
+            v.astype(cache.v.dtype), mode="drop", unique_indices=True)
+        new_cache = KVCache(k_all, v_all, cache.length + s, cache.pos)
+        # causal per row: kv slot j visible iff j ≤ that row's own position.
+        # Valid prefixes are contiguous (decode writes at lens+t), so the
+        # per-row causal bound is also the per-row length mask.
+        # NOTE: this always takes the chunked path — the head_dim-sharded
+        # TP decode kernel (_decode_attention_hd_sharded) has no per-row
+        # offset variant yet, so sharded few-KV-head ragged decode falls
+        # back to chunked and re-exposes the cache-rematerialization cost
+        # documented in sharding/rules.cache_spec. Port it before serving
+        # ragged batches on a "model"-axis mesh with n_kv < TP.
+        out = chunked_attention(
+            q, k_all, v_all, causal=True, window=layer_window,
+            q_offset=row_pos[:, 0], kv_len=row_pos[:, -1] + 1,
+            logit_cap=cfg.attn_softcap,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
     else:
         cache_len = cache.k.shape[1]
         start = cache.length

@@ -133,7 +133,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
 
 def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                  mrope_positions, caches, cross_ctx, train: bool,
-                 with_tape: bool = False, rt=None):
+                 ragged: bool = False, with_tape: bool = False, rt=None):
     """lax.scan over the stacked groups."""
     specs = group_blocks(cfg)
     shared_p = params.get("shared")
@@ -157,7 +157,7 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                 btape = tape_g[f"b{i}"]
             h, nc, a = block_forward(gp[i], cfg, spec, h, positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     tape=btape, rt=rt)
+                                     ragged=ragged, tape=btape, rt=rt)
             aux = aux + a
             new_caches.append(nc if nc is not None else c_i)
             if spec.shared_after and shared_p is not None:
@@ -168,7 +168,8 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                     stape = tape_g["shared"]
                 h, nsc = shared_block_forward(
                     shared_p, cfg, h, x0, positions=positions, cache=sc,
-                    window=cfg.sliding_window, tape=stape, rt=rt)
+                    window=cfg.sliding_window, ragged=ragged, tape=stape,
+                    rt=rt)
                 if gc is not None:
                     new_caches.append(nsc if nsc is not None else sc)
         if cp is not None:
@@ -214,7 +215,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             positions: jnp.ndarray | None = None,
             mrope_positions: jnp.ndarray | None = None,
             caches=None, encoder_out: jnp.ndarray | None = None,
-            train: bool = False, tape=None, rt=None):
+            train: bool = False, ragged: bool = False, tape=None, rt=None):
     """tokens: [b, s] int32 → logits [b, s, vocab].
 
     Returns (logits, new_caches, aux_loss). If ``tape`` is a dict it is
@@ -222,7 +223,12 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     ``rt``: optional :class:`repro.runtime.RuntimeConfig` steering the
     quantized-leaf serving path (act bits, pallas vs XLA). It is plain
     Python config consumed at trace time — never a traced value.
+    ``ragged=True`` (decode with caches): ``positions`` carries per-row
+    global positions and KV writes/masks are per row — see
+    :func:`repro.models.attention.attention`.
     """
+    if ragged and positions is None:
+        raise ValueError("ragged forward needs explicit per-row positions")
     b, s = tokens.shape
     if positions is None:
         self_caches = ({k: v for k, v in caches.items() if k != "cross"}
@@ -250,7 +256,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             x, nc, a = block_forward(bp, dense_cfg, BlockSpec("attn"), x,
                                      positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     tape=btape, rt=rt)
+                                     ragged=ragged, tape=btape, rt=rt)
             if tape is not None:
                 tape["prefix"].append(btape)
             aux += a
@@ -261,7 +267,8 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     x, aux_s, new_group_caches, group_tape = _scan_groups(
         params, cfg, x, x0, positions=positions,
         mrope_positions=mrope_positions, caches=caches,
-        cross_ctx=cross_ctx, train=train, with_tape=tape is not None, rt=rt)
+        cross_ctx=cross_ctx, train=train, ragged=ragged,
+        with_tape=tape is not None, rt=rt)
     aux = aux + aux_s
     if tape is not None:
         tape["groups"] = group_tape

@@ -3,7 +3,10 @@
 Designed for the quantized (W4A8 + ASER compensation) model but works for fp
 params identically — the ``dense`` dispatch picks the path per leaf. Requests
 are padded into fixed batch slots (static shapes ⇒ one compiled program per
-(batch, max_len) bucket, the standard TPU serving discipline).
+(batch, max_len) bucket, the standard TPU serving discipline) — but batches
+do **not** have to be equal-length: ``generate(..., prompt_lens=...)`` runs a
+ragged batch, sampling each row's first token from its true last prompt
+position (not the pad) and decoding each row at its own cache position.
 
 Decode runs as a device-resident ``lax.scan`` over steps: one dispatch for
 the whole generation instead of one per token, with the KV caches donated
@@ -11,6 +14,12 @@ into the compiled loop so the buffers are updated in place rather than
 copied every token. The per-step Python loop survives as
 ``decode_loop="step"`` — the debug mode whose parity with the scan path is
 pinned in tests.
+
+For continuous batching (``repro.serve.scheduler``) the engine additionally
+exposes slot-level primitives: ``prefill_slot`` (single-request prefill
+scattered into one row of a live batch cache) and ``decode_chunk`` (a
+fixed-size ragged scan chunk carrying per-slot ``done``/``pos`` so the
+scheduler can retire and backfill slots between chunks).
 """
 from __future__ import annotations
 
@@ -22,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (ModelConfig, encode, forward, init_caches,
+from repro.models import (KVCache, ModelConfig, encode, forward, init_caches,
                           prepare_cross_caches)
 from repro.runtime import RuntimeConfig
 
@@ -60,13 +69,23 @@ class Engine:
         self.scfg = scfg
         self.rt = rt                # None → ops.default_runtime() at trace
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+        self._prefill_ragged = jax.jit(self._prefill_ragged_impl)
+        # per-token steps donate the caches too: without it every debug-loop
+        # token copies the full max_len·layers KV tree
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._decode_ragged = jax.jit(self._decode_ragged_impl,
+                                      donate_argnums=(2,))
         # caches are donated: the loop updates the KV buffers in place
         # instead of copying max_len·layers of cache every token. n_steps
         # is static — one compiled program per generation-length bucket.
         self._decode_loop = jax.jit(self._decode_loop_impl,
                                     static_argnames=("n_steps",),
                                     donate_argnums=(2,))
+        self._decode_chunk = jax.jit(self._decode_chunk_impl,
+                                     static_argnames=("n_steps",),
+                                     donate_argnums=(2,))
+        self._prefill_slot = jax.jit(self._prefill_slot_impl,
+                                     donate_argnums=(3,))
 
     # -- compiled steps ----------------------------------------------------
     def _prefill_impl(self, params, tokens, caches, encoder_out=None):
@@ -74,6 +93,22 @@ class Engine:
         logits, caches, _ = forward(params, self.cfg, tokens, caches=caches,
                                     encoder_out=encoder_out, rt=self.rt)
         return logits[:, -1], caches
+
+    def _prefill_ragged_impl(self, params, tokens, lens, caches):
+        """Ragged prefill: tokens [b, s_pad] right-padded, lens [b].
+
+        The padded forward itself is already sound under causal attention —
+        a real token at position p < len only ever attends positions ≤ p,
+        all real — so the fix is where we *read*: gather each row's logits
+        at its true last prompt position ``lens-1``, never the pad tail.
+        Pad positions do write garbage KV beyond each row's length; ragged
+        decode overwrites them positionally and masks the rest per row.
+        """
+        logits, caches, _ = forward(params, self.cfg, tokens, caches=caches,
+                                    rt=self.rt)
+        b = tokens.shape[0]
+        last = logits[jnp.arange(b), jnp.maximum(lens - 1, 0)]
+        return last, caches
 
     def _sample(self, lg, key):
         if self.scfg.temperature > 0:
@@ -86,6 +121,13 @@ class Engine:
     def _decode_impl(self, params, last_tok, caches, key):
         logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
                                     caches=caches, rt=self.rt)
+        return self._sample(logits[:, 0], key), caches
+
+    def _decode_ragged_impl(self, params, last_tok, caches, key, pos):
+        """One ragged decode step: row i's token is at position pos[i]."""
+        logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
+                                    positions=pos[:, None], caches=caches,
+                                    ragged=True, rt=self.rt)
         return self._sample(logits[:, 0], key), caches
 
     def _decode_loop_impl(self, params, tok0, caches, key, done0, *,
@@ -122,31 +164,174 @@ class Engine:
             body, (tok0, caches, key, done0), None, length=n_steps)
         return toks.T, caches                     # [b, n_steps]
 
+    def _decode_chunk_impl(self, params, tok0, caches, key, done0, pos0, *,
+                           n_steps: int):
+        """Ragged device-resident decode chunk: per-row positions.
+
+        Carries per-slot ``pos`` (each row writes KV at its own frontier)
+        next to the ``done`` mask of :meth:`_decode_loop_impl`. Returns the
+        full carry so the continuous-batching scheduler can stitch chunks:
+        ``(toks [b, n_steps], caches, key, done, pos)``.
+        """
+        eos = self.scfg.eos_id
+
+        def step(carry, _):
+            tok, caches, key, done, pos = carry
+            key, sub = jax.random.split(key)
+            logits, new_caches, _ = forward(params, self.cfg, tok[:, None],
+                                            positions=pos[:, None],
+                                            caches=caches, ragged=True,
+                                            rt=self.rt)
+            nxt = self._sample(logits[:, 0], sub)
+            if eos >= 0:
+                nxt = jnp.where(done, jnp.int32(eos), nxt)
+                done = done | (nxt == eos)
+            return (nxt, new_caches, key, done, pos + 1), nxt
+
+        def body(carry, _):
+            if eos < 0:
+                return step(carry, _)
+            return jax.lax.cond(
+                jnp.all(carry[3]),
+                lambda c: (c, jnp.full_like(c[0], eos)),
+                lambda c: step(c, _),
+                carry)
+
+        carry, toks = jax.lax.scan(
+            body, (tok0, caches, key, done0, pos0), None, length=n_steps)
+        tok, caches, key, done, pos = carry
+        return toks.T, caches, key, done, pos     # toks: [b, n_steps]
+
+    def _prefill_slot_impl(self, params, tokens, length, caches, slot):
+        """Single-request prefill into one slot of a live batch cache.
+
+        tokens: [1, s_bucket] right-padded; ``length``/``slot`` traced
+        scalars. Runs a b=1 prefill against fresh caches, then scatters the
+        resulting KV rows into ``caches`` at ``slot`` — the other slots'
+        cached state is untouched, which is what lets the scheduler backfill
+        a retired slot while its neighbours keep decoding.
+        """
+        one = init_caches(self.cfg, 1, self.scfg.max_len)
+        logits, one, _ = forward(params, self.cfg, tokens, caches=one,
+                                 rt=self.rt)
+        last = logits[0, jnp.maximum(length - 1, 0)]
+
+        def put(bc, oc):
+            if not isinstance(bc, KVCache):
+                return bc          # SSM caches are gated out of ragged mode
+            ax = bc.k.ndim - 4     # batch axis (scanned groups lead with G)
+            return KVCache(
+                jax.lax.dynamic_update_slice_in_dim(
+                    bc.k, oc.k.astype(bc.k.dtype), slot, axis=ax),
+                jax.lax.dynamic_update_slice_in_dim(
+                    bc.v, oc.v.astype(bc.v.dtype), slot, axis=ax),
+                bc.length, bc.pos)
+
+        caches = jax.tree.map(put, caches, one,
+                              is_leaf=lambda x: isinstance(x, KVCache))
+        return last, caches
+
+    # -- scheduler-facing API ---------------------------------------------
+    def new_caches(self):
+        """Fresh batch caches sized to this engine's slots/max_len."""
+        return init_caches(self.cfg, self.scfg.batch_slots, self.scfg.max_len)
+
+    def prefill_slot(self, tokens, length, caches, slot):
+        """Prefill one request into ``slot``; returns (next_tok, caches).
+
+        ``caches`` is donated — rebind to the returned tree."""
+        self._check_ragged_supported()
+        last, caches = self._prefill_slot(
+            self.params, tokens, jnp.asarray(length, jnp.int32), caches,
+            jnp.asarray(slot, jnp.int32))
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), caches
+
+    def decode_chunk(self, tok, caches, key, done, pos, n_steps: int):
+        """Run one ragged decode chunk; caches are donated."""
+        return self._decode_chunk(self.params, tok, caches, key, done, pos,
+                                  n_steps=n_steps)
+
+    def _check_ragged_supported(self):
+        if self.cfg.family in ("ssm", "hybrid", "encdec"):
+            raise NotImplementedError(
+                f"ragged serving not supported for family "
+                f"{self.cfg.family!r} (per-row state/frames)")
+        if self.cfg.sliding_window > 0 or self.cfg.local_global_period > 0:
+            raise NotImplementedError(
+                "ragged serving not supported with sliding-window "
+                "(ring-buffer) KV caches")
+
     # -- public API ----------------------------------------------------------
     def generate(self, prompts: jnp.ndarray, n_steps: int,
-                 frames: Optional[jnp.ndarray] = None, seed: int = 0):
+                 frames: Optional[jnp.ndarray] = None, seed: int = 0,
+                 prompt_lens: Optional[jnp.ndarray] = None):
         """prompts: [b, s]. Returns generated tokens [b, n_steps].
+
+        ``prompt_lens`` [b] serves a ragged batch: prompts are right-padded
+        to a common width, each row's first token is sampled from its own
+        last real position and its decode continues from ``prompt_lens[i]``
+        — not the padded width.
 
         With ``eos_id >= 0``, slots that emit eos keep emitting it for the
         remaining steps (masked continuation) — output shape stays static.
         """
         b = prompts.shape[0]
+        if n_steps <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
         eos = self.scfg.eos_id
         caches = init_caches(self.cfg, b, self.scfg.max_len)
-        enc_out = None
-        if self.cfg.family == "encdec":
-            assert frames is not None
-            enc_out = encode(self.params, self.cfg, frames, rt=self.rt)
-            caches = prepare_cross_caches(self.params, self.cfg, enc_out,
-                                          caches, rt=self.rt)
-        last, caches = self._prefill(self.params, prompts, caches)
-        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         key = jax.random.PRNGKey(seed)
+
+        if prompt_lens is not None:
+            self._check_ragged_supported()
+            lens_np = np.asarray(prompt_lens, np.int32).reshape(-1)
+            if lens_np.shape != (b,):
+                raise ValueError(f"prompt_lens shape {lens_np.shape} != "
+                                 f"({b},)")
+            if lens_np.min() < 1 or lens_np.max() > prompts.shape[1]:
+                raise ValueError(
+                    f"prompt_lens must be in [1, {prompts.shape[1]}] "
+                    f"(padded width): {lens_np}")
+            if int(lens_np.max()) + n_steps > self.scfg.max_len + 1:
+                raise ValueError(
+                    f"longest prompt ({int(lens_np.max())}) + n_steps "
+                    f"({n_steps}) overflows max_len ({self.scfg.max_len})")
+            lens = jnp.asarray(lens_np)
+            last, caches = self._prefill_ragged(self.params, prompts, lens,
+                                                caches)
+        else:
+            enc_out = None
+            if self.cfg.family == "encdec":
+                assert frames is not None
+                enc_out = encode(self.params, self.cfg, frames, rt=self.rt)
+                caches = prepare_cross_caches(self.params, self.cfg, enc_out,
+                                              caches, rt=self.rt)
+            last, caches = self._prefill(self.params, prompts, caches)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         done = (tok == eos) if eos >= 0 else jnp.zeros((b,), bool)
+
+        if prompt_lens is not None:
+            pos = lens
+            if self.scfg.decode_loop == "scan":
+                toks, *_ = self._decode_chunk(self.params, tok, caches, key,
+                                              done, pos, n_steps=n_steps - 1)
+                return jnp.concatenate([tok[:, None], toks], axis=1)
+            out = [tok]
+            for _ in range(n_steps - 1):
+                key, sub = jax.random.split(key)
+                nxt, caches = self._decode_ragged(self.params, tok, caches,
+                                                  sub, pos)
+                if eos >= 0:
+                    nxt = jnp.where(done, jnp.int32(eos), nxt)
+                    done = done | (nxt == eos)
+                pos = pos + 1
+                tok = nxt
+                out.append(tok)
+            return jnp.stack(out, axis=1)
 
         if self.scfg.decode_loop == "scan":
             toks, _ = self._decode_loop(self.params, tok, caches, key, done,
-                                        n_steps=max(n_steps - 1, 0))
+                                        n_steps=n_steps - 1)
             return jnp.concatenate([tok[:, None], toks], axis=1)
 
         out = [tok]

@@ -1,0 +1,202 @@
+"""Continuous-batching scheduler over :class:`repro.serve.engine.Engine`.
+
+The engine owns the compiled programs; the scheduler owns the ``batch_slots``
+ring. Requests queue up via :meth:`Scheduler.submit` and are admitted into
+free slots with a **per-slot prefill** (``Engine.prefill_slot`` scatters one
+request's KV into one row of the live batch cache), so admitting a new
+request never disturbs the slots that are mid-generation. Decode then runs
+in fixed-size chunks through the engine's donated ragged ``lax.scan``
+(``Engine.decode_chunk``), carrying per-slot ``done``/``pos`` across chunks.
+Between chunks the scheduler retires slots that hit EOS or their
+``max_new_tokens`` budget and immediately backfills them from the queue —
+one long request no longer holds ``batch_slots - 1`` finished neighbours
+hostage, which is where the goodput win over static batching comes from
+(``benchmarks/serve_bench.py --mode continuous``).
+
+Results stream: ``submit`` returns a :class:`RequestHandle` whose ``poll()``
+yields the token delta generated since the last poll, so callers can
+stream partial generations while the batch keeps running.
+
+Chunk-size tradeoff: each chunk is one device dispatch, so large chunks
+amortize dispatch overhead, but a slot can only be retired/backfilled at a
+chunk boundary — up to ``chunk_size - 1`` wasted slot-steps per retirement.
+Small chunks react faster at more dispatches. The default (8) favors
+responsiveness at smoke scales; production TPU deployments want it nearer
+the dispatch/step-cost break-even from ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [len] int32 token ids
+    max_new_tokens: int
+
+
+class RequestHandle:
+    """Streaming view of one request's generation.
+
+    ``poll()`` returns the tokens generated since the last ``poll()`` (empty
+    list while the request is queued or between chunks); ``done`` flips once
+    the request emitted EOS or exhausted its budget; ``tokens`` is the full
+    generation so far (EOS included when one was emitted).
+    """
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.tokens: List[int] = []
+        self.done = False
+        self._cursor = 0
+
+    def poll(self) -> List[int]:
+        delta = self.tokens[self._cursor:]
+        self._cursor = len(self.tokens)
+        return delta
+
+
+def _bucket(n: int, cap: int, lo: int = 8) -> int:
+    """Next power-of-two width ≥ n (≥ lo, ≤ cap): bounds slot-prefill
+    recompiles to log2(max_len) buckets."""
+    w = lo
+    while w < n:
+        w *= 2
+    return min(w, cap)
+
+
+class Scheduler:
+    """Admit → decode-in-chunks → retire → backfill, over the engine's slots.
+
+    Host-side state is numpy (`tok`/`pos`/`done` per slot, a few dozen
+    bytes); the KV cache tree stays device-resident and is donated through
+    every prefill/chunk, so the scheduler adds one small host transfer per
+    chunk (the sampled tokens) and nothing per token.
+    """
+
+    def __init__(self, engine: Engine, chunk_size: int = 8, seed: int = 0):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
+        engine._check_ragged_supported()
+        self.engine = engine
+        self.chunk_size = chunk_size
+        self.slots = engine.scfg.batch_slots
+        self.max_len = engine.scfg.max_len
+        self.eos_id = engine.scfg.eos_id
+        self._caches = engine.new_caches()
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: Deque[RequestHandle] = deque()
+        self._slot_handle: List[Optional[RequestHandle]] = [None] * self.slots
+        self._tok = np.zeros((self.slots,), np.int32)
+        self._pos = np.zeros((self.slots,), np.int32)
+        self._done = np.ones((self.slots,), bool)      # free slots are "done"
+        self._next_rid = 0
+        self.chunks_run = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int
+               ) -> RequestHandle:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1: {max_new_tokens}")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len ({self.max_len})")
+        handle = RequestHandle(Request(self._next_rid, prompt,
+                                       max_new_tokens))
+        self._next_rid += 1
+        self._queue.append(handle)
+        return handle
+
+    @property
+    def pending(self) -> int:
+        """Requests queued or occupying a slot."""
+        return len(self._queue) + sum(h is not None
+                                      for h in self._slot_handle)
+
+    # -- lifecycle ---------------------------------------------------------
+    def _admit(self):
+        """Fill free slots from the queue via per-slot prefill."""
+        for slot in range(self.slots):
+            if self._slot_handle[slot] is not None:
+                continue
+            while self._queue:
+                handle = self._queue.popleft()
+                req = handle.request
+                width = _bucket(req.prompt.size, self.max_len)
+                padded = np.zeros((1, width), np.int32)
+                padded[0, :req.prompt.size] = req.prompt
+                tok, self._caches = self.engine.prefill_slot(
+                    jnp.asarray(padded), req.prompt.size, self._caches, slot)
+                first = int(tok)
+                handle.tokens.append(first)
+                if ((self.eos_id >= 0 and first == self.eos_id)
+                        or req.max_new_tokens == 1):
+                    handle.done = True   # one-token request: slot stays free
+                    continue
+                self._slot_handle[slot] = handle
+                self._tok[slot] = first
+                self._pos[slot] = req.prompt.size
+                self._done[slot] = False
+                break
+
+    def _retire_or_keep(self, slot: int, chunk_toks: np.ndarray):
+        handle = self._slot_handle[slot]
+        req = handle.request
+        for t in chunk_toks:
+            t = int(t)
+            handle.tokens.append(t)
+            if self.eos_id >= 0 and t == self.eos_id:
+                handle.done = True
+                break
+            if len(handle.tokens) >= req.max_new_tokens:
+                handle.done = True
+                break
+        if handle.done:
+            self._slot_handle[slot] = None
+            self._done[slot] = True
+
+    def step(self) -> bool:
+        """Admit, run one decode chunk, distribute tokens, retire.
+
+        Returns False once nothing is queued or in flight (the scheduler is
+        drained); True means there is more work.
+        """
+        self._admit()
+        active = [s for s in range(self.slots)
+                  if self._slot_handle[s] is not None]
+        if not active:
+            return bool(self._queue)
+        toks, self._caches, self._key, done, pos = self.engine.decode_chunk(
+            jnp.asarray(self._tok), self._caches, self._key,
+            jnp.asarray(self._done), jnp.asarray(self._pos),
+            n_steps=self.chunk_size)
+        self.chunks_run += 1
+        toks = np.asarray(toks)                       # [slots, chunk]
+        # adopt the device carry: pos is each slot's true KV frontier (the
+        # all-done early-exit can freeze it mid-chunk). np.array: writable
+        # copies (np.asarray of a jax array is a read-only view).
+        self._done = np.array(done)
+        self._pos = np.array(pos)
+        self._tok = toks[:, -1].astype(np.int32)
+        for slot in active:
+            self._retire_or_keep(slot, toks[slot])
+        return self.pending > 0
+
+    def run(self):
+        """Drive until every submitted request is done."""
+        while self.step():
+            pass
+        return self

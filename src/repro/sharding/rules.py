@@ -169,9 +169,8 @@ def _map_with_paths(fn, tree, prefix=""):
     return fn(prefix, tree)
 
 
-def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+def _sanitize_sizes(spec: P, shape, sizes: dict) -> P:
     """Drop axes whose mesh size doesn't divide the dim (e.g. odd vocabs)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     out = []
     for i, ax in enumerate(tuple(spec)):
         if ax is None:
@@ -184,6 +183,11 @@ def _sanitize(spec: P, shape, mesh: Mesh) -> P:
         else:
             out.append(ax)
     return P(*out)
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    return _sanitize_sizes(spec, shape,
+                           dict(zip(mesh.axis_names, mesh.devices.shape)))
 
 
 def param_shardings(params, mesh: Mesh, shard_lr: bool = False,
@@ -223,56 +227,73 @@ def data_sharding(mesh: Mesh, ndim: int = 2, *, seq_axis: Optional[int] = None,
     return NamedSharding(mesh, P(*spec))
 
 
+def _first_fit(spec: list, shape, dims, ax: str, size: int):
+    """Put ``ax`` on the first still-free dim in ``dims`` that ``size``
+    divides — the one fallback rule every cache branch shares."""
+    for d in dims:
+        if 0 <= d < len(spec) and spec[d] is None and shape[d] % size == 0:
+            spec[d] = ax
+            return
+
+
+def cache_spec(path: str, shape, axis_sizes: dict, *,
+               seq_to_data: bool = False) -> P:
+    """Pure spec logic for one cache leaf (mesh-free, unit-testable).
+
+    ``axis_sizes`` maps mesh axis name → size. Every branch (attention k/v,
+    SSM conv/state) routes through the same :func:`_first_fit` +
+    :func:`_sanitize_sizes` path, so a non-dividing dim (odd conv_dim, odd
+    head count) degrades to replicated instead of producing an invalid
+    sharding.
+    """
+    model = "model" if "model" in axis_sizes else None
+    data = "data" if "data" in axis_sizes else None
+    batch = tuple(a for a in ("pod", "data") if a in axis_sizes) or None
+    model_size = axis_sizes.get("model", 1)
+    ndim = len(shape)
+    spec = [None] * ndim
+    if path.endswith("/k") or path.endswith("/v"):
+        # [*, b, cache_len, n_kv, hd]
+        off = ndim - 4
+        if not seq_to_data and batch is not None:
+            spec[off + 0] = batch
+        if seq_to_data and data is not None:
+            spec[off + 1] = data
+        if model is not None:
+            # preference: kv-heads, then head_dim, then cache_len. Few-KV-
+            # head archs (n_kv < TP) shard head_dim: the decode cache write
+            # (dynamic-update-slice at a dynamic seq position) stays LOCAL;
+            # attention contractions over hd psum across model. Sharding
+            # cache_len instead makes XLA "involuntarily fully
+            # rematerialize" (all-gather) the cache every layer — 310
+            # GB/step on nemotron decode (EXPERIMENTS.md §Perf iteration 3).
+            _first_fit(spec, shape, (off + 2, off + 3, off + 1),
+                       model, model_size)
+    elif path.endswith("/conv"):
+        # [*, b, k-1, conv_dim]
+        if not seq_to_data and batch is not None:
+            spec[ndim - 3] = batch
+        if model is not None:
+            _first_fit(spec, shape, (ndim - 1,), model, model_size)
+    elif path.endswith("/state"):
+        # [*, b, nh, hd, ds]
+        if not seq_to_data and batch is not None:
+            spec[ndim - 4] = batch
+        if model is not None:
+            _first_fit(spec, shape, (ndim - 3,), model, model_size)
+    # final guard for the batch axes (tuple sizes) and anything _first_fit
+    # placed on a dim later found non-dividing
+    return _sanitize_sizes(P(*spec), shape, axis_sizes)
+
+
 def cache_shardings(caches, mesh: Mesh, *, seq_to_data: bool = False):
     """Shard KV caches: kv-heads → model; optionally cache seq → data (SP
     long-context decode). SSM caches: heads → model."""
-    model = _axis(mesh, "model")
-    data = _axis(mesh, "data")
-    batch = batch_axes(mesh)
-
-    model_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names
-                              if a == "model"])) if model else 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def one(path, leaf):
-        ndim = getattr(leaf, "ndim", 0)
-        spec = [None] * ndim
-        if path.endswith("/k") or path.endswith("/v"):
-            # [*, b, cache_len, n_kv, hd]
-            off = ndim - 4
-            n_kv = leaf.shape[off + 2]
-            hd = leaf.shape[off + 3]
-            cache_len = leaf.shape[off + 1]
-            if not seq_to_data and batch is not None:
-                spec[off + 0] = batch
-            if seq_to_data and data is not None:
-                spec[off + 1] = data
-            if model is not None:
-                if n_kv % model_size == 0:
-                    spec[off + 2] = model
-                elif hd % model_size == 0:
-                    # few-KV-head archs (n_kv < TP): shard head_dim. The
-                    # decode cache write (dynamic-update-slice at a dynamic
-                    # seq position) stays LOCAL; attention contractions over
-                    # hd psum across model. Sharding cache_len instead makes
-                    # XLA "involuntarily fully rematerialize" (all-gather)
-                    # the cache every layer — 310 GB/step on nemotron decode
-                    # (EXPERIMENTS.md §Perf iteration 3).
-                    spec[off + 3] = model
-                elif spec[off + 1] is None and cache_len % model_size == 0:
-                    spec[off + 1] = model
-        elif path.endswith("/conv"):
-            # [*, b, k-1, conv_dim]
-            if not seq_to_data and batch is not None:
-                spec[ndim - 3] = batch
-            if model is not None:
-                spec[ndim - 1] = model
-        elif path.endswith("/state"):
-            # [*, b, nh, hd, ds]
-            if not seq_to_data and batch is not None:
-                spec[ndim - 4] = batch
-            if model is not None:
-                spec[ndim - 3] = model
-        return NamedSharding(mesh, _sanitize(P(*spec), getattr(leaf, "shape", ()),
-                                             mesh))
+        spec = cache_spec(path, getattr(leaf, "shape", ()), sizes,
+                          seq_to_data=seq_to_data)
+        return NamedSharding(mesh, spec)
 
     return _map_with_paths(one, caches)

@@ -57,5 +57,8 @@ def given(*strategies: _Strategy):
         params = list(inspect.signature(fn).parameters)
         names = params[len(params) - len(strategies):]
         cases = list(itertools.product(*[s.examples for s in strategies]))
+        if len(names) == 1:
+            # parametrize over one name takes scalars, not 1-tuples
+            cases = [c[0] for c in cases]
         return pytest.mark.parametrize(",".join(names), cases)(fn)
     return deco

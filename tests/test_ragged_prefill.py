@@ -1,0 +1,176 @@
+"""Ragged-batch serving correctness.
+
+The definitive guard for the pad-position sampling bug: for ANY mix of
+prompt lengths in one padded batch, every row of
+``Engine.generate(..., prompt_lens=...)`` must equal the single-request run
+of that row — on both decode loops. The seed engine sampled ``logits[:, -1]``
+after prefill, i.e. shorter prompts sampled their first token from a pad
+position and then decoded from the padded width.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
+
+from repro.configs.registry import get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Engine, ServeConfig
+
+
+MAX_PROMPT = 8
+BATCH = 3
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, {loop: Engine(params, cfg,
+                              ServeConfig(max_len=32, decode_loop=loop))
+                 for loop in ("scan", "step")}
+
+
+def _ragged_batch(cfg, seed: int):
+    """Random per-row lengths in [1, MAX_PROMPT] + right-padded prompts."""
+    key = jax.random.PRNGKey(seed)
+    lens = np.asarray(jax.random.randint(key, (BATCH,), 1, MAX_PROMPT + 1))
+    padded = np.zeros((BATCH, MAX_PROMPT), np.int32)
+    rows = []
+    for i, L in enumerate(lens):
+        row = np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                            (int(L),), 0, cfg.vocab_size))
+        padded[i, :int(L)] = row
+        rows.append(row)
+    return lens.astype(np.int32), padded, rows
+
+
+# ---------------------------------------------------------------------------
+# Property: ragged batch ≡ per-request runs (the pad-position guard)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_ragged_rows_match_single_request(engines, seed):
+    cfg, engs = engines
+    lens, padded, rows = _ragged_batch(cfg, seed)
+    for loop, eng in engs.items():
+        out = np.asarray(eng.generate(jnp.asarray(padded), 6,
+                                      prompt_lens=lens))
+        for i, row in enumerate(rows):
+            ref = np.asarray(eng.generate(jnp.asarray(row[None]), 6))[0]
+            assert np.array_equal(out[i], ref), (loop, seed, i, lens)
+
+
+def test_ragged_scan_matches_step():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens, padded, _ = _ragged_batch(cfg, seed=7)
+    outs = {}
+    for loop in ("scan", "step"):
+        eng = Engine(params, cfg, ServeConfig(max_len=32, decode_loop=loop))
+        outs[loop] = np.asarray(eng.generate(jnp.asarray(padded), 8,
+                                             prompt_lens=lens))
+    assert np.array_equal(outs["scan"], outs["step"])
+
+
+def test_ragged_differs_from_padded_run(engines):
+    """The bug this PR fixes: running the padded batch WITHOUT prompt_lens
+    samples shorter rows from pad positions. With mixed lengths the fixed
+    ragged path must disagree with that on the short rows."""
+    cfg, engs = engines
+    lens, padded, _ = _ragged_batch(cfg, seed=3)
+    if len(set(lens.tolist())) == 1:      # make lengths genuinely mixed
+        lens[0] = 1
+    eng = engs["scan"]
+    fixed = np.asarray(eng.generate(jnp.asarray(padded), 6,
+                                    prompt_lens=lens))
+    buggy = np.asarray(eng.generate(jnp.asarray(padded), 6))
+    assert not np.array_equal(fixed, buggy)
+    # rows already at full width are unaffected by the fix
+    for i, L in enumerate(lens):
+        if int(L) == MAX_PROMPT:
+            assert np.array_equal(fixed[i], buggy[i])
+
+
+def test_uniform_lens_match_legacy_path(engines):
+    """prompt_lens == padded width reduces to the legacy uniform path."""
+    cfg, engs = engines
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (BATCH, 5), 0,
+                                 cfg.vocab_size)
+    lens = np.full((BATCH,), 5, np.int32)
+    for loop, eng in engs.items():
+        a = np.asarray(eng.generate(prompts, 6, prompt_lens=lens))
+        b = np.asarray(eng.generate(prompts, 6))
+        assert np.array_equal(a, b), loop
+
+
+# ---------------------------------------------------------------------------
+# eos + ragged interact correctly (masked continuation per row)
+# ---------------------------------------------------------------------------
+
+def test_ragged_eos_masked_continuation():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens, padded, rows = _ragged_batch(cfg, seed=5)
+    free = np.asarray(Engine(params, cfg, ServeConfig(max_len=32)).generate(
+        jnp.asarray(padded), 8, prompt_lens=lens))
+    eos = int(free[0, 3])
+    for loop in ("scan", "step"):
+        eng = Engine(params, cfg, ServeConfig(max_len=32, eos_id=eos,
+                                              decode_loop=loop))
+        got = np.asarray(eng.generate(jnp.asarray(padded), 8,
+                                      prompt_lens=lens))
+        for row in got:
+            hits = np.nonzero(row == eos)[0]
+            if hits.size:
+                assert np.all(row[hits[0]:] == eos), (loop, row)
+        assert np.all(got[0, 3:] == eos), loop
+
+
+# ---------------------------------------------------------------------------
+# unsupported families fail loudly, not silently wrong
+# ---------------------------------------------------------------------------
+
+def test_ragged_rejects_bad_prompt_lens(engines):
+    """Out-of-range lens would silently re-introduce pad-position sampling
+    (the jitted gather clamps) — they must raise host-side instead."""
+    cfg, engs = engines
+    eng = engs["scan"]
+    prompts = jnp.zeros((BATCH, 4), jnp.int32)
+    with pytest.raises(ValueError, match="padded width"):
+        eng.generate(prompts, 2, prompt_lens=np.array([2, 5, 3]))
+    with pytest.raises(ValueError, match="padded width"):
+        eng.generate(prompts, 2, prompt_lens=np.array([0, 2, 3]))
+    with pytest.raises(ValueError, match="shape"):
+        eng.generate(prompts, 2, prompt_lens=np.array([2, 3]))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(prompts, 64, prompt_lens=np.array([2, 3, 4]))
+
+
+def test_ragged_rejects_ring_and_stateful_families():
+    cfg = dataclasses.replace(_tiny_cfg(), sliding_window=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_len=32))
+    with pytest.raises(NotImplementedError, match="sliding-window"):
+        eng.generate(jnp.zeros((2, 4), jnp.int32), 2,
+                     prompt_lens=np.array([2, 4], np.int32))
+
+    ssm_cfg = get_smoke_config("mamba2_780m").reduced(d_model=32, n_layers=2)
+    ssm_params = init_params(jax.random.PRNGKey(0), ssm_cfg)
+    ssm_eng = Engine(ssm_params, ssm_cfg, ServeConfig(max_len=32))
+    with pytest.raises(NotImplementedError, match="family"):
+        ssm_eng.generate(jnp.zeros((2, 4), jnp.int32), 2,
+                         prompt_lens=np.array([2, 4], np.int32))

@@ -126,6 +126,66 @@ def test_bad_decode_loop_rejected():
 
 
 # ---------------------------------------------------------------------------
+# n_steps edge cases ([b, 0], not an unconditionally-emitted prefill token)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loop", ["scan", "step"])
+def test_zero_steps_returns_empty(tiny, loop):
+    cfg, params, prompts = tiny
+    out = _gen(params, cfg, prompts, 0, loop=loop)
+    assert out.shape == (prompts.shape[0], 0)
+    assert out.dtype == jnp.int32
+
+
+def test_one_step_is_prefill_token_only(tiny):
+    cfg, params, prompts = tiny
+    one = _gen(params, cfg, prompts, 1, loop="scan")
+    eight = _gen(params, cfg, prompts, 8, loop="scan")
+    assert one.shape == (prompts.shape[0], 1)
+    assert jnp.all(one == eight[:, :1])
+
+
+# ---------------------------------------------------------------------------
+# Step-loop (debug path) donates caches into the per-token dispatch
+# ---------------------------------------------------------------------------
+
+def test_step_loop_decode_donates_caches(tiny):
+    """Without donate_argnums on the per-token step, every debug-loop token
+    copies the full KV tree. Checked via the lowered ArgInfo flags: the
+    caches argument (and only large cache buffers) must be donated."""
+    from repro.models import init_caches
+    cfg, params, prompts = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=32))
+    caches = init_caches(cfg, prompts.shape[0], 32)
+    tok = jnp.zeros((prompts.shape[0],), jnp.int32)
+    key = jax.random.PRNGKey(0)
+
+    def donated_flags(lowered, argnum):
+        info = lowered.args_info[0][argnum]
+        return [a.donated for a in jax.tree.leaves(info)]
+
+    low = eng._decode.lower(params, tok, caches, key)
+    assert all(donated_flags(low, 2)), "caches must be donated"
+    assert not any(donated_flags(low, 0)), "params must NOT be donated"
+
+    pos = jnp.zeros((prompts.shape[0],), jnp.int32)
+    low_r = eng._decode_ragged.lower(params, tok, caches, key, pos)
+    assert all(donated_flags(low_r, 2))
+
+
+def test_step_scan_parity_survives_donation(tiny):
+    """Donated step-loop still produces the scan loop's tokens (the step
+    path must not read a buffer it already gave away)."""
+    cfg, params, prompts = tiny
+    for temp, seed in ((0.0, 0), (0.8, 3)):
+        a = _gen(params, cfg, prompts, 8, loop="scan", temperature=temp,
+                 seed=seed)
+        b = _gen(params, cfg, prompts, 8, loop="step", temperature=temp,
+                 seed=seed)
+        assert jnp.all(a == b), (temp, seed)
+
+
+# ---------------------------------------------------------------------------
 # Quantized serving through the scan loop (fused decode kernel on hot path)
 # ---------------------------------------------------------------------------
 
@@ -193,14 +253,29 @@ def test_serve_bench_validator():
     import importlib
     sb = importlib.import_module("benchmarks.serve_bench")
     row = {f: 1.0 for f in sb.ROW_FIELDS}
+    crow = {f: 1.0 for f in sb.CONT_ROW_FIELDS}
+    rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
+    crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
     good = {"schema": sb.SCHEMA, "smoke": True,
-            "rows": [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]}
+            "rows": rows, "continuous_rows": crows}
     assert sb.validate(good)
+    # v1 files (static rows only) must keep validating
+    assert sb.validate({"schema": sb.SCHEMA_V1, "smoke": True, "rows": rows})
     with pytest.raises(ValueError):
-        sb.validate({"schema": "nope", "rows": good["rows"]})
+        sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):
-        sb.validate({"schema": sb.SCHEMA, "rows": [dict(row, mode="fp")]})
+        sb.validate({"schema": sb.SCHEMA, "rows": [dict(row, mode="fp")],
+                     "continuous_rows": crows})
     bad = dict(row, mode="fp", prefill_ms=float("nan"))
     with pytest.raises(ValueError):
         sb.validate({"schema": sb.SCHEMA,
-                     "rows": [bad, dict(row, mode="w4a8_aser")]})
+                     "rows": [bad, dict(row, mode="w4a8_aser")],
+                     "continuous_rows": crows})
+    # v2 without goodput rows is invalid; v2 demands positive goodput
+    with pytest.raises(ValueError, match="continuous"):
+        sb.validate({"schema": sb.SCHEMA, "rows": rows})
+    with pytest.raises(ValueError):
+        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+                     "continuous_rows": [
+                         dict(crow, mode="fp", goodput_tok_s=0.0),
+                         dict(crow, mode="w4a8_aser")]})
