@@ -24,12 +24,18 @@ Two workloads:
   tokens / wall-clock second — the static baseline burns steps on retired
   rows, the scheduler backfills them.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v2`` =
-v1's static rows + ``continuous_rows``; the validator still accepts v1
-files) so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
-seconds-scale variant with the same schema for CI. Latency rows use the
-XLA serving path (interpret-mode Pallas wall-clock is meaningless on CPU);
-kernel-level tile economics live in ``kernels_bench``.
+  The continuous mode additionally runs a **shared-prefix** workload
+  (requests drawn from a few "system prompt" groups, each prefix shared by
+  many requests) on the paged engine, with the block-granular prefix cache
+  on vs off — the reuse leg skips re-prefilling every shared prefix and
+  reports its **prefix-cache hit rate** next to the goodput win.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v3`` =
+v2's static + continuous rows + ``prefix_rows``; the validator still
+accepts v1/v2 files) so subsequent PRs have a perf trajectory to beat;
+``--smoke`` runs a seconds-scale variant with the same schema for CI.
+Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
+meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
 """
 from __future__ import annotations
 
@@ -52,7 +58,8 @@ from repro.runtime import RuntimeConfig
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.scheduler import Scheduler
 
-SCHEMA = "serve_bench/v2"
+SCHEMA = "serve_bench/v3"
+SCHEMA_V2 = "serve_bench/v2"
 SCHEMA_V1 = "serve_bench/v1"
 SCHEMA_PROBE = "serve_bench/probe"     # partial (continuous-only) runs
 ROOT_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
@@ -68,6 +75,13 @@ CONT_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk",
                    "new_tokens_max", "useful_tokens", "static_s",
                    "continuous_s", "static_goodput_tok_s", "goodput_tok_s",
                    "goodput_speedup")
+
+# shared-prefix paged-cache fields added by serve_bench/v3 prefix rows
+PREFIX_ROW_FIELDS = ("mode", "requests", "prefix_groups", "prefix_len",
+                     "batch_slots", "chunk", "block_size", "num_blocks",
+                     "useful_tokens", "noreuse_s", "reuse_s",
+                     "noreuse_goodput_tok_s", "goodput_tok_s",
+                     "goodput_speedup", "prefix_hit_rate")
 
 
 def _bench_cfg(smoke: bool):
@@ -165,6 +179,47 @@ def _time_continuous(params, cfg, rt, *, slots, max_len, chunk, reqs, reps):
     return static_s, cont_s, useful
 
 
+# -- shared-prefix prefix-cache goodput --------------------------------------
+
+def _prefix_workload(n_requests, n_groups, prefix_len, t_lo, t_hi, n_lo,
+                     n_hi, vocab, seed=17):
+    """Multi-tenant chat traffic: every request is one of ``n_groups``
+    system prompts (``prefix_len`` tokens, the shared part) plus a short
+    unique tail — the shape the ref-counted prefix index exists for."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+                for _ in range(n_groups)]
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.integers(t_lo, t_hi + 1)))
+        prompt = np.concatenate([prefixes[i % n_groups],
+                                 tail.astype(np.int32)])
+        reqs.append((prompt, int(rng.integers(n_lo, n_hi + 1))))
+    return reqs
+
+
+def _run_paged(engine, reqs, chunk, reuse):
+    sched = Scheduler(engine, chunk_size=chunk, prefix_reuse=reuse)
+    handles = [sched.submit(p, n) for p, n in reqs]
+    sched.run()
+    return sched, handles
+
+
+def _time_prefix(params, cfg, rt, *, slots, max_len, block_size, chunk,
+                 reqs, reps):
+    eng = Engine(params, cfg, ServeConfig(max_len=max_len, batch_slots=slots,
+                                          kv_layout="paged",
+                                          block_size=block_size), rt=rt)
+    sched, handles = _run_paged(eng, reqs, chunk, True)   # gate + warm
+    assert all(h.done for h in handles)
+    hit_rate = sched.prefix_hit_rate
+    noreuse_s = _best_time(lambda: _run_paged(eng, reqs, chunk, False), reps)
+    reuse_s = _best_time(lambda: _run_paged(eng, reqs, chunk, True), reps)
+    useful = sum(n for _, n in reqs)
+    return noreuse_s, reuse_s, useful, hit_rate, eng.scfg.pool_blocks
+
+
 def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
         mode: str = "both"):
     cfg = dataclasses.replace(_bench_cfg(smoke), remat=False)
@@ -182,6 +237,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
 
     rows = []
     cont_rows = []
+    prefix_rows = []
     for m, p in (("fp", params), ("w4a8_aser", qparams)):
         if mode in ("both", "static"):
             for (b, prompt) in buckets:
@@ -240,6 +296,38 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                       f"{crow['static_goodput_tok_s']:7.1f} "
                       f"(×{crow['goodput_speedup']:.2f})", flush=True)
 
+            # shared-prefix workload on the paged engine: reuse vs no-reuse
+            block_size = 8 if smoke else 16
+            n_groups = 2
+            prefix_len = 16 if smoke else 32
+            t_lo, t_hi = (2, 6) if smoke else (2, 12)
+            pn_lo, pn_hi = (2, 8) if smoke else (4, 24)
+            preqs = _prefix_workload(n_req, n_groups, prefix_len, t_lo, t_hi,
+                                     pn_lo, pn_hi, cfg.vocab_size)
+            noreuse_s, reuse_s, useful, hit_rate, pool = _time_prefix(
+                p, cfg, rt, slots=slots, max_len=max_len,
+                block_size=block_size, chunk=chunk, reqs=preqs, reps=c_reps)
+            prow = {
+                "mode": m, "requests": n_req, "prefix_groups": n_groups,
+                "prefix_len": prefix_len, "batch_slots": slots,
+                "chunk": chunk, "block_size": block_size,
+                "num_blocks": pool, "useful_tokens": useful,
+                "noreuse_s": noreuse_s, "reuse_s": reuse_s,
+                "noreuse_goodput_tok_s": useful / noreuse_s,
+                "goodput_tok_s": useful / reuse_s,
+                "goodput_speedup": noreuse_s / reuse_s,
+                "prefix_hit_rate": hit_rate,
+            }
+            prefix_rows.append(prow)
+            if verbose:
+                print(f"  {m:>10} shared-prefix: {n_req} reqs × "
+                      f"{n_groups} prefixes ({prefix_len} tok, paged "
+                      f"bs={block_size}): goodput "
+                      f"{prow['goodput_tok_s']:7.1f} tok/s vs no-reuse "
+                      f"{prow['noreuse_goodput_tok_s']:7.1f} "
+                      f"(×{prow['goodput_speedup']:.2f}, hit rate "
+                      f"{hit_rate:.0%})", flush=True)
+
     # partial runs must self-describe honestly: static-only is a valid v1
     # file; continuous-only matches no released schema and is stamped as a
     # probe (the validator rejects it by design — it is not a baseline)
@@ -255,6 +343,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     }
     if mode != "static":
         report["continuous_rows"] = cont_rows
+        report["prefix_rows"] = prefix_rows
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     if verbose:
@@ -296,7 +385,7 @@ def _validate_static_rows(rows):
 
 def _validate_continuous_rows(rows):
     if not isinstance(rows, list) or not rows:
-        raise ValueError("no continuous rows (serve_bench/v2 requires them)")
+        raise ValueError("no continuous rows (serve_bench/v2+ requires them)")
     modes = set()
     for row in rows:
         _check_finite(row, CONT_ROW_FIELDS,
@@ -308,19 +397,38 @@ def _validate_continuous_rows(rows):
                          f"got {modes}")
 
 
+def _validate_prefix_rows(rows):
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no prefix rows (serve_bench/v3 requires them)")
+    modes = set()
+    for row in rows:
+        _check_finite(row, PREFIX_ROW_FIELDS,
+                      positive=("useful_tokens", "noreuse_s", "reuse_s",
+                                "noreuse_goodput_tok_s", "goodput_tok_s",
+                                "prefix_hit_rate"))
+        if not 0 < row["prefix_hit_rate"] <= 1:
+            raise ValueError(f"prefix_hit_rate out of (0, 1]: {row}")
+        modes.add(row["mode"])
+    if not {"fp", "w4a8_aser"} <= modes:
+        raise ValueError(f"need fp and w4a8_aser prefix rows, got {modes}")
+
+
 def validate(report: dict):
     """Raise ValueError unless ``report`` is a valid serve_bench file.
 
-    Accepts both schema generations: ``serve_bench/v1`` (static rows only)
-    and ``serve_bench/v2`` (static rows + continuous goodput rows), so old
-    baselines keep validating.
+    Accepts every released schema generation: ``serve_bench/v1`` (static
+    rows only), ``serve_bench/v2`` (+ continuous goodput rows) and
+    ``serve_bench/v3`` (+ shared-prefix paged-cache rows), so old baselines
+    keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V2, SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
     _validate_static_rows(report.get("rows"))
-    if schema == SCHEMA:
+    if schema in (SCHEMA, SCHEMA_V2):
         _validate_continuous_rows(report.get("continuous_rows"))
+    if schema == SCHEMA:
+        _validate_prefix_rows(report.get("prefix_rows"))
     return True
 
 

@@ -1,18 +1,16 @@
 """jit'd public wrappers over the Pallas kernels with XLA fallbacks.
 
 Kernel selection and activation bit-width are explicit: every entry point
-takes an ``rt:`` :class:`repro.runtime.RuntimeConfig`. ``rt=None`` falls back
-to the module default, which exists only so the deprecated ``use_pallas`` /
-``set_act_bits`` shims (kept for one release) still have something to poke —
-new code should construct a ``RuntimeConfig`` and pass it down (see
-``serve.Engine`` / ``models.forward``).
+takes an ``rt:`` :class:`repro.runtime.RuntimeConfig`; ``rt=None`` means the
+process default (``repro.runtime.DEFAULT_RUNTIME``). Construct a
+``RuntimeConfig`` and pass it down (see ``serve.Engine`` /
+``models.forward``) — the pre-PR-1 process-global mutators
+(``set_act_bits`` / ``use_pallas``) are gone.
 
 The XLA fallback implements the identical math so quantized-model behavior
 is bitwise-comparable up to f32 reduction order.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +23,7 @@ from .act_quant import act_quant as _act_quant_kernel
 from .w4a8_gemm import w4a8_gemm as _w4a8_kernel
 from .w4a8_fused import w4a8_fused as _w4a8_fused_kernel
 from .flash_attention import flash_attention as _flash_kernel
+from .paged_attention import paged_decode_attention as _paged_kernel
 
 # Pallas kernels tile the low-rank factors along r; decode-path BlockSpecs
 # assume r is lane-aligned to this multiple. quantize-time packing
@@ -47,40 +46,9 @@ def pad_lowrank(lb, la, multiple: int = LOWRANK_MULTIPLE):
     la = jnp.pad(la, ((0, pad),) + ((0, 0),) * (la.ndim - 1))
     return lb, la
 
-# Mutated ONLY by the deprecated shims below; read when rt is not supplied.
-_default_runtime: RuntimeConfig = DEFAULT_RUNTIME
-
-
 def default_runtime() -> RuntimeConfig:
     """The RuntimeConfig used when callers don't pass one explicitly."""
-    return _default_runtime
-
-
-# -- deprecated shims (one release) -----------------------------------------
-
-def use_pallas(flag: bool, interpret: bool = True):
-    """Deprecated: construct a RuntimeConfig(use_pallas=...) and pass it to
-    Engine / forward instead of mutating process state."""
-    warnings.warn("ops.use_pallas() is deprecated; pass a RuntimeConfig "
-                  "(rt=...) to Engine/forward instead", DeprecationWarning,
-                  stacklevel=2)
-    global _default_runtime
-    _default_runtime = _default_runtime.replace(use_pallas=flag,
-                                                interpret=interpret)
-
-
-def set_act_bits(bits: int):
-    """Deprecated: construct a RuntimeConfig(a_bits=...) and pass it to
-    Engine / forward instead of mutating process state."""
-    warnings.warn("ops.set_act_bits() is deprecated; pass a RuntimeConfig "
-                  "(rt=...) to Engine/forward instead", DeprecationWarning,
-                  stacklevel=2)
-    global _default_runtime
-    _default_runtime = _default_runtime.replace(a_bits=bits)
-
-
-def pallas_enabled() -> bool:
-    return _default_runtime.use_pallas
+    return DEFAULT_RUNTIME
 
 
 # -- public kernel entry points ---------------------------------------------
@@ -91,7 +59,7 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
     → low-rank compensation. x: [m, k] → [m, n] (f32).
 
     ``a_bits`` overrides ``rt.a_bits`` (kept for per-call sweeps)."""
-    rt = _default_runtime if rt is None else rt
+    rt = DEFAULT_RUNTIME if rt is None else rt
     bits = rt.a_bits if a_bits is None else a_bits
     if bits >= 16:
         # weight-only: dequantize W and run in float (no act quant)
@@ -121,7 +89,35 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
 
 
 def attention(q, k, v, *, rt: RuntimeConfig | None = None, **kw):
-    rt = _default_runtime if rt is None else rt
+    rt = DEFAULT_RUNTIME if rt is None else rt
     if rt.use_pallas:
         return _flash_kernel(q, k, v, interpret=rt.interpret, **kw)
     return _ref.flash_attention_ref(q, k, v, **kw)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                    logit_cap: float = 0.0,
+                    rt: RuntimeConfig | None = None):
+    """Paged-KV decode attention over a global block pool.
+
+    q: [b, 1, hq, hd]; pools: [num_blocks, block_size, hkv, hd];
+    block_tables: [b, blocks_per_seq] int32 (sentinel = num_blocks);
+    kv_len: [b] int32 valid prefix per row.
+
+    Returns [b, 1, hq, hd] from the Pallas paged-gather kernel, or ``None``
+    when the runtime / tuning model routes this shape to the XLA gather
+    fallback (the caller — ``models.attention._paged_attention`` — owns
+    that path; the ``None`` contract matches the sharded-decode helper).
+    """
+    rt = DEFAULT_RUNTIME if rt is None else rt
+    if not rt.use_pallas:
+        return None
+    b, _, hq, hd = q.shape
+    bs, hkv = k_pool.shape[1], k_pool.shape[2]
+    if hq % hkv != 0:
+        return None
+    if not _tuning.use_paged_kernel(b, block_tables.shape[1], bs,
+                                    hq // hkv, hd):
+        return None
+    return _paged_kernel(q, k_pool, v_pool, block_tables, kv_len,
+                         logit_cap=logit_cap, interpret=rt.interpret)

@@ -1,0 +1,126 @@
+"""Paged-gather decode attention (Pallas), the paged-KV serving hot path.
+
+Decode reads one token's attention over a request's pages of the global
+block pool. The XLA fallback gathers the whole per-row KV view
+([b, blocks_per_seq * block_size, hkv, hd]) into a contiguous buffer every
+layer — an HBM round-trip proportional to context length per decode token.
+This kernel never materializes that view: the per-request block table rides
+in as a **scalar-prefetch** operand, so each grid step's BlockSpec
+``index_map`` reads the table and DMAs exactly one physical KV block from
+the pool into VMEM.
+
+Grid: (batch * kv_heads, blocks_per_seq), last axis fastest (sequential on
+TPU), with the online-softmax accumulators for the current (row, kv head)
+living in VMEM scratch across the block steps. GQA is folded into the grid:
+each program attends one kv head's query group ([group, hd]) against one
+[block_size, hd] KV block. Blocks wholly past a row's frontier are skipped
+(`pl.when`), and sentinel table entries (unmapped logical blocks) are
+clamped in the index_map — their loads are dead because the frontier mask
+already excludes them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, klen_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, nb: int, hkv: int,
+            scale: float, logit_cap: float):
+    i = pl.program_id(1)
+    b_idx = pl.program_id(0) // hkv
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    klen = klen_ref[b_idx]
+
+    @pl.when(i * bs < klen)
+    def _block():
+        q = q_ref[...].astype(jnp.float32) * scale          # [group, hd]
+        k = k_ref[...].astype(jnp.float32)                  # [bs, hd]
+        v = v_ref[...].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [group, bs]
+        if logit_cap > 0:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        kv_pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(kv_pos < klen, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]             # [group, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(i == nb - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_cap", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                           logit_cap: float = 0.0, interpret: bool = True):
+    """q: [b, 1, hq, hd]; pools: [num_blocks, bs, hkv, hd];
+    block_tables: [b, nb] int32 physical ids (sentinel = num_blocks for
+    unmapped entries); kv_len: [b] int32 valid prefix per row.
+    Returns [b, 1, hq, hd].
+    """
+    b, s, hq, hd = q.shape
+    assert s == 1, "paged kernel is the decode (s == 1) hot path"
+    n_total, bs, hkv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    group = hq // hkv
+    scale = hd ** -0.5
+
+    # q head h uses kv head h // group: [b, hkv, group, hd]
+    qf = q.reshape(b, hkv, group, hd)
+    bt = block_tables.astype(jnp.int32)
+    klen = kv_len.astype(jnp.int32)
+
+    grid = (b * hkv, nb)
+    kernel = functools.partial(_kernel, bs=bs, nb=nb, hkv=hkv, scale=scale,
+                               logit_cap=logit_cap)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, None, group, hd),
+                             lambda bh, i, bt, kl: (bh // hkv, bh % hkv,
+                                                    0, 0)),
+                # the paged gather: table entry → physical pool block
+                pl.BlockSpec((None, bs, None, hd),
+                             lambda bh, i, bt, kl: (
+                                 jnp.minimum(bt[bh // hkv, i], n_total - 1),
+                                 0, bh % hkv, 0)),
+                pl.BlockSpec((None, bs, None, hd),
+                             lambda bh, i, bt, kl: (
+                                 jnp.minimum(bt[bh // hkv, i], n_total - 1),
+                                 0, bh % hkv, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, None, group, hd),
+                                   lambda bh, i, bt, kl: (bh // hkv,
+                                                          bh % hkv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),     # running max
+                pltpu.VMEM((group, 1), jnp.float32),     # running denom
+                pltpu.VMEM((group, hd), jnp.float32),    # running numerator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(bt, klen, qf, k_pool, v_pool)
+    return out.reshape(b, 1, hq, hd)

@@ -13,8 +13,12 @@ decisions live here:
   * ``select_gemm_blocks(m, k, n, r)`` — (bm, bn, bk) for the tiled GEMM:
     an explicit table of known-good shapes first, then a modeled search
     maximizing arithmetic intensity under the VMEM budget.
+  * ``use_paged_kernel(...)`` — paged-KV decode attention routes to the
+    scalar-prefetch paged-gather kernel (``paged_attention.py``) when one
+    KV block plus the query group fits the budget; otherwise the caller
+    falls back to the XLA gather path.
 
-Both are pure Python over static shapes — resolved at trace time, never
+All are pure Python over static shapes — resolved at trace time, never
 traced.
 """
 from __future__ import annotations
@@ -79,6 +83,34 @@ def fused_bn(m: int, k: int, n: int, r: int,
         if fused_vmem_bytes(m, k, bn_, r) <= budget:
             return bn_
     return None
+
+
+def paged_vmem_bytes(block_size: int, group: int, hd: int) -> int:
+    """Per-grid-step VMEM working set of the paged-gather decode kernel.
+
+    One physical KV block (k + v), the kv-head's query group, the
+    [group, block_size] score tile, and the online-softmax scratch. The
+    block table and frontier lengths ride in SMEM (scalar prefetch) and
+    are not counted against VMEM.
+    """
+    return (2 * block_size * hd * 4        # k, v block (f32 working copies)
+            + group * hd * 4               # q group
+            + group * block_size * 4       # score tile
+            + 2 * group * 4                # m, l scratch
+            + group * hd * 4               # acc scratch
+            + group * hd * 4)              # out tile
+
+
+def use_paged_kernel(batch: int, nb: int, block_size: int, group: int,
+                     hd: int, budget: int = VMEM_BUDGET) -> bool:
+    """Route paged decode attention to the Pallas paged-gather kernel.
+
+    Decode is m = 1 token per row by construction; the only way the kernel
+    doesn't pay for itself is when a block step's working set spills VMEM
+    (huge head_dim × block_size) — then the XLA gather path is the safer
+    bet. ``nb``/``batch`` only scale the grid, not the per-step footprint.
+    """
+    return paged_vmem_bytes(block_size, group, hd) <= budget
 
 
 # Known-good BlockSpecs for recurring serving shapes, keyed by

@@ -1,12 +1,15 @@
 """Architecture zoo: dense / MoE / SSM / hybrid / enc-dec LMs in pure JAX."""
 from .config import ModelConfig
-from .model import (init_params, forward, encode, init_caches, param_count,
-                    prepare_cross_caches, caches_length)
-from .attention import KVCache, init_cache, chunked_attention
+from .model import (init_params, forward, encode, init_caches,
+                    init_paged_caches, param_count, prepare_cross_caches,
+                    caches_length)
+from .attention import (KVCache, PagedKVCache, init_cache, init_paged_cache,
+                        chunked_attention)
 from .mamba2 import SSMCache, init_ssm_cache
 from .transformer import BlockSpec, group_blocks
 
 __all__ = ["ModelConfig", "init_params", "forward", "encode", "init_caches",
-           "param_count", "prepare_cross_caches", "caches_length", "KVCache",
-           "init_cache", "chunked_attention", "SSMCache", "init_ssm_cache",
-           "BlockSpec", "group_blocks"]
+           "init_paged_caches", "param_count", "prepare_cross_caches",
+           "caches_length", "KVCache", "PagedKVCache", "init_cache",
+           "init_paged_cache", "chunked_attention", "SSMCache",
+           "init_ssm_cache", "BlockSpec", "group_blocks"]

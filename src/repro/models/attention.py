@@ -26,6 +26,22 @@ class KVCache(NamedTuple):
                           # (ring buffers overwrite; init = large negative)
 
 
+class PagedKVCache(NamedTuple):
+    """Block-paged KV storage: one global physical pool, no batch axis.
+
+    Requests own *pages* of the pool rather than a contiguous per-slot lane:
+    a per-request block table (``[b, blocks_per_seq]`` int32, threaded
+    through ``forward(..., block_tables=...)``) maps logical block
+    ``pos // block_size`` to a physical block id. Unmapped table entries
+    hold the out-of-range sentinel ``num_blocks`` so their writes drop and
+    their (masked) reads clamp harmlessly.
+    """
+    k: jnp.ndarray        # [num_blocks, block_size, n_kv, hd]
+    v: jnp.ndarray        # [num_blocks, block_size, n_kv, hd]
+    length: jnp.ndarray   # [] int32 — total tokens written (diagnostic only;
+                          # positions are always explicit in paged mode)
+
+
 def attn_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
     ks = jax.random.split(key, 4)
     return {
@@ -147,7 +163,8 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
               cache: KVCache | None = None,
               mrope_positions: jnp.ndarray | None = None,
               cross_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
-              ragged: bool = False, tape=None, rt=None):
+              ragged: bool = False, block_tables: jnp.ndarray | None = None,
+              tape=None, rt=None):
     """Self (or cross) attention. x: [b, s, d].
 
     Returns (out, new_cache). Train/prefill: cache=None builds nothing unless
@@ -159,6 +176,12 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
     scattered into the cache at those row positions (not at a shared
     ``cache.length`` offset), and the causal mask is built per row, so a row
     never attends past its own frontier into another row's padding.
+
+    ``cache`` may be a :class:`PagedKVCache`; then ``block_tables``
+    ([b, blocks_per_seq] int32) is required and positions are always
+    per-row: KV is scattered to physical pool slots
+    ``table[pos // bs] * bs + pos % bs`` and attention runs over the
+    gathered per-row view (or the Pallas paged-gather kernel at decode).
     """
     from .layers import record
     b, s, _ = x.shape
@@ -197,6 +220,15 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
             logit_cap=cfg.attn_softcap,
             chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
         new_cache = None
+    elif isinstance(cache, PagedKVCache):
+        if block_tables is None:
+            raise ValueError("paged KV cache requires block_tables")
+        if layer_window > 0:
+            raise NotImplementedError(
+                "paged KV does not support sliding-window layers")
+        out, new_cache = _paged_attention(
+            cache, cfg, q, k, v, positions=positions,
+            block_tables=block_tables, rt=rt)
     elif ragged:
         cache_len = cache.k.shape[1]
         if layer_window > 0 and cache_len <= layer_window:
@@ -268,6 +300,68 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
     return dense(p["wo"], o_in, rt=rt), new_cache
 
 
+def _paged_attention(cache: PagedKVCache, cfg: ModelConfig, q, k, v, *,
+                     positions, block_tables, rt=None):
+    """Scatter new KV into the paged pool, attend over the gathered view.
+
+    q/k/v: [b, s, h, hd]; positions: [b, s] per-row global positions;
+    block_tables: [b, nb_req] int32 physical block ids (sentinel =
+    ``num_blocks`` for unmapped entries). Returns (out, new_cache).
+
+    Writes: position p lands at pool slot ``table[p // bs] * bs + p % bs``.
+    Sentinel/overflow targets map out of range and are dropped, so pad
+    positions beyond a request's mapped pages never touch another
+    request's blocks. Valid prefixes stay position-contiguous per row, so
+    the per-row causal bound (``kv_len = last_pos + 1``) is also the
+    validity mask — exactly the ragged contiguous discipline, relocated
+    through the table.
+
+    Reads: the decode hot loop (s == 1) routes to the Pallas paged-gather
+    kernel via :func:`repro.kernels.ops.paged_attention` when the runtime
+    and the tuning cost model allow; otherwise (prefill, or kernel not
+    applicable) the per-row KV view [b, nb_req * bs, n_kv, hd] is gathered
+    and handed to the same chunked attention as the contiguous path, which
+    keeps paged decoding bit-identical to the contiguous engine.
+    """
+    from repro.kernels import ops as _ops
+    b, s, _, _ = q.shape
+    n_total, bs_blk = cache.k.shape[0], cache.k.shape[1]
+    nb_req = block_tables.shape[1]
+    row_pos = positions.astype(jnp.int32)                     # [b, s]
+    logical = row_pos // bs_blk
+    phys = jnp.take_along_axis(block_tables,
+                               jnp.clip(logical, 0, nb_req - 1), axis=1)
+    flat = phys * bs_blk + row_pos % bs_blk                   # [b, s]
+    valid = (row_pos >= 0) & (logical < nb_req)
+    flat = jnp.where(valid, flat, n_total * bs_blk)           # OOB ⇒ dropped
+    k_flat = cache.k.reshape(n_total * bs_blk, *cache.k.shape[2:])
+    v_flat = cache.v.reshape(n_total * bs_blk, *cache.v.shape[2:])
+    k_flat = k_flat.at[flat].set(k.astype(k_flat.dtype), mode="drop")
+    v_flat = v_flat.at[flat].set(v.astype(v_flat.dtype), mode="drop")
+    new_cache = PagedKVCache(k_flat.reshape(cache.k.shape),
+                             v_flat.reshape(cache.v.shape),
+                             cache.length + s)
+
+    kv_len = row_pos[:, -1] + 1                               # [b]
+    if s == 1:
+        out = _ops.paged_attention(q, new_cache.k, new_cache.v,
+                                   block_tables, kv_len,
+                                   logit_cap=cfg.attn_softcap, rt=rt)
+        if out is not None:
+            return out, new_cache
+    # gather fallback / prefill: per-row contiguous KV view through the table
+    idx = (jnp.clip(block_tables, 0, n_total - 1)[:, :, None] * bs_blk
+           + jnp.arange(bs_blk, dtype=jnp.int32)[None, None, :])
+    k_all = k_flat[idx.reshape(b, nb_req * bs_blk)]
+    v_all = v_flat[idx.reshape(b, nb_req * bs_blk)]
+    out = chunked_attention(
+        q, k_all, v_all, causal=True,
+        q_offset=row_pos[:, 0], kv_len=kv_len,
+        logit_cap=cfg.attn_softcap,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    return out, new_cache
+
+
 def _masked_attention(q, k, v, mask, logit_cap=0.0):
     """Small-q dense attention with explicit mask ([sq, skv] or broadcastable)."""
     b, sq, hq, hd = q.shape
@@ -291,6 +385,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0,
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                    jnp.zeros((), jnp.int32),
                    jnp.full((cache_len,), -(2 ** 30), jnp.int32))
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    """One layer's physical block pool (shared by every request)."""
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        jnp.zeros((), jnp.int32))
 
 
 def _decode_attention_hd_sharded(q, k, v, *, q_offset, kv_len, window=0,

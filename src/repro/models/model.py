@@ -17,7 +17,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .attention import KVCache, attention, attn_params, init_cache
+from .attention import (KVCache, PagedKVCache, attention, attn_params,
+                        init_cache, init_paged_cache)
 from .config import ModelConfig
 from .layers import apply_norm, apply_mlp, dense, linear_params, mlp_params, norm_params, softcap
 from .transformer import (BlockSpec, block_forward, block_params, group_blocks,
@@ -127,13 +128,45 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Block-paged cache pytree: per-layer physical pools, no batch axis.
+
+    Structurally mirrors :func:`init_caches` (prefix list + vmapped scanned
+    groups) but every KV leaf is a :class:`PagedKVCache` pool of
+    ``num_blocks × block_size`` token slots shared by all in-flight
+    requests; per-request block tables are passed to ``forward`` separately.
+    Only attention families qualify (SSM/hybrid state and ring buffers are
+    not pageable), matching the ragged-serving gate in ``serve.Engine``.
+    """
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(
+            f"paged KV cache not supported for family {cfg.family!r}")
+    if cfg.sliding_window > 0 or cfg.local_global_period > 0:
+        raise NotImplementedError(
+            "paged KV cache not supported with sliding-window layers")
+    dt = _dtype(cfg)
+    specs = group_blocks(cfg)
+    caches: dict = {}
+    if cfg.n_dense_layers:
+        caches["prefix"] = [init_paged_cache(cfg, num_blocks, block_size, dt)
+                            for _ in range(cfg.n_dense_layers)]
+
+    def one_group(_):
+        return [init_paged_cache(cfg, num_blocks, block_size, dt)
+                for _ in specs]
+
+    caches["groups"] = jax.vmap(one_group)(jnp.arange(_n_scanned_groups(cfg)))
+    return caches
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
 def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                  mrope_positions, caches, cross_ctx, train: bool,
-                 ragged: bool = False, with_tape: bool = False, rt=None):
+                 ragged: bool = False, block_tables=None,
+                 with_tape: bool = False, rt=None):
     """lax.scan over the stacked groups."""
     specs = group_blocks(cfg)
     shared_p = params.get("shared")
@@ -157,7 +190,8 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                 btape = tape_g[f"b{i}"]
             h, nc, a = block_forward(gp[i], cfg, spec, h, positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     ragged=ragged, tape=btape, rt=rt)
+                                     ragged=ragged, block_tables=block_tables,
+                                     tape=btape, rt=rt)
             aux = aux + a
             new_caches.append(nc if nc is not None else c_i)
             if spec.shared_after and shared_p is not None:
@@ -168,8 +202,8 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                     stape = tape_g["shared"]
                 h, nsc = shared_block_forward(
                     shared_p, cfg, h, x0, positions=positions, cache=sc,
-                    window=cfg.sliding_window, ragged=ragged, tape=stape,
-                    rt=rt)
+                    window=cfg.sliding_window, ragged=ragged,
+                    block_tables=block_tables, tape=stape, rt=rt)
                 if gc is not None:
                     new_caches.append(nsc if nsc is not None else sc)
         if cp is not None:
@@ -215,7 +249,8 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             positions: jnp.ndarray | None = None,
             mrope_positions: jnp.ndarray | None = None,
             caches=None, encoder_out: jnp.ndarray | None = None,
-            train: bool = False, ragged: bool = False, tape=None, rt=None):
+            train: bool = False, ragged: bool = False,
+            block_tables: jnp.ndarray | None = None, tape=None, rt=None):
     """tokens: [b, s] int32 → logits [b, s, vocab].
 
     Returns (logits, new_caches, aux_loss). If ``tape`` is a dict it is
@@ -226,6 +261,9 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     ``ragged=True`` (decode with caches): ``positions`` carries per-row
     global positions and KV writes/masks are per row — see
     :func:`repro.models.attention.attention`.
+    ``block_tables`` ([b, blocks_per_seq] int32): required when ``caches``
+    holds :class:`PagedKVCache` pools — maps each row's logical blocks to
+    physical pool blocks; the same table is used by every layer.
     """
     if ragged and positions is None:
         raise ValueError("ragged forward needs explicit per-row positions")
@@ -256,7 +294,8 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             x, nc, a = block_forward(bp, dense_cfg, BlockSpec("attn"), x,
                                      positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
-                                     ragged=ragged, tape=btape, rt=rt)
+                                     ragged=ragged, block_tables=block_tables,
+                                     tape=btape, rt=rt)
             if tape is not None:
                 tape["prefix"].append(btape)
             aux += a
@@ -268,7 +307,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
         params, cfg, x, x0, positions=positions,
         mrope_positions=mrope_positions, caches=caches,
         cross_ctx=cross_ctx, train=train, ragged=ragged,
-        with_tape=tape is not None, rt=rt)
+        block_tables=block_tables, with_tape=tape is not None, rt=rt)
     aux = aux + aux_s
     if tape is not None:
         tape["groups"] = group_tape
@@ -293,7 +332,11 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
 
 
 def caches_length(caches):
-    """Current decode position from any KV cache in the tree."""
+    """Current decode position from any KV cache in the tree.
+
+    Paged pools are skipped (pool-wide ``length`` is not a per-request
+    position); paged callers always pass explicit positions instead.
+    """
     nodes = jax.tree.leaves(caches, is_leaf=lambda x: isinstance(x, KVCache))
     for c in nodes:
         if isinstance(c, KVCache):

@@ -99,7 +99,7 @@ def group_params(key, cfg: ModelConfig, dtype):
 
 def block_forward(p, cfg: ModelConfig, spec: BlockSpec, x: jnp.ndarray, *,
                   positions, mrope_positions=None, cache=None, ragged=False,
-                  tape=None, rt=None):
+                  block_tables=None, tape=None, rt=None):
     """One block. Returns (y, new_cache, aux)."""
     if spec.kind == "mamba":
         if ragged:
@@ -116,7 +116,8 @@ def block_forward(p, cfg: ModelConfig, spec: BlockSpec, x: jnp.ndarray, *,
     a, new_cache = attention(p["attn"], cfg, h, positions=positions,
                              layer_window=spec.window,
                              mrope_positions=mrope_positions, cache=cache,
-                             ragged=ragged, tape=_sub(tape, "attn"), rt=rt)
+                             ragged=ragged, block_tables=block_tables,
+                             tape=_sub(tape, "attn"), rt=rt)
     if cfg.post_block_norm:
         a = apply_norm(cfg.norm, p["post_attn_norm"], a)
     x = x + a
@@ -141,7 +142,7 @@ def _sub(tape, name: str):
 
 def shared_block_forward(p, cfg: ModelConfig, x, x0, *, positions,
                          cache=None, window: int = 0, ragged=False,
-                         tape=None, rt=None):
+                         block_tables=None, tape=None, rt=None):
     """Shared attention block on concat([x, x0]) (zamba2)."""
     from .layers import record
     h = apply_norm(cfg.norm, p["in_norm"], jnp.concatenate([x, x0], axis=-1))
@@ -149,6 +150,7 @@ def shared_block_forward(p, cfg: ModelConfig, x, x0, *, positions,
     h = dense(p["in_proj"], h, rt=rt)
     a, new_cache = attention(p["attn"], cfg, h, positions=positions,
                              layer_window=window, cache=cache, ragged=ragged,
+                             block_tables=block_tables,
                              tape=_sub(tape, "attn"), rt=rt)
     h = h + a
     m = apply_mlp(cfg.mlp, p["mlp"], apply_norm(cfg.norm, p["mlp_norm"], h),

@@ -20,6 +20,14 @@ exposes slot-level primitives: ``prefill_slot`` (single-request prefill
 scattered into one row of a live batch cache) and ``decode_chunk`` (a
 fixed-size ragged scan chunk carrying per-slot ``done``/``pos`` so the
 scheduler can retire and backfill slots between chunks).
+
+``ServeConfig(kv_layout="paged")`` swaps the per-slot contiguous lanes for
+a **block-paged** KV cache: per-layer physical pools of
+``num_blocks × block_size`` token slots plus per-request block tables
+(``[b, max_len // block_size]`` int32, sentinel ``num_blocks`` for unmapped
+entries). The compiled programs are the same shapes either way; the host
+side (``serve.paged_cache.BlockPool`` + the scheduler) owns allocation,
+prefix sharing, and copy-on-write.
 """
 from __future__ import annotations
 
@@ -31,11 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (KVCache, ModelConfig, encode, forward, init_caches,
+from repro.models import (KVCache, ModelConfig, PagedKVCache, encode,
+                          forward, init_caches, init_paged_caches,
                           prepare_cross_caches)
 from repro.runtime import RuntimeConfig
 
 DECODE_LOOPS = ("scan", "step")
+KV_LAYOUTS = ("contiguous", "paged")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,21 +55,48 @@ class ServeConfig:
     temperature: float = 0.0       # 0 = greedy
     eos_id: int = -1               # -1 = never stop early
     decode_loop: str = "scan"      # "scan" (device-resident) | "step" (debug)
+    kv_layout: str = "contiguous"  # "contiguous" (per-slot lanes) | "paged"
+    block_size: int = 16           # tokens per page (paged layout)
+    num_blocks: int = 0            # pool size; 0 → batch_slots * max_len/bs
 
     def __post_init__(self):
         if self.decode_loop not in DECODE_LOOPS:
             raise ValueError(f"decode_loop must be one of {DECODE_LOOPS}: "
                              f"{self.decode_loop!r}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}: "
+                             f"{self.kv_layout!r}")
+        if self.kv_layout == "paged":
+            if self.block_size < 1:
+                raise ValueError(f"block_size must be >= 1: "
+                                 f"{self.block_size}")
+            if self.max_len % self.block_size:
+                raise ValueError(
+                    f"max_len ({self.max_len}) must be a multiple of "
+                    f"block_size ({self.block_size}) so per-request views "
+                    f"and contiguous lanes have identical widths")
+            if self.num_blocks and \
+                    self.num_blocks * self.block_size < self.max_len:
+                raise ValueError(
+                    f"num_blocks ({self.num_blocks}) * block_size "
+                    f"({self.block_size}) must cover max_len "
+                    f"({self.max_len}): one max-length request must fit a "
+                    f"drained pool or admission can livelock")
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return self.max_len // self.block_size
+
+    @property
+    def pool_blocks(self) -> int:
+        return self.num_blocks or self.batch_slots * self.blocks_per_seq
 
 
 class Engine:
     """Per-deployment engine: holds its own :class:`RuntimeConfig`, so two
     engines in one process can serve e.g. W4A8-pallas next to W4A16-XLA
-    without racing on process state. ``rt=None`` follows the process
-    default runtime, read when the engine first traces — the seed
-    semantics, so legacy callers that construct an Engine and *then* call
-    the deprecated ``ops.set_act_bits``/``ops.use_pallas`` shims before the
-    first ``generate()`` still get what they asked for."""
+    without racing on process state. ``rt=None`` uses the process default
+    ``repro.runtime.DEFAULT_RUNTIME`` at trace time."""
 
     def __init__(self, params, cfg: ModelConfig,
                  scfg: ServeConfig = ServeConfig(),
@@ -86,6 +123,14 @@ class Engine:
                                      donate_argnums=(2,))
         self._prefill_slot = jax.jit(self._prefill_slot_impl,
                                      donate_argnums=(3,))
+        # paged-only programs: suffix prefill through a block table and the
+        # device-side COW copy; the ragged prefill/decode programs above
+        # serve both layouts (``tables=None`` ⇒ contiguous), with the pool
+        # tree donated exactly like the lane caches
+        self._prefill_slot_paged = jax.jit(self._prefill_slot_paged_impl,
+                                           donate_argnums=(4,))
+        self._copy_blocks = jax.jit(self._copy_blocks_impl,
+                                    donate_argnums=(0,))
 
     # -- compiled steps ----------------------------------------------------
     def _prefill_impl(self, params, tokens, caches, encoder_out=None):
@@ -94,7 +139,8 @@ class Engine:
                                     encoder_out=encoder_out, rt=self.rt)
         return logits[:, -1], caches
 
-    def _prefill_ragged_impl(self, params, tokens, lens, caches):
+    def _prefill_ragged_impl(self, params, tokens, lens, caches,
+                             tables=None):
         """Ragged prefill: tokens [b, s_pad] right-padded, lens [b].
 
         The padded forward itself is already sound under causal attention —
@@ -102,10 +148,14 @@ class Engine:
         all real — so the fix is where we *read*: gather each row's logits
         at its true last prompt position ``lens-1``, never the pad tail.
         Pad positions do write garbage KV beyond each row's length; ragged
-        decode overwrites them positionally and masks the rest per row.
+        decode overwrites them positionally and masks the rest per row
+        (contiguous), or drops them at unmapped pages (paged —
+        ``tables`` [b, nb] routes each row's writes through its block
+        table; jit specializes on the None-vs-array structure, so both
+        layouts share this one impl).
         """
         logits, caches, _ = forward(params, self.cfg, tokens, caches=caches,
-                                    rt=self.rt)
+                                    block_tables=tables, rt=self.rt)
         b = tokens.shape[0]
         last = logits[jnp.arange(b), jnp.maximum(lens - 1, 0)]
         return last, caches
@@ -123,11 +173,14 @@ class Engine:
                                     caches=caches, rt=self.rt)
         return self._sample(logits[:, 0], key), caches
 
-    def _decode_ragged_impl(self, params, last_tok, caches, key, pos):
-        """One ragged decode step: row i's token is at position pos[i]."""
+    def _decode_ragged_impl(self, params, last_tok, caches, key, pos,
+                            tables=None):
+        """One ragged decode step: row i's token is at position pos[i].
+        ``tables=None`` ⇒ contiguous lanes; [b, nb] ⇒ paged pool."""
         logits, caches, _ = forward(params, self.cfg, last_tok[:, None],
                                     positions=pos[:, None], caches=caches,
-                                    ragged=True, rt=self.rt)
+                                    ragged=True, block_tables=tables,
+                                    rt=self.rt)
         return self._sample(logits[:, 0], key), caches
 
     def _decode_loop_impl(self, params, tok0, caches, key, done0, *,
@@ -164,14 +217,20 @@ class Engine:
             body, (tok0, caches, key, done0), None, length=n_steps)
         return toks.T, caches                     # [b, n_steps]
 
-    def _decode_chunk_impl(self, params, tok0, caches, key, done0, pos0, *,
-                           n_steps: int):
+    def _decode_chunk_impl(self, params, tok0, caches, key, done0, pos0,
+                           tables=None, *, n_steps: int):
         """Ragged device-resident decode chunk: per-row positions.
 
         Carries per-slot ``pos`` (each row writes KV at its own frontier)
         next to the ``done`` mask of :meth:`_decode_loop_impl`. Returns the
         full carry so the continuous-batching scheduler can stitch chunks:
         ``(toks [b, n_steps], caches, key, done, pos)``.
+
+        ``tables`` ([b, nb] int32, or None for contiguous lanes) is
+        constant across the chunk — the scheduler grows tables only
+        between chunks. Retired paged slots hold all-sentinel rows, so
+        their writes drop on device and freed pages can be re-used by
+        neighbours mid-flight.
         """
         eos = self.scfg.eos_id
 
@@ -181,7 +240,7 @@ class Engine:
             logits, new_caches, _ = forward(params, self.cfg, tok[:, None],
                                             positions=pos[:, None],
                                             caches=caches, ragged=True,
-                                            rt=self.rt)
+                                            block_tables=tables, rt=self.rt)
             nxt = self._sample(logits[:, 0], sub)
             if eos >= 0:
                 nxt = jnp.where(done, jnp.int32(eos), nxt)
@@ -231,25 +290,130 @@ class Engine:
                               is_leaf=lambda x: isinstance(x, KVCache))
         return last, caches
 
+    # -- paged compiled steps ---------------------------------------------
+    def _prefill_slot_paged_impl(self, params, tokens, length, start,
+                                 caches, table):
+        """Single-request paged prefill of a prompt *suffix*.
+
+        tokens: [1, s_bucket] right-padded; ``start`` is the number of
+        prompt tokens already present via shared prefix blocks (their KV is
+        read through ``table`` but never re-computed); ``length`` is the
+        suffix length. Unlike the contiguous ``prefill_slot`` there is no
+        scatter-into-slot step: the pool is global, so writing through the
+        table IS the admission.
+        """
+        b, w = tokens.shape
+        positions = start + jnp.broadcast_to(
+            jnp.arange(w, dtype=jnp.int32)[None], (b, w))
+        logits, caches, _ = forward(params, self.cfg, tokens,
+                                    positions=positions, caches=caches,
+                                    ragged=True, block_tables=table,
+                                    rt=self.rt)
+        last = logits[0, jnp.maximum(length - 1, 0)]
+        return last, caches
+
+    def _copy_blocks_impl(self, caches, src, dst):
+        """Device-side block copy (copy-on-write): pool[dst] = pool[src].
+
+        src/dst: [n] int32 physical block ids. Applied to every paged leaf
+        (all layers share the same table geometry)."""
+        def cp(leaf):
+            if not isinstance(leaf, PagedKVCache):
+                return leaf
+            ax = leaf.k.ndim - 4           # block axis (scanned groups lead)
+            def one(arr):
+                taken = jnp.take(arr, src, axis=ax)
+                idx = [slice(None)] * arr.ndim
+                idx[ax] = dst
+                return arr.at[tuple(idx)].set(taken)
+            return PagedKVCache(one(leaf.k), one(leaf.v), leaf.length)
+        return jax.tree.map(cp, caches,
+                            is_leaf=lambda x: isinstance(x, PagedKVCache))
+
     # -- scheduler-facing API ---------------------------------------------
     def new_caches(self):
-        """Fresh batch caches sized to this engine's slots/max_len."""
+        """Fresh caches for this engine's layout.
+
+        Contiguous: per-slot lanes ``[batch_slots, max_len, n_kv, hd]`` per
+        layer. Paged: per-layer pools ``[pool_blocks, block_size, n_kv,
+        hd]`` (no batch axis; ownership lives in host-side block tables).
+        """
+        if self.scfg.kv_layout == "paged":
+            self._check_ragged_supported()
+            return init_paged_caches(self.cfg, self.scfg.pool_blocks,
+                                     self.scfg.block_size)
         return init_caches(self.cfg, self.scfg.batch_slots, self.scfg.max_len)
 
-    def prefill_slot(self, tokens, length, caches, slot):
-        """Prefill one request into ``slot``; returns (next_tok, caches).
+    def prefill_slot(self, tokens, length, caches, slot, *,
+                     block_table=None, start: int = 0):
+        """Prefill one request into the live serving state.
 
-        ``caches`` is donated — rebind to the returned tree."""
+        Args:
+          tokens: ``[1, s_bucket]`` int32, right-padded to a power-of-two
+            bucket width (pad value is arbitrary; pad positions are never
+            sampled and their cache writes are overwritten positionally —
+            contiguous — or dropped at unmapped pages — paged).
+          length: true token count (``1 <= length <= s_bucket``); traced.
+          caches: the live cache tree. **Donated** — rebind to the result.
+          slot: destination batch row (contiguous layout; ignored for
+            paged, where the block table *is* the destination).
+          block_table: paged only — ``[blocks_per_seq]`` int32 physical ids
+            (sentinel ``num_blocks`` beyond the mapped prefix).
+          start: paged only — prompt tokens already present via shared
+            prefix pages; ``tokens`` then holds the remaining suffix and
+            positions start at ``start``.
+
+        Returns ``(next_tok, caches)``: the greedily sampled first token
+        ([] int32) and the updated cache tree.
+        """
         self._check_ragged_supported()
-        last, caches = self._prefill_slot(
-            self.params, tokens, jnp.asarray(length, jnp.int32), caches,
-            jnp.asarray(slot, jnp.int32))
+        if self.scfg.kv_layout == "paged":
+            if block_table is None:
+                raise ValueError("paged prefill_slot needs a block_table")
+            last, caches = self._prefill_slot_paged(
+                self.params, tokens, jnp.asarray(length, jnp.int32),
+                jnp.asarray(start, jnp.int32), caches,
+                jnp.asarray(block_table, jnp.int32)[None])
+        else:
+            last, caches = self._prefill_slot(
+                self.params, tokens, jnp.asarray(length, jnp.int32), caches,
+                jnp.asarray(slot, jnp.int32))
         return jnp.argmax(last, axis=-1).astype(jnp.int32), caches
 
-    def decode_chunk(self, tok, caches, key, done, pos, n_steps: int):
-        """Run one ragged decode chunk; caches are donated."""
+    def decode_chunk(self, tok, caches, key, done, pos, n_steps: int,
+                     block_tables=None):
+        """Run ``n_steps`` ragged decode steps as one compiled program.
+
+        Args:
+          tok: ``[batch_slots]`` int32 — each slot's last sampled token.
+          caches: live cache tree. **Donated** — rebind to the result.
+          key: PRNG key (consumed; a new one is returned in the carry).
+          done: ``[batch_slots]`` bool — finished/free slots (they emit
+            ``eos_id`` and, once all slots are done, the remaining steps
+            skip the forward entirely on device).
+          pos: ``[batch_slots]`` int32 — each slot's KV frontier (the cache
+            position its next token writes).
+          n_steps: chunk length; static ⇒ one compiled program per value.
+          block_tables: paged only — ``[batch_slots, blocks_per_seq]``
+            int32, constant across the chunk (grow tables between chunks).
+
+        Returns ``(toks [batch_slots, n_steps], caches, key, done, pos)``.
+        """
+        if self.scfg.kv_layout == "paged":
+            if block_tables is None:
+                raise ValueError("paged decode_chunk needs block_tables")
+            return self._decode_chunk(
+                self.params, tok, caches, key, done, pos,
+                jnp.asarray(block_tables, jnp.int32), n_steps=n_steps)
         return self._decode_chunk(self.params, tok, caches, key, done, pos,
-                                  n_steps=n_steps)
+                                  None, n_steps=n_steps)
+
+    def copy_blocks(self, caches, src, dst):
+        """Copy pool blocks ``src → dst`` in every layer (copy-on-write).
+
+        ``caches`` is donated — rebind to the returned tree."""
+        return self._copy_blocks(caches, jnp.asarray(src, jnp.int32),
+                                 jnp.asarray(dst, jnp.int32))
 
     def _check_ragged_supported(self):
         if self.cfg.family in ("ssm", "hybrid", "encdec"):
@@ -265,38 +429,48 @@ class Engine:
     def generate(self, prompts: jnp.ndarray, n_steps: int,
                  frames: Optional[jnp.ndarray] = None, seed: int = 0,
                  prompt_lens: Optional[jnp.ndarray] = None):
-        """prompts: [b, s]. Returns generated tokens [b, n_steps].
+        """Generate ``n_steps`` tokens per row from a (possibly ragged)
+        prompt batch.
 
-        ``prompt_lens`` [b] serves a ragged batch: prompts are right-padded
-        to a common width, each row's first token is sampled from its own
-        last real position and its decode continues from ``prompt_lens[i]``
-        — not the padded width.
+        Args:
+          prompts: ``[b, s]`` int32 token ids, right-padded to a common
+            width ``s`` when rows differ in length (pad value arbitrary —
+            pad positions are never sampled from).
+          n_steps: tokens to generate per row; ``<= 0`` returns ``[b, 0]``.
+          frames: enc-dec (whisper) only — ``[b, encoder_seq, d]`` float
+            encoder-frontend frames.
+          seed: PRNG seed for ``temperature > 0`` sampling (greedy decoding
+            ignores it).
+          prompt_lens: ``[b]`` int32 true per-row lengths, each in
+            ``[1, s]``. When given, the batch is served **ragged**: row
+            ``i``'s first token is sampled from ``logits[i, lens[i]-1]``
+            (its own last real position, never the pad tail) and its decode
+            continues from cache position ``lens[i]`` — not the padded
+            width. Requires ``lens.max() + n_steps <= max_len + 1``.
 
-        With ``eos_id >= 0``, slots that emit eos keep emitting it for the
-        remaining steps (masked continuation) — output shape stays static.
+        Returns ``[b, n_steps]`` int32 generated tokens. With
+        ``eos_id >= 0``, rows that emit eos keep emitting it for the
+        remaining steps (masked continuation — output shape stays static).
+
+        ``ServeConfig(kv_layout="paged")`` runs the same math through a
+        transient block pool (one ``max_len``-worth of pages per row) —
+        token-for-token identical to the contiguous layout, on both decode
+        loops; the property test in ``tests/test_paged_cache.py`` pins it.
         """
         b = prompts.shape[0]
         if n_steps <= 0:
             return jnp.zeros((b, 0), jnp.int32)
         eos = self.scfg.eos_id
-        caches = init_caches(self.cfg, b, self.scfg.max_len)
         key = jax.random.PRNGKey(seed)
+
+        if self.scfg.kv_layout == "paged":
+            return self._generate_paged(prompts, n_steps, key, prompt_lens)
+        caches = init_caches(self.cfg, b, self.scfg.max_len)
 
         if prompt_lens is not None:
             self._check_ragged_supported()
-            lens_np = np.asarray(prompt_lens, np.int32).reshape(-1)
-            if lens_np.shape != (b,):
-                raise ValueError(f"prompt_lens shape {lens_np.shape} != "
-                                 f"({b},)")
-            if lens_np.min() < 1 or lens_np.max() > prompts.shape[1]:
-                raise ValueError(
-                    f"prompt_lens must be in [1, {prompts.shape[1]}] "
-                    f"(padded width): {lens_np}")
-            if int(lens_np.max()) + n_steps > self.scfg.max_len + 1:
-                raise ValueError(
-                    f"longest prompt ({int(lens_np.max())}) + n_steps "
-                    f"({n_steps}) overflows max_len ({self.scfg.max_len})")
-            lens = jnp.asarray(lens_np)
+            lens = jnp.asarray(self._check_lens(prompt_lens, prompts,
+                                                n_steps))
             last, caches = self._prefill_ragged(self.params, prompts, lens,
                                                 caches)
         else:
@@ -341,6 +515,68 @@ class Engine:
             if eos >= 0:
                 nxt = jnp.where(done, jnp.int32(eos), nxt)
                 done = done | (nxt == eos)
+            tok = nxt
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    def _check_lens(self, prompt_lens, prompts, n_steps) -> np.ndarray:
+        b = prompts.shape[0]
+        lens_np = np.asarray(prompt_lens, np.int32).reshape(-1)
+        if lens_np.shape != (b,):
+            raise ValueError(f"prompt_lens shape {lens_np.shape} != ({b},)")
+        if lens_np.min() < 1 or lens_np.max() > prompts.shape[1]:
+            raise ValueError(
+                f"prompt_lens must be in [1, {prompts.shape[1]}] "
+                f"(padded width): {lens_np}")
+        if int(lens_np.max()) + n_steps > self.scfg.max_len + 1:
+            raise ValueError(
+                f"longest prompt ({int(lens_np.max())}) + n_steps "
+                f"({n_steps}) overflows max_len ({self.scfg.max_len})")
+        return lens_np
+
+    def _generate_paged(self, prompts, n_steps, key, prompt_lens):
+        """Whole-batch generation through a transient block pool.
+
+        Row i owns pages ``[i * nb, (i+1) * nb)`` of a fresh pool (nb =
+        blocks_per_seq), so the per-row gathered view has exactly the
+        contiguous lane's width — which keeps this path bit-identical to
+        the contiguous engine while exercising the full paged machinery.
+        """
+        self._check_ragged_supported()
+        b = prompts.shape[0]
+        eos = self.scfg.eos_id
+        nb = self.scfg.blocks_per_seq
+        if prompt_lens is None:
+            lens_np = np.full((b,), prompts.shape[1], np.int32)
+            if prompts.shape[1] + n_steps > self.scfg.max_len + 1:
+                raise ValueError(
+                    f"prompt ({prompts.shape[1]}) + n_steps ({n_steps}) "
+                    f"overflows max_len ({self.scfg.max_len})")
+        else:
+            lens_np = self._check_lens(prompt_lens, prompts, n_steps)
+        lens = jnp.asarray(lens_np)
+        caches = init_paged_caches(self.cfg, b * nb, self.scfg.block_size)
+        tables = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+
+        last, caches = self._prefill_ragged(self.params, prompts, lens,
+                                            caches, tables)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        done = (tok == eos) if eos >= 0 else jnp.zeros((b,), bool)
+        pos = lens
+        if self.scfg.decode_loop == "scan":
+            toks, *_ = self._decode_chunk(self.params, tok, caches, key,
+                                          done, pos, tables,
+                                          n_steps=n_steps - 1)
+            return jnp.concatenate([tok[:, None], toks], axis=1)
+        out = [tok]
+        for _ in range(n_steps - 1):
+            key, sub = jax.random.split(key)
+            nxt, caches = self._decode_ragged(self.params, tok, caches,
+                                              sub, pos, tables)
+            if eos >= 0:
+                nxt = jnp.where(done, jnp.int32(eos), nxt)
+                done = done | (nxt == eos)
+            pos = pos + 1
             tok = nxt
             out.append(tok)
         return jnp.stack(out, axis=1)

@@ -1,0 +1,181 @@
+"""Host-side memory manager for the paged KV cache.
+
+The device side is dumb on purpose: per-layer pools of
+``num_blocks × block_size`` token slots (:class:`repro.models.PagedKVCache`)
+plus per-request block tables threaded through ``forward``. Everything
+stateful lives here, in plain numpy/python on the host:
+
+* **BlockPool** — allocator over physical block ids with per-block
+  reference counts. A block is *in use* (ref > 0: owned by one or more
+  live requests and/or the prefix index), *cached* (ref == 0 but still
+  registered under a prefix hash — reusable, evicted LRU when the free
+  list runs dry), or *free*.
+* **Prefix index** — chained hashes of full prompt blocks → physical block
+  id. Two requests whose prompts share a prefix resolve to the *same*
+  physical blocks (each holding a reference), so the shared prefix is
+  prefilled once and never re-computed: that is the prefix-cache hit the
+  scheduler reports.
+* **Copy-on-write** — :meth:`BlockPool.cow` gives a request a private copy
+  of a shared block the moment it needs to write inside one (first
+  divergent token landing in a block with other holders); the device-side
+  block copy is issued by the engine (``Engine.copy_blocks``).
+
+The scheduler composes these: admission allocates pages (not a fixed
+per-slot lane), retirement releases them, and exhaustion preempts.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def block_hashes(tokens: np.ndarray, block_size: int) -> List[bytes]:
+    """Chained content hashes, one per *full* block of ``tokens``.
+
+    Hash i commits to tokens[0 : (i+1) * block_size] — chaining via the
+    previous digest, so a block only ever matches behind its exact prefix.
+    """
+    out: List[bytes] = []
+    prev = b""
+    for i in range(len(tokens) // block_size):
+        h = hashlib.sha1()
+        h.update(prev)
+        h.update(np.ascontiguousarray(
+            tokens[i * block_size:(i + 1) * block_size], np.int32).tobytes())
+        prev = h.digest()
+        out.append(prev)
+    return out
+
+
+class BlockPool:
+    """Ref-counted allocator + prefix index over ``num_blocks`` physical ids.
+
+    Valid ids are ``0 .. num_blocks - 1``; ``num_blocks`` itself is the
+    device-side sentinel for unmapped block-table entries (its writes drop,
+    its reads clamp and are masked).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"bad pool geometry: {num_blocks}x{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.sentinel = num_blocks
+        self.ref = np.zeros(num_blocks, np.int32)
+        self._free: deque = deque(range(num_blocks))
+        # hash -> block id (live or cached); insertion order = LRU for the
+        # cached subset
+        self._by_hash: "OrderedDict[bytes, int]" = OrderedDict()
+        self._hash_of: Dict[int, bytes] = {}
+        self.evictions = 0
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def cached(self) -> int:
+        """Blocks held only by the prefix index (evictable)."""
+        return sum(1 for bid in self._by_hash.values() if self.ref[bid] == 0)
+
+    def available(self) -> int:
+        """Blocks an ``alloc`` could hand out right now (free + evictable)."""
+        return len(self._free) + self.cached
+
+    def live(self) -> int:
+        return int((self.ref > 0).sum())
+
+    # -- alloc / free ------------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh blocks with ref = 1, or None (atomic: all or none).
+
+        Prefers the free list; evicts least-recently-registered cached
+        prefix blocks when it runs dry.
+        """
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if self.available() < n:
+            return None
+        out: List[int] = []
+        while len(out) < n:
+            if self._free:
+                bid = self._free.popleft()
+            else:
+                bid = self._evict_one()
+            self.ref[bid] = 1
+            out.append(bid)
+        return out
+
+    def _evict_one(self) -> int:
+        for h, bid in self._by_hash.items():     # insertion order = LRU
+            if self.ref[bid] == 0:
+                del self._by_hash[h]
+                del self._hash_of[bid]
+                self.evictions += 1
+                return bid
+        raise RuntimeError("evict with no cached blocks")   # pragma: no cover
+
+    def incref(self, ids: Sequence[int]):
+        for bid in ids:
+            if self.ref[bid] == 0 and bid not in self._hash_of:
+                raise ValueError(f"incref of free block {bid}")
+            self.ref[bid] += 1
+
+    def free(self, ids: Sequence[int]):
+        """Drop one reference per id. A block at ref 0 returns to the free
+        list unless the prefix index still knows it — then it lingers as an
+        evictable cache entry (that's what makes retire-then-resubmit of
+        the same prompt a prefix hit)."""
+        for bid in ids:
+            if self.ref[bid] <= 0:
+                raise ValueError(f"double free of block {bid}")
+            self.ref[bid] -= 1
+            if self.ref[bid] == 0 and bid not in self._hash_of:
+                self._free.append(bid)
+
+    # -- prefix cache ------------------------------------------------------
+    def match_prefix(self, tokens: np.ndarray) -> Tuple[List[int], int]:
+        """Longest chain of cached full blocks matching ``tokens``.
+
+        Returns (physical ids with a reference taken per id, tokens
+        covered). May cover the *whole* prompt when its length is
+        block-aligned and fully cached — the scheduler then still has to
+        re-prefill the final token for its logits, copy-on-writing the last
+        shared block before that write (see ``Scheduler._admit``).
+        """
+        ids: List[int] = []
+        for h in block_hashes(tokens, self.block_size):
+            bid = self._by_hash.get(h)
+            if bid is None:
+                break
+            self._by_hash.move_to_end(h)         # LRU touch
+            self.ref[bid] += 1
+            ids.append(bid)
+        return ids, len(ids) * self.block_size
+
+    def register_prefix(self, tokens: np.ndarray, table: Sequence[int]):
+        """Index ``tokens``' full blocks (backed by ``table``'s physical
+        ids) for future sharing. Idempotent per content hash; the index
+        holds no reference of its own — a block becomes evictable once its
+        holders free it."""
+        for i, h in enumerate(block_hashes(tokens, self.block_size)):
+            bid = int(table[i])
+            if bid >= self.num_blocks:           # sentinel: nothing mapped
+                break
+            if h not in self._by_hash:
+                self._by_hash[h] = bid
+                self._hash_of[bid] = h
+
+    # -- copy-on-write -----------------------------------------------------
+    def cow(self, bid: int) -> Optional[int]:
+        """A privately-owned id for writing "into" shared block ``bid``.
+
+        If the caller is the only holder and the block isn't indexed, the
+        block is already private: returns ``bid``. Otherwise allocates a
+        fresh block (caller must issue the device copy src → dst and drop
+        its reference on ``bid``). None when the pool can't supply one.
+        """
+        if self.ref[bid] == 1 and bid not in self._hash_of:
+            return bid
+        got = self.alloc(1)
+        return got[0] if got is not None else None

@@ -1,17 +1,38 @@
 """Continuous-batching scheduler over :class:`repro.serve.engine.Engine`.
 
-The engine owns the compiled programs; the scheduler owns the ``batch_slots``
-ring. Requests queue up via :meth:`Scheduler.submit` and are admitted into
-free slots with a **per-slot prefill** (``Engine.prefill_slot`` scatters one
-request's KV into one row of the live batch cache), so admitting a new
-request never disturbs the slots that are mid-generation. Decode then runs
-in fixed-size chunks through the engine's donated ragged ``lax.scan``
+The engine owns the compiled programs; the scheduler owns request
+lifecycle. Requests queue up via :meth:`Scheduler.submit` and are admitted
+into free slots with a **per-slot prefill**, so admitting a new request
+never disturbs the slots that are mid-generation. Decode then runs in
+fixed-size chunks through the engine's donated ragged ``lax.scan``
 (``Engine.decode_chunk``), carrying per-slot ``done``/``pos`` across chunks.
 Between chunks the scheduler retires slots that hit EOS or their
 ``max_new_tokens`` budget and immediately backfills them from the queue —
 one long request no longer holds ``batch_slots - 1`` finished neighbours
 hostage, which is where the goodput win over static batching comes from
 (``benchmarks/serve_bench.py --mode continuous``).
+
+With a **paged** engine (``ServeConfig(kv_layout="paged")``) the fixed
+per-slot cache lanes disappear: the scheduler owns a
+:class:`repro.serve.paged_cache.BlockPool` and admits on *pages*, not
+slots —
+
+* **admission** allocates exactly the pages a prompt needs (instead of
+  reserving a worst-case ``max_len`` lane), and stops only when the pool
+  (minus what the prefix cache can evict) is exhausted;
+* **prefix reuse**: prompts are matched block-wise against the ref-counted
+  prefix index, so requests sharing a system prompt / few-shot header map
+  to the *same* physical pages and skip re-prefilling them (the
+  ``prefix_hit_rate`` the benchmark reports); a fully-cached prompt
+  copy-on-writes its last shared page before re-prefilling just the final
+  token for its logits;
+* **decode** allocates pages lazily, one chunk ahead; on exhaustion the
+  newest active request is **preempted to the queue** (its pages freed,
+  its prompt + generated tokens re-queued at the front) rather than
+  wedging the batch;
+* **retire** frees pages immediately; pages the prefix index knows stay
+  resident as evictable cache, so a retired prompt's prefix is still a hit
+  for the next request.
 
 Results stream: ``submit`` returns a :class:`RequestHandle` whose ``poll()``
 yields the token delta generated since the last poll, so callers can
@@ -35,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import Engine
+from .paged_cache import BlockPool
 
 
 @dataclasses.dataclass
@@ -47,10 +69,12 @@ class Request:
 class RequestHandle:
     """Streaming view of one request's generation.
 
-    ``poll()`` returns the tokens generated since the last ``poll()`` (empty
-    list while the request is queued or between chunks); ``done`` flips once
-    the request emitted EOS or exhausted its budget; ``tokens`` is the full
-    generation so far (EOS included when one was emitted).
+    Attributes:
+      tokens: the full generation so far — plain python ints (EOS included
+        when one was emitted). Grows between ``Scheduler.step()`` calls.
+      done: True once the request emitted EOS or exhausted
+        ``max_new_tokens``. A done handle is no longer occupying a slot or
+        any cache pages.
     """
 
     def __init__(self, request: Request):
@@ -60,6 +84,14 @@ class RequestHandle:
         self._cursor = 0
 
     def poll(self) -> List[int]:
+        """Tokens generated since the last ``poll()``.
+
+        Returns a (possibly empty) list of int token ids. Empty while the
+        request is queued or between chunks; after the handle retires
+        (``done``), the first ``poll()`` drains the remaining delta and
+        subsequent calls return ``[]`` forever — polling a retired handle
+        is safe and idempotent.
+        """
         delta = self.tokens[self._cursor:]
         self._cursor = len(self.tokens)
         return delta
@@ -77,13 +109,19 @@ def _bucket(n: int, cap: int, lo: int = 8) -> int:
 class Scheduler:
     """Admit → decode-in-chunks → retire → backfill, over the engine's slots.
 
-    Host-side state is numpy (`tok`/`pos`/`done` per slot, a few dozen
-    bytes); the KV cache tree stays device-resident and is donated through
-    every prefill/chunk, so the scheduler adds one small host transfer per
-    chunk (the sampled tokens) and nothing per token.
+    Host-side state is numpy (`tok`/`pos`/`done` per slot plus, in paged
+    mode, the block tables and pool refcounts — a few hundred bytes); the
+    KV cache tree stays device-resident and is donated through every
+    prefill/chunk, so the scheduler adds one small host transfer per chunk
+    (the sampled tokens) and nothing per token.
+
+    ``prefix_reuse`` (paged engines only) enables the block-granular
+    prefix cache; it changes which pages hold a prompt's KV but never the
+    tokens generated.
     """
 
-    def __init__(self, engine: Engine, chunk_size: int = 8, seed: int = 0):
+    def __init__(self, engine: Engine, chunk_size: int = 8, seed: int = 0,
+                 prefix_reuse: bool = True):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
         engine._check_ragged_supported()
@@ -92,6 +130,7 @@ class Scheduler:
         self.slots = engine.scfg.batch_slots
         self.max_len = engine.scfg.max_len
         self.eos_id = engine.scfg.eos_id
+        self.paged = engine.scfg.kv_layout == "paged"
         self._caches = engine.new_caches()
         self._key = jax.random.PRNGKey(seed)
         self._queue: Deque[RequestHandle] = deque()
@@ -101,10 +140,44 @@ class Scheduler:
         self._done = np.ones((self.slots,), bool)      # free slots are "done"
         self._next_rid = 0
         self.chunks_run = 0
+        # -- paged state ----------------------------------------------------
+        self.prefix_reuse = prefix_reuse and self.paged
+        if self.paged:
+            scfg = engine.scfg
+            self.pool = BlockPool(scfg.pool_blocks, scfg.block_size)
+            self._bs = scfg.block_size
+            self._nbr = scfg.blocks_per_seq
+            self._tables = np.full((self.slots, self._nbr),
+                                   self.pool.sentinel, np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(self.slots)]
+            self._admit_seq = np.zeros((self.slots,), np.int64)
+            self._seq_counter = 0
+        # prefix-cache telemetry (all zeros for contiguous engines)
+        self.prompt_tokens = 0      # Σ effective prompt lengths admitted
+        self.shared_tokens = 0      # Σ prompt tokens served from cached pages
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.preemptions = 0
+        self.cow_copies = 0
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int
                ) -> RequestHandle:
+        """Queue one generation request.
+
+        Args:
+          prompt: non-empty 1-D sequence of int token ids (any integer
+            array-like; stored as int32). Not padded — the scheduler
+            buckets it internally.
+          max_new_tokens: generation budget, ``>= 1``. The request retires
+            at EOS (when the engine's ``eos_id >= 0``) or after exactly
+            this many tokens, whichever comes first. ``len(prompt) +
+            max_new_tokens`` must fit the engine's ``max_len``.
+
+        Returns a :class:`RequestHandle` immediately — generation happens
+        during subsequent :meth:`step` / :meth:`run` calls; stream tokens
+        off the handle with ``poll()``.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -126,32 +199,170 @@ class Scheduler:
         return len(self._queue) + sum(h is not None
                                       for h in self._slot_handle)
 
-    # -- lifecycle ---------------------------------------------------------
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from cached pages."""
+        return self.shared_tokens / self.prompt_tokens \
+            if self.prompt_tokens else 0.0
+
+    # -- admission ---------------------------------------------------------
+    def _effective_prompt(self, handle: RequestHandle) -> np.ndarray:
+        """Prompt plus tokens already generated (preempted requests resume
+        by re-prefilling their own partial generation)."""
+        if not handle.tokens:
+            return handle.request.prompt
+        return np.concatenate([handle.request.prompt,
+                               np.asarray(handle.tokens, np.int32)])
+
+    def _finish_prefill(self, slot, handle, first: int, plen: int) -> bool:
+        """Shared admit tail: returns True if the slot is now occupied."""
+        handle.tokens.append(first)
+        if ((self.eos_id >= 0 and first == self.eos_id)
+                or len(handle.tokens) >= handle.request.max_new_tokens):
+            handle.done = True           # one-token request: slot stays free
+            if self.paged:
+                self.pool.free(self._slot_blocks[slot])
+                self._slot_blocks[slot] = []
+                self._tables[slot] = self.pool.sentinel
+            return False
+        self._slot_handle[slot] = handle
+        self._tok[slot] = first
+        self._pos[slot] = plen
+        self._done[slot] = False
+        return True
+
+    def _admit_contiguous(self, slot) -> bool:
+        while self._queue:
+            handle = self._queue.popleft()
+            req = handle.request
+            width = _bucket(req.prompt.size, self.max_len)
+            padded = np.zeros((1, width), np.int32)
+            padded[0, :req.prompt.size] = req.prompt
+            tok, self._caches = self.engine.prefill_slot(
+                jnp.asarray(padded), req.prompt.size, self._caches, slot)
+            if self._finish_prefill(slot, handle, int(tok), req.prompt.size):
+                return True
+        return False
+
+    def _admit_paged(self, slot) -> bool:
+        while self._queue:
+            handle = self._queue[0]
+            prompt = self._effective_prompt(handle)
+            plen = prompt.size
+            shared_ids, shared_tok = (self.pool.match_prefix(prompt)
+                                      if self.prefix_reuse else ([], 0))
+            cow_src = shared_ids[-1] if shared_tok == plen else None
+            need = -(-(plen + 1) // self._bs) - len(shared_ids) \
+                + (1 if cow_src is not None else 0)
+            fresh = self.pool.alloc(need)
+            if fresh is None:
+                # page-aware admission: pool (incl. evictable prefix cache)
+                # is exhausted — leave the request queued, stop admitting
+                self.pool.free(shared_ids)
+                return False
+            self._queue.popleft()
+            blocks = list(shared_ids)
+            if cow_src is not None:
+                # whole prompt cached: take a private copy of the last
+                # shared page, then re-prefill only the final token (its
+                # logits seed sampling; its KV write must not land in a
+                # page other requests hold)
+                cow_dst = fresh[0]
+                self._caches = self.engine.copy_blocks(
+                    self._caches, [cow_src], [cow_dst])
+                self.pool.free([cow_src])      # drop our ref on the original
+                blocks[-1] = cow_dst
+                fresh = fresh[1:]
+                self.cow_copies += 1
+            blocks += fresh
+            start = plen - 1 if cow_src is not None else shared_tok
+
+            table = np.full((self._nbr,), self.pool.sentinel, np.int32)
+            table[:len(blocks)] = blocks
+            suffix = prompt[start:]
+            width = _bucket(suffix.size, self.max_len)
+            padded = np.zeros((1, width), np.int32)
+            padded[0, :suffix.size] = suffix
+            tok, self._caches = self.engine.prefill_slot(
+                jnp.asarray(padded), suffix.size, self._caches, slot,
+                block_table=table, start=start)
+
+            self._slot_blocks[slot] = blocks
+            self._tables[slot] = table
+            self._seq_counter += 1
+            self._admit_seq[slot] = self._seq_counter
+            if self.prefix_reuse:
+                self.pool.register_prefix(prompt, blocks)
+            if not handle.tokens:
+                # telemetry counts fresh admissions only: a preempted
+                # request re-matching its own still-cached pages on resume
+                # is not cross-request sharing and must not inflate the
+                # hit rate the benchmark reports
+                self.prefix_queries += 1
+                self.prefix_hits += bool(start)
+                self.prompt_tokens += plen
+                self.shared_tokens += start
+            if self._finish_prefill(slot, handle, int(tok), plen):
+                return True
+        return False
+
     def _admit(self):
         """Fill free slots from the queue via per-slot prefill."""
         for slot in range(self.slots):
             if self._slot_handle[slot] is not None:
                 continue
-            while self._queue:
-                handle = self._queue.popleft()
-                req = handle.request
-                width = _bucket(req.prompt.size, self.max_len)
-                padded = np.zeros((1, width), np.int32)
-                padded[0, :req.prompt.size] = req.prompt
-                tok, self._caches = self.engine.prefill_slot(
-                    jnp.asarray(padded), req.prompt.size, self._caches, slot)
-                first = int(tok)
-                handle.tokens.append(first)
-                if ((self.eos_id >= 0 and first == self.eos_id)
-                        or req.max_new_tokens == 1):
-                    handle.done = True   # one-token request: slot stays free
+            if not (self._admit_paged(slot) if self.paged
+                    else self._admit_contiguous(slot)):
+                if not self._queue:
                     continue
-                self._slot_handle[slot] = handle
-                self._tok[slot] = first
-                self._pos[slot] = req.prompt.size
-                self._done[slot] = False
-                break
+                break                     # paged pool exhausted: stop here
 
+    # -- paged page management ---------------------------------------------
+    def _release_slot(self, slot):
+        self._slot_handle[slot] = None
+        self._done[slot] = True
+        if self.paged:
+            self.pool.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._tables[slot] = self.pool.sentinel
+
+    def _preempt(self, slot):
+        """Free a slot's pages and push its request back to the queue
+        front; it resumes later by re-prefilling prompt + generation."""
+        handle = self._slot_handle[slot]
+        self._release_slot(slot)
+        self._queue.appendleft(handle)
+        self.preemptions += 1
+
+    def _ensure_pages(self):
+        """Grow each active slot's table to cover the next chunk,
+        preempting the newest request(s) when the pool runs dry."""
+        order = sorted((s for s in range(self.slots)
+                        if self._slot_handle[s] is not None),
+                       key=lambda s: self._admit_seq[s])
+        for slot in order:
+            if self._slot_handle[slot] is None:
+                continue                      # preempted below, skip
+            while True:
+                target = min(int(self._pos[slot]) + self.chunk_size,
+                             self.max_len)
+                need = -(-target // self._bs) - len(self._slot_blocks[slot])
+                if need <= 0:
+                    break
+                got = self.pool.alloc(need)
+                if got is not None:
+                    row = self._slot_blocks[slot]
+                    self._tables[slot, len(row):len(row) + len(got)] = got
+                    row.extend(got)
+                    break
+                active = [s for s in range(self.slots)
+                          if self._slot_handle[s] is not None]
+                victim = max(active, key=lambda s: self._admit_seq[s])
+                self._preempt(victim)
+                if victim == slot:
+                    break                     # this slot itself went back
+
+    # -- lifecycle ---------------------------------------------------------
     def _retire_or_keep(self, slot: int, chunk_toks: np.ndarray):
         handle = self._slot_handle[slot]
         req = handle.request
@@ -165,8 +376,7 @@ class Scheduler:
                 handle.done = True
                 break
         if handle.done:
-            self._slot_handle[slot] = None
-            self._done[slot] = True
+            self._release_slot(slot)
 
     def step(self) -> bool:
         """Admit, run one decode chunk, distribute tokens, retire.
@@ -175,6 +385,8 @@ class Scheduler:
         drained); True means there is more work.
         """
         self._admit()
+        if self.paged:
+            self._ensure_pages()
         active = [s for s in range(self.slots)
                   if self._slot_handle[s] is not None]
         if not active:
@@ -182,7 +394,8 @@ class Scheduler:
         toks, self._caches, self._key, done, pos = self.engine.decode_chunk(
             jnp.asarray(self._tok), self._caches, self._key,
             jnp.asarray(self._done), jnp.asarray(self._pos),
-            n_steps=self.chunk_size)
+            n_steps=self.chunk_size,
+            block_tables=self._tables if self.paged else None)
         self.chunks_run += 1
         toks = np.asarray(toks)                       # [slots, chunk]
         # adopt the device carry: pos is each slot's true KV frontier (the

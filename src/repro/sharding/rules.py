@@ -157,14 +157,20 @@ def _paths(tree, prefix=""):
     return out
 
 
-def _map_with_paths(fn, tree, prefix=""):
+def _map_with_paths(fn, tree, prefix="", leaf_types=()):
+    """Map ``fn(path, leaf)`` over a pytree; ``leaf_types`` instances are
+    handed to ``fn`` whole instead of being recursed into."""
+    if leaf_types and isinstance(tree, leaf_types):
+        return fn(prefix, tree)
     if isinstance(tree, dict):
-        return {k: _map_with_paths(fn, v, f"{prefix}/{k}") for k, v in tree.items()}
+        return {k: _map_with_paths(fn, v, f"{prefix}/{k}", leaf_types)
+                for k, v in tree.items()}
     if isinstance(tree, tuple) and hasattr(tree, "_fields"):
-        return type(tree)(*[_map_with_paths(fn, getattr(tree, k), f"{prefix}/{k}")
+        return type(tree)(*[_map_with_paths(fn, getattr(tree, k),
+                                            f"{prefix}/{k}", leaf_types)
                             for k in tree._fields])
     if isinstance(tree, (list, tuple)):
-        return type(tree)(_map_with_paths(fn, v, f"{prefix}/{i}")
+        return type(tree)(_map_with_paths(fn, v, f"{prefix}/{i}", leaf_types)
                           for i, v in enumerate(tree))
     return fn(prefix, tree)
 
@@ -286,14 +292,51 @@ def cache_spec(path: str, shape, axis_sizes: dict, *,
     return _sanitize_sizes(P(*spec), shape, axis_sizes)
 
 
+def paged_pool_spec(path: str, shape, axis_sizes: dict, *,
+                    seq_to_data: bool = False) -> P:
+    """Spec for one paged block-pool leaf (mesh-free, unit-testable).
+
+    k/v pools are ``[*, num_blocks, block_size, n_kv, hd]`` — there is no
+    batch axis to shard (requests own *pages*, not rows), so the model
+    axis first-fits over kv-heads, then head_dim, then block_size — the
+    same preference order (and for the same reason: local decode writes)
+    as the contiguous :func:`cache_spec`. ``seq_to_data`` spreads the
+    *block* axis over data instead, the paged analogue of sharding cache
+    length for SP long-context decode: pages of one request land on
+    different data replicas.
+    """
+    ndim = len(shape)
+    spec = [None] * ndim
+    if not (path.endswith("/k") or path.endswith("/v")) or ndim < 4:
+        return P()
+    model = "model" if "model" in axis_sizes else None
+    data = "data" if "data" in axis_sizes else None
+    off = ndim - 4
+    if seq_to_data and data is not None:
+        _first_fit(spec, shape, (off + 0,), data, axis_sizes["data"])
+    if model is not None:
+        _first_fit(spec, shape, (off + 2, off + 3, off + 1),
+                   model, axis_sizes.get("model", 1))
+    return _sanitize_sizes(P(*spec), shape, axis_sizes)
+
+
 def cache_shardings(caches, mesh: Mesh, *, seq_to_data: bool = False):
     """Shard KV caches: kv-heads → model; optionally cache seq → data (SP
-    long-context decode). SSM caches: heads → model."""
+    long-context decode). SSM caches: heads → model. Paged block pools
+    route through :func:`paged_pool_spec` (no batch axis — pages are the
+    unit of ownership, so only heads/head_dim/blocks are shardable)."""
+    from repro.models.attention import PagedKVCache
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def one(path, leaf):
+        if isinstance(leaf, PagedKVCache):
+            return PagedKVCache(*[
+                NamedSharding(mesh, paged_pool_spec(
+                    f"{path}/{f}", getattr(leaf, f).shape, sizes,
+                    seq_to_data=seq_to_data))
+                for f in leaf._fields])
         spec = cache_spec(path, getattr(leaf, "shape", ()), sizes,
                           seq_to_data=seq_to_data)
         return NamedSharding(mesh, spec)
 
-    return _map_with_paths(one, caches)
+    return _map_with_paths(one, caches, leaf_types=(PagedKVCache,))

@@ -1,0 +1,404 @@
+"""Paged KV cache: engine parity, block pool, prefix reuse, COW, kernel.
+
+The definitive guard for the paged tentpole: for ANY mix of prompt lengths,
+`Engine(kv_layout="paged")` must generate token-for-token what the
+contiguous-lane engine generates — on both decode loops — while routing
+every KV byte through the global block pool and per-request block tables.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
+
+from repro.configs.registry import get_smoke_config
+from repro.models import PagedKVCache, init_params
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.paged_cache import BlockPool, block_hashes
+from repro.serve.scheduler import Scheduler
+
+
+MAX_PROMPT = 8
+BATCH = 3
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engines(tiny):
+    cfg, params = tiny
+    out = {}
+    for loop in ("scan", "step"):
+        out[loop] = {
+            "contiguous": Engine(params, cfg,
+                                 ServeConfig(max_len=32, decode_loop=loop)),
+            "paged": Engine(params, cfg,
+                            ServeConfig(max_len=32, decode_loop=loop,
+                                        kv_layout="paged", block_size=8)),
+        }
+    return cfg, out
+
+
+def _ragged_batch(cfg, seed: int):
+    key = jax.random.PRNGKey(seed)
+    lens = np.asarray(jax.random.randint(key, (BATCH,), 1, MAX_PROMPT + 1))
+    padded = np.zeros((BATCH, MAX_PROMPT), np.int32)
+    for i, L in enumerate(lens):
+        padded[i, :int(L)] = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (int(L),), 0, cfg.vocab_size))
+    return lens.astype(np.int32), padded
+
+
+# ---------------------------------------------------------------------------
+# Property: paged decoding ≡ contiguous decoding (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_paged_matches_contiguous_on_ragged_batches(engines, seed):
+    cfg, engs = engines
+    lens, padded = _ragged_batch(cfg, seed)
+    for loop in ("scan", "step"):
+        cont = np.asarray(engs[loop]["contiguous"].generate(
+            jnp.asarray(padded), 6, prompt_lens=lens))
+        paged = np.asarray(engs[loop]["paged"].generate(
+            jnp.asarray(padded), 6, prompt_lens=lens))
+        assert np.array_equal(cont, paged), (loop, seed, lens)
+
+
+def test_paged_matches_contiguous_uniform(engines):
+    """No prompt_lens (the legacy uniform path) is paged-equal too."""
+    cfg, engs = engines
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (BATCH, 5), 0,
+                                 cfg.vocab_size)
+    for loop in ("scan", "step"):
+        a = np.asarray(engs[loop]["contiguous"].generate(prompts, 6))
+        b = np.asarray(engs[loop]["paged"].generate(prompts, 6))
+        assert np.array_equal(a, b), loop
+
+
+def test_paged_eos_masked_continuation(tiny):
+    cfg, params = tiny
+    lens, padded = _ragged_batch(cfg, seed=5)
+    free = np.asarray(Engine(params, cfg, ServeConfig(max_len=32)).generate(
+        jnp.asarray(padded), 8, prompt_lens=lens))
+    eos = int(free[0, 3])
+    for loop in ("scan", "step"):
+        cont = Engine(params, cfg, ServeConfig(max_len=32, eos_id=eos,
+                                               decode_loop=loop))
+        paged = Engine(params, cfg, ServeConfig(max_len=32, eos_id=eos,
+                                                decode_loop=loop,
+                                                kv_layout="paged",
+                                                block_size=8))
+        a = np.asarray(cont.generate(jnp.asarray(padded), 8,
+                                     prompt_lens=lens))
+        b = np.asarray(paged.generate(jnp.asarray(padded), 8,
+                                      prompt_lens=lens))
+        assert np.array_equal(a, b), loop
+
+
+def test_paged_serve_config_validation():
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeConfig(kv_layout="bogus")
+    with pytest.raises(ValueError, match="multiple of"):
+        ServeConfig(kv_layout="paged", max_len=60, block_size=16)
+    with pytest.raises(ValueError, match="drained pool"):
+        ServeConfig(kv_layout="paged", max_len=64, block_size=16,
+                    num_blocks=2)
+    scfg = ServeConfig(kv_layout="paged", max_len=64, block_size=16,
+                       batch_slots=4)
+    assert scfg.blocks_per_seq == 4 and scfg.pool_blocks == 16
+
+
+def test_paged_rejects_stateful_families():
+    ssm_cfg = get_smoke_config("mamba2_780m").reduced(d_model=32, n_layers=2)
+    ssm_params = init_params(jax.random.PRNGKey(0), ssm_cfg)
+    eng = Engine(ssm_params, ssm_cfg,
+                 ServeConfig(max_len=32, kv_layout="paged", block_size=8))
+    with pytest.raises(NotImplementedError, match="family"):
+        eng.generate(jnp.zeros((2, 4), jnp.int32), 2)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool: refcounts, eviction, chained prefix index, copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_block_hashes_chain():
+    toks = np.arange(20, dtype=np.int32)
+    h = block_hashes(toks, 8)
+    assert len(h) == 2                        # only full blocks
+    # chained: same second block behind a different first block ≠ match
+    other = toks.copy()
+    other[0] += 1
+    assert block_hashes(other, 8)[1] != h[1]
+    assert block_hashes(toks[:16], 8) == h
+
+
+def test_pool_alloc_free_refcount():
+    pool = BlockPool(4, 8)
+    a = pool.alloc(3)
+    assert sorted(a) == [0, 1, 2] and pool.available() == 1
+    assert pool.alloc(2) is None              # atomic: all or none
+    pool.incref([a[0]])
+    pool.free(a)
+    assert pool.available() == 3              # a[0] still held once
+    pool.free([a[0]])
+    assert pool.available() == 4 and pool.live() == 0
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([a[0]])
+
+
+def test_pool_prefix_match_and_eviction():
+    pool = BlockPool(4, 4)
+    toks = np.arange(12, dtype=np.int32)      # 3 full blocks
+    blocks = pool.alloc(3)
+    pool.register_prefix(toks, blocks)
+    # a full-prompt match takes a ref on every block
+    ids, n = pool.match_prefix(toks)
+    assert ids == blocks and n == 12
+    pool.free(ids)
+    pool.free(blocks)                         # owner retires
+    assert pool.available() == 4 and pool.cached == 3
+    # matching a shorter prefix only takes the matching chain
+    ids, n = pool.match_prefix(np.concatenate([toks[:8], [99, 98]]))
+    assert ids == blocks[:2] and n == 8
+    pool.free(ids)
+    # exhaustion evicts cached blocks LRU and drops their index entries
+    got = pool.alloc(4)
+    assert got is not None and pool.evictions == 3
+    ids, n = pool.match_prefix(toks)
+    assert ids == [] and n == 0
+
+
+def test_pool_cow_semantics():
+    pool = BlockPool(4, 4)
+    toks = np.arange(4, dtype=np.int32)
+    (b0,) = pool.alloc(1)
+    # private, unindexed block: write in place
+    assert pool.cow(b0) == b0
+    pool.register_prefix(toks, [b0])
+    # indexed block: must copy even with one holder (the cache entry would
+    # silently diverge otherwise)
+    dst = pool.cow(b0)
+    assert dst != b0 and pool.ref[dst] == 1
+    pool.free([dst])
+    # shared block (second holder via match): must copy
+    pool.free([b0])
+    ids, _ = pool.match_prefix(toks)
+    assert ids == [b0]
+    dst = pool.cow(b0)
+    assert dst is not None and dst != b0
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged-gather kernel ≈ gathered reference
+# ---------------------------------------------------------------------------
+
+def test_paged_kernel_matches_gather_reference():
+    from repro.kernels.paged_attention import paged_decode_attention
+    rng = np.random.default_rng(0)
+    b, hq, hkv, hd, bs, n_total, nbr = 3, 4, 2, 32, 8, 12, 3
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(n_total, bs, hkv, hd))
+                     .astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(n_total, bs, hkv, hd))
+                     .astype(np.float32))
+    bt = jnp.asarray(np.array([[0, 3, 7], [2, 5, n_total],
+                               [9, n_total, n_total]], np.int32))
+    klen = jnp.asarray(np.array([20, 11, 4], np.int32))
+    out = np.asarray(paged_decode_attention(q, kp, vp, bt, klen,
+                                            interpret=True))
+
+    kf = np.asarray(kp).reshape(n_total * bs, hkv, hd)
+    vf = np.asarray(vp).reshape(n_total * bs, hkv, hd)
+    group = hq // hkv
+    for i in range(b):
+        idx = (np.clip(np.asarray(bt)[i], 0, n_total - 1)[:, None] * bs
+               + np.arange(bs)).reshape(-1)
+        for h in range(hq):
+            kh, vh = kf[idx][:, h // group], vf[idx][:, h // group]
+            s = (np.asarray(q)[i, 0, h] @ kh.T) * hd ** -0.5
+            s[np.arange(len(s)) >= int(klen[i])] = -1e30
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            np.testing.assert_allclose(out[i, 0, h], p @ vh,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_paged_engine_with_pallas_kernel(tiny):
+    """Full paged generation routed through the Pallas decode kernel
+    (interpret mode) stays close to the XLA gather path."""
+    from repro.runtime import RuntimeConfig
+    cfg, params = tiny
+    lens, padded = _ragged_batch(cfg, seed=3)
+    mk = lambda rt: Engine(params, cfg,
+                           ServeConfig(max_len=32, kv_layout="paged",
+                                       block_size=8), rt=rt)
+    xla = np.asarray(mk(RuntimeConfig(use_pallas=False)).generate(
+        jnp.asarray(padded), 5, prompt_lens=lens))
+    pls = np.asarray(mk(RuntimeConfig(use_pallas=True, interpret=True))
+                     .generate(jnp.asarray(padded), 5, prompt_lens=lens))
+    # greedy argmax over f32 logits: reduction-order differences between the
+    # kernel and the gather path may flip near-ties on a handful of steps,
+    # but the overwhelming majority must agree
+    assert (xla == pls).mean() > 0.8
+
+
+def test_tuning_routes_paged_kernel():
+    from repro.kernels import tuning
+    assert tuning.use_paged_kernel(8, 32, 16, 8, 128)
+    # a pathological block shape must fall back to the gather path
+    assert not tuning.use_paged_kernel(8, 4, 65536, 8, 4096)
+
+
+# ---------------------------------------------------------------------------
+# Paged scheduler: parity, prefix reuse, COW, preemption
+# ---------------------------------------------------------------------------
+
+def _prompts(cfg, spec, seed=2):
+    key = jax.random.PRNGKey(seed)
+    return [(np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                           (L,), 0, cfg.vocab_size)), n)
+            for i, (L, n) in enumerate(spec)]
+
+
+def test_paged_scheduler_matches_per_request_generate(tiny):
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8))
+    sched = Scheduler(eng, chunk_size=3)
+    reqs = [(p, n, sched.submit(p, n)) for p, n in
+            _prompts(cfg, [(5, 8), (2, 4), (7, 11), (3, 1), (4, 6), (6, 9)])]
+    sched.run()
+    for prompt, n, handle in reqs:
+        ref = np.asarray(eng.generate(jnp.asarray(prompt[None]), n))[0]
+        assert np.array_equal(np.asarray(handle.tokens), ref), \
+            (len(prompt), n)
+    assert sched.pool.live() == 0             # every page returned
+
+
+def test_prefix_reuse_hits_and_matches(tiny):
+    """Requests sharing a prompt prefix map to the same physical pages,
+    skip re-prefilling them, and still generate identical tokens."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8))
+    shared = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (20,), 0,
+                                           cfg.vocab_size))
+    reqs = [(np.concatenate([shared, np.asarray(t, np.int32)]), n)
+            for t, n in ([[3, 5], 6], [[7], 5], [[1, 2, 3], 4])]
+    sched = Scheduler(eng, chunk_size=4)
+    handles = [(p, n, sched.submit(p, n)) for p, n in reqs]
+    sched.run()
+    for p, n, h in handles:
+        ref = np.asarray(eng.generate(jnp.asarray(p[None]), n))[0]
+        assert np.array_equal(np.asarray(h.tokens), ref)
+    assert sched.prefix_hits == 2             # 2nd and 3rd share 2 pages
+    assert sched.shared_tokens == 2 * 16
+    assert 0 < sched.prefix_hit_rate < 1
+
+
+def test_full_prompt_cache_hit_triggers_cow(tiny):
+    """An identical block-aligned prompt re-submitted after retirement hits
+    every page; the last one is copy-on-written before the logits
+    re-prefill, and the generation still matches a fresh run."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8))
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (24,), 0,
+                                           cfg.vocab_size))
+    sched = Scheduler(eng, chunk_size=4)
+    h1 = sched.submit(prompt, 4)
+    sched.run()
+    h2 = sched.submit(prompt, 6)
+    sched.run()
+    assert sched.cow_copies == 1
+    assert sched.shared_tokens >= 23          # everything but the last token
+    ref = np.asarray(eng.generate(jnp.asarray(prompt[None]), 6))[0]
+    assert np.array_equal(np.asarray(h2.tokens), ref)
+    assert np.array_equal(np.asarray(h1.tokens), ref[:4])
+
+
+def test_prefix_reuse_off_never_shares(tiny):
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8))
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(8), (16,), 0,
+                                      cfg.vocab_size))
+    sched = Scheduler(eng, chunk_size=4, prefix_reuse=False)
+    h1, h2 = sched.submit(p, 4), sched.submit(p, 4)
+    sched.run()
+    assert sched.shared_tokens == 0 and sched.prefix_hit_rate == 0.0
+    assert h1.tokens == h2.tokens
+
+
+def test_preemption_under_tiny_pool_still_exact(tiny):
+    """A pool of exactly one max-length lane forces preempt-to-queue; the
+    preempted request resumes by re-prefilling its own generation and
+    still matches its dedicated run token-for-token."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8,
+                                          num_blocks=8))
+    sched = Scheduler(eng, chunk_size=4)
+    reqs = [(p, n, sched.submit(p, n)) for p, n in
+            _prompts(cfg, [(20, 30), (16, 40), (10, 20)], seed=5)]
+    sched.run()
+    assert sched.preemptions > 0
+    for p, n, h in reqs:
+        ref = np.asarray(eng.generate(jnp.asarray(p[None]), n))[0]
+        assert np.array_equal(np.asarray(h.tokens), ref), (len(p), n)
+    assert sched.pool.live() == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharding: the block pool has no batch axis to shard
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_spec_shards_heads_not_blocks():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import paged_pool_spec
+    sizes = {"data": 2, "model": 2}
+    # [num_blocks, block_size, n_kv, hd]: model → kv heads, blocks unsharded
+    assert paged_pool_spec("/g/0/k", (64, 16, 4, 128), sizes) == \
+        P(None, None, "model", None)
+    # few-kv-head: fall through to head_dim
+    assert paged_pool_spec("/g/0/k", (64, 16, 1, 128), sizes) == \
+        P(None, None, None, "model")
+    # seq_to_data pages across data replicas
+    assert paged_pool_spec("/g/0/v", (64, 16, 4, 128), sizes,
+                           seq_to_data=True) == \
+        P("data", None, "model", None)
+    # scalars / non-kv leaves replicated
+    assert paged_pool_spec("/g/0/length", (), sizes) == P()
+
+
+def test_cache_shardings_handles_paged_tree(tiny):
+    from repro.models import init_paged_caches
+    from repro.sharding.rules import cache_shardings
+    cfg, _ = tiny
+    caches = init_paged_caches(cfg, 16, 8)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1),
+                             ("model",))
+    sds = cache_shardings(caches, mesh)
+    leaves = jax.tree.leaves(sds, is_leaf=lambda x: isinstance(
+        x, jax.sharding.NamedSharding))
+    assert leaves and all(isinstance(s, jax.sharding.NamedSharding)
+                          for s in leaves)

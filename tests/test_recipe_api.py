@@ -331,12 +331,13 @@ def test_runtime_config_per_tensor_granularity(leaf_data, rng):
 
 
 def test_runtime_config_threads_through_forward():
-    """forward(rt=...) reproduces what the deprecated global shim did."""
-    import warnings
+    """forward(rt=...) steers the quantized path: a_bits=6 differs from the
+    default, and rt=None means exactly DEFAULT_RUNTIME."""
     from repro.configs.registry import get_smoke_config
     from repro.data.synthetic import CorpusConfig, SyntheticCorpus
     from repro.models import forward, init_params
     from repro.quant import calibrate, reduce_shared
+    from repro.runtime import DEFAULT_RUNTIME
 
     cfg = dataclasses.replace(get_smoke_config("llama3_8b"), dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -346,23 +347,21 @@ def test_runtime_config_threads_through_forward():
     qp = quantize_model(params, tape, registry.resolve("aser_as", rank=8,
                                                        outlier_f=8))
     toks = corpus.sample(jnp.asarray(5), 2, 16)
-    lg_rt, _, _ = forward(qp, cfg, toks, rt=RuntimeConfig(a_bits=6))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        ops.set_act_bits(6)
-        lg_shim, _, _ = forward(qp, cfg, toks)
-        ops.set_act_bits(8)
-    np.testing.assert_allclose(np.asarray(lg_rt), np.asarray(lg_shim),
-                               rtol=1e-6, atol=1e-6)
+    lg_a6, _, _ = forward(qp, cfg, toks, rt=RuntimeConfig(a_bits=6))
+    lg_default, _, _ = forward(qp, cfg, toks)
+    lg_explicit, _, _ = forward(qp, cfg, toks, rt=DEFAULT_RUNTIME)
+    np.testing.assert_array_equal(np.asarray(lg_default),
+                                  np.asarray(lg_explicit))
+    assert not np.allclose(np.asarray(lg_a6), np.asarray(lg_default))
 
 
-def test_deprecated_shims_warn():
-    import warnings
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        ops.set_act_bits(8)
-        ops.use_pallas(False)
-    assert sum(issubclass(r.category, DeprecationWarning) for r in rec) == 2
+def test_global_shims_are_gone():
+    """PR 1 kept ops.set_act_bits / ops.use_pallas "one release"; that
+    release shipped — mutating process state is no longer possible."""
+    assert not hasattr(ops, "set_act_bits")
+    assert not hasattr(ops, "use_pallas")
+    from repro.runtime import DEFAULT_RUNTIME
+    assert ops.default_runtime() == DEFAULT_RUNTIME
 
 
 def test_fp16_recipe_is_noop(leaf_data):

@@ -254,28 +254,42 @@ def test_serve_bench_validator():
     sb = importlib.import_module("benchmarks.serve_bench")
     row = {f: 1.0 for f in sb.ROW_FIELDS}
     crow = {f: 1.0 for f in sb.CONT_ROW_FIELDS}
+    prow = {f: 1.0 for f in sb.PREFIX_ROW_FIELDS}
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
-    good = {"schema": sb.SCHEMA, "smoke": True,
-            "rows": rows, "continuous_rows": crows}
+    prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
+    good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
+            "continuous_rows": crows, "prefix_rows": prows}
     assert sb.validate(good)
-    # v1 files (static rows only) must keep validating
+    # v1 (static only) and v2 (static + continuous) must keep validating
     assert sb.validate({"schema": sb.SCHEMA_V1, "smoke": True, "rows": rows})
+    assert sb.validate({"schema": sb.SCHEMA_V2, "smoke": True, "rows": rows,
+                        "continuous_rows": crows})
     with pytest.raises(ValueError):
         sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):
         sb.validate({"schema": sb.SCHEMA, "rows": [dict(row, mode="fp")],
-                     "continuous_rows": crows})
+                     "continuous_rows": crows, "prefix_rows": prows})
     bad = dict(row, mode="fp", prefill_ms=float("nan"))
     with pytest.raises(ValueError):
         sb.validate({"schema": sb.SCHEMA,
                      "rows": [bad, dict(row, mode="w4a8_aser")],
-                     "continuous_rows": crows})
+                     "continuous_rows": crows, "prefix_rows": prows})
     # v2 without goodput rows is invalid; v2 demands positive goodput
     with pytest.raises(ValueError, match="continuous"):
-        sb.validate({"schema": sb.SCHEMA, "rows": rows})
+        sb.validate({"schema": sb.SCHEMA_V2, "rows": rows})
     with pytest.raises(ValueError):
-        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+        sb.validate({"schema": sb.SCHEMA_V2, "rows": rows,
                      "continuous_rows": [
                          dict(crow, mode="fp", goodput_tok_s=0.0),
                          dict(crow, mode="w4a8_aser")]})
+    # v3 without prefix rows is invalid; hit rate must sit in (0, 1]
+    with pytest.raises(ValueError, match="prefix"):
+        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+                     "continuous_rows": crows})
+    with pytest.raises(ValueError, match="hit_rate"):
+        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+                     "continuous_rows": crows,
+                     "prefix_rows": [
+                         dict(prow, mode="fp", prefix_hit_rate=1.5),
+                         dict(prow, mode="w4a8_aser")]})
