@@ -30,10 +30,18 @@ Two workloads:
   on vs off — the reuse leg skips re-prefilling every shared prefix and
   reports its **prefix-cache hit rate** next to the goodput win.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v3`` =
-v2's static + continuous rows + ``prefix_rows``; the validator still
-accepts v1/v2 files) so subsequent PRs have a perf trajectory to beat;
-``--smoke`` runs a seconds-scale variant with the same schema for CI.
+  Finally it runs the **KV-quant** leg (``kv_rows``, serve_bench/v4): the
+  same heavy-tailed continuous workload on the paged engine twice at one
+  fixed KV-cache HBM budget — native-dtype KV vs ``kv_dtype="int8"``,
+  where the int8 pool's smaller pages buy proportionally more blocks
+  (``repro.serve.engine.blocks_for_hbm_budget``) and therefore more
+  admitted concurrency / fewer preemptions. Goodput is reported for both
+  legs; the int8 leg winning is the acceptance pin for KV quantization.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v4`` =
+v3's static + continuous + ``prefix_rows`` + ``kv_rows``; the validator
+still accepts v1/v2/v3 files) so subsequent PRs have a perf trajectory to
+beat; ``--smoke`` runs a seconds-scale variant with the same schema for CI.
 Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
 meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
 """
@@ -55,10 +63,12 @@ from repro.data.synthetic import CorpusConfig, SyntheticCorpus
 from repro.models import init_params
 from repro.quant import calibrate, quantize_model, reduce_shared
 from repro.runtime import RuntimeConfig
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import (Engine, ServeConfig, blocks_for_hbm_budget,
+                                kv_page_bytes)
 from repro.serve.scheduler import Scheduler
 
-SCHEMA = "serve_bench/v3"
+SCHEMA = "serve_bench/v4"
+SCHEMA_V3 = "serve_bench/v3"
 SCHEMA_V2 = "serve_bench/v2"
 SCHEMA_V1 = "serve_bench/v1"
 SCHEMA_PROBE = "serve_bench/probe"     # partial (continuous-only) runs
@@ -82,6 +92,14 @@ PREFIX_ROW_FIELDS = ("mode", "requests", "prefix_groups", "prefix_len",
                      "useful_tokens", "noreuse_s", "reuse_s",
                      "noreuse_goodput_tok_s", "goodput_tok_s",
                      "goodput_speedup", "prefix_hit_rate")
+
+# quantized-KV fixed-HBM-budget fields added by serve_bench/v4 kv rows.
+# "bf16" here means the model's *native* cache dtype (f32 on the CPU bench).
+KV_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk", "block_size",
+                 "hbm_budget_kb", "bf16_blocks", "int8_blocks",
+                 "useful_tokens", "bf16_s", "int8_s", "bf16_preemptions",
+                 "int8_preemptions", "bf16_goodput_tok_s", "goodput_tok_s",
+                 "goodput_speedup")
 
 
 def _bench_cfg(smoke: bool):
@@ -220,6 +238,48 @@ def _time_prefix(params, cfg, rt, *, slots, max_len, block_size, chunk,
     return noreuse_s, reuse_s, useful, hit_rate, eng.scfg.pool_blocks
 
 
+# -- quantized-KV goodput at a fixed HBM budget ------------------------------
+
+def _time_kv_budget(params, cfg, rt, *, slots, max_len, block_size, chunk,
+                    reqs, reps):
+    """Native-KV vs int8-KV paged continuous serving at one HBM budget.
+
+    The budget is chosen memory-constrained (a quarter of the slots' worth
+    of native pages — enough for only ~2 full-length requests natively) so
+    the native leg queues on admission; the int8 pool converts its ~4×
+    smaller page (f32 native on this CPU bench) into proportionally more
+    blocks at the same budget and admits more of the workload
+    concurrently. An ample budget would instead measure pure dequant
+    overhead — the unconstrained-memory latency story already lives in the
+    static rows.
+    """
+    bps = max_len // block_size
+    native_blocks = max(bps, (slots * bps) // 4)
+    budget = native_blocks * kv_page_bytes(cfg, block_size, "bf16")
+    int8_blocks = blocks_for_hbm_budget(cfg, block_size, "int8", budget)
+
+    def mk(kv_dtype, blocks):
+        return Engine(params, cfg,
+                      ServeConfig(max_len=max_len, batch_slots=slots,
+                                  kv_layout="paged", block_size=block_size,
+                                  num_blocks=blocks, kv_dtype=kv_dtype),
+                      rt=rt)
+
+    engines = {"bf16": mk("bf16", native_blocks),
+               "int8": mk("int8", int8_blocks)}
+    out = {}
+    for name, eng in engines.items():
+        sched, handles = _run_paged(eng, reqs, chunk, True)  # gate + warm
+        assert all(h.done for h in handles)
+        out[name + "_preemptions"] = sched.preemptions
+        out[name + "_s"] = _best_time(
+            lambda e=eng: _run_paged(e, reqs, chunk, True), reps)
+    useful = sum(n for _, n in reqs)
+    return (budget, native_blocks, int8_blocks, useful,
+            out["bf16_s"], out["int8_s"],
+            out["bf16_preemptions"], out["int8_preemptions"])
+
+
 def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
         mode: str = "both"):
     cfg = dataclasses.replace(_bench_cfg(smoke), remat=False)
@@ -238,6 +298,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     rows = []
     cont_rows = []
     prefix_rows = []
+    kv_rows = []
     for m, p in (("fp", params), ("w4a8_aser", qparams)):
         if mode in ("both", "static"):
             for (b, prompt) in buckets:
@@ -328,6 +389,38 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                       f"(×{prow['goodput_speedup']:.2f}, hit rate "
                       f"{hit_rate:.0%})", flush=True)
 
+            # int8-KV vs native-KV at one fixed HBM budget (memory-bound)
+            kv_lo, kv_hi = (8, 24) if smoke else (16, 48)
+            kreqs = _workload(n_req, p_lo, p_hi, kv_lo, kv_hi,
+                              cfg.vocab_size, seed=23)
+            (budget, nb_native, nb_int8, useful, bf16_s, int8_s,
+             bf16_pre, int8_pre) = _time_kv_budget(
+                p, cfg, rt, slots=slots, max_len=max_len,
+                block_size=block_size, chunk=chunk, reqs=kreqs,
+                reps=c_reps)
+            krow = {
+                "mode": m, "requests": n_req, "batch_slots": slots,
+                "chunk": chunk, "block_size": block_size,
+                "hbm_budget_kb": budget / 1024,
+                "bf16_blocks": nb_native, "int8_blocks": nb_int8,
+                "useful_tokens": useful,
+                "bf16_s": bf16_s, "int8_s": int8_s,
+                "bf16_preemptions": bf16_pre,
+                "int8_preemptions": int8_pre,
+                "bf16_goodput_tok_s": useful / bf16_s,
+                "goodput_tok_s": useful / int8_s,
+                "goodput_speedup": bf16_s / int8_s,
+            }
+            kv_rows.append(krow)
+            if verbose:
+                print(f"  {m:>10} kv-quant: {n_req} reqs at "
+                      f"{krow['hbm_budget_kb']:.0f} KiB KV budget "
+                      f"(native {nb_native} / int8 {nb_int8} blocks): "
+                      f"goodput {krow['goodput_tok_s']:7.1f} tok/s vs "
+                      f"native {krow['bf16_goodput_tok_s']:7.1f} "
+                      f"(×{krow['goodput_speedup']:.2f}, preemptions "
+                      f"{bf16_pre}→{int8_pre})", flush=True)
+
     # partial runs must self-describe honestly: static-only is a valid v1
     # file; continuous-only matches no released schema and is stamped as a
     # probe (the validator rejects it by design — it is not a baseline)
@@ -344,6 +437,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     if mode != "static":
         report["continuous_rows"] = cont_rows
         report["prefix_rows"] = prefix_rows
+        report["kv_rows"] = kv_rows
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     if verbose:
@@ -413,22 +507,43 @@ def _validate_prefix_rows(rows):
         raise ValueError(f"need fp and w4a8_aser prefix rows, got {modes}")
 
 
+def _validate_kv_rows(rows):
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no kv rows (serve_bench/v4 requires them)")
+    modes = set()
+    for row in rows:
+        _check_finite(row, KV_ROW_FIELDS,
+                      positive=("useful_tokens", "bf16_s", "int8_s",
+                                "bf16_blocks", "int8_blocks",
+                                "hbm_budget_kb", "bf16_goodput_tok_s",
+                                "goodput_tok_s"))
+        if row["int8_blocks"] < row["bf16_blocks"]:
+            raise ValueError(
+                f"int8 pool smaller than native at equal budget: {row}")
+        modes.add(row["mode"])
+    if not {"fp", "w4a8_aser"} <= modes:
+        raise ValueError(f"need fp and w4a8_aser kv rows, got {modes}")
+
+
 def validate(report: dict):
     """Raise ValueError unless ``report`` is a valid serve_bench file.
 
     Accepts every released schema generation: ``serve_bench/v1`` (static
-    rows only), ``serve_bench/v2`` (+ continuous goodput rows) and
-    ``serve_bench/v3`` (+ shared-prefix paged-cache rows), so old baselines
-    keep validating.
+    rows only), ``serve_bench/v2`` (+ continuous goodput rows),
+    ``serve_bench/v3`` (+ shared-prefix paged-cache rows) and
+    ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows), so old
+    baselines keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V2, SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
     _validate_static_rows(report.get("rows"))
-    if schema in (SCHEMA, SCHEMA_V2):
+    if schema in (SCHEMA, SCHEMA_V3, SCHEMA_V2):
         _validate_continuous_rows(report.get("continuous_rows"))
-    if schema == SCHEMA:
+    if schema in (SCHEMA, SCHEMA_V3):
         _validate_prefix_rows(report.get("prefix_rows"))
+    if schema == SCHEMA:
+        _validate_kv_rows(report.get("kv_rows"))
     return True
 
 

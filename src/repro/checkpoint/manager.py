@@ -25,7 +25,9 @@ import numpy as np
 
 def _flatten(tree, prefix=""):
     out = {}
-    if isinstance(tree, dict):
+    if tree is None:               # absent optional fields (e.g. bf16
+        pass                       # caches' scale slots) save nothing
+    elif isinstance(tree, dict):
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}/{k}"))
     elif hasattr(tree, "_fields"):
@@ -43,6 +45,8 @@ def _flatten(tree, prefix=""):
 
 def _unflatten_into(template, flat, prefix=""):
     """Rebuild using ``template``'s structure (robust across jax versions)."""
+    if template is None:
+        return None
     if isinstance(template, dict):
         return {k: _unflatten_into(v, flat, f"{prefix}/{k}")
                 for k, v in template.items()}

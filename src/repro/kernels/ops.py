@@ -96,13 +96,15 @@ def attention(q, k, v, *, rt: RuntimeConfig | None = None, **kw):
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
-                    logit_cap: float = 0.0,
+                    k_scale=None, v_scale=None, logit_cap: float = 0.0,
                     rt: RuntimeConfig | None = None):
     """Paged-KV decode attention over a global block pool.
 
     q: [b, 1, hq, hd]; pools: [num_blocks, block_size, hkv, hd];
     block_tables: [b, blocks_per_seq] int32 (sentinel = num_blocks);
-    kv_len: [b] int32 valid prefix per row.
+    kv_len: [b] int32 valid prefix per row. ``k_scale``/``v_scale``
+    ([num_blocks, block_size, hkv] f32): quantized pools — the pools hold
+    int8 codes and the kernel runs its fused dequant epilogue per block.
 
     Returns [b, 1, hq, hd] from the Pallas paged-gather kernel, or ``None``
     when the runtime / tuning model routes this shape to the XLA gather
@@ -114,10 +116,12 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
         return None
     b, _, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]
+    quantized = k_scale is not None
     if hq % hkv != 0:
         return None
     if not _tuning.use_paged_kernel(b, block_tables.shape[1], bs,
-                                    hq // hkv, hd):
+                                    hq // hkv, hd, quantized=quantized):
         return None
     return _paged_kernel(q, k_pool, v_pool, block_tables, kv_len,
+                         k_scale, v_scale,
                          logit_cap=logit_cap, interpret=rt.interpret)

@@ -11,7 +11,10 @@ the pool into VMEM.
 
 Grid: (batch * kv_heads, blocks_per_seq), last axis fastest (sequential on
 TPU), with the online-softmax accumulators for the current (row, kv head)
-living in VMEM scratch across the block steps. GQA is folded into the grid:
+living in VMEM scratch across the block steps. Quantized (int8/int4-coded)
+pools add a **dequant epilogue**: the per-page scale tiles DMA in through
+the same table-indexed BlockSpec as their code blocks and multiply in VMEM,
+so a quantized pool is never materialized dequantized in HBM. GQA is folded into the grid:
 each program attends one kv head's query group ([group, hd]) against one
 [block_size, hd] KV block. Blocks wholly past a row's frontier are skipped
 (`pl.when`), and sentinel table entries (unmapped logical blocks) are
@@ -30,9 +33,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, klen_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, bs: int, nb: int, hkv: int,
-            scale: float, logit_cap: float):
+def _kernel(bt_ref, klen_ref, q_ref, k_ref, v_ref, *rest, bs: int, nb: int,
+            hkv: int, scale: float, logit_cap: float, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     i = pl.program_id(1)
     b_idx = pl.program_id(0) // hkv
 
@@ -49,6 +55,11 @@ def _kernel(bt_ref, klen_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[...].astype(jnp.float32) * scale          # [group, hd]
         k = k_ref[...].astype(jnp.float32)                  # [bs, hd]
         v = v_ref[...].astype(jnp.float32)
+        if quantized:
+            # dequant epilogue: int8 codes × per-slot-per-head f32 scale,
+            # fused right after the pool DMA (no dequantized HBM copy)
+            k = k * ks_ref[...].reshape(bs, 1)
+            v = v * vs_ref[...].reshape(bs, 1)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [group, bs]
         if logit_cap > 0:
             s = logit_cap * jnp.tanh(s / logit_cap)
@@ -70,15 +81,26 @@ def _kernel(bt_ref, klen_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("logit_cap", "interpret"))
-def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len,
+                           k_scale=None, v_scale=None, *,
                            logit_cap: float = 0.0, interpret: bool = True):
     """q: [b, 1, hq, hd]; pools: [num_blocks, bs, hkv, hd];
     block_tables: [b, nb] int32 physical ids (sentinel = num_blocks for
     unmapped entries); kv_len: [b] int32 valid prefix per row.
+
+    ``k_scale``/``v_scale`` ([num_blocks, bs, hkv] f32, both or neither):
+    quantized pools — ``k_pool``/``v_pool`` hold int8 codes and each block
+    step multiplies the DMA'd code tile by its per-slot-per-head scale tile
+    in VMEM (the dequant epilogue; the pool never materializes
+    dequantized).
+
     Returns [b, 1, hq, hd].
     """
     b, s, hq, hd = q.shape
     assert s == 1, "paged kernel is the decode (s == 1) hot path"
+    quantized = k_scale is not None
+    assert (v_scale is not None) == quantized, \
+        "k_scale/v_scale must be passed together"
     n_total, bs, hkv, _ = k_pool.shape
     nb = block_tables.shape[1]
     group = hq // hkv
@@ -91,26 +113,33 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
 
     grid = (b * hkv, nb)
     kernel = functools.partial(_kernel, bs=bs, nb=nb, hkv=hkv, scale=scale,
-                               logit_cap=logit_cap)
+                               logit_cap=logit_cap, quantized=quantized)
+    pool_spec = pl.BlockSpec((None, bs, None, hd),
+                             lambda bh, i, bt, kl: (
+                                 jnp.minimum(bt[bh // hkv, i], n_total - 1),
+                                 0, bh % hkv, 0))
+    # scale tiles ride the same table-indexed gather as their code blocks
+    scale_spec = pl.BlockSpec((None, bs, None),
+                              lambda bh, i, bt, kl: (
+                                  jnp.minimum(bt[bh // hkv, i], n_total - 1),
+                                  0, bh % hkv))
+    in_specs = [
+        pl.BlockSpec((None, None, group, hd),
+                     lambda bh, i, bt, kl: (bh // hkv, bh % hkv, 0, 0)),
+        # the paged gather: table entry → physical pool block
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [bt, klen, qf, k_pool, v_pool]
+    if quantized:
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((None, None, group, hd),
-                             lambda bh, i, bt, kl: (bh // hkv, bh % hkv,
-                                                    0, 0)),
-                # the paged gather: table entry → physical pool block
-                pl.BlockSpec((None, bs, None, hd),
-                             lambda bh, i, bt, kl: (
-                                 jnp.minimum(bt[bh // hkv, i], n_total - 1),
-                                 0, bh % hkv, 0)),
-                pl.BlockSpec((None, bs, None, hd),
-                             lambda bh, i, bt, kl: (
-                                 jnp.minimum(bt[bh // hkv, i], n_total - 1),
-                                 0, bh % hkv, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((None, None, group, hd),
                                    lambda bh, i, bt, kl: (bh // hkv,
                                                           bh % hkv, 0, 0)),
@@ -122,5 +151,5 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, group, hd), q.dtype),
         interpret=interpret,
-    )(bt, klen, qf, k_pool, v_pool)
+    )(*operands)
     return out.reshape(b, 1, hq, hd)

@@ -85,32 +85,40 @@ def fused_bn(m: int, k: int, n: int, r: int,
     return None
 
 
-def paged_vmem_bytes(block_size: int, group: int, hd: int) -> int:
+def paged_vmem_bytes(block_size: int, group: int, hd: int,
+                     quantized: bool = False) -> int:
     """Per-grid-step VMEM working set of the paged-gather decode kernel.
 
     One physical KV block (k + v), the kv-head's query group, the
     [group, block_size] score tile, and the online-softmax scratch. The
     block table and frontier lengths ride in SMEM (scalar prefetch) and
-    are not counted against VMEM.
+    are not counted against VMEM. ``quantized`` pools add the raw int8
+    code tiles plus the f32 per-slot scale tiles of the dequant epilogue
+    (the f32 working copies above are counted either way).
     """
     return (2 * block_size * hd * 4        # k, v block (f32 working copies)
             + group * hd * 4               # q group
             + group * block_size * 4       # score tile
             + 2 * group * 4                # m, l scratch
             + group * hd * 4               # acc scratch
-            + group * hd * 4)              # out tile
+            + group * hd * 4               # out tile
+            + (2 * block_size * hd         # int8 code tiles as DMA'd
+               + 2 * block_size * 4        # k/v scale tiles
+               if quantized else 0))
 
 
 def use_paged_kernel(batch: int, nb: int, block_size: int, group: int,
-                     hd: int, budget: int = VMEM_BUDGET) -> bool:
+                     hd: int, budget: int = VMEM_BUDGET,
+                     quantized: bool = False) -> bool:
     """Route paged decode attention to the Pallas paged-gather kernel.
 
     Decode is m = 1 token per row by construction; the only way the kernel
     doesn't pay for itself is when a block step's working set spills VMEM
     (huge head_dim × block_size) — then the XLA gather path is the safer
     bet. ``nb``/``batch`` only scale the grid, not the per-step footprint.
+    ``quantized`` adds the dequant epilogue's tiles to the modeled set.
     """
-    return paged_vmem_bytes(block_size, group, hd) <= budget
+    return paged_vmem_bytes(block_size, group, hd, quantized) <= budget
 
 
 # Known-good BlockSpecs for recurring serving shapes, keyed by

@@ -20,6 +20,10 @@ def main():
                          "string sets one inline)")
     ap.add_argument("--a-bits", type=int, default=None,
                     help="activation bits (default 8 unless set inline)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bf16", "int8", "int4"),
+                    help="KV-cache storage dtype (default bf16 unless the "
+                         "method string sets kv_dtype inline)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
@@ -53,18 +57,23 @@ def main():
         overrides["a_bits"] = args.a_bits
     elif "a_bits" not in args.method:
         overrides["a_bits"] = 8
+    if args.kv_dtype is not None:
+        overrides["kv_dtype"] = args.kv_dtype
     recipe = registry.resolve(args.method, **overrides)
     rt = recipe.act.runtime(use_pallas=args.pallas)
     if not recipe.is_noop:
         print(f"[serve] calibrating + quantizing with {args.method} "
               f"(W{recipe.base.bits}A{recipe.act.bits}, "
-              f"rank {recipe.reconstructor.rank})")
+              f"rank {recipe.reconstructor.rank}, "
+              f"KV {recipe.kv.dtype})")
         tape = calibrate(params, cfg, corpus.calibration_batches(2, 4, 32))
         tape = reduce_shared(tape, cfg)
         params = quantize_model(params, tape, recipe)
 
+    # the recipe's KVQuantSpec picks the engine's cache storage
     engine = Engine(params, cfg,
-                    ServeConfig(max_len=args.prompt_len + args.gen), rt=rt)
+                    recipe.kv.serve_config(max_len=args.prompt_len
+                                           + args.gen), rt=rt)
     prompts = corpus.sample(jnp.asarray(777), args.requests, args.prompt_len)
     out = engine.generate(prompts, n_steps=args.gen)
     print("[serve] generations:")

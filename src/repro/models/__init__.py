@@ -4,12 +4,14 @@ from .model import (init_params, forward, encode, init_caches,
                     init_paged_caches, param_count, prepare_cross_caches,
                     caches_length)
 from .attention import (KVCache, PagedKVCache, init_cache, init_paged_cache,
-                        chunked_attention)
+                        chunked_attention, quantize_kv, dequantize_kv,
+                        kv_qmax)
 from .mamba2 import SSMCache, init_ssm_cache
 from .transformer import BlockSpec, group_blocks
 
 __all__ = ["ModelConfig", "init_params", "forward", "encode", "init_caches",
            "init_paged_caches", "param_count", "prepare_cross_caches",
            "caches_length", "KVCache", "PagedKVCache", "init_cache",
-           "init_paged_cache", "chunked_attention", "SSMCache",
+           "init_paged_cache", "chunked_attention", "quantize_kv",
+           "dequantize_kv", "kv_qmax", "SSMCache",
            "init_ssm_cache", "BlockSpec", "group_blocks"]

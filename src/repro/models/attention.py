@@ -19,11 +19,23 @@ from .layers import (BATCH, apply_mrope, apply_rope, constrain, dense,
 
 
 class KVCache(NamedTuple):
-    k: jnp.ndarray        # [b, cache_len, n_kv, hd]
+    """Per-slot contiguous KV lanes, optionally int8/int4-quantized.
+
+    Quantized caches (``k_scale is not None``) store abs-max per-token
+    per-kv-head codes in int8 ``k``/``v`` next to f32 scale lanes; reads
+    dequantize (``codes * scale``) before attention. ``qmax`` is the code
+    grid half-range (127 for int8, 7 for int4 — int4 codes ride in int8
+    storage) and makes the cache self-describing: the write site needs no
+    out-of-band bit-width.
+    """
+    k: jnp.ndarray        # [b, cache_len, n_kv, hd] (int8 codes if quantized)
     v: jnp.ndarray        # [b, cache_len, n_kv, hd]
     length: jnp.ndarray   # [] int32 — tokens written so far (global position)
     pos: jnp.ndarray      # [cache_len] int32 — global position held by each slot
                           # (ring buffers overwrite; init = large negative)
+    k_scale: Optional[jnp.ndarray] = None   # [b, cache_len, n_kv] f32
+    v_scale: Optional[jnp.ndarray] = None   # [b, cache_len, n_kv] f32
+    qmax: Optional[jnp.ndarray] = None      # [] f32 — 127 (int8) | 7 (int4)
 
 
 class PagedKVCache(NamedTuple):
@@ -35,11 +47,51 @@ class PagedKVCache(NamedTuple):
     ``pos // block_size`` to a physical block id. Unmapped table entries
     hold the out-of-range sentinel ``num_blocks`` so their writes drop and
     their (masked) reads clamp harmlessly.
+
+    Quantized pools (``k_scale is not None``) store int8 codes plus
+    per-page scale tiles ``[num_blocks, block_size, n_kv]`` — one f32 scale
+    per token slot per kv head, scattered/gathered through the same block
+    table as the codes, so a page's scales always travel with the page
+    (COW block copies, eviction, and preemption need no extra bookkeeping).
     """
-    k: jnp.ndarray        # [num_blocks, block_size, n_kv, hd]
+    k: jnp.ndarray        # [num_blocks, block_size, n_kv, hd] (int8 codes
+                          # if quantized)
     v: jnp.ndarray        # [num_blocks, block_size, n_kv, hd]
     length: jnp.ndarray   # [] int32 — total tokens written (diagnostic only;
                           # positions are always explicit in paged mode)
+    k_scale: Optional[jnp.ndarray] = None   # [num_blocks, block_size, n_kv]
+    v_scale: Optional[jnp.ndarray] = None   # [num_blocks, block_size, n_kv]
+    qmax: Optional[jnp.ndarray] = None      # [] f32 — 127 (int8) | 7 (int4)
+
+
+# storage dtypes: see repro.runtime.KV_CACHE_DTYPES (single source of truth)
+_KV_QMAX = {"int8": 127.0, "int4": 7.0}
+
+
+def kv_qmax(kv_dtype: str) -> float:
+    """Code grid half-range for a quantized KV dtype."""
+    return _KV_QMAX[kv_dtype]
+
+
+def quantize_kv(x: jnp.ndarray, qmax) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Abs-max per-token-per-head symmetric quantization of K/V rows.
+
+    x: [..., heads, hd] → (codes int8 [..., heads, hd],
+    scale f32 [..., heads]). ``qmax`` may be a traced scalar (it lives in
+    the cache) — the int8 clip below stays static because int4 codes are
+    already within ±7 by construction of the scale.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(xf / safe[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize_kv(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """codes [..., heads, hd] int8, scale [..., heads] f32 → f32 values."""
+    return codes.astype(jnp.float32) * scale[..., None]
 
 
 def attn_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
@@ -240,11 +292,25 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
         # Out-of-bounds rows (retired slots past max_len) drop their writes.
         row_pos = positions.astype(jnp.int32)                    # [b, s]
         b_idx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        quantized = cache.k_scale is not None
+        if quantized:
+            k, k_s = quantize_kv(k, cache.qmax)
+            v, v_s = quantize_kv(v, cache.qmax)
         k_all = cache.k.at[b_idx, row_pos].set(
             k.astype(cache.k.dtype), mode="drop", unique_indices=True)
         v_all = cache.v.at[b_idx, row_pos].set(
             v.astype(cache.v.dtype), mode="drop", unique_indices=True)
-        new_cache = KVCache(k_all, v_all, cache.length + s, cache.pos)
+        ks_all = vs_all = None
+        if quantized:
+            ks_all = cache.k_scale.at[b_idx, row_pos].set(
+                k_s, mode="drop", unique_indices=True)
+            vs_all = cache.v_scale.at[b_idx, row_pos].set(
+                v_s, mode="drop", unique_indices=True)
+        new_cache = KVCache(k_all, v_all, cache.length + s, cache.pos,
+                            ks_all, vs_all, cache.qmax)
+        k_att, v_att = ((dequantize_kv(k_all, ks_all).astype(q.dtype),
+                         dequantize_kv(v_all, vs_all).astype(q.dtype))
+                        if quantized else (k_all, v_all))
         # causal per row: kv slot j visible iff j ≤ that row's own position.
         # Valid prefixes are contiguous (decode writes at lens+t), so the
         # per-row causal bound is also the per-row length mask.
@@ -255,7 +321,7 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
         # documented in sharding/rules.cache_spec. Port it before serving
         # ragged batches on a "model"-axis mesh with n_kv < TP.
         out = chunked_attention(
-            q, k_all, v_all, causal=True, window=layer_window,
+            q, k_att, v_att, causal=True, window=layer_window,
             q_offset=row_pos[:, 0], kv_len=row_pos[:, -1] + 1,
             logit_cap=cfg.attn_softcap,
             chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
@@ -263,7 +329,15 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
         cache_len = cache.k.shape[1]
         start = cache.length
         ring = layer_window > 0 and cache_len <= layer_window
+        quantized = cache.k_scale is not None
+        if quantized and ring:
+            raise NotImplementedError(
+                "quantized KV does not support ring-buffer (sliding-window) "
+                "caches; use kv_dtype='bf16' for windowed layers")
         new_pos = start + jnp.arange(s, dtype=jnp.int32)
+        if quantized:
+            k, k_s = quantize_kv(k, cache.qmax)
+            v, v_s = quantize_kv(v, cache.qmax)
         if ring:
             idx = new_pos % cache_len
             k_all = cache.k.at[:, idx].set(k.astype(cache.k.dtype))
@@ -275,22 +349,32 @@ def attention(p, cfg: ModelConfig, x: jnp.ndarray, *,
             v_all = jax.lax.dynamic_update_slice(
                 cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
             pos_all = jax.lax.dynamic_update_slice(cache.pos, new_pos, (start,))
-        new_cache = KVCache(k_all, v_all, start + s, pos_all)
+        ks_all = vs_all = None
+        if quantized:
+            ks_all = jax.lax.dynamic_update_slice(
+                cache.k_scale, k_s, (0, start, 0))
+            vs_all = jax.lax.dynamic_update_slice(
+                cache.v_scale, v_s, (0, start, 0))
+        new_cache = KVCache(k_all, v_all, start + s, pos_all,
+                            ks_all, vs_all, cache.qmax)
+        k_att, v_att = ((dequantize_kv(k_all, ks_all).astype(q.dtype),
+                         dequantize_kv(v_all, vs_all).astype(q.dtype))
+                        if quantized else (k_all, v_all))
         if ring:
             q_pos = new_pos
             mask = ((pos_all[None, :] <= q_pos[:, None])
                     & (pos_all[None, :] > q_pos[:, None] - layer_window)
                     & (pos_all[None, :] >= 0))
-            out = _masked_attention(q, k_all, v_all, mask, cfg.attn_softcap)
+            out = _masked_attention(q, k_att, v_att, mask, cfg.attn_softcap)
         else:
             out = None
             if s <= 8:
                 out = _decode_attention_hd_sharded(
-                    q, k_all, v_all, q_offset=start, kv_len=start + s,
+                    q, k_att, v_att, q_offset=start, kv_len=start + s,
                     window=layer_window, logit_cap=cfg.attn_softcap)
             if out is None:
                 out = chunked_attention(
-                    q, k_all, v_all, causal=True, window=layer_window,
+                    q, k_att, v_att, causal=True, window=layer_window,
                     q_offset=start, kv_len=start + s,
                     logit_cap=cfg.attn_softcap,
                     chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
@@ -322,11 +406,17 @@ def _paged_attention(cache: PagedKVCache, cfg: ModelConfig, q, k, v, *,
     applicable) the per-row KV view [b, nb_req * bs, n_kv, hd] is gathered
     and handed to the same chunked attention as the contiguous path, which
     keeps paged decoding bit-identical to the contiguous engine.
+
+    Quantized pools (``cache.k_scale is not None``): inserts quantize
+    (abs-max per token per kv head) and the scales scatter through the
+    *same* flat index as the codes; reads either dequantize in the gathered
+    view or hand the scale pools to the kernel's dequant epilogue.
     """
     from repro.kernels import ops as _ops
     b, s, _, _ = q.shape
     n_total, bs_blk = cache.k.shape[0], cache.k.shape[1]
     nb_req = block_tables.shape[1]
+    quantized = cache.k_scale is not None
     row_pos = positions.astype(jnp.int32)                     # [b, s]
     logical = row_pos // bs_blk
     phys = jnp.take_along_axis(block_tables,
@@ -334,18 +424,32 @@ def _paged_attention(cache: PagedKVCache, cfg: ModelConfig, q, k, v, *,
     flat = phys * bs_blk + row_pos % bs_blk                   # [b, s]
     valid = (row_pos >= 0) & (logical < nb_req)
     flat = jnp.where(valid, flat, n_total * bs_blk)           # OOB ⇒ dropped
+    if quantized:
+        k, k_s = quantize_kv(k, cache.qmax)
+        v, v_s = quantize_kv(v, cache.qmax)
     k_flat = cache.k.reshape(n_total * bs_blk, *cache.k.shape[2:])
     v_flat = cache.v.reshape(n_total * bs_blk, *cache.v.shape[2:])
     k_flat = k_flat.at[flat].set(k.astype(k_flat.dtype), mode="drop")
     v_flat = v_flat.at[flat].set(v.astype(v_flat.dtype), mode="drop")
-    new_cache = PagedKVCache(k_flat.reshape(cache.k.shape),
-                             v_flat.reshape(cache.v.shape),
-                             cache.length + s)
+    ks_flat = vs_flat = None
+    if quantized:
+        ks_flat = cache.k_scale.reshape(n_total * bs_blk, -1)
+        vs_flat = cache.v_scale.reshape(n_total * bs_blk, -1)
+        ks_flat = ks_flat.at[flat].set(k_s, mode="drop")
+        vs_flat = vs_flat.at[flat].set(v_s, mode="drop")
+    new_cache = PagedKVCache(
+        k_flat.reshape(cache.k.shape), v_flat.reshape(cache.v.shape),
+        cache.length + s,
+        ks_flat.reshape(cache.k_scale.shape) if quantized else None,
+        vs_flat.reshape(cache.v_scale.shape) if quantized else None,
+        cache.qmax)
 
     kv_len = row_pos[:, -1] + 1                               # [b]
     if s == 1:
         out = _ops.paged_attention(q, new_cache.k, new_cache.v,
                                    block_tables, kv_len,
+                                   k_scale=new_cache.k_scale,
+                                   v_scale=new_cache.v_scale,
                                    logit_cap=cfg.attn_softcap, rt=rt)
         if out is not None:
             return out, new_cache
@@ -354,6 +458,11 @@ def _paged_attention(cache: PagedKVCache, cfg: ModelConfig, q, k, v, *,
            + jnp.arange(bs_blk, dtype=jnp.int32)[None, None, :])
     k_all = k_flat[idx.reshape(b, nb_req * bs_blk)]
     v_all = v_flat[idx.reshape(b, nb_req * bs_blk)]
+    if quantized:
+        ks_all = ks_flat[idx.reshape(b, nb_req * bs_blk)]
+        vs_all = vs_flat[idx.reshape(b, nb_req * bs_blk)]
+        k_all = dequantize_kv(k_all, ks_all).astype(q.dtype)
+        v_all = dequantize_kv(v_all, vs_all).astype(q.dtype)
     out = chunked_attention(
         q, k_all, v_all, causal=True,
         q_offset=row_pos[:, 0], kv_len=kv_len,
@@ -378,19 +487,49 @@ def _masked_attention(q, k, v, mask, logit_cap=0.0):
     return out.astype(v.dtype)
 
 
+def _check_kv_dtype(kv_dtype: str):
+    from repro.runtime import KV_CACHE_DTYPES
+    if kv_dtype not in KV_CACHE_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_CACHE_DTYPES}: "
+                         f"{kv_dtype!r}")
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0,
-               dtype=jnp.bfloat16) -> KVCache:
+               dtype=jnp.bfloat16, kv_dtype: str = "bf16") -> KVCache:
+    _check_kv_dtype(kv_dtype)
     cache_len = min(window, max_len) if window > 0 else max_len
     shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    if kv_dtype != "bf16":
+        if window > 0 and cache_len <= window:
+            raise NotImplementedError(
+                "quantized KV does not support ring-buffer (sliding-window) "
+                "caches; use kv_dtype='bf16' for windowed layers")
+        sshape = (batch, cache_len, cfg.n_kv_heads)
+        return KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                       jnp.zeros((), jnp.int32),
+                       jnp.full((cache_len,), -(2 ** 30), jnp.int32),
+                       jnp.zeros(sshape, jnp.float32),
+                       jnp.zeros(sshape, jnp.float32),
+                       jnp.asarray(kv_qmax(kv_dtype), jnp.float32))
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                    jnp.zeros((), jnp.int32),
                    jnp.full((cache_len,), -(2 ** 30), jnp.int32))
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.bfloat16) -> PagedKVCache:
+                     dtype=jnp.bfloat16,
+                     kv_dtype: str = "bf16") -> PagedKVCache:
     """One layer's physical block pool (shared by every request)."""
+    _check_kv_dtype(kv_dtype)
     shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    if kv_dtype != "bf16":
+        sshape = (num_blocks, block_size, cfg.n_kv_heads)
+        return PagedKVCache(jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(shape, jnp.int8),
+                            jnp.zeros((), jnp.int32),
+                            jnp.zeros(sshape, jnp.float32),
+                            jnp.zeros(sshape, jnp.float32),
+                            jnp.asarray(kv_qmax(kv_dtype), jnp.float32))
     return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                         jnp.zeros((), jnp.int32))
 

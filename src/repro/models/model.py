@@ -101,19 +101,40 @@ def param_count(params) -> int:
 # Caches
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
-    """Cache pytree matching the forward structure."""
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype: str = "bf16"):
+    """Cache pytree matching the forward structure.
+
+    ``kv_dtype``: "bf16" (native, the model dtype) or "int8"/"int4" —
+    quantized KV lanes with per-token-per-head scales (see
+    :class:`repro.models.attention.KVCache`). Quantized caches are
+    attention-family only: SSM/hybrid running state and enc-dec cross
+    caches are not quantizable, and ring buffers would re-quantize on
+    wraparound.
+    """
+    if kv_dtype != "bf16":
+        if cfg.family in ("ssm", "hybrid", "encdec"):
+            raise NotImplementedError(
+                f"quantized KV cache (kv_dtype={kv_dtype!r}) not supported "
+                f"for family {cfg.family!r} (SSM/hybrid state and enc-dec "
+                f"cross caches are not int8-pageable); use kv_dtype='bf16'")
+        if cfg.sliding_window > 0 or cfg.local_global_period > 0:
+            raise NotImplementedError(
+                f"quantized KV cache (kv_dtype={kv_dtype!r}) not supported "
+                f"with sliding-window (ring-buffer) layers; use "
+                f"kv_dtype='bf16'")
     dt = _dtype(cfg)
     specs = group_blocks(cfg)
     caches: dict = {}
     if cfg.n_dense_layers:
         caches["prefix"] = [init_block_cache(cfg, BlockSpec("attn"), batch,
-                                             max_len, dt)
+                                             max_len, dt, kv_dtype=kv_dtype)
                             for _ in range(cfg.n_dense_layers)]
     n_groups = _n_scanned_groups(cfg)
 
     def one_group(_):
-        out = [init_block_cache(cfg, s, batch, max_len, dt) for s in specs]
+        out = [init_block_cache(cfg, s, batch, max_len, dt,
+                                kv_dtype=kv_dtype) for s in specs]
         if cfg.family == "hybrid":
             win = cfg.sliding_window
             out.append(init_cache(cfg, batch, max_len, window=win, dtype=dt))
@@ -128,7 +149,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
-def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int):
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      kv_dtype: str = "bf16"):
     """Block-paged cache pytree: per-layer physical pools, no batch axis.
 
     Structurally mirrors :func:`init_caches` (prefix list + vmapped scanned
@@ -148,11 +170,13 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int):
     specs = group_blocks(cfg)
     caches: dict = {}
     if cfg.n_dense_layers:
-        caches["prefix"] = [init_paged_cache(cfg, num_blocks, block_size, dt)
+        caches["prefix"] = [init_paged_cache(cfg, num_blocks, block_size, dt,
+                                             kv_dtype=kv_dtype)
                             for _ in range(cfg.n_dense_layers)]
 
     def one_group(_):
-        return [init_paged_cache(cfg, num_blocks, block_size, dt)
+        return [init_paged_cache(cfg, num_blocks, block_size, dt,
+                                 kv_dtype=kv_dtype)
                 for _ in specs]
 
     caches["groups"] = jax.vmap(one_group)(jnp.arange(_n_scanned_groups(cfg)))

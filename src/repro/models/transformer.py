@@ -161,7 +161,9 @@ def shared_block_forward(p, cfg: ModelConfig, x, x0, *, positions,
 
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
-                     max_len: int, dtype=jnp.bfloat16):
+                     max_len: int, dtype=jnp.bfloat16,
+                     kv_dtype: str = "bf16"):
     if spec.kind == "mamba":
         return init_ssm_cache(cfg, batch, dtype)
-    return init_cache(cfg, batch, max_len, window=spec.window, dtype=dtype)
+    return init_cache(cfg, batch, max_len, window=spec.window, dtype=dtype,
+                      kv_dtype=kv_dtype)

@@ -1,12 +1,12 @@
 """Model-level PTQ integration: recipes, calibration, quantization, serving."""
 from .calibrate import calibrate, accumulate, reduce_shared
 from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
-                     QuantRecipe, Smoother)
+                     KVQuantSpec, QuantRecipe, Smoother)
 from . import registry
 from .registry import resolve as resolve_recipe
 from .apply import PTQConfig, quantize_model
 
 __all__ = ["calibrate", "accumulate", "reduce_shared",
            "QuantRecipe", "Smoother", "BaseQuantizer", "ErrorReconstructor",
-           "ActQuantSpec", "registry", "resolve_recipe",
+           "ActQuantSpec", "KVQuantSpec", "registry", "resolve_recipe",
            "PTQConfig", "quantize_model"]

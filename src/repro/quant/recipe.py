@@ -3,12 +3,13 @@
 The ASER paper stresses that error reconstruction is *orthogonal* to the base
 weight quantizer and that smoothing / compensation are independently
 toggleable. The API mirrors that decomposition: a :class:`QuantRecipe` is a
-frozen composition of four stages,
+frozen composition of five stages,
 
     Smoother           none | smoothquant | awq-scale | aser-outlier
     BaseQuantizer      rtn | gptq
     ErrorReconstructor none | lorc | l2qer | whitened-svd
     ActQuantSpec       bits + per_token / per_tensor granularity
+    KVQuantSpec        KV-cache storage dtype (bf16 | int8 | int4)
 
 executed by :func:`repro.quant.apply.quantize_model`. Every legacy method
 name (``rtn``, ``smoothquant``, ``gptq``, ``awq``, ``lorc``, ``l2qer``,
@@ -28,13 +29,17 @@ import dataclasses
 import json
 from typing import Any, Dict
 
-from repro.runtime import ACT_GRANULARITIES, SUPPORTED_ACT_BITS
+from repro.runtime import (ACT_GRANULARITIES, KV_CACHE_DTYPES,
+                           SUPPORTED_ACT_BITS)
 
 SMOOTHER_KINDS = ("none", "smoothquant", "awq-scale", "aser-outlier")
 BASE_KINDS = ("none", "rtn", "gptq")
 ER_KINDS = ("none", "lorc", "l2qer", "whitened-svd")
 
-_RECIPE_FORMAT_VERSION = 1
+# v2 added the KVQuantSpec stage; v1 blobs (no "kv" key) still load with
+# the bf16 default, so pre-KV-quant checkpoints keep deserializing.
+_RECIPE_FORMAT_VERSION = 2
+_ACCEPTED_FORMAT_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +140,40 @@ class ActQuantSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Serving-time KV-cache quantization the recipe targets.
+
+    The same abs-max-per-channel logic the paper applies to weights and
+    activations, pointed at the KV cache: ``int8`` stores per-token
+    per-kv-head symmetric codes next to f32 scales (``int4`` keeps the
+    4-bit code grid in int8 storage — accuracy path only, no packing yet).
+    ``bf16`` is the native passthrough. This stage is *serving* metadata —
+    it changes no packed weights, only which ``ServeConfig(kv_dtype=...)``
+    the recipe's deployments should use.
+    """
+
+    dtype: str = "bf16"
+
+    def __post_init__(self):
+        if self.dtype not in KV_CACHE_DTYPES:
+            raise ValueError(f"kv cache dtype must be one of "
+                             f"{KV_CACHE_DTYPES}: {self.dtype!r}")
+
+    @property
+    def bits(self) -> int:
+        return {"bf16": 16, "int8": 8, "int4": 4}[self.dtype]
+
+    @property
+    def is_noop(self) -> bool:
+        return self.dtype == "bf16"
+
+    def serve_config(self, **kw):
+        """The matching :class:`repro.serve.engine.ServeConfig`."""
+        from repro.serve.engine import ServeConfig
+        return ServeConfig(kv_dtype=self.dtype, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class QuantRecipe:
     """One fully-specified PTQ pipeline. Frozen, validated, serializable."""
 
@@ -142,6 +181,7 @@ class QuantRecipe:
     base: BaseQuantizer = BaseQuantizer()
     reconstructor: ErrorReconstructor = ErrorReconstructor()
     act: ActQuantSpec = ActQuantSpec()
+    kv: KVQuantSpec = KVQuantSpec()
     name: str = ""          # provenance label (e.g. the legacy method name)
 
     def __post_init__(self):
@@ -174,12 +214,13 @@ class QuantRecipe:
     def from_dict(cls, d: Dict[str, Any]) -> "QuantRecipe":
         d = dict(d)
         version = d.pop("format_version", _RECIPE_FORMAT_VERSION)
-        if version != _RECIPE_FORMAT_VERSION:
+        if version not in _ACCEPTED_FORMAT_VERSIONS:
             raise ValueError(f"unsupported recipe format version: {version}")
         return cls(smoother=Smoother(**d["smoother"]),
                    base=BaseQuantizer(**d["base"]),
                    reconstructor=ErrorReconstructor(**d["reconstructor"]),
                    act=ActQuantSpec(**d["act"]),
+                   kv=KVQuantSpec(**d["kv"]) if "kv" in d else KVQuantSpec(),
                    name=d.get("name", ""))
 
     def to_json(self, **json_kw) -> str:

@@ -21,7 +21,7 @@ import re
 from typing import Callable, Dict
 
 from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
-                     QuantRecipe, Smoother)
+                     KVQuantSpec, QuantRecipe, Smoother)
 
 _REGISTRY: Dict[str, Callable[..., QuantRecipe]] = {}
 
@@ -70,7 +70,8 @@ def _parse_overrides(argstr: str) -> dict:
 # PTQConfig did), but a key outside both this vocabulary and the factory's
 # own signature is a typo and raises.
 _OVERRIDE_VOCAB = frozenset({"w_bits", "rank", "alpha", "outlier_f", "damp",
-                             "base", "a_bits", "a_granularity", "sq_alpha"})
+                             "base", "a_bits", "a_granularity", "sq_alpha",
+                             "kv_dtype"})
 
 
 def _check_overrides(name: str, fn: Callable, overrides: dict):
@@ -128,18 +129,21 @@ def _act(a_bits: int, a_granularity: str = "per_token") -> ActQuantSpec:
 
 
 @register("fp16")
-def _fp16(a_bits: int = 16, a_granularity: str = "per_token", **_ignored):
+def _fp16(a_bits: int = 16, a_granularity: str = "per_token",
+          kv_dtype: str = "bf16", **_ignored):
     return QuantRecipe(smoother=Smoother("none"), base=BaseQuantizer("none"),
                        reconstructor=ErrorReconstructor("none"),
-                       act=_act(a_bits, a_granularity), name="fp16")
+                       act=_act(a_bits, a_granularity),
+                       kv=KVQuantSpec(kv_dtype), name="fp16")
 
 
 def _plain(name):
     @register(name)
     def _f(w_bits: int = 4, a_bits: int = 8, a_granularity: str = "per_token",
-           **_ignored):
+           kv_dtype: str = "bf16", **_ignored):
         return QuantRecipe(base=BaseQuantizer("rtn", bits=w_bits),
-                           act=_act(a_bits, a_granularity), name=name)
+                           act=_act(a_bits, a_granularity),
+                           kv=KVQuantSpec(kv_dtype), name=name)
     return _f
 
 
@@ -149,34 +153,41 @@ _plain("llmint4")       # paper's LLM.int4() row == per-channel RTN here
 
 @register("smoothquant")
 def _smoothquant(w_bits: int = 4, sq_alpha: float = 0.5, a_bits: int = 8,
-                 a_granularity: str = "per_token", **_ignored):
+                 a_granularity: str = "per_token", kv_dtype: str = "bf16",
+                 **_ignored):
     return QuantRecipe(smoother=Smoother("smoothquant", alpha=sq_alpha),
                        base=BaseQuantizer("rtn", bits=w_bits),
-                       act=_act(a_bits, a_granularity), name="smoothquant")
+                       act=_act(a_bits, a_granularity),
+                       kv=KVQuantSpec(kv_dtype), name="smoothquant")
 
 
 @register("gptq")
 def _gptq(w_bits: int = 4, damp: float = 1e-2, a_bits: int = 8,
-          a_granularity: str = "per_token", **_ignored):
+          a_granularity: str = "per_token", kv_dtype: str = "bf16",
+          **_ignored):
     return QuantRecipe(base=BaseQuantizer("gptq", bits=w_bits, damp=damp),
-                       act=_act(a_bits, a_granularity), name="gptq")
+                       act=_act(a_bits, a_granularity),
+                       kv=KVQuantSpec(kv_dtype), name="gptq")
 
 
 @register("awq")
 def _awq(w_bits: int = 4, a_bits: int = 8, a_granularity: str = "per_token",
-         **_ignored):
+         kv_dtype: str = "bf16", **_ignored):
     return QuantRecipe(smoother=Smoother("awq-scale"),
                        base=BaseQuantizer("rtn", bits=w_bits),
-                       act=_act(a_bits, a_granularity), name="awq")
+                       act=_act(a_bits, a_granularity),
+                       kv=KVQuantSpec(kv_dtype), name="awq")
 
 
 def _compensated(name):
     @register(name)
     def _f(w_bits: int = 4, rank: int = 64, a_bits: int = 8,
-           a_granularity: str = "per_token", **_ignored):
+           a_granularity: str = "per_token", kv_dtype: str = "bf16",
+           **_ignored):
         return QuantRecipe(base=BaseQuantizer("rtn", bits=w_bits),
                            reconstructor=ErrorReconstructor(name, rank=rank),
-                           act=_act(a_bits, a_granularity), name=name)
+                           act=_act(a_bits, a_granularity),
+                           kv=KVQuantSpec(kv_dtype), name=name)
     return _f
 
 
@@ -187,21 +198,25 @@ _compensated("l2qer")
 @register("aser")
 def _aser(w_bits: int = 4, rank: int = 64, alpha: float = 0.0,
           damp: float = 1e-2, base: str = "rtn", a_bits: int = 8,
-          a_granularity: str = "per_token", **_ignored):
+          a_granularity: str = "per_token", kv_dtype: str = "bf16",
+          **_ignored):
     return QuantRecipe(
         base=_base_stage(base, w_bits, damp),
         reconstructor=ErrorReconstructor("whitened-svd", rank=rank,
                                          alpha=alpha, damp=damp),
-        act=_act(a_bits, a_granularity), name="aser")
+        act=_act(a_bits, a_granularity), kv=KVQuantSpec(kv_dtype),
+        name="aser")
 
 
 @register("aser_as")
 def _aser_as(w_bits: int = 4, rank: int = 64, alpha: float = 0.0,
              outlier_f: int = 32, damp: float = 1e-2, base: str = "rtn",
-             a_bits: int = 8, a_granularity: str = "per_token", **_ignored):
+             a_bits: int = 8, a_granularity: str = "per_token",
+             kv_dtype: str = "bf16", **_ignored):
     return QuantRecipe(
         smoother=Smoother("aser-outlier", outlier_f=outlier_f),
         base=_base_stage(base, w_bits, damp),
         reconstructor=ErrorReconstructor("whitened-svd", rank=rank,
                                          alpha=alpha, damp=damp),
-        act=_act(a_bits, a_granularity), name="aser_as")
+        act=_act(a_bits, a_granularity), kv=KVQuantSpec(kv_dtype),
+        name="aser_as")

@@ -22,6 +22,15 @@ import dataclasses
 SUPPORTED_ACT_BITS = (4, 6, 8, 16)
 ACT_GRANULARITIES = ("per_token", "per_tensor")
 
+# KV-cache storage dtypes the serving stack implements. "bf16" means the
+# model's native cache dtype (bf16 on TPU, f32 for float32 smoke configs);
+# "int8"/"int4" store abs-max per-token-per-head quantized codes next to
+# f32 scale tensors (int4 codes currently ride in int8 storage — the
+# accuracy path exists, the packing does not, so only int8 changes the
+# memory footprint). Referenced by ServeConfig(kv_dtype=...) and
+# repro.quant.recipe.KVQuantSpec.
+KV_CACHE_DTYPES = ("bf16", "int8", "int4")
+
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:

@@ -28,6 +28,16 @@ a **block-paged** KV cache: per-layer physical pools of
 entries). The compiled programs are the same shapes either way; the host
 side (``serve.paged_cache.BlockPool`` + the scheduler) owns allocation,
 prefix sharing, and copy-on-write.
+
+``ServeConfig(kv_dtype="int8")`` (or ``"int4"``) stores the KV cache
+quantized — abs-max per-token-per-head int8 codes next to f32 scale
+tensors — in either layout. Inserts quantize, reads dequantize (fused into
+the paged-gather decode kernel's epilogue on the Pallas path). At a fixed
+KV HBM budget the smaller page lets :func:`blocks_for_hbm_budget` roughly
+double ``num_blocks``, which the page-aware scheduler converts into
+admitted concurrency; the accuracy cost is bounded by the parity tests
+(int8-KV vs native decode tolerance documented in
+``docs/serving_perf.md``).
 """
 from __future__ import annotations
 
@@ -42,7 +52,7 @@ import numpy as np
 from repro.models import (KVCache, ModelConfig, PagedKVCache, encode,
                           forward, init_caches, init_paged_caches,
                           prepare_cross_caches)
-from repro.runtime import RuntimeConfig
+from repro.runtime import KV_CACHE_DTYPES, RuntimeConfig
 
 DECODE_LOOPS = ("scan", "step")
 KV_LAYOUTS = ("contiguous", "paged")
@@ -58,6 +68,7 @@ class ServeConfig:
     kv_layout: str = "contiguous"  # "contiguous" (per-slot lanes) | "paged"
     block_size: int = 16           # tokens per page (paged layout)
     num_blocks: int = 0            # pool size; 0 → batch_slots * max_len/bs
+    kv_dtype: str = "bf16"         # "bf16" (native) | "int8" | "int4"
 
     def __post_init__(self):
         if self.decode_loop not in DECODE_LOOPS:
@@ -66,6 +77,9 @@ class ServeConfig:
         if self.kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}: "
                              f"{self.kv_layout!r}")
+        if self.kv_dtype not in KV_CACHE_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_CACHE_DTYPES}: "
+                             f"{self.kv_dtype!r}")
         if self.kv_layout == "paged":
             if self.block_size < 1:
                 raise ValueError(f"block_size must be >= 1: "
@@ -90,6 +104,54 @@ class ServeConfig:
     @property
     def pool_blocks(self) -> int:
         return self.num_blocks or self.batch_slots * self.blocks_per_seq
+
+    @property
+    def kv_bits(self) -> int:
+        return {"bf16": 16, "int8": 8, "int4": 4}[self.kv_dtype]
+
+
+def kv_page_bytes(cfg: ModelConfig, block_size: int,
+                  kv_dtype: str = "bf16") -> int:
+    """HBM bytes one pool page costs across all layers (K + V [+ scales]).
+
+    ``"bf16"`` means the model's native cache dtype (bf16, or f32 for
+    float32 configs). Quantized pages store 1-byte codes plus one f32
+    scale per token slot per kv head for each of K and V; int4 codes
+    currently ride in int8 storage, so only int8 shrinks the page (the
+    accounting is honest about that — int4 pages cost int8 bytes).
+    """
+    if kv_dtype not in KV_CACHE_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_CACHE_DTYPES}: "
+                         f"{kv_dtype!r}")
+    slots = block_size * cfg.n_kv_heads
+    if kv_dtype == "bf16":
+        item = 4 if cfg.dtype == "float32" else 2
+        per_layer = 2 * slots * cfg.head_dim * item
+    else:
+        per_layer = 2 * slots * cfg.head_dim + 2 * slots * 4
+    return per_layer * cfg.n_layers
+
+
+def blocks_for_hbm_budget(cfg: ModelConfig, block_size: int, kv_dtype: str,
+                          hbm_bytes: int) -> int:
+    """Largest pool (``num_blocks``) whose K/V/scale tensors fit a KV-cache
+    HBM budget — the knob that converts KV quantization into *concurrency*:
+    at a fixed budget an int8 pool admits ~2× (native bf16) or ~4×
+    (native f32) the pages, which the page-aware scheduler turns directly
+    into admitted requests.
+
+    Raises when the budget can't hold even one page: returning 0 would
+    read as ``ServeConfig(num_blocks=0)`` — "use the default pool" — and
+    silently blow the budget it was asked to respect.
+    """
+    blocks = int(hbm_bytes) // kv_page_bytes(cfg, block_size, kv_dtype)
+    if blocks < 1:
+        raise ValueError(
+            f"KV HBM budget {hbm_bytes} B is smaller than one "
+            f"{kv_dtype} page "
+            f"({kv_page_bytes(cfg, block_size, kv_dtype)} B across "
+            f"{cfg.n_layers} layers)")
+    return blocks
 
 
 class Engine:
@@ -270,7 +332,8 @@ class Engine:
         cached state is untouched, which is what lets the scheduler backfill
         a retired slot while its neighbours keep decoding.
         """
-        one = init_caches(self.cfg, 1, self.scfg.max_len)
+        one = init_caches(self.cfg, 1, self.scfg.max_len,
+                          kv_dtype=self.scfg.kv_dtype)
         logits, one, _ = forward(params, self.cfg, tokens, caches=one,
                                  rt=self.rt)
         last = logits[0, jnp.maximum(length - 1, 0)]
@@ -279,12 +342,20 @@ class Engine:
             if not isinstance(bc, KVCache):
                 return bc          # SSM caches are gated out of ragged mode
             ax = bc.k.ndim - 4     # batch axis (scanned groups lead with G)
-            return KVCache(
-                jax.lax.dynamic_update_slice_in_dim(
-                    bc.k, oc.k.astype(bc.k.dtype), slot, axis=ax),
-                jax.lax.dynamic_update_slice_in_dim(
-                    bc.v, oc.v.astype(bc.v.dtype), slot, axis=ax),
-                bc.length, bc.pos)
+
+            def upd_ax(dst, src, a):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), slot, axis=a)
+
+            ks = vs = None
+            if bc.k_scale is not None:
+                # scale lanes [*, b, L, n_kv]: batch axis sits one dim
+                # closer to the end than on the [*, b, L, n_kv, hd] codes
+                s_ax = bc.k_scale.ndim - 3
+                ks = upd_ax(bc.k_scale, oc.k_scale, s_ax)
+                vs = upd_ax(bc.v_scale, oc.v_scale, s_ax)
+            return KVCache(upd_ax(bc.k, oc.k, ax), upd_ax(bc.v, oc.v, ax),
+                           bc.length, bc.pos, ks, vs, bc.qmax)
 
         caches = jax.tree.map(put, caches, one,
                               is_leaf=lambda x: isinstance(x, KVCache))
@@ -320,13 +391,18 @@ class Engine:
         def cp(leaf):
             if not isinstance(leaf, PagedKVCache):
                 return leaf
-            ax = leaf.k.ndim - 4           # block axis (scanned groups lead)
-            def one(arr):
+            def one(arr, tail):            # block axis (scanned groups lead)
+                ax = arr.ndim - tail
                 taken = jnp.take(arr, src, axis=ax)
                 idx = [slice(None)] * arr.ndim
                 idx[ax] = dst
                 return arr.at[tuple(idx)].set(taken)
-            return PagedKVCache(one(leaf.k), one(leaf.v), leaf.length)
+            ks = vs = None
+            if leaf.k_scale is not None:   # scale pools [*, nb, bs, n_kv]
+                ks = one(leaf.k_scale, 3)
+                vs = one(leaf.v_scale, 3)
+            return PagedKVCache(one(leaf.k, 4), one(leaf.v, 4), leaf.length,
+                                ks, vs, leaf.qmax)
         return jax.tree.map(cp, caches,
                             is_leaf=lambda x: isinstance(x, PagedKVCache))
 
@@ -341,8 +417,10 @@ class Engine:
         if self.scfg.kv_layout == "paged":
             self._check_ragged_supported()
             return init_paged_caches(self.cfg, self.scfg.pool_blocks,
-                                     self.scfg.block_size)
-        return init_caches(self.cfg, self.scfg.batch_slots, self.scfg.max_len)
+                                     self.scfg.block_size,
+                                     kv_dtype=self.scfg.kv_dtype)
+        return init_caches(self.cfg, self.scfg.batch_slots, self.scfg.max_len,
+                           kv_dtype=self.scfg.kv_dtype)
 
     def prefill_slot(self, tokens, length, caches, slot, *,
                      block_table=None, start: int = 0):
@@ -465,7 +543,8 @@ class Engine:
 
         if self.scfg.kv_layout == "paged":
             return self._generate_paged(prompts, n_steps, key, prompt_lens)
-        caches = init_caches(self.cfg, b, self.scfg.max_len)
+        caches = init_caches(self.cfg, b, self.scfg.max_len,
+                             kv_dtype=self.scfg.kv_dtype)
 
         if prompt_lens is not None:
             self._check_ragged_supported()
@@ -555,7 +634,8 @@ class Engine:
         else:
             lens_np = self._check_lens(prompt_lens, prompts, n_steps)
         lens = jnp.asarray(lens_np)
-        caches = init_paged_caches(self.cfg, b * nb, self.scfg.block_size)
+        caches = init_paged_caches(self.cfg, b * nb, self.scfg.block_size,
+                                   kv_dtype=self.scfg.kv_dtype)
         tables = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
 
         last, caches = self._prefill_ragged(self.params, prompts, lens,

@@ -157,14 +157,37 @@ class BlockPool:
         """Index ``tokens``' full blocks (backed by ``table``'s physical
         ids) for future sharing. Idempotent per content hash; the index
         holds no reference of its own — a block becomes evictable once its
-        holders free it."""
+        holders free it. A block re-registered under *new* content (its
+        holder rewrote it) is re-pointed: the stale hash entry is dropped
+        so the hash↔block mapping stays a bijection — otherwise eviction
+        through the stale entry could hand the block out while the fresh
+        entry still resolves to it."""
         for i, h in enumerate(block_hashes(tokens, self.block_size)):
             bid = int(table[i])
             if bid >= self.num_blocks:           # sentinel: nothing mapped
                 break
-            if h not in self._by_hash:
-                self._by_hash[h] = bid
-                self._hash_of[bid] = h
+            stale = self._hash_of.get(bid)
+            if h in self._by_hash:
+                if self._by_hash[h] != bid and stale is not None \
+                        and stale != h:
+                    # this block's content changed AND the new content is
+                    # already indexed via another block: drop this block's
+                    # stale alias too (it would serve the wrong KV)
+                    self._unindex(bid, stale)
+                continue                          # content already indexed
+            if stale is not None:
+                del self._by_hash[stale]
+            self._by_hash[h] = bid
+            self._hash_of[bid] = h
+
+    def _unindex(self, bid: int, h: bytes):
+        """Drop ``bid``'s index entry; an unreferenced block must not be
+        stranded (neither free nor cached), so it returns to the free
+        list."""
+        del self._by_hash[h]
+        del self._hash_of[bid]
+        if self.ref[bid] == 0:
+            self._free.append(bid)
 
     # -- copy-on-write -----------------------------------------------------
     def cow(self, bid: int) -> Optional[int]:

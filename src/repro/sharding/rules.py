@@ -275,6 +275,18 @@ def cache_spec(path: str, shape, axis_sizes: dict, *,
             # GB/step on nemotron decode (EXPERIMENTS.md §Perf iteration 3).
             _first_fit(spec, shape, (off + 2, off + 3, off + 1),
                        model, model_size)
+    elif path.endswith("/k_scale") or path.endswith("/v_scale"):
+        # quantized-KV scale lanes [*, b, cache_len, n_kv]: follow the
+        # batch/seq placement of their code lanes; model can only land on
+        # kv-heads (there is no head_dim axis — when the codes shard hd the
+        # tiny scales just stay replicated)
+        off = ndim - 3
+        if not seq_to_data and batch is not None:
+            spec[off + 0] = batch
+        if seq_to_data and data is not None:
+            spec[off + 1] = data
+        if model is not None:
+            _first_fit(spec, shape, (off + 2,), model, model_size)
     elif path.endswith("/conv"):
         # [*, b, k-1, conv_dim]
         if not seq_to_data and batch is not None:
@@ -307,10 +319,22 @@ def paged_pool_spec(path: str, shape, axis_sizes: dict, *,
     """
     ndim = len(shape)
     spec = [None] * ndim
-    if not (path.endswith("/k") or path.endswith("/v")) or ndim < 4:
-        return P()
     model = "model" if "model" in axis_sizes else None
     data = "data" if "data" in axis_sizes else None
+    if (path.endswith("/k_scale") or path.endswith("/v_scale")) and ndim >= 3:
+        # quantized-pool scale tiles [*, num_blocks, block_size, n_kv]:
+        # same placement policy as the code pools, minus the head_dim
+        # fallback (scales have none — they stay replicated when the codes
+        # shard hd)
+        off = ndim - 3
+        if seq_to_data and data is not None:
+            _first_fit(spec, shape, (off + 0,), data, axis_sizes["data"])
+        if model is not None:
+            _first_fit(spec, shape, (off + 2,), model,
+                       axis_sizes.get("model", 1))
+        return _sanitize_sizes(P(*spec), shape, axis_sizes)
+    if not (path.endswith("/k") or path.endswith("/v")) or ndim < 4:
+        return P()
     off = ndim - 4
     if seq_to_data and data is not None:
         _first_fit(spec, shape, (off + 0,), data, axis_sizes["data"])
@@ -329,8 +353,11 @@ def cache_shardings(caches, mesh: Mesh, *, seq_to_data: bool = False):
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def one(path, leaf):
+        if leaf is None:           # absent scale/qmax fields (bf16 caches)
+            return None
         if isinstance(leaf, PagedKVCache):
             return PagedKVCache(*[
+                None if getattr(leaf, f) is None else
                 NamedSharding(mesh, paged_pool_spec(
                     f"{path}/{f}", getattr(leaf, f).shape, sizes,
                     seq_to_data=seq_to_data))

@@ -18,3 +18,40 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Per-test wall-clock budget (the CI fast job's honesty gate)
+#
+# REPRO_FAST_TEST_BUDGET_S=<seconds> makes the session FAIL if any test not
+# marked ``slow`` exceeds the budget in its call phase. The fast CI job sets
+# it, so a test that grows past the budget must either get faster or be
+# marked ``@pytest.mark.slow`` (moving it to the slow job) — the growing
+# serving suite can't silently turn the fast signal into a 30-minute one.
+# Unset (the default, and the tier-1 command) it does nothing.
+# ---------------------------------------------------------------------------
+
+_BUDGET_S = float(os.environ.get("REPRO_FAST_TEST_BUDGET_S", "0") or 0)
+_OVER_BUDGET = []
+
+
+def pytest_runtest_logreport(report):
+    if (_BUDGET_S > 0 and report.when == "call" and report.passed
+            and "slow" not in report.keywords
+            and report.duration > _BUDGET_S):
+        _OVER_BUDGET.append((report.nodeid, report.duration))
+
+
+def pytest_terminal_summary(terminalreporter):
+    if not _OVER_BUDGET:
+        return
+    terminalreporter.section(
+        f"unmarked tests over the {_BUDGET_S:.0f}s fast-job budget")
+    for nodeid, dur in sorted(_OVER_BUDGET, key=lambda t: -t[1]):
+        terminalreporter.write_line(
+            f"  {dur:7.1f}s  {nodeid}  (speed it up or mark it slow)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _OVER_BUDGET and session.exitstatus == 0:
+        session.exitstatus = 1

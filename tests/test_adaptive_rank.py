@@ -9,6 +9,7 @@ from repro.configs.registry import get_smoke_config
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
 from repro.models import forward, init_params
 from repro.quant import PTQConfig, calibrate, quantize_model
+import pytest
 
 
 def _selected_ranks(qp):
@@ -45,6 +46,7 @@ def test_alpha_rank_varies_and_monotone():
     assert mean_ranks[2] > mean_ranks[0]   # genuinely adaptive
 
 
+@pytest.mark.slow
 def test_per_expert_ranks_differ():
     """Per-expert calibration ⇒ per-expert α-ranks (beyond-paper: experts
     with few routed tokens get smaller compensation)."""

@@ -1,0 +1,210 @@
+"""Property tests for the host-side paged-cache allocator invariants.
+
+`serve/paged_cache.py::BlockPool` is the one piece of serving state the
+device never checks — a refcount bug here silently hands one request's
+pages to another. These tests drive randomized (but fixed-seed,
+deterministic) op sequences against a shadow model and pin the invariants:
+
+* refcounts never go negative, and every block is in exactly one of the
+  three states (live / cached / free);
+* LRU eviction never reclaims a live (incref'd) page;
+* ``cow()`` leaves the source's refcount intact and returns a private id;
+* ``alloc`` after exhaustion fails cleanly (returns None, state unchanged).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
+
+from repro.serve.paged_cache import BlockPool, block_hashes
+
+
+def _invariants(pool: BlockPool):
+    """The global consistency every op sequence must preserve."""
+    assert (pool.ref >= 0).all(), "negative refcount"
+    free = set(pool._free)
+    cached = {bid for bid in pool._by_hash.values() if pool.ref[bid] == 0}
+    live = {int(b) for b in np.flatnonzero(pool.ref > 0)}
+    # free ∩ (cached ∪ live) = ∅; all ids accounted for or idle-but-indexed
+    assert not (free & live), "free list holds a live block"
+    assert not (free & cached), "free list holds a cached (indexed) block"
+    assert pool.available() == len(free) + len(cached)
+    assert pool.live() == len(live)
+    # the hash index is a bijection over its blocks
+    assert len(pool._by_hash) == len(pool._hash_of)
+    for h, bid in pool._by_hash.items():
+        assert pool._hash_of[bid] == h
+
+
+def _random_ops(pool: BlockPool, rng: np.random.Generator, n_ops: int):
+    """Random alloc/free/incref/match/register/cow/evict traffic."""
+    held = []                 # (bid, times_held) we still owe frees for
+    next_tok = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 6)
+        if op == 0:           # alloc a few
+            n = int(rng.integers(1, 3))
+            got = pool.alloc(n)
+            if got is not None:
+                assert len(got) == n
+                assert all(pool.ref[b] == 1 for b in got)
+                held.extend(got)
+        elif op == 1 and held:  # free one we hold
+            bid = held.pop(int(rng.integers(0, len(held))))
+            pool.free([bid])
+        elif op == 2 and held:  # incref one we hold (second holder)
+            bid = held[int(rng.integers(0, len(held)))]
+            pool.incref([bid])
+            held.append(bid)
+        elif op == 3 and held:  # register a prefix over a held block
+            bid = held[int(rng.integers(0, len(held)))]
+            toks = np.full((pool.block_size,), next_tok, np.int32)
+            next_tok += 1
+            pool.register_prefix(toks, [bid])
+        elif op == 4:           # match some previous prefix (takes refs)
+            toks = np.full((pool.block_size,),
+                           int(rng.integers(0, max(next_tok, 1))), np.int32)
+            ids, _ = pool.match_prefix(toks)
+            held.extend(ids)
+        elif op == 5 and held:  # cow a held block
+            bid = held[int(rng.integers(0, len(held)))]
+            ref_before = int(pool.ref[bid])
+            dst = pool.cow(bid)
+            assert int(pool.ref[bid]) == ref_before, \
+                "cow changed the source refcount"
+            if dst is not None and dst != bid:
+                assert pool.ref[dst] == 1
+                held.append(dst)
+        _invariants(pool)
+    return held
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_pool_invariants_under_random_traffic(seed):
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(int(rng.integers(2, 12)), int(rng.integers(1, 6)))
+    held = _random_ops(pool, rng, 60)
+    # drain: every held reference frees exactly once, pool returns to empty
+    pool.free(held)
+    _invariants(pool)
+    assert pool.live() == 0
+    assert pool.available() == pool.num_blocks
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_eviction_never_reclaims_live_pages(seed):
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(6, 4)
+    live = pool.alloc(int(rng.integers(1, 4)))
+    # index the live blocks AND retire-then-cache some others
+    for i, bid in enumerate(live):
+        pool.register_prefix(np.full((4,), 100 + i, np.int32), [bid])
+    cached = pool.alloc(6 - len(live))
+    for i, bid in enumerate(cached):
+        pool.register_prefix(np.full((4,), 200 + i, np.int32), [bid])
+    pool.free(cached)          # now evictable; `live` still held
+    _invariants(pool)
+    # exhaust the pool: every alloc must come from the cached set only
+    got = pool.alloc(pool.available())
+    assert got is not None and set(got) == set(cached)
+    assert all(pool.ref[b] == 1 for b in live), "eviction touched live page"
+    # the evicted blocks' index entries are gone, the live ones' remain
+    for i in range(len(cached)):
+        ids, n = pool.match_prefix(np.full((4,), 200 + i, np.int32))
+        assert ids == [] and n == 0
+    ids, n = pool.match_prefix(np.full((4,), 100, np.int32))
+    assert ids == [live[0]] and n == 4
+    pool.free(ids)
+
+
+def test_alloc_after_exhaustion_fails_cleanly():
+    pool = BlockPool(3, 2)
+    got = pool.alloc(3)
+    assert got is not None
+    before = (pool.ref.copy(), list(pool._free), dict(pool._by_hash),
+              pool.evictions)
+    assert pool.alloc(1) is None          # exhausted: clean failure
+    assert pool.alloc(0) == []            # zero is always satisfiable
+    after = (pool.ref, list(pool._free), dict(pool._by_hash), pool.evictions)
+    assert (before[0] == after[0]).all() and before[1:] == after[1:], \
+        "failed alloc mutated pool state"
+    with pytest.raises(ValueError, match=r"alloc\(-1\)"):
+        pool.alloc(-1)
+    pool.free(got)
+    assert pool.alloc(3) is not None      # recovers fully
+
+
+def test_cow_preserves_contents_identity_and_source_ref():
+    """Pool-level COW contract: the returned id is private, the source's
+    refcount is untouched (the *caller* later drops its reference), and a
+    private unindexed block is returned as-is (contents trivially
+    preserved — the device copy is only issued when the id changes)."""
+    pool = BlockPool(4, 4)
+    toks = np.arange(4, dtype=np.int32)
+    (a,) = pool.alloc(1)
+    assert pool.cow(a) == a               # sole holder, unindexed: in place
+    pool.register_prefix(toks, [a])
+    ids, _ = pool.match_prefix(toks)      # second holder
+    assert ids == [a] and pool.ref[a] == 2
+    dst = pool.cow(a)
+    assert dst is not None and dst != a and pool.ref[dst] == 1
+    assert pool.ref[a] == 2, "cow dropped the source reference itself"
+    # caller then frees its ref on the source, exactly once
+    pool.free([a, dst])
+    assert pool.ref[a] == 1
+    # exhaustion: cow degrades to None, source still intact
+    rest = pool.alloc(pool.available())
+    ids, _ = pool.match_prefix(toks)
+    assert pool.cow(a) is None and pool.ref[a] == 2
+    pool.free(ids)
+    pool.free([a] + rest)
+
+
+def test_reregistered_block_with_duplicate_content_drops_stale_alias():
+    """A rewritten block whose new content is already indexed via another
+    block must lose its stale hash alias — otherwise a later match through
+    the stale hash serves the rewritten (wrong) KV content."""
+    pool = BlockPool(4, 4)
+    old = np.arange(4, dtype=np.int32)
+    dup = np.full((4,), 9, np.int32)
+    (a,) = pool.alloc(1)
+    (b,) = pool.alloc(1)
+    pool.register_prefix(old, [a])         # a holds `old`
+    pool.register_prefix(dup, [b])         # b holds `dup`
+    # a's holder rewrites it with `dup` content and re-registers
+    pool.register_prefix(dup, [a])
+    _invariants(pool)
+    ids, n = pool.match_prefix(old)        # stale alias must be gone
+    assert ids == [] and n == 0
+    ids, _ = pool.match_prefix(dup)
+    assert ids == [b]
+    pool.free(ids)
+    pool.free([a, b])
+    # an unreferenced block losing its only index entry returns to the
+    # free list instead of being stranded
+    pool2 = BlockPool(2, 4)
+    (x,) = pool2.alloc(1)
+    (y,) = pool2.alloc(1)
+    pool2.register_prefix(old, [x])
+    pool2.register_prefix(dup, [y])
+    pool2.free([x])                        # x now cached (ref 0, indexed)
+    pool2.register_prefix(dup, [x])        # stale alias drop ⇒ x unindexed
+    _invariants(pool2)
+    assert pool2.available() == 1          # x is free again, not stranded
+    pool2.free([y])
+
+
+def test_double_free_and_free_incref_guards():
+    pool = BlockPool(2, 2)
+    (a,) = pool.alloc(1)
+    pool.free([a])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([a])
+    with pytest.raises(ValueError, match="incref of free block"):
+        pool.incref([a])
+    _invariants(pool)

@@ -1,17 +1,34 @@
 """Serving correctness: token-by-token decode with caches must reproduce the
-full-sequence forward for every architecture family."""
+full-sequence forward for every architecture family — and the engine's
+optimized serving paths (scan vs step decode loop, contiguous vs paged KV)
+must agree token-for-token on every registry config that supports them.
+Configs that cannot serve ragged/paged (SSM/hybrid state, enc-dec cross
+caches, sliding-window ring buffers) must say so loudly, with a message
+that names the reason."""
 import dataclasses
+import zlib
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.configs.registry import get_smoke_config
+from repro.configs.registry import ARCH_IDS, PAPER_IDS, get_smoke_config
 from repro.models import (encode, forward, init_caches, init_params,
                           prepare_cross_caches)
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Scheduler
 
 FAMS = ["stablelm_3b", "gemma2_9b", "mamba2_780m", "zamba2_7b",
         "moonshot_v1_16b", "whisper_medium", "qwen2_vl_7b", "nemotron_4_340b"]
+
+# every small config in the registry, serving-capable or not
+ALL_ARCHS = ARCH_IDS + PAPER_IDS
+
+
+def _ragged_capable(cfg) -> bool:
+    return (cfg.family not in ("ssm", "hybrid", "encdec")
+            and cfg.sliding_window == 0 and cfg.local_global_period == 0)
 
 
 @pytest.mark.parametrize("arch", FAMS)
@@ -51,6 +68,80 @@ def test_decode_matches_prefill(arch, key):
         jnp.max(jnp.abs(full)) + 1)
 
 
+# ---------------------------------------------------------------------------
+# Cross-config engine matrix: scan vs step × contiguous vs paged
+# ---------------------------------------------------------------------------
+
+def _matrix_setup(arch, key):
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        # no token drops: keeps the test about cache layouts, not routing
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    cfg = dataclasses.replace(cfg, remat=False)
+    params = init_params(key, cfg)
+    # stable per-arch seed (hash() is randomized per process)
+    rng = np.random.default_rng(zlib.crc32(arch.encode()))
+    lens = rng.integers(1, 7, size=3).astype(np.int32)
+    padded = np.zeros((3, 6), np.int32)
+    for i, L in enumerate(lens):
+        padded[i, :L] = rng.integers(0, cfg.vocab_size, L)
+    return cfg, params, lens, padded
+
+
+@pytest.mark.parametrize("arch",
+                         [a for a in ALL_ARCHS
+                          if _ragged_capable(get_smoke_config(a))])
+def test_engine_matrix_loops_and_layouts_agree(arch, key):
+    """For every serving-capable registry config, all four engine variants
+    (scan/step decode loop × contiguous/paged KV) generate identical
+    tokens from the same ragged batch."""
+    cfg, params, lens, padded = _matrix_setup(arch, key)
+    outs = {}
+    for loop in ("scan", "step"):
+        for layout in ("contiguous", "paged"):
+            eng = Engine(params, cfg,
+                         ServeConfig(max_len=16, decode_loop=loop,
+                                     kv_layout=layout, block_size=4))
+            outs[(loop, layout)] = np.asarray(
+                eng.generate(jnp.asarray(padded), 5,
+                             prompt_lens=jnp.asarray(lens)))
+    base = outs[("scan", "contiguous")]
+    assert base.shape == (3, 5)
+    for combo, out in outs.items():
+        assert np.array_equal(out, base), (arch, combo)
+
+
+@pytest.mark.parametrize("arch",
+                         [a for a in ALL_ARCHS
+                          if not _ragged_capable(get_smoke_config(a))])
+def test_engine_matrix_unsupported_raise_actionably(arch, key):
+    """SSM/hybrid/enc-dec/sliding-window configs must refuse ragged and
+    paged serving with a message that names the reason — not crash deep in
+    a scatter with a shape error."""
+    cfg = get_smoke_config(arch)
+    params = init_params(key, cfg)
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    lens = jnp.asarray([2, 4], jnp.int32)
+    reason = ("family" if cfg.family in ("ssm", "hybrid", "encdec")
+              else "sliding-window")
+    # ragged generate on the contiguous engine
+    eng = Engine(params, cfg, ServeConfig(max_len=16))
+    with pytest.raises(NotImplementedError, match=reason):
+        eng.generate(prompts, 2, prompt_lens=lens)
+    # paged generate (with or without prompt_lens)
+    paged = Engine(params, cfg, ServeConfig(max_len=16, kv_layout="paged",
+                                            block_size=4))
+    with pytest.raises(NotImplementedError, match=reason):
+        paged.generate(prompts, 2)
+    # the continuous-batching scheduler refuses at construction
+    with pytest.raises(NotImplementedError, match=reason):
+        Scheduler(eng)
+    # quantized KV is gated the same way (contiguous and paged)
+    with pytest.raises(NotImplementedError, match=reason):
+        Engine(params, cfg, ServeConfig(max_len=16,
+                                        kv_dtype="int8")).generate(prompts, 2)
+
+
 def test_chunked_prefill_matches(key):
     """Prefill in two chunks == prefill in one (chunked-prefill serving)."""
     cfg = get_smoke_config("stablelm_3b")
@@ -67,6 +158,7 @@ def test_chunked_prefill_matches(key):
         jnp.max(jnp.abs(full)) + 1)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer(key):
     """Ring-buffer decode == full-cache decode for a windowed layer."""
     cfg = get_smoke_config("gemma2_9b")

@@ -1,0 +1,419 @@
+"""Quantized (int8 / int4) KV cache: parity, tolerance, kernel, recipe.
+
+The acceptance pins for the KV-quant tentpole:
+
+* **per-dtype parity** — for ANY ragged prompt mix, the paged engine
+  generates token-for-token what the contiguous engine generates *at the
+  same ``kv_dtype``*, on both decode loops (quantization error is
+  identical in both layouts, so it cancels exactly);
+* **tolerance vs native** — int8-KV prefill logits stay within
+  ``KV_INT8_REL_TOL`` (max-abs relative) of the native-dtype cache, and
+  short greedy generations agree on ≥ ``KV_INT8_TOKEN_AGREEMENT`` of
+  tokens (greedy argmax can flip near-ties; the *documented* tolerance
+  policy lives in docs/serving_perf.md and mirrors these constants);
+* the Pallas paged-gather kernel's fused dequant epilogue matches the XLA
+  gather path;
+* ``KVQuantSpec`` rides the recipe API (JSON round-trip, registry
+  overrides, v1-blob back-compat);
+* scale pools shard and page-budget math holds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
+
+from repro.configs.registry import get_smoke_config
+from repro.models import (dequantize_kv, forward, init_caches, init_params,
+                          kv_qmax, quantize_kv)
+from repro.quant import KVQuantSpec, QuantRecipe, registry
+from repro.runtime import KV_CACHE_DTYPES, RuntimeConfig
+from repro.serve.engine import (Engine, ServeConfig, blocks_for_hbm_budget,
+                                kv_page_bytes)
+from repro.serve.scheduler import Scheduler
+
+# documented tolerance policy (docs/serving_perf.md#quantized-kv-cache):
+# measured worst-case int8 rel. logit error on the smoke model is ~1.6%
+KV_INT8_REL_TOL = 0.05
+KV_INT8_TOKEN_AGREEMENT = 0.9
+
+MAX_PROMPT = 8
+BATCH = 3
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _ragged_batch(cfg, seed: int):
+    key = jax.random.PRNGKey(seed)
+    lens = np.asarray(jax.random.randint(key, (BATCH,), 1, MAX_PROMPT + 1))
+    padded = np.zeros((BATCH, MAX_PROMPT), np.int32)
+    for i, L in enumerate(lens):
+        padded[i, :int(L)] = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (int(L),), 0, cfg.vocab_size))
+    return lens.astype(np.int32), padded
+
+
+def _engine(tiny, *, kv="int8", layout="paged", loop="scan", rt=None,
+            **kw):
+    cfg, params = tiny
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 8)
+    return Engine(params, cfg,
+                  ServeConfig(decode_loop=loop, kv_layout=layout,
+                              kv_dtype=kv, **kw), rt=rt)
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize primitives
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 5, 3, 16)).astype(np.float32) * 7)
+    for dtype in ("int8", "int4"):
+        qm = kv_qmax(dtype)
+        codes, scale = quantize_kv(x, qm)
+        assert codes.dtype == jnp.int8
+        assert float(jnp.max(jnp.abs(codes))) <= qm
+        back = dequantize_kv(codes, scale)
+        # symmetric abs-max: error ≤ scale/2 per element, per (token, head)
+        bound = np.asarray(scale)[..., None] / 2 + 1e-7
+        assert np.all(np.abs(np.asarray(back - x)) <= bound), dtype
+
+
+def test_quantize_zero_rows_are_exact():
+    codes, scale = quantize_kv(jnp.zeros((1, 2, 2, 8)), 127.0)
+    assert not np.any(np.asarray(codes)) and not np.any(np.asarray(scale))
+    assert not np.any(np.asarray(dequantize_kv(codes, scale)))
+
+
+# ---------------------------------------------------------------------------
+# Property: paged ≡ contiguous pinned PER DTYPE (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=1000))
+def test_paged_matches_contiguous_per_kv_dtype(tiny, seed):
+    cfg, _ = tiny
+    lens, padded = _ragged_batch(cfg, seed)
+    for kv in ("int8", "int4"):
+        for loop in ("scan", "step"):
+            cont = np.asarray(_engine(tiny, kv=kv, layout="contiguous",
+                                      loop=loop).generate(
+                jnp.asarray(padded), 6, prompt_lens=lens))
+            paged = np.asarray(_engine(tiny, kv=kv, layout="paged",
+                                       loop=loop).generate(
+                jnp.asarray(padded), 6, prompt_lens=lens))
+            assert np.array_equal(cont, paged), (kv, loop, seed, lens)
+
+
+def test_int8_decode_within_documented_tolerance(tiny):
+    """int8-KV vs native-KV: prefill logits within KV_INT8_REL_TOL and
+    greedy generations ≥ KV_INT8_TOKEN_AGREEMENT token agreement."""
+    cfg, params = tiny
+    agree, total = 0, 0
+    for seed in range(4):
+        toks = jax.random.randint(jax.random.PRNGKey(seed), (2, 10), 0,
+                                  cfg.vocab_size)
+        ref, _, _ = forward(params, cfg, toks,
+                            caches=init_caches(cfg, 2, 16))
+        q8, _, _ = forward(params, cfg, toks,
+                           caches=init_caches(cfg, 2, 16, kv_dtype="int8"))
+        rel = float(jnp.max(jnp.abs(q8 - ref))) / float(jnp.max(jnp.abs(ref)))
+        assert rel < KV_INT8_REL_TOL, (seed, rel)
+
+        lens, padded = _ragged_batch(cfg, seed)
+        a = np.asarray(_engine(tiny, kv="bf16").generate(
+            jnp.asarray(padded), 8, prompt_lens=lens))
+        b = np.asarray(_engine(tiny, kv="int8").generate(
+            jnp.asarray(padded), 8, prompt_lens=lens))
+        agree += int((a == b).sum())
+        total += a.size
+    assert agree / total >= KV_INT8_TOKEN_AGREEMENT, agree / total
+
+
+def test_int8_uniform_and_eos_paths(tiny):
+    """The non-ragged contiguous write path and the eos masked
+    continuation quantize identically in both layouts."""
+    cfg, params = tiny
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (BATCH, 5), 0,
+                                 cfg.vocab_size)
+    a = np.asarray(_engine(tiny, kv="int8", layout="contiguous")
+                   .generate(prompts, 6))
+    b = np.asarray(_engine(tiny, kv="int8", layout="paged")
+                   .generate(prompts, 6))
+    assert np.array_equal(a, b)
+    eos = int(a[0, 2])
+    c = np.asarray(_engine(tiny, kv="int8", layout="contiguous",
+                           eos_id=eos).generate(prompts, 6))
+    d = np.asarray(_engine(tiny, kv="int8", layout="paged",
+                           eos_id=eos).generate(prompts, 6))
+    assert np.array_equal(c, d)
+
+
+# ---------------------------------------------------------------------------
+# Engine / ServeConfig surface
+# ---------------------------------------------------------------------------
+
+def test_serve_config_kv_dtype_validation():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeConfig(kv_dtype="fp8")
+    assert ServeConfig(kv_dtype="int8").kv_bits == 8
+    assert ServeConfig(kv_dtype="int4").kv_bits == 4
+    assert ServeConfig().kv_bits == 16
+
+
+def test_quantized_kv_gates_unsupported_configs(tiny):
+    ssm_cfg = get_smoke_config("mamba2_780m").reduced(d_model=32, n_layers=2)
+    ssm_params = init_params(jax.random.PRNGKey(0), ssm_cfg)
+    eng = Engine(ssm_params, ssm_cfg, ServeConfig(max_len=16,
+                                                  kv_dtype="int8"))
+    with pytest.raises(NotImplementedError, match="family 'ssm'"):
+        eng.generate(jnp.zeros((1, 4), jnp.int32), 2)
+    win_cfg = get_smoke_config("gemma2_9b")
+    with pytest.raises(NotImplementedError, match="sliding-window"):
+        init_caches(win_cfg, 1, 16, kv_dtype="int8")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        init_caches(_tiny_cfg(), 1, 16, kv_dtype="fp8")
+
+
+def test_scheduler_on_int8_paged_engine_matches_per_request(tiny):
+    """Continuous batching (admission, lazy page growth, retirement,
+    prefix reuse, COW) over an int8 pool reproduces the int8 engine's
+    dedicated runs token-for-token — the scales travel with their pages."""
+    cfg, _ = tiny
+    eng = _engine(tiny, kv="int8", max_len=64, batch_slots=2)
+    sched = Scheduler(eng, chunk_size=3)
+    key = jax.random.PRNGKey(2)
+    reqs = []
+    shared = np.asarray(jax.random.randint(key, (16,), 0, cfg.vocab_size))
+    for i, (L, n) in enumerate([(5, 8), (2, 4), (7, 11), (3, 6)]):
+        p = np.asarray(jax.random.randint(jax.random.fold_in(key, i), (L,),
+                                          0, cfg.vocab_size))
+        reqs.append((p, n, sched.submit(p, n)))
+    # two prefix-sharing requests exercise match/COW on quantized pages
+    for tail, n in ([7, 3], 5), ([1], 4):
+        p = np.concatenate([shared, np.asarray(tail, np.int32)])
+        reqs.append((p, n, sched.submit(p, n)))
+    sched.run()
+    for prompt, n, handle in reqs:
+        ref = np.asarray(eng.generate(jnp.asarray(prompt[None]), n))[0]
+        assert np.array_equal(np.asarray(handle.tokens), ref), \
+            (len(prompt), n)
+    assert sched.pool.live() == 0
+    assert sched.prefix_hits >= 1
+
+
+def test_copy_blocks_carries_scales(tiny):
+    """Device-side COW must copy the scale tiles with the codes — a page
+    copied without its scales dequantizes garbage."""
+    cfg, _ = tiny
+    eng = _engine(tiny, kv="int8")
+    caches = eng.new_caches()
+
+    def bump(leaf):
+        if not hasattr(leaf, "k_scale") or leaf.k_scale is None:
+            return leaf
+        # block 1 gets distinctive codes and scales everywhere
+        return leaf._replace(
+            k=leaf.k.at[..., 1, :, :, :].set(5),
+            k_scale=leaf.k_scale.at[..., 1, :, :].set(2.5))
+
+    caches = jax.tree.map(bump, caches,
+                          is_leaf=lambda x: hasattr(x, "k_scale"))
+    caches = eng.copy_blocks(caches, src=[1], dst=[3])
+    leaf = jax.tree.leaves(
+        caches, is_leaf=lambda x: hasattr(x, "k_scale"))[0]
+    assert np.all(np.asarray(leaf.k)[..., 3, :, :, :] == 5)
+    assert np.all(np.asarray(leaf.k_scale)[..., 3, :, :] == 2.5)
+    assert np.all(np.asarray(leaf.k_scale)[..., 0, :, :] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: fused dequant epilogue
+# ---------------------------------------------------------------------------
+
+def test_paged_kernel_dequant_epilogue_matches_reference():
+    from repro.kernels.paged_attention import paged_decode_attention
+    rng = np.random.default_rng(0)
+    b, hq, hkv, hd, bs, n_total, nbr = 3, 4, 2, 32, 8, 12, 3
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, hd)).astype(np.float32))
+    kc = jnp.asarray(rng.integers(-127, 128, size=(n_total, bs, hkv, hd))
+                     .astype(np.int8))
+    vc = jnp.asarray(rng.integers(-127, 128, size=(n_total, bs, hkv, hd))
+                     .astype(np.int8))
+    ks = jnp.asarray(rng.uniform(0.01, 0.1, size=(n_total, bs, hkv))
+                     .astype(np.float32))
+    vs = jnp.asarray(rng.uniform(0.01, 0.1, size=(n_total, bs, hkv))
+                     .astype(np.float32))
+    bt = jnp.asarray(np.array([[0, 3, 7], [2, 5, n_total],
+                               [9, n_total, n_total]], np.int32))
+    klen = jnp.asarray(np.array([20, 11, 4], np.int32))
+    out = np.asarray(paged_decode_attention(q, kc, vc, bt, klen, ks, vs,
+                                            interpret=True))
+
+    kf = np.asarray(dequantize_kv(kc, ks)).reshape(n_total * bs, hkv, hd)
+    vf = np.asarray(dequantize_kv(vc, vs)).reshape(n_total * bs, hkv, hd)
+    group = hq // hkv
+    for i in range(b):
+        idx = (np.clip(np.asarray(bt)[i], 0, n_total - 1)[:, None] * bs
+               + np.arange(bs)).reshape(-1)
+        for h in range(hq):
+            kh, vh = kf[idx][:, h // group], vf[idx][:, h // group]
+            s = (np.asarray(q)[i, 0, h] @ kh.T) * hd ** -0.5
+            s[np.arange(len(s)) >= int(klen[i])] = -1e30
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            np.testing.assert_allclose(out[i, 0, h], p @ vh,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_int8_paged_engine_with_pallas_kernel(tiny):
+    """Full int8 paged generation through the kernel's dequant epilogue
+    tracks the XLA gather path (greedy near-ties may flip)."""
+    cfg, _ = tiny
+    lens, padded = _ragged_batch(cfg, seed=3)
+    xla = np.asarray(_engine(tiny, kv="int8",
+                             rt=RuntimeConfig(use_pallas=False)).generate(
+        jnp.asarray(padded), 5, prompt_lens=lens))
+    pls = np.asarray(_engine(tiny, kv="int8",
+                             rt=RuntimeConfig(use_pallas=True,
+                                              interpret=True)).generate(
+        jnp.asarray(padded), 5, prompt_lens=lens))
+    assert (xla == pls).mean() > 0.8
+
+
+def test_tuning_accounts_for_dequant_epilogue():
+    from repro.kernels import tuning
+    base = tuning.paged_vmem_bytes(16, 8, 128)
+    quant = tuning.paged_vmem_bytes(16, 8, 128, quantized=True)
+    assert quant == base + 2 * 16 * 128 + 2 * 16 * 4
+    assert tuning.use_paged_kernel(8, 32, 16, 8, 128, quantized=True)
+    assert not tuning.use_paged_kernel(8, 4, 65536, 8, 4096, quantized=True)
+
+
+# ---------------------------------------------------------------------------
+# Recipe API: KVQuantSpec stage
+# ---------------------------------------------------------------------------
+
+def test_kv_quant_spec_validation_and_bits():
+    assert KVQuantSpec().is_noop and KVQuantSpec().bits == 16
+    assert KVQuantSpec("int8").bits == 8
+    assert KVQuantSpec("int4").bits == 4
+    with pytest.raises(ValueError, match="kv cache dtype"):
+        KVQuantSpec("fp8")
+    scfg = KVQuantSpec("int8").serve_config(max_len=64, kv_layout="paged")
+    assert scfg.kv_dtype == "int8" and scfg.kv_layout == "paged"
+
+
+def test_recipe_kv_roundtrip_and_backcompat():
+    r = registry.resolve("aser_as", kv_dtype="int8")
+    assert r.kv == KVQuantSpec("int8")
+    blob = r.to_json()
+    assert QuantRecipe.from_json(blob) == r
+    d = r.to_dict()
+    assert d["format_version"] == 2 and d["kv"] == {"dtype": "int8"}
+    # v1 blobs (pre-KV-quant) deserialize with the bf16 default
+    legacy = {k: v for k, v in d.items() if k != "kv"}
+    legacy["format_version"] = 1
+    assert QuantRecipe.from_dict(legacy).kv == KVQuantSpec()
+    with pytest.raises(ValueError, match="format version"):
+        QuantRecipe.from_dict({**d, "format_version": 3})
+
+
+def test_registry_kv_dtype_override_everywhere():
+    for name in registry.available():
+        r = registry.resolve(f"{name}(kv_dtype=int8)")
+        assert r.kv == KVQuantSpec("int8"), name
+        assert registry.resolve(name).kv == KVQuantSpec(), name
+    with pytest.raises(ValueError, match="kv cache dtype"):
+        registry.resolve("aser", kv_dtype="fp8")
+
+
+# ---------------------------------------------------------------------------
+# Sharding: scale lanes / pools
+# ---------------------------------------------------------------------------
+
+def test_scale_pool_and_lane_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import cache_spec, paged_pool_spec
+    sizes = {"data": 2, "model": 2}
+    # paged scale pools [num_blocks, block_size, n_kv]: model → kv heads
+    assert paged_pool_spec("/g/0/k_scale", (64, 16, 4), sizes) == \
+        P(None, None, "model")
+    # no head_dim fallback: odd heads stay replicated
+    assert paged_pool_spec("/g/0/v_scale", (64, 16, 1), sizes) == \
+        P(None, None, None)
+    assert paged_pool_spec("/g/0/k_scale", (64, 16, 4), sizes,
+                           seq_to_data=True) == P("data", None, "model")
+    # contiguous scale lanes [b, cache_len, n_kv]
+    assert cache_spec("/g/0/k_scale", (4, 32, 4), sizes) == \
+        P(("data",), None, "model")
+    assert cache_spec("/g/0/v_scale", (4, 32, 4), sizes,
+                      seq_to_data=True) == P(None, "data", "model")
+    assert cache_spec("/g/0/qmax", (), sizes) == P()
+
+
+def test_cache_shardings_handle_quantized_trees(tiny):
+    from repro.models import init_paged_caches
+    from repro.sharding.rules import cache_shardings
+    cfg, _ = tiny
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1),
+                             ("model",))
+    for caches in (init_paged_caches(cfg, 16, 8, kv_dtype="int8"),
+                   init_caches(cfg, 2, 16, kv_dtype="int8"),
+                   init_caches(cfg, 2, 16)):
+        sds = cache_shardings(caches, mesh)
+        # structure must match exactly (None leaves line up), so device_put
+        # of the cache tree against its shardings is well-formed
+        assert (jax.tree.structure(sds) == jax.tree.structure(
+            jax.tree.map(lambda _: object(), caches)))
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting: more pages at the same HBM budget
+# ---------------------------------------------------------------------------
+
+def test_kv_page_bytes_math(tiny):
+    cfg, _ = tiny                      # float32 native, 2 kv heads, hd 32
+    bs = 8
+    native = kv_page_bytes(cfg, bs, "bf16")
+    int8 = kv_page_bytes(cfg, bs, "int8")
+    assert native == 2 * bs * 2 * 32 * 4 * cfg.n_layers
+    assert int8 == (2 * bs * 2 * 32 + 2 * bs * 2 * 4) * cfg.n_layers
+    assert kv_page_bytes(cfg, bs, "int4") == int8   # unpacked: honest
+    with pytest.raises(ValueError, match="kv_dtype"):
+        kv_page_bytes(cfg, bs, "fp8")
+    budget = 64 * native
+    assert blocks_for_hbm_budget(cfg, bs, "bf16", budget) == 64
+    assert blocks_for_hbm_budget(cfg, bs, "int8", budget) == \
+        budget // int8 > 64
+    # a budget below one page must raise, not return 0 (which ServeConfig
+    # would read as "use the default pool size" and blow the budget)
+    with pytest.raises(ValueError, match="smaller than one"):
+        blocks_for_hbm_budget(cfg, bs, "int8", int8 - 1)
+    bf16_cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    assert kv_page_bytes(bf16_cfg, bs, "bf16") == native // 2
+
+
+def test_kv_dtypes_vocabulary_is_single_sourced():
+    from repro.models.attention import _KV_QMAX
+    assert set(_KV_QMAX) == set(KV_CACHE_DTYPES) - {"bf16"}
+    assert kv_qmax("int8") == 127.0 and kv_qmax("int4") == 7.0

@@ -28,6 +28,7 @@ def quantized(request):
     return arch, cfg, params, tape, toks
 
 
+@pytest.mark.slow
 def test_quantize_all_methods_finite(quantized):
     arch, cfg, params, tape, toks = quantized
     ref, _, _ = forward(params, cfg, toks)
@@ -84,6 +85,7 @@ def test_act_bits_sweep(quantized):
     assert dists[16] <= dists[8] <= dists[6]
 
 
+@pytest.mark.slow
 def test_quantized_decode_consistency(quantized):
     """Quantized model decode == quantized full forward."""
     arch, cfg, params, tape, toks = quantized

@@ -1,0 +1,176 @@
+"""Unit tests for the ``serve_bench`` report validator.
+
+The validator is the CI gate between a benchmark run and the checked-in
+baseline; it must accept every released schema generation (v1–v4) and
+reject malformed payloads with errors that name the offending field —
+a silent pass here would let a NaN or truncated report become the perf
+baseline subsequent PRs are measured against.
+"""
+import math
+
+import pytest
+
+from benchmarks.serve_bench import (CONT_ROW_FIELDS, KV_ROW_FIELDS,
+                                    PREFIX_ROW_FIELDS, ROW_FIELDS, validate)
+
+
+def _static_row(mode="fp", **over):
+    row = {"mode": mode, "batch": 4, "prompt": 16, "n_steps": 16,
+           "prefill_ms": 3.0, "decode_ms_per_tok": 0.5, "tokens_per_s": 900.0,
+           "scan_decode_ms_per_tok": 0.5, "step_decode_ms_per_tok": 1.0,
+           "dispatch_overhead_ms_per_tok": 0.5, "scan_speedup": 2.0}
+    assert set(row) == set(ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _cont_row(mode="fp", **over):
+    row = {"mode": mode, "requests": 8, "batch_slots": 2, "chunk": 4,
+           "prompt_len_min": 2, "prompt_len_max": 10, "new_tokens_min": 2,
+           "new_tokens_max": 12, "useful_tokens": 64, "static_s": 0.2,
+           "continuous_s": 0.1, "static_goodput_tok_s": 320.0,
+           "goodput_tok_s": 640.0, "goodput_speedup": 2.0}
+    assert set(row) == set(CONT_ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _prefix_row(mode="fp", **over):
+    row = {"mode": mode, "requests": 8, "prefix_groups": 2, "prefix_len": 16,
+           "batch_slots": 2, "chunk": 4, "block_size": 8, "num_blocks": 8,
+           "useful_tokens": 40, "noreuse_s": 0.2, "reuse_s": 0.1,
+           "noreuse_goodput_tok_s": 200.0, "goodput_tok_s": 400.0,
+           "goodput_speedup": 2.0, "prefix_hit_rate": 0.6}
+    assert set(row) == set(PREFIX_ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _kv_row(mode="fp", **over):
+    row = {"mode": mode, "requests": 8, "batch_slots": 2, "chunk": 4,
+           "block_size": 8, "hbm_budget_kb": 64.0, "bf16_blocks": 8,
+           "int8_blocks": 28, "useful_tokens": 100, "bf16_s": 0.2,
+           "int8_s": 0.1, "bf16_preemptions": 3, "int8_preemptions": 0,
+           "bf16_goodput_tok_s": 500.0, "goodput_tok_s": 1000.0,
+           "goodput_speedup": 2.0}
+    assert set(row) == set(KV_ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _report(schema):
+    rep = {"schema": schema, "smoke": True,
+           "model": {"name": "t", "n_layers": 2, "d_model": 64,
+                     "vocab_size": 128},
+           "decode_loop_default": "scan",
+           "rows": [_static_row("fp"), _static_row("w4a8_aser")]}
+    if schema in ("serve_bench/v2", "serve_bench/v3", "serve_bench/v4"):
+        rep["continuous_rows"] = [_cont_row("fp"), _cont_row("w4a8_aser")]
+    if schema in ("serve_bench/v3", "serve_bench/v4"):
+        rep["prefix_rows"] = [_prefix_row("fp"), _prefix_row("w4a8_aser")]
+    if schema == "serve_bench/v4":
+        rep["kv_rows"] = [_kv_row("fp"), _kv_row("w4a8_aser")]
+    return rep
+
+
+# -- accepted generations ----------------------------------------------------
+
+@pytest.mark.parametrize("schema", ["serve_bench/v1", "serve_bench/v2",
+                                    "serve_bench/v3", "serve_bench/v4"])
+def test_every_released_schema_validates(schema):
+    assert validate(_report(schema)) is True
+
+
+def test_v1_fixture_ignores_newer_sections():
+    """A v1 file with stray newer keys is still just a v1 file."""
+    rep = _report("serve_bench/v1")
+    rep["continuous_rows"] = []            # would fail v2 validation
+    assert validate(rep) is True
+
+
+# -- rejected payloads -------------------------------------------------------
+
+def test_wrong_schema_rejected():
+    rep = _report("serve_bench/v4")
+    rep["schema"] = "serve_bench/v99"
+    with pytest.raises(ValueError, match="schema mismatch.*v99"):
+        validate(rep)
+    with pytest.raises(ValueError, match="schema mismatch"):
+        validate({"rows": rep["rows"]})    # missing schema entirely
+    # partial probe files are rejected by design
+    with pytest.raises(ValueError, match="schema mismatch.*probe"):
+        validate({**rep, "schema": "serve_bench/probe"})
+
+
+def test_missing_field_rejected_with_field_name():
+    rep = _report("serve_bench/v4")
+    del rep["kv_rows"][0]["int8_blocks"]
+    with pytest.raises(ValueError, match="missing fields.*int8_blocks"):
+        validate(rep)
+    rep = _report("serve_bench/v3")
+    del rep["prefix_rows"][1]["prefix_hit_rate"]
+    with pytest.raises(ValueError, match="missing fields.*prefix_hit_rate"):
+        validate(rep)
+    rep = _report("serve_bench/v1")
+    del rep["rows"][0]["decode_ms_per_tok"]
+    with pytest.raises(ValueError, match="missing fields.*decode_ms_per_tok"):
+        validate(rep)
+
+
+def test_missing_section_rejected():
+    rep = _report("serve_bench/v4")
+    del rep["kv_rows"]
+    with pytest.raises(ValueError, match="no kv rows"):
+        validate(rep)
+    rep = _report("serve_bench/v2")
+    rep["continuous_rows"] = []
+    with pytest.raises(ValueError, match="no continuous rows"):
+        validate(rep)
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), "12.5", None,
+                                 True])
+def test_non_finite_or_non_numeric_metric_rejected(bad):
+    rep = _report("serve_bench/v4")
+    rep["kv_rows"][0]["goodput_tok_s"] = bad
+    with pytest.raises(ValueError, match="non-finite goodput_tok_s"):
+        validate(rep)
+
+
+def test_non_positive_latency_rejected():
+    rep = _report("serve_bench/v1")
+    rep["rows"][0]["prefill_ms"] = 0.0
+    with pytest.raises(ValueError, match="non-positive prefill_ms"):
+        validate(rep)
+
+
+def test_missing_mode_coverage_rejected():
+    rep = _report("serve_bench/v4")
+    rep["kv_rows"] = [_kv_row("fp")]
+    with pytest.raises(ValueError, match="need fp and w4a8_aser kv rows"):
+        validate(rep)
+
+
+def test_prefix_hit_rate_bounds():
+    rep = _report("serve_bench/v3")
+    rep["prefix_rows"][0]["prefix_hit_rate"] = 1.5
+    with pytest.raises(ValueError, match="prefix_hit_rate out of"):
+        validate(rep)
+
+
+def test_shrunken_int8_pool_rejected():
+    """At equal HBM budget the int8 pool can never be smaller — a smaller
+    pool means the budget math regressed."""
+    rep = _report("serve_bench/v4")
+    rep["kv_rows"][0]["int8_blocks"] = 4
+    with pytest.raises(ValueError, match="int8 pool smaller"):
+        validate(rep)
+
+
+def test_nan_detection_is_not_string_typed():
+    """The finite check must treat booleans and strings as malformed even
+    when they'd compare truthy."""
+    rep = _report("serve_bench/v2")
+    rep["continuous_rows"][0]["useful_tokens"] = math.nan
+    with pytest.raises(ValueError, match="non-finite useful_tokens"):
+        validate(rep)

@@ -255,26 +255,28 @@ def test_serve_bench_validator():
     row = {f: 1.0 for f in sb.ROW_FIELDS}
     crow = {f: 1.0 for f in sb.CONT_ROW_FIELDS}
     prow = {f: 1.0 for f in sb.PREFIX_ROW_FIELDS}
+    krow = {f: 1.0 for f in sb.KV_ROW_FIELDS}
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
     prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
+    krows = [dict(krow, mode="fp"), dict(krow, mode="w4a8_aser")]
     good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
-            "continuous_rows": crows, "prefix_rows": prows}
+            "continuous_rows": crows, "prefix_rows": prows,
+            "kv_rows": krows}
     assert sb.validate(good)
-    # v1 (static only) and v2 (static + continuous) must keep validating
+    # v1/v2/v3 generations must keep validating
     assert sb.validate({"schema": sb.SCHEMA_V1, "smoke": True, "rows": rows})
     assert sb.validate({"schema": sb.SCHEMA_V2, "smoke": True, "rows": rows,
                         "continuous_rows": crows})
+    assert sb.validate({"schema": sb.SCHEMA_V3, "smoke": True, "rows": rows,
+                        "continuous_rows": crows, "prefix_rows": prows})
     with pytest.raises(ValueError):
         sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):
-        sb.validate({"schema": sb.SCHEMA, "rows": [dict(row, mode="fp")],
-                     "continuous_rows": crows, "prefix_rows": prows})
+        sb.validate(dict(good, rows=[dict(row, mode="fp")]))
     bad = dict(row, mode="fp", prefill_ms=float("nan"))
     with pytest.raises(ValueError):
-        sb.validate({"schema": sb.SCHEMA,
-                     "rows": [bad, dict(row, mode="w4a8_aser")],
-                     "continuous_rows": crows, "prefix_rows": prows})
+        sb.validate(dict(good, rows=[bad, dict(row, mode="w4a8_aser")]))
     # v2 without goodput rows is invalid; v2 demands positive goodput
     with pytest.raises(ValueError, match="continuous"):
         sb.validate({"schema": sb.SCHEMA_V2, "rows": rows})
@@ -285,11 +287,15 @@ def test_serve_bench_validator():
                          dict(crow, mode="w4a8_aser")]})
     # v3 without prefix rows is invalid; hit rate must sit in (0, 1]
     with pytest.raises(ValueError, match="prefix"):
-        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+        sb.validate({"schema": sb.SCHEMA_V3, "rows": rows,
                      "continuous_rows": crows})
     with pytest.raises(ValueError, match="hit_rate"):
-        sb.validate({"schema": sb.SCHEMA, "rows": rows,
+        sb.validate({"schema": sb.SCHEMA_V3, "rows": rows,
                      "continuous_rows": crows,
                      "prefix_rows": [
                          dict(prow, mode="fp", prefix_hit_rate=1.5),
                          dict(prow, mode="w4a8_aser")]})
+    # v4 without kv rows is invalid (deeper kv-row checks:
+    # tests/test_serve_bench_schema.py)
+    with pytest.raises(ValueError, match="kv rows"):
+        sb.validate({k: v for k, v in good.items() if k != "kv_rows"})

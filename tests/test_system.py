@@ -16,8 +16,10 @@ from repro.runtime import RuntimeConfig
 from repro.serve.engine import Engine, ServeConfig
 from repro.train.loop import TrainConfig, make_train_step
 from repro.train.optimizer import OptConfig, init_opt_state
+import pytest
 
 
+@pytest.mark.slow
 def test_full_system(tmp_path):
     cfg = get_smoke_config("llama3_8b").reduced(
         n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
