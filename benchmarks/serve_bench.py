@@ -38,10 +38,18 @@ Two workloads:
   admitted concurrency / fewer preemptions. Goodput is reported for both
   legs; the int8 leg winning is the acceptance pin for KV quantization.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v4`` =
-v3's static + continuous + ``prefix_rows`` + ``kv_rows``; the validator
-still accepts v1/v2/v3 files) so subsequent PRs have a perf trajectory to
-beat; ``--smoke`` runs a seconds-scale variant with the same schema for CI.
+  The **adapter** leg (``adapter_rows``, serve_bench/v5) serves one mixed
+  request stream twice through the paged continuous scheduler: base-only
+  (pool-free engine, adapter-free compiled programs) vs N distinct LoRA
+  tenants multiplexed over the one quantized base (per-request routing,
+  batched-gather epilogue). Reported as the mixed/base **goodput ratio**
+  (acceptance pin: ≥ 0.85) plus a ``token_exact`` bool certifying one
+  request per tenant against its merged-weight reference generation.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v5`` =
+v4's rows + ``adapter_rows``; the validator still accepts v1–v4 files) so
+subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
+seconds-scale variant with the same schema for CI.
 Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
 meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
 """
@@ -67,7 +75,8 @@ from repro.serve.engine import (Engine, ServeConfig, blocks_for_hbm_budget,
                                 kv_page_bytes)
 from repro.serve.scheduler import Scheduler
 
-SCHEMA = "serve_bench/v4"
+SCHEMA = "serve_bench/v5"
+SCHEMA_V4 = "serve_bench/v4"
 SCHEMA_V3 = "serve_bench/v3"
 SCHEMA_V2 = "serve_bench/v2"
 SCHEMA_V1 = "serve_bench/v1"
@@ -100,6 +109,17 @@ KV_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk", "block_size",
                  "useful_tokens", "bf16_s", "int8_s", "bf16_preemptions",
                  "int8_preemptions", "bf16_goodput_tok_s", "goodput_tok_s",
                  "goodput_speedup")
+
+# multi-tenant adapter fields added by serve_bench/v5 adapter rows.
+# w4a8_aser only: adapter pools ride on quantized leaves, fp has none.
+# "base" legs run the same traffic adapter-free on a pool-free engine;
+# token_exact certifies one request per tenant against its merged-weight
+# reference generation (bool, not a latency).
+ADAPTER_ROW_FIELDS = ("mode", "requests", "adapters", "adapter_rank",
+                      "adapter_slots", "batch_slots", "chunk",
+                      "useful_tokens", "base_s", "mixed_s",
+                      "base_goodput_tok_s", "goodput_tok_s", "goodput_ratio",
+                      "adapter_loads", "adapter_evictions", "token_exact")
 
 
 def _bench_cfg(smoke: bool):
@@ -280,6 +300,77 @@ def _time_kv_budget(params, cfg, rt, *, slots, max_len, block_size, chunk,
             out["bf16_preemptions"], out["int8_preemptions"])
 
 
+# -- multi-tenant adapter goodput --------------------------------------------
+
+def _run_adapters(engine, reqs, chunk, registry, apool=None):
+    """One serve of ``reqs`` (``(prompt, n, adapter_id)``); ``registry``
+    None = base leg (adapter-free scheduler, tags ignored). ``apool`` is
+    the warm shared pool: factor loads happen on the gate run, the timed
+    reps hit resident slots — matching a long-lived serving process."""
+    sched = Scheduler(engine, chunk_size=chunk, adapters=registry,
+                      adapter_pool=apool)
+    handles = [sched.submit(p, n,
+                            adapter_id=aid if registry is not None else None)
+               for p, n, aid in reqs]
+    sched.run()
+    return sched, handles
+
+
+def _time_adapters(qparams, cfg, rt, *, n_adapters, rank, slots, max_len,
+                   block_size, chunk, reqs, reps):
+    """Mixed N-tenant traffic vs the same traffic served base-only.
+
+    Both legs run the paged continuous-batching scheduler over the same
+    request stream; the mixed leg routes each request through its tenant's
+    pooled factors (batched-gather epilogue), the base leg serves a
+    pool-free engine (the adapter-free compiled programs). The gate run
+    also certifies one request per tenant token-exact against its
+    merged-weight reference (``AdapterRegistry.merged_params``) — routed
+    serving must price in zero accuracy.
+    """
+    from repro.serve.adapters import AdapterPool, AdapterRegistry, \
+        install_pools
+    reg = AdapterRegistry(qparams, rank=rank)
+    tenants = [reg.add(f"tenant-{i}") for i in range(n_adapters)]
+    pooled = install_pools(qparams, slots=n_adapters + 1, rank=rank)
+    apool = AdapterPool(n_adapters + 1)      # shared: pool lifetime = engine's
+    # round-robin tenant tags with base traffic threaded through: every
+    # (n_adapters+1)-th request serves the unadapted base from the same batch
+    reqs = [(p, n, None if i % (n_adapters + 1) == 0
+             else tenants[i % n_adapters]) for i, (p, n) in enumerate(reqs)]
+
+    def mk(params):
+        return Engine(params, cfg,
+                      ServeConfig(max_len=max_len, batch_slots=slots,
+                                  kv_layout="paged",
+                                  block_size=block_size), rt=rt)
+
+    base_eng, mixed_eng = mk(qparams), mk(pooled)
+    # correctness gate + warm: every tenant's first request token-exact
+    # against its merged-weight single-request generation
+    sched, handles = _run_adapters(mixed_eng, reqs, chunk, reg, apool)
+    assert all(h.done for _, h in zip(reqs, handles))
+    token_exact = True
+    seen = set()
+    for (p, n, aid), h in zip(reqs, handles):
+        if aid in seen:
+            continue
+        seen.add(aid)
+        refp = qparams if aid is None else reg.merged_params(qparams, aid)
+        ref_eng = Engine(refp, cfg, ServeConfig(max_len=max_len,
+                                                batch_slots=1), rt=rt)
+        ref = np.asarray(ref_eng.generate(jnp.asarray(p[None]), n))[0]
+        token_exact &= bool(np.array_equal(np.asarray(h.tokens), ref))
+    loads, evictions = sched.adapter_loads, sched.apool.evictions
+    _run_adapters(base_eng, reqs, chunk, None)           # warm the base leg
+    base_s = _best_time(lambda: _run_adapters(base_eng, reqs, chunk, None),
+                        reps)
+    mixed_s = _best_time(
+        lambda: _run_adapters(mixed_eng, reqs, chunk, reg, apool), reps)
+    useful = sum(n for _, n, _ in reqs)
+    return base_s, mixed_s, useful, token_exact, loads, evictions
+
+
 def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
         mode: str = "both"):
     cfg = dataclasses.replace(_bench_cfg(smoke), remat=False)
@@ -299,6 +390,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     cont_rows = []
     prefix_rows = []
     kv_rows = []
+    adapter_rows = []
     for m, p in (("fp", params), ("w4a8_aser", qparams)):
         if mode in ("both", "static"):
             for (b, prompt) in buckets:
@@ -421,6 +513,45 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                       f"(×{krow['goodput_speedup']:.2f}, preemptions "
                       f"{bf16_pre}→{int8_pre})", flush=True)
 
+    if mode in ("both", "continuous"):
+        # multi-tenant adapters: w4a8_aser only (pools ride on quantized
+        # leaves — fp params have nothing to install them on)
+        slots = 2 if smoke else 8
+        chunk = 4 if smoke else 8
+        n_req = 9 if smoke else 27
+        n_adapters = 4 if smoke else 8
+        a_rank = 4 if smoke else 8
+        block_size = 8 if smoke else 16
+        a_reps = 2 if smoke else 3
+        p_lo, p_hi = (2, 10) if smoke else (4, 32)
+        a_lo, a_hi = (2, 12) if smoke else (4, 40)
+        areqs = _workload(n_req, p_lo, p_hi, a_lo, a_hi, cfg.vocab_size,
+                          seed=29)
+        base_s, mixed_s, useful, token_exact, loads, evictions = \
+            _time_adapters(qparams, cfg, rt, n_adapters=n_adapters,
+                           rank=a_rank, slots=slots, max_len=max_len,
+                           block_size=block_size, chunk=chunk, reqs=areqs,
+                           reps=a_reps)
+        arow = {
+            "mode": "w4a8_aser", "requests": n_req, "adapters": n_adapters,
+            "adapter_rank": a_rank, "adapter_slots": n_adapters + 1,
+            "batch_slots": slots, "chunk": chunk, "useful_tokens": useful,
+            "base_s": base_s, "mixed_s": mixed_s,
+            "base_goodput_tok_s": useful / base_s,
+            "goodput_tok_s": useful / mixed_s,
+            "goodput_ratio": base_s / mixed_s,
+            "adapter_loads": loads, "adapter_evictions": evictions,
+            "token_exact": token_exact,
+        }
+        adapter_rows.append(arow)
+        if verbose:
+            print(f"  w4a8_aser adapters: {n_req} reqs x {n_adapters} "
+                  f"tenants (rank {a_rank}): goodput "
+                  f"{arow['goodput_tok_s']:7.1f} tok/s vs base-only "
+                  f"{arow['base_goodput_tok_s']:7.1f} "
+                  f"(ratio {arow['goodput_ratio']:.2f}, "
+                  f"token-exact {token_exact})", flush=True)
+
     # partial runs must self-describe honestly: static-only is a valid v1
     # file; continuous-only matches no released schema and is stamped as a
     # probe (the validator rejects it by design — it is not a baseline)
@@ -438,6 +569,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
         report["continuous_rows"] = cont_rows
         report["prefix_rows"] = prefix_rows
         report["kv_rows"] = kv_rows
+        report["adapter_rows"] = adapter_rows
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     if verbose:
@@ -453,6 +585,8 @@ def _check_finite(row, fields, positive=()):
         raise ValueError(f"row missing fields {missing}: {row}")
     for f in fields:
         if f == "mode":                    # the one legitimate string field
+            continue
+        if f == "token_exact":             # bool, checked by its validator
             continue
         v = row[f]
         if isinstance(v, bool) or not isinstance(v, (int, float)) \
@@ -525,25 +659,48 @@ def _validate_kv_rows(rows):
         raise ValueError(f"need fp and w4a8_aser kv rows, got {modes}")
 
 
+def _validate_adapter_rows(rows):
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no adapter rows (serve_bench/v5 requires them)")
+    for row in rows:
+        _check_finite(row, ADAPTER_ROW_FIELDS,
+                      positive=("useful_tokens", "base_s", "mixed_s",
+                                "adapters", "adapter_rank", "adapter_slots",
+                                "base_goodput_tok_s", "goodput_tok_s",
+                                "goodput_ratio"))
+        if row["mode"] != "w4a8_aser":
+            raise ValueError(f"adapter rows are w4a8_aser-only (pools ride "
+                             f"on quantized leaves): {row}")
+        if row["token_exact"] is not True:
+            raise ValueError(f"adapter serving not token-exact vs merged "
+                             f"reference: {row}")
+        if row["goodput_ratio"] < 0.85:
+            raise ValueError(f"mixed-tenant goodput below 0.85x base-only: "
+                             f"{row}")
+
+
 def validate(report: dict):
     """Raise ValueError unless ``report`` is a valid serve_bench file.
 
     Accepts every released schema generation: ``serve_bench/v1`` (static
     rows only), ``serve_bench/v2`` (+ continuous goodput rows),
-    ``serve_bench/v3`` (+ shared-prefix paged-cache rows) and
-    ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows), so old
-    baselines keep validating.
+    ``serve_bench/v3`` (+ shared-prefix paged-cache rows),
+    ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows) and
+    ``serve_bench/v5`` (+ multi-tenant adapter rows), so old baselines
+    keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
     _validate_static_rows(report.get("rows"))
-    if schema in (SCHEMA, SCHEMA_V3, SCHEMA_V2):
+    if schema in (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2):
         _validate_continuous_rows(report.get("continuous_rows"))
-    if schema in (SCHEMA, SCHEMA_V3):
+    if schema in (SCHEMA, SCHEMA_V4, SCHEMA_V3):
         _validate_prefix_rows(report.get("prefix_rows"))
-    if schema == SCHEMA:
+    if schema in (SCHEMA, SCHEMA_V4):
         _validate_kv_rows(report.get("kv_rows"))
+    if schema == SCHEMA:
+        _validate_adapter_rows(report.get("adapter_rows"))
     return True
 
 

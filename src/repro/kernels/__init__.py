@@ -1,10 +1,11 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + XLA fallbacks."""
 from . import ops, ref, tuning
 from .w4a8_gemm import w4a8_gemm
-from .w4a8_fused import w4a8_fused
+from .w4a8_fused import w4a8_fused, w4a8_fused_gather
 from .act_quant import act_quant
 from .flash_attention import flash_attention
 from .paged_attention import paged_decode_attention
 
-__all__ = ["ops", "ref", "tuning", "w4a8_gemm", "w4a8_fused", "act_quant",
-           "flash_attention", "paged_decode_attention"]
+__all__ = ["ops", "ref", "tuning", "w4a8_gemm", "w4a8_fused",
+           "w4a8_fused_gather", "act_quant", "flash_attention",
+           "paged_decode_attention"]

@@ -22,6 +22,7 @@ from . import tuning as _tuning
 from .act_quant import act_quant as _act_quant_kernel
 from .w4a8_gemm import w4a8_gemm as _w4a8_kernel
 from .w4a8_fused import w4a8_fused as _w4a8_fused_kernel
+from .w4a8_fused import w4a8_fused_gather as _w4a8_gather_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .paged_attention import paged_decode_attention as _paged_kernel
 
@@ -53,12 +54,67 @@ def default_runtime() -> RuntimeConfig:
 
 # -- public kernel entry points ---------------------------------------------
 
+def adapter_epilogue(x_s, alb, ala, idx, lb=None, la=None,
+                     uniform: bool = False):
+    """Batched-gather adapter epilogue, XLA reference path.
+
+    Each row of ``x_s`` ([m, k], already smoothed) selects one adapter's
+    factors out of the device pools (``alb`` [P, k, ra], ``ala``
+    [P, ra, n]) by ``idx`` ([m] int32; slot 0 = the all-zero base adapter)
+    and adds its low-rank correction. Used whenever the fused gather kernel
+    isn't routed (non-decode shapes, XLA path).
+
+    Passing the base compensation factors (``lb`` [k, r], ``la`` [r, n])
+    folds them into the gathered reduction so base + adapter is ONE sum
+    over r + ra — the same reduction a merged-weight checkpoint
+    (``AdapterRegistry.merged_params``, which concatenates the factors the
+    same way) computes through the plain leaf path. Summing the two
+    epilogues separately instead differs in f32 rounding, which is enough
+    to flip a near-tie argmax over a long generation; the concat form
+    keeps routed XLA serving token-exact against the merged reference.
+    Only the rank-axis reduction is order-sensitive: the first stage keeps
+    ``x_s @ lb`` as a shared GEMM (its columns are bitwise those of
+    ``x_s @ concat([lb, a])``) and the concat happens on the skinny
+    ``[m, r + ra]`` intermediates, not the [m, k, r] factor stack.
+
+    ``uniform=True`` asserts every row routes to ``idx[0]`` (statically
+    known for single-sequence calls — prefill, batch-1 generate): the
+    gather collapses to one slot and both stages run as plain shared
+    GEMMs, the exact shapes the merged-weight path computes."""
+    x_s = x_s.astype(jnp.float32)
+    if uniform:
+        a1 = alb[idx[0]].astype(jnp.float32)              # [k, ra]
+        b1 = ala[idx[0]].astype(jnp.float32)              # [ra, n]
+        t = x_s @ a1
+        if lb is not None and lb.shape[-1]:
+            t = jnp.concatenate([x_s @ lb.astype(jnp.float32), t], -1)
+            b1 = jnp.concatenate([la.astype(jnp.float32), b1], -2)
+        return t @ b1
+    a = jnp.take(alb, idx, axis=0).astype(jnp.float32)    # [m, k, ra]
+    b = jnp.take(ala, idx, axis=0).astype(jnp.float32)    # [m, ra, n]
+    t = jnp.einsum("mk,mkr->mr", x_s, a)                  # [m, ra]
+    if lb is not None and lb.shape[-1]:
+        m = x_s.shape[0]
+        t = jnp.concatenate([x_s @ lb.astype(jnp.float32), t], axis=-1)
+        b = jnp.concatenate(
+            [jnp.broadcast_to(la.astype(jnp.float32)[None], (m,) + la.shape),
+             b], axis=-2)                                 # [m, r + ra, n]
+    return jnp.einsum("mr,mrn->mn", t, b)
+
+
 def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
-                rt: RuntimeConfig | None = None, a_bits: int | None = None):
+                rt: RuntimeConfig | None = None, a_bits: int | None = None,
+                adapter=None, adapter_uniform: bool = False):
     """Full quantized linear: smooth → quantize → int4×int8 GEMM → dequant
     → low-rank compensation. x: [m, k] → [m, n] (f32).
 
-    ``a_bits`` overrides ``rt.a_bits`` (kept for per-call sweeps)."""
+    ``a_bits`` overrides ``rt.a_bits`` (kept for per-call sweeps).
+    ``adapter=(alb, ala, idx)`` adds a per-row gathered LoRA epilogue on
+    top of the base compensation: the fused gather kernel at decode shapes
+    on the Pallas path, the XLA batched gather otherwise. Rank-0 base
+    factors (``lb.shape[-1] == 0``) skip the base epilogue entirely.
+    ``adapter_uniform=True`` promises every row carries ``idx[0]`` (set by
+    single-sequence callers) and routes the shared-GEMM epilogue."""
     rt = DEFAULT_RUNTIME if rt is None else rt
     bits = rt.a_bits if a_bits is None else a_bits
     if bits >= 16:
@@ -68,22 +124,61 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
         codes = (unpack_int4(qw.T).T if qw.shape[0] * 2 == m_diag.shape[0]
                  else qw)
         w = codes.astype(jnp.float32) * sw[None, :]
-        return x_s @ w + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
+        y = x_s @ w
+        if adapter is not None:
+            # base + adapter factors concatenated into one rank reduction —
+            # bit-matches the merged-weight reference (see adapter_epilogue)
+            y = y + adapter_epilogue(x_s, *adapter, lb=lb, la=la,
+                                     uniform=adapter_uniform)
+        elif lb.shape[-1]:
+            y = y + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
+        return y
     if rt.use_pallas and bits == 8 and rt.act_granularity == "per_token" \
             and qw.shape[0] * 2 == m_diag.shape[0]:
-        lb, la = pad_lowrank(lb, la)    # no-op for pack-time-padded leaves
         m, kd = x.shape
         n = qw.shape[1]
-        r = lb.shape[1]
+        if lb.shape[1]:
+            lb, la = pad_lowrank(lb, la)  # no-op for pack-time-padded leaves
+        r = lb.shape[1]                   # 0 = zero-rank fast path
+        if adapter is not None:
+            alb, ala, idx = adapter
+            ra = alb.shape[-1]
+            if rt.fused_decode and _tuning.use_fused_gather(m, kd, n, r, ra):
+                # decode fast path: base linear + gathered adapter epilogue
+                # in one pallas_call (scalar-prefetch factor DMA)
+                return _w4a8_gather_kernel(x, m_diag, qw, sw, lb, la,
+                                           alb, ala, idx,
+                                           interpret=rt.interpret)
         if rt.fused_decode and _tuning.use_fused_decode(m, kd, n, r):
             # decode/GEMV fast path: one pallas_call, no xq/sx/xlr HBM
             # round-trip between kernels
-            return _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la,
-                                      interpret=rt.interpret)
-        bm, bn, bk = _tuning.select_gemm_blocks(m, kd, n, r)
-        xq, sx, xlr = _act_quant_kernel(x, m_diag, lb, interpret=rt.interpret)
-        return _w4a8_kernel(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk,
-                            interpret=rt.interpret)
+            y = _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la,
+                                   interpret=rt.interpret)
+        else:
+            if r == 0:
+                # the tiled pipeline threads xlr between its two kernels;
+                # keep the padded zero block there (decode shapes — the
+                # ones that matter — took the fast path above)
+                lb, la = pad_lowrank(lb, la)
+                r = lb.shape[1]
+            bm, bn, bk = _tuning.select_gemm_blocks(m, kd, n, r)
+            xq, sx, xlr = _act_quant_kernel(x, m_diag, lb,
+                                            interpret=rt.interpret)
+            y = _w4a8_kernel(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk,
+                             interpret=rt.interpret)
+        if adapter is not None:
+            y = y + adapter_epilogue(x.astype(jnp.float32) / m_diag[None, :],
+                                     alb, ala, idx, uniform=adapter_uniform)
+        return y
+    if adapter is not None:
+        # suppress the in-ref base epilogue (rank-0 factors) and fold it
+        # into the gathered reduction instead — one concatenated sum over
+        # r + ra, bit-matching the merged-weight reference
+        y = _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb[..., :0], la[:0],
+                                 a_bits=bits, granularity=rt.act_granularity)
+        return y + adapter_epilogue(x.astype(jnp.float32) / m_diag[None, :],
+                                    *adapter, lb=lb, la=la,
+                                    uniform=adapter_uniform)
     return _ref.w4a8_linear_ref(x, qw, sw, m_diag, lb, la, a_bits=bits,
                                 granularity=rt.act_granularity)
 

@@ -42,7 +42,8 @@ def w4a8_linear_ref(x, qw, sw, m_diag, lb, la, *, a_bits: int = 8,
         xq.astype(jnp.int32), w_codes.astype(jnp.int32),
         (((1,), (0,)), ((), ())))            # int32 [m, n]
     y = acc.astype(jnp.float32) * sx * sw[None, :]
-    y = y + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
+    if lb.shape[-1]:          # rank 0 = no compensation: skip the epilogue
+        y = y + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
     return y
 
 

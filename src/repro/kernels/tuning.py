@@ -85,6 +85,42 @@ def fused_bn(m: int, k: int, n: int, r: int,
     return None
 
 
+def gather_vmem_bytes(k: int, bn: int, r: int, ra: int) -> int:
+    """Per-grid-step VMEM working set of the gathered-epilogue fused kernel.
+
+    The grid is (row, n-tile), so each step holds one activation row
+    (m = 1), the whole-K weight tile, the base low-rank factors, and **one**
+    adapter's gathered (alb, ala) factor blocks — the adapter pool itself
+    never enters VMEM. The index vector rides in SMEM (scalar prefetch) and
+    is not counted."""
+    return (fused_vmem_bytes(1, k, bn, r)
+            + k * ra * 4                   # gathered alb block
+            + ra * bn * 4                  # gathered ala tile
+            + ra * 4)                      # x_s @ alb intermediate
+
+
+def fused_gather_bn(k: int, n: int, r: int, ra: int,
+                    budget: int = VMEM_BUDGET) -> int | None:
+    """Largest n-tile that keeps the gathered fused kernel under budget."""
+    for bn in (2048, 1024, 512, 256, 128):
+        bn_ = min(bn, n)
+        if gather_vmem_bytes(k, bn_, r, ra) <= budget:
+            return bn_
+    return None
+
+
+def use_fused_gather(m: int, k: int, n: int, r: int, ra: int,
+                     budget: int = VMEM_BUDGET) -> bool:
+    """Route adapter-routed decode calls to the gathered fused kernel.
+
+    Same decode-shape gate as ``use_fused_decode``; above ``DECODE_M_MAX``
+    (or over budget) the caller computes the base linear through its normal
+    route and adds the adapter term via the XLA batched-gather epilogue."""
+    if m > DECODE_M_MAX:
+        return False
+    return fused_gather_bn(k, n, r, ra, budget=budget) is not None
+
+
 def paged_vmem_bytes(block_size: int, group: int, hd: int,
                      quantized: bool = False) -> int:
     """Per-grid-step VMEM working set of the paged-gather decode kernel.

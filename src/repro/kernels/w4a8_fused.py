@@ -17,6 +17,18 @@ needs the full row, and at decode m the whole-K working set fits VMEM —
 ``repro.kernels.tuning.use_fused_decode`` gates routing on exactly that).
 The smooth/quant stage is recomputed per n-tile; at decode m that is a few
 KFLOP against the saved HBM round-trip.
+
+Rank 0 (no compensation) omits the ``lb``/``la`` operands and the epilogue
+dot entirely — base-model rows pay nothing for a feature they don't use.
+
+``w4a8_fused_gather`` is the multi-tenant adapter variant: each batch row
+additionally gathers one adapter's (``alb``, ``ala``) factor block out of a
+device pool by table index. The per-row index vector rides in as a
+**scalar-prefetch** operand (same pattern as the paged-attention block
+table), so each grid step's BlockSpec ``index_map`` reads the table and
+DMAs exactly one adapter's factors into VMEM — the pool is never gathered
+in HBM. The grid tiles (row, n-tile); slot 0 of the pool is the all-zero
+base adapter, so base rows in a mixed batch add an exactly-zero epilogue.
 """
 from __future__ import annotations
 
@@ -25,14 +37,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .act_quant import smooth_quant_block
-from .tuning import fused_bn
+from .tuning import fused_bn, fused_gather_bn
 from .w4a8_gemm import unpack_int4_block
 
 
-def _kernel(x_ref, m_ref, qw_ref, sw_ref, lb_ref, la_ref, out_ref, *,
-            qmax: int):
+def _kernel(x_ref, m_ref, qw_ref, sw_ref, *rest, qmax: int, has_lr: bool):
+    if has_lr:
+        lb_ref, la_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
     x, sx, codes = smooth_quant_block(x_ref[...], m_ref[...], qmax)
     xq = codes.astype(jnp.int32)
     w = unpack_int4_block(qw_ref[...])
@@ -40,10 +56,11 @@ def _kernel(x_ref, m_ref, qw_ref, sw_ref, lb_ref, la_ref, out_ref, *,
         xq, w.astype(jnp.int32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
     y = acc.astype(jnp.float32) * sx * sw_ref[...]
-    xlr = jnp.dot(x, lb_ref[...].astype(jnp.float32),
-                  preferred_element_type=jnp.float32)
-    y = y + jnp.dot(xlr, la_ref[...].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
+    if has_lr:
+        xlr = jnp.dot(x, lb_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        y = y + jnp.dot(xlr, la_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
     out_ref[...] = y
 
 
@@ -51,10 +68,14 @@ def _kernel(x_ref, m_ref, qw_ref, sw_ref, lb_ref, la_ref, out_ref, *,
 def w4a8_fused(x, m_diag, qw, sw, lb, la, *, bits: int = 8,
                bn: int | None = None, interpret: bool = True):
     """x: [m,k]; m_diag: [k]; qw: [k//2,n] int8 packed; sw: [n]; lb: [k,r];
-    la: [r,n] → y [m,n] f32. Decode shapes: m small, K whole in VMEM."""
+    la: [r,n] → y [m,n] f32. Decode shapes: m small, K whole in VMEM.
+
+    r == 0 skips the low-rank epilogue entirely (operands never enter the
+    kernel) — the zero-rank fast path."""
     m, k = x.shape
     n = qw.shape[1]
     r = lb.shape[1]
+    has_lr = r > 0
     qmax = 2 ** (bits - 1) - 1
     if bn is None:
         bn = fused_bn(m, k, n, r)
@@ -65,18 +86,112 @@ def w4a8_fused(x, m_diag, qw, sw, lb, la, *, bits: int = 8,
                 f"act_quant → w4a8_gemm pipeline instead")
     bn_ = min(bn, n)
     grid = (pl.cdiv(n, bn_),)
-    return pl.pallas_call(
-        functools.partial(_kernel, qmax=qmax),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((m, k), lambda j: (0, 0)),
-            pl.BlockSpec((1, k), lambda j: (0, 0)),
-            pl.BlockSpec((k // 2, bn_), lambda j: (0, j)),
-            pl.BlockSpec((1, bn_), lambda j: (0, j)),
+    in_specs = [
+        pl.BlockSpec((m, k), lambda j: (0, 0)),
+        pl.BlockSpec((1, k), lambda j: (0, 0)),
+        pl.BlockSpec((k // 2, bn_), lambda j: (0, j)),
+        pl.BlockSpec((1, bn_), lambda j: (0, j)),
+    ]
+    operands = [x, m_diag.reshape(1, k), qw, sw.reshape(1, n)]
+    if has_lr:
+        in_specs += [
             pl.BlockSpec((k, r), lambda j: (0, 0)),
             pl.BlockSpec((r, bn_), lambda j: (0, j)),
-        ],
+        ]
+        operands += [lb, la]
+    return pl.pallas_call(
+        functools.partial(_kernel, qmax=qmax, has_lr=has_lr),
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((m, bn_), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-    )(x, m_diag.reshape(1, k), qw, sw.reshape(1, n), lb, la)
+    )(*operands)
+
+
+def _gather_kernel(idx_ref, x_ref, m_ref, qw_ref, sw_ref, *rest, qmax: int,
+                   has_lr: bool):
+    del idx_ref  # consumed by the BlockSpec index_maps, not the body
+    if has_lr:
+        lb_ref, la_ref, alb_ref, ala_ref, out_ref = rest
+    else:
+        alb_ref, ala_ref, out_ref = rest
+    x, sx, codes = smooth_quant_block(x_ref[...], m_ref[...], qmax)
+    xq = codes.astype(jnp.int32)
+    w = unpack_int4_block(qw_ref[...])
+    acc = jax.lax.dot_general(
+        xq, w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * sx * sw_ref[...]
+    if has_lr:
+        xlr = jnp.dot(x, lb_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        y = y + jnp.dot(xlr, la_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    # gathered adapter epilogue: this row's factors, DMA'd by table index
+    t = jnp.dot(x, alb_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = y + jnp.dot(t, ala_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+def w4a8_fused_gather(x, m_diag, qw, sw, lb, la, alb, ala, idx, *,
+                      bits: int = 8, bn: int | None = None,
+                      interpret: bool = True):
+    """Fused W4A8 linear with a per-row gathered adapter epilogue.
+
+    x: [m,k]; alb: [P,k,ra]; ala: [P,ra,n]; idx: [m] int32 adapter slots
+    (slot 0 = the all-zero base adapter). Each grid step (row i, n-tile j)
+    DMAs ``alb[idx[i]]`` / ``ala[idx[i], :, j·bn:]`` via scalar-prefetch
+    BlockSpecs; base factors (``lb``/``la``, r may be 0) ride along as in
+    ``w4a8_fused``. Returns [m, n] f32."""
+    m, k = x.shape
+    n = qw.shape[1]
+    r = lb.shape[1]
+    p, _, ra = alb.shape
+    has_lr = r > 0
+    qmax = 2 ** (bits - 1) - 1
+    if bn is None:
+        bn = fused_gather_bn(k, n, r, ra)
+        if bn is None:
+            raise ValueError(
+                f"gathered fused working set over VMEM budget for shape "
+                f"(k={k}, n={n}, r={r}, ra={ra}); take the XLA "
+                f"batched-gather epilogue instead")
+    bn_ = min(bn, n)
+    grid = (m, pl.cdiv(n, bn_))
+    in_specs = [
+        pl.BlockSpec((1, k), lambda i, j, idx: (i, 0)),
+        pl.BlockSpec((1, k), lambda i, j, idx: (0, 0)),
+        pl.BlockSpec((k // 2, bn_), lambda i, j, idx: (0, j)),
+        pl.BlockSpec((1, bn_), lambda i, j, idx: (0, j)),
+    ]
+    operands = [x, m_diag.reshape(1, k), qw, sw.reshape(1, n)]
+    if has_lr:
+        in_specs += [
+            pl.BlockSpec((k, r), lambda i, j, idx: (0, 0)),
+            pl.BlockSpec((r, bn_), lambda i, j, idx: (0, j)),
+        ]
+        operands += [lb, la]
+    in_specs += [
+        # the adapter gather: table entry → pool block (clamped for safety;
+        # the host never hands out slots ≥ P)
+        pl.BlockSpec((None, k, ra),
+                     lambda i, j, idx: (jnp.minimum(idx[i], p - 1), 0, 0)),
+        pl.BlockSpec((None, ra, bn_),
+                     lambda i, j, idx: (jnp.minimum(idx[i], p - 1), 0, j)),
+    ]
+    operands += [alb, ala]
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, qmax=qmax, has_lr=has_lr),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bn_), lambda i, j, idx: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), *operands)

@@ -29,6 +29,13 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas kernel path (interpret on CPU)")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="serve N synthetic LoRA tenants multiplexed over "
+                         "the one quantized base (requests round-robin "
+                         "across them through the continuous-batching "
+                         "scheduler); requires a quantized --method")
+    ap.add_argument("--adapter-rank", type=int, default=8,
+                    help="LoRA rank for the synthetic tenants")
     args = ap.parse_args()
 
     import dataclasses
@@ -59,6 +66,9 @@ def main():
         overrides["a_bits"] = 8
     if args.kv_dtype is not None:
         overrides["kv_dtype"] = args.kv_dtype
+    if args.adapters > 0:
+        overrides["adapter_rank"] = args.adapter_rank
+        overrides["adapter_slots"] = args.adapters + 1   # + pinned base slot
     recipe = registry.resolve(args.method, **overrides)
     rt = recipe.act.runtime(use_pallas=args.pallas)
     if not recipe.is_noop:
@@ -69,6 +79,39 @@ def main():
         tape = calibrate(params, cfg, corpus.calibration_batches(2, 4, 32))
         tape = reduce_shared(tape, cfg)
         params = quantize_model(params, tape, recipe)
+
+    if args.adapters > 0:
+        if recipe.is_noop:
+            raise SystemExit("--adapters needs a quantized --method "
+                             "(adapter pools ride on quantized leaves)")
+        from repro.serve.adapters import AdapterRegistry, install_pools
+        from repro.serve.scheduler import Scheduler
+        reg = AdapterRegistry.from_recipe(params, recipe)
+        tenants = [reg.add(f"tenant-{i}") for i in range(args.adapters)]
+        params = install_pools(params, slots=recipe.adapter.slots,
+                               rank=recipe.adapter.rank)
+        print(f"[serve] {args.adapters} tenants, rank "
+              f"{recipe.adapter.rank} → pool "
+              f"{reg.pool_bytes_per_adapter() / 1024:.1f} KiB/adapter")
+        engine = Engine(params, cfg,
+                        recipe.kv.serve_config(max_len=args.prompt_len
+                                               + args.gen), rt=rt)
+        sched = Scheduler(engine, adapters=reg)
+        prompts = corpus.sample(jnp.asarray(777), args.requests,
+                                args.prompt_len)
+        handles = []
+        for i in range(args.requests):
+            aid = tenants[i % args.adapters] if i % (args.adapters + 1) \
+                else None                 # mixed traffic: base + tenants
+            handles.append((aid, sched.submit(
+                list(map(int, prompts[i])), args.gen, adapter_id=aid)))
+        sched.run()
+        print("[serve] generations (mixed adapter traffic):")
+        for i, (aid, h) in enumerate(handles):
+            toks, stats = h.poll(with_stats=True)
+            print(f"  req {i} [{aid or 'base'}]:", h.tokens)
+        print(f"[serve] adapter pool: {sched.adapter_stats()}")
+        return
 
     # the recipe's KVQuantSpec picks the engine's cache storage
     engine = Engine(params, cfg,

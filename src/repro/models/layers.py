@@ -144,6 +144,24 @@ def dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
     return y
 
 
+def route_adapters(p, idx):
+    """Tag every adapter-pooled quantized leaf under ``p`` with the batch's
+    per-row adapter slots.
+
+    ``idx`` is a [b] int32 vector of adapter-pool slots (slot 0 = base).
+    Returns a shallow-copied tree where each leaf dict holding an ``alb``
+    factor pool also carries ``aidx``; ``_quantized_dense`` picks it up and
+    routes the gathered epilogue. Leaves without pools (fp, experts) pass
+    through untouched."""
+    if not isinstance(p, dict):
+        return p
+    if "alb" in p:
+        q = dict(p)
+        q["aidx"] = idx
+        return q
+    return {k: route_adapters(v, idx) for k, v in p.items()}
+
+
 def _quantized_dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
     """W4A8 serving path with ASER low-rank compensation.
 
@@ -151,12 +169,27 @@ def _quantized_dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
     sw [d_out] per-out-channel weight scale, m [d_in] smoothing diagonal,
     la [r, d_out], lb [d_in, r]. Per-token int8 activation quantization.
     Uses the Pallas kernel path when enabled, else the pure-XLA reference.
+
+    Leaves carrying adapter pools (``alb`` [P, d_in, ra], ``ala``
+    [P, ra, d_out]) and a routed batch (``aidx`` [b], injected by
+    :func:`route_adapters`) add each row's gathered LoRA epilogue.
     """
     from repro.kernels import ops as kops
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
+    adapter, uniform = None, False
+    if "alb" in p and "aidx" in p:
+        # expand per-sequence slots to per-token rows of the flattened x2;
+        # a single-sequence call (prefill) routes every row to one slot,
+        # which the epilogue exploits as a shared-GEMM fast path
+        idx = p["aidx"]
+        uniform = idx.shape[0] == 1
+        shape = orig_shape[:-1]
+        rows = jnp.broadcast_to(idx.reshape(idx.shape + (1,) * (len(shape) - 1)),
+                                shape).reshape(-1)
+        adapter = (p["alb"], p["ala"], rows)
     y2 = kops.w4a8_linear(x2, p["qw"], p["sw"], p["m"], p["lb"], p["la"],
-                          rt=rt)
+                          rt=rt, adapter=adapter, adapter_uniform=uniform)
     y2 = y2.astype(x.dtype)
     if "b" in p:
         y2 = y2 + p["b"].astype(y2.dtype)

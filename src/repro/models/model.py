@@ -189,7 +189,7 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                  mrope_positions, caches, cross_ctx, train: bool,
-                 ragged: bool = False, block_tables=None,
+                 ragged: bool = False, block_tables=None, adapter_idx=None,
                  with_tape: bool = False, rt=None):
     """lax.scan over the stacked groups."""
     specs = group_blocks(cfg)
@@ -215,6 +215,7 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
             h, nc, a = block_forward(gp[i], cfg, spec, h, positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
                                      ragged=ragged, block_tables=block_tables,
+                                     adapter_idx=adapter_idx,
                                      tape=btape, rt=rt)
             aux = aux + a
             new_caches.append(nc if nc is not None else c_i)
@@ -274,7 +275,8 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             mrope_positions: jnp.ndarray | None = None,
             caches=None, encoder_out: jnp.ndarray | None = None,
             train: bool = False, ragged: bool = False,
-            block_tables: jnp.ndarray | None = None, tape=None, rt=None):
+            block_tables: jnp.ndarray | None = None,
+            adapter_idx: jnp.ndarray | None = None, tape=None, rt=None):
     """tokens: [b, s] int32 → logits [b, s, vocab].
 
     Returns (logits, new_caches, aux_loss). If ``tape`` is a dict it is
@@ -288,6 +290,11 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     ``block_tables`` ([b, blocks_per_seq] int32): required when ``caches``
     holds :class:`PagedKVCache` pools — maps each row's logical blocks to
     physical pool blocks; the same table is used by every layer.
+    ``adapter_idx`` ([b] int32): per-row adapter-pool slots for params that
+    carry installed adapter pools (``serve.adapters.install_pools``); every
+    pooled quantized linear gathers that row's LoRA factors (slot 0 = the
+    all-zero base adapter). Like ``block_tables`` it is closed over by the
+    group scan, not scanned.
     """
     if ragged and positions is None:
         raise ValueError("ragged forward needs explicit per-row positions")
@@ -319,6 +326,7 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
                                      positions=positions,
                                      mrope_positions=mrope_positions, cache=c_i,
                                      ragged=ragged, block_tables=block_tables,
+                                     adapter_idx=adapter_idx,
                                      tape=btape, rt=rt)
             if tape is not None:
                 tape["prefix"].append(btape)
@@ -331,7 +339,8 @@ def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
         params, cfg, x, x0, positions=positions,
         mrope_positions=mrope_positions, caches=caches,
         cross_ctx=cross_ctx, train=train, ragged=ragged,
-        block_tables=block_tables, with_tape=tape is not None, rt=rt)
+        block_tables=block_tables, adapter_idx=adapter_idx,
+        with_tape=tape is not None, rt=rt)
     aux = aux + aux_s
     if tape is not None:
         tape["groups"] = group_tape

@@ -99,8 +99,15 @@ def group_params(key, cfg: ModelConfig, dtype):
 
 def block_forward(p, cfg: ModelConfig, spec: BlockSpec, x: jnp.ndarray, *,
                   positions, mrope_positions=None, cache=None, ragged=False,
-                  block_tables=None, tape=None, rt=None):
-    """One block. Returns (y, new_cache, aux)."""
+                  block_tables=None, adapter_idx=None, tape=None, rt=None):
+    """One block. Returns (y, new_cache, aux).
+
+    ``adapter_idx`` ([b] int32): per-sequence adapter-pool slots; tags the
+    block's pooled quantized leaves so each row's LoRA epilogue gathers its
+    own factors (slot 0 = base, exactly zero)."""
+    if adapter_idx is not None:
+        from .layers import route_adapters
+        p = route_adapters(p, adapter_idx)
     if spec.kind == "mamba":
         if ragged:
             raise NotImplementedError("ragged decode: SSM blocks carry a "

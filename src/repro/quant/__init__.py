@@ -1,12 +1,13 @@
 """Model-level PTQ integration: recipes, calibration, quantization, serving."""
 from .calibrate import calibrate, accumulate, reduce_shared
-from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
-                     KVQuantSpec, QuantRecipe, Smoother)
+from .recipe import (ActQuantSpec, AdapterSpec, BaseQuantizer,
+                     ErrorReconstructor, KVQuantSpec, QuantRecipe, Smoother)
 from . import registry
 from .registry import resolve as resolve_recipe
 from .apply import PTQConfig, quantize_model
 
 __all__ = ["calibrate", "accumulate", "reduce_shared",
            "QuantRecipe", "Smoother", "BaseQuantizer", "ErrorReconstructor",
-           "ActQuantSpec", "KVQuantSpec", "registry", "resolve_recipe",
+           "ActQuantSpec", "KVQuantSpec", "AdapterSpec", "registry",
+           "resolve_recipe",
            "PTQConfig", "quantize_model"]

@@ -3,13 +3,14 @@
 The ASER paper stresses that error reconstruction is *orthogonal* to the base
 weight quantizer and that smoothing / compensation are independently
 toggleable. The API mirrors that decomposition: a :class:`QuantRecipe` is a
-frozen composition of five stages,
+frozen composition of six stages,
 
     Smoother           none | smoothquant | awq-scale | aser-outlier
     BaseQuantizer      rtn | gptq
     ErrorReconstructor none | lorc | l2qer | whitened-svd
     ActQuantSpec       bits + per_token / per_tensor granularity
     KVQuantSpec        KV-cache storage dtype (bf16 | int8 | int4)
+    AdapterSpec        multi-tenant LoRA pools (rank + resident slots)
 
 executed by :func:`repro.quant.apply.quantize_model`. Every legacy method
 name (``rtn``, ``smoothquant``, ``gptq``, ``awq``, ``lorc``, ``l2qer``,
@@ -36,10 +37,11 @@ SMOOTHER_KINDS = ("none", "smoothquant", "awq-scale", "aser-outlier")
 BASE_KINDS = ("none", "rtn", "gptq")
 ER_KINDS = ("none", "lorc", "l2qer", "whitened-svd")
 
-# v2 added the KVQuantSpec stage; v1 blobs (no "kv" key) still load with
-# the bf16 default, so pre-KV-quant checkpoints keep deserializing.
-_RECIPE_FORMAT_VERSION = 2
-_ACCEPTED_FORMAT_VERSIONS = (1, 2)
+# v2 added the KVQuantSpec stage; v3 added the AdapterSpec stage. Older
+# blobs (missing "kv" / "adapter" keys) still load with the stage defaults,
+# so pre-existing checkpoints keep deserializing.
+_RECIPE_FORMAT_VERSION = 3
+_ACCEPTED_FORMAT_VERSIONS = (1, 2, 3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +176,40 @@ class KVQuantSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    """Multi-tenant LoRA adapter serving the recipe provisions for.
+
+    ``slots > 0`` means the quantized checkpoint is deployed with device
+    factor pools (``serve.adapters.install_pools``): ``slots`` resident
+    adapters (slot 0 is the pinned all-zero base) at rank ``rank``, padded
+    to the kernel lane multiple at install time. ``slots == 0`` (default)
+    is adapter-free serving — no pools, no routing lane, same compiled
+    programs as before this stage existed. Serving metadata only: changes
+    no packed weights.
+    """
+
+    rank: int = 0
+    slots: int = 0
+
+    def __post_init__(self):
+        if self.slots < 0 or self.rank < 0:
+            raise ValueError(
+                f"adapter rank/slots must be >= 0: {self.rank}/{self.slots}")
+        if self.slots and self.slots < 2:
+            raise ValueError(
+                f"adapter pools need slots >= 2 (slot 0 is the base "
+                f"adapter): {self.slots}")
+        if bool(self.slots) != bool(self.rank):
+            raise ValueError(
+                f"adapter rank and slots must be set together: "
+                f"rank={self.rank}, slots={self.slots}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.slots > 0
+
+
+@dataclasses.dataclass(frozen=True)
 class QuantRecipe:
     """One fully-specified PTQ pipeline. Frozen, validated, serializable."""
 
@@ -182,6 +218,7 @@ class QuantRecipe:
     reconstructor: ErrorReconstructor = ErrorReconstructor()
     act: ActQuantSpec = ActQuantSpec()
     kv: KVQuantSpec = KVQuantSpec()
+    adapter: AdapterSpec = AdapterSpec()
     name: str = ""          # provenance label (e.g. the legacy method name)
 
     def __post_init__(self):
@@ -190,6 +227,10 @@ class QuantRecipe:
                 raise ValueError(
                     "base 'none' (fp passthrough) cannot be combined with "
                     "smoothing or error reconstruction")
+        if self.adapter.enabled and self.base.kind == "none":
+            raise ValueError(
+                "adapter pools ride on quantized leaves (alb/ala alongside "
+                "qw); an fp passthrough base has none to install them on")
         if (self.smoother.kind == "aser-outlier"
                 and self.reconstructor.kind == "none"):
             raise ValueError(
@@ -221,6 +262,8 @@ class QuantRecipe:
                    reconstructor=ErrorReconstructor(**d["reconstructor"]),
                    act=ActQuantSpec(**d["act"]),
                    kv=KVQuantSpec(**d["kv"]) if "kv" in d else KVQuantSpec(),
+                   adapter=(AdapterSpec(**d["adapter"]) if "adapter" in d
+                            else AdapterSpec()),
                    name=d.get("name", ""))
 
     def to_json(self, **json_kw) -> str:

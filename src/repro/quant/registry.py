@@ -12,7 +12,9 @@ directly. Names support a call-style override syntax::
 
 Overrides use the legacy ``PTQConfig`` field names (``w_bits``, ``rank``,
 ``alpha``, ``outlier_f``, ``damp``, ``base``, ``a_bits``) so the migration
-is a rename, not a remapping.
+is a rename, not a remapping. ``adapter_rank``/``adapter_slots`` provision
+the serving-time LoRA pools (:class:`repro.quant.recipe.AdapterSpec`) and
+compose with every quantized method.
 """
 from __future__ import annotations
 
@@ -20,8 +22,8 @@ import inspect
 import re
 from typing import Callable, Dict
 
-from .recipe import (ActQuantSpec, BaseQuantizer, ErrorReconstructor,
-                     KVQuantSpec, QuantRecipe, Smoother)
+from .recipe import (ActQuantSpec, AdapterSpec, BaseQuantizer,
+                     ErrorReconstructor, KVQuantSpec, QuantRecipe, Smoother)
 
 _REGISTRY: Dict[str, Callable[..., QuantRecipe]] = {}
 
@@ -71,7 +73,7 @@ def _parse_overrides(argstr: str) -> dict:
 # own signature is a typo and raises.
 _OVERRIDE_VOCAB = frozenset({"w_bits", "rank", "alpha", "outlier_f", "damp",
                              "base", "a_bits", "a_granularity", "sq_alpha",
-                             "kv_dtype"})
+                             "kv_dtype", "adapter_rank", "adapter_slots"})
 
 
 def _check_overrides(name: str, fn: Callable, overrides: dict):
@@ -112,7 +114,16 @@ def resolve(spec, **overrides) -> QuantRecipe:
             f"unknown quantization method {name!r}; available: {available()}")
     fn = _REGISTRY[name]
     _check_overrides(name, fn, overrides)
-    return fn(**overrides)
+    # adapter provisioning composes with every method: peel its keys off and
+    # graft the stage onto whatever recipe the factory builds (AdapterSpec
+    # validates the rank/slots pairing; QuantRecipe rejects pools on fp).
+    adapter_rank = overrides.pop("adapter_rank", 0)
+    adapter_slots = overrides.pop("adapter_slots", 0)
+    recipe = fn(**overrides)
+    if adapter_rank or adapter_slots:
+        recipe = recipe.replace(
+            adapter=AdapterSpec(rank=adapter_rank, slots=adapter_slots))
+    return recipe
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,380 @@
+"""Multi-tenant LoRA adapter serving on the quantized low-rank epilogue.
+
+ASER's error reconstruction already gives every quantized linear a low-rank
+epilogue (``y += (x_s @ lb) @ la``). This module turns that structure into
+S-LoRA-style multi-tenant serving: many per-user adapters riding on one
+quantized base model, with per-request routing down to the kernel.
+
+Three pieces:
+
+* :class:`AdapterPool` — the host-side slot manager for the device factor
+  pools: ref-counted residency, LRU eviction of unreferenced adapters,
+  mirroring :class:`repro.serve.paged_cache.BlockPool`. Slot 0 is reserved
+  for the all-zero **base adapter** (rows without an adapter route there
+  and their epilogue contribution is exactly 0.0) and is never allocated
+  or evicted.
+
+* :class:`AdapterRegistry` — knows the base model's quantized linears
+  (paths, shapes, smoothing diagonals) and owns the per-adapter factors.
+  An adapter is a dict ``path -> (A [.., k, r], B [.., r, n])`` of raw
+  (unsmoothed) LoRA factors; loading folds the layer's ASER smoothing
+  diagonal into A (``A_s = m ⊙ A``, so ``x_s @ A_s == x @ A``) and
+  zero-pads the rank to the kernel lane multiple. ``merged_params`` builds
+  the per-request merged-weight reference (factors concatenated onto
+  ``lb``/``la``) that parity tests and benchmarks check against.
+
+* :func:`install_pools` — grows every quantized leaf with device factor
+  pools ``alb [.., P, k, ra]`` / ``ala [.., P, ra, n]`` (zeros);
+  :func:`load_adapter` writes one adapter's folded factors into slot
+  ``s`` of every pool. Routing happens per forward call via
+  ``forward(..., adapter_idx=...)`` → ``layers.route_adapters``.
+
+Memory math: one adapter costs ``Σ_linears (k + n) · ra · 4`` bytes of
+pool — for rank 8 on a 4k-d model that is ~100× smaller than the W4 base
+weights, which is why pools hold P adapters resident and page the rest.
+"""
+from __future__ import annotations
+
+import zlib
+from collections import OrderedDict, deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import LOWRANK_MULTIPLE
+
+BASE_SLOT = 0
+
+
+def padded_rank(r: int, multiple: int = LOWRANK_MULTIPLE) -> int:
+    """Rank padded up to the kernel lane multiple (min one full multiple)."""
+    if r <= 0:
+        raise ValueError(f"adapter rank must be >= 1, got {r}")
+    return -(-r // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Host-side slot manager
+# ---------------------------------------------------------------------------
+
+class AdapterPool:
+    """Ref-counted, LRU-evicted slot manager for the device factor pools.
+
+    The device arrays hold ``num_slots`` adapters; slot 0 is the pinned
+    all-zero base adapter. ``acquire`` returns a slot for an adapter id —
+    a **hit** (already resident: incref, no load needed), a **miss** (a
+    free or LRU-evicted slot; caller must load the factors), or ``None``
+    when every slot is referenced by a live request (caller waits).
+    ``release`` drops a reference; unreferenced adapters stay resident as
+    evictable cache so a returning tenant hits warm.
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 2:
+            raise ValueError(f"AdapterPool needs >= 2 slots (slot 0 is the "
+                             f"base adapter), got {num_slots}")
+        self.num_slots = num_slots
+        self.ref = np.zeros(num_slots, np.int32)       # ref[0] stays 0
+        self._free = deque(range(1, num_slots))
+        self._by_id = OrderedDict()                    # adapter_id -> slot
+        self._id_of: dict[int, object] = {}            # slot -> adapter_id
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @property
+    def capacity(self) -> int:
+        """Adapter-holding slots (excludes the pinned base slot)."""
+        return self.num_slots - 1
+
+    def resident(self) -> int:
+        return len(self._by_id)
+
+    def live(self) -> int:
+        return int((self.ref > 0).sum())
+
+    def cached(self) -> int:
+        """Resident but unreferenced (evictable) adapters."""
+        return sum(1 for s in self._id_of if self.ref[s] == 0)
+
+    def available(self) -> int:
+        """Slots an acquire-miss could claim right now."""
+        return len(self._free) + self.cached()
+
+    def occupancy(self) -> float:
+        return self.resident() / self.capacity
+
+    def slot_of(self, adapter_id):
+        """Resident slot of ``adapter_id`` or None (no ref taken)."""
+        return self._by_id.get(adapter_id)
+
+    def acquire(self, adapter_id):
+        """Take a reference. Returns ``(slot, needs_load)`` or ``None``
+        when all slots are pinned by live requests (state unchanged)."""
+        slot = self._by_id.get(adapter_id)
+        if slot is not None:
+            self.ref[slot] += 1
+            self._by_id.move_to_end(adapter_id)        # LRU touch
+            self.hits += 1
+            return slot, False
+        if self._free:
+            slot = self._free.popleft()
+        else:
+            slot = self._evict_one()
+            if slot is None:
+                return None
+        self.misses += 1
+        self.ref[slot] = 1
+        self._by_id[adapter_id] = slot
+        self._id_of[slot] = adapter_id
+        return slot, True
+
+    def _evict_one(self):
+        """Reclaim the least-recently-used unreferenced adapter's slot."""
+        for aid, slot in self._by_id.items():
+            if self.ref[slot] == 0:
+                del self._by_id[aid]
+                del self._id_of[slot]
+                self.evictions += 1
+                return slot
+        return None
+
+    def release(self, adapter_id):
+        """Drop one reference; the adapter stays resident (evictable)."""
+        slot = self._by_id.get(adapter_id)
+        if slot is None:
+            raise KeyError(f"release of non-resident adapter {adapter_id!r}")
+        if self.ref[slot] <= 0:
+            raise ValueError(f"release of unreferenced adapter "
+                             f"{adapter_id!r} (double release)")
+        self.ref[slot] -= 1
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "resident": self.resident(),
+                "live": self.live(), "occupancy": self.occupancy(),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+# ---------------------------------------------------------------------------
+# Quantized-leaf walking
+# ---------------------------------------------------------------------------
+
+def _is_quant_leaf(tree) -> bool:
+    return isinstance(tree, dict) and "qw" in tree and "m" in tree
+
+
+def iter_quant_leaves(tree, prefix: str = ""):
+    """Yield ``(path, leaf)`` for every adapter-targetable quantized leaf.
+
+    MoE expert leaves are skipped: their activations are dispatch-permuted,
+    so a per-sequence row index cannot address them."""
+    if _is_quant_leaf(tree):
+        if "/experts" not in prefix:
+            yield prefix, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from iter_quant_leaves(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_quant_leaves(v, f"{prefix}/{i}")
+
+
+def _map_quant_leaves(tree, fn, prefix: str = ""):
+    """Rebuild ``tree`` with ``fn(path, leaf)`` applied to each target."""
+    if _is_quant_leaf(tree):
+        if "/experts" in prefix:
+            return tree
+        return fn(prefix, tree)
+    if isinstance(tree, dict):
+        return {k: _map_quant_leaves(v, fn, f"{prefix}/{k}")
+                for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        mapped = [_map_quant_leaves(v, fn, f"{prefix}/{i}")
+                  for i, v in enumerate(tree)]
+        return type(tree)(mapped) if isinstance(tree, tuple) else mapped
+    return tree
+
+
+def adapter_slot_count(params) -> int:
+    """Number of pool slots installed in ``params`` (0 = no pools)."""
+    for _, leaf in iter_quant_leaves(params):
+        if "alb" in leaf:
+            return leaf["alb"].shape[-3]
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Device pools
+# ---------------------------------------------------------------------------
+
+def install_pools(params, *, slots: int, rank: int):
+    """Grow every quantized leaf with zeroed device factor pools.
+
+    ``alb``: [lead.., slots, k, ra]; ``ala``: [lead.., slots, ra, n] with
+    ``ra = padded_rank(rank)``. Slot 0 stays all-zero forever (the base
+    adapter). Returns a new params tree; fp leaves are untouched."""
+    if slots < 2:
+        raise ValueError(f"install_pools needs slots >= 2, got {slots}")
+    ra = padded_rank(rank)
+
+    def add(path, leaf):
+        lead = leaf["qw"].shape[:-2]
+        k = leaf["m"].shape[-1]
+        n = leaf["sw"].shape[-1]
+        leaf = dict(leaf)
+        leaf["alb"] = jnp.zeros(lead + (slots, k, ra), jnp.float32)
+        leaf["ala"] = jnp.zeros(lead + (slots, ra, n), jnp.float32)
+        return leaf
+
+    return _map_quant_leaves(params, add)
+
+
+def load_adapter(params, factors, slot: int):
+    """Write one adapter's folded factors into pool slot ``slot``.
+
+    ``factors``: dict path -> (a_s [lead.., k, ra], b [lead.., ra, n]) as
+    produced by :meth:`AdapterRegistry.folded`. Per-leaf functional updates
+    (``.at[...].set``) — the pools are tiny next to the base weights, and
+    updating leaf-by-leaf never donates or invalidates the shared ``qw``
+    buffers other engines may hold. Returns a new params tree."""
+    if slot == BASE_SLOT:
+        raise ValueError("slot 0 is the pinned all-zero base adapter")
+
+    def write(path, leaf):
+        if "alb" not in leaf:
+            return leaf
+        if path not in factors:
+            raise KeyError(f"adapter factors missing for {path}")
+        a_s, b = factors[path]
+        leaf = dict(leaf)
+        leaf["alb"] = leaf["alb"].at[..., slot, :, :].set(a_s)
+        leaf["ala"] = leaf["ala"].at[..., slot, :, :].set(b)
+        return leaf
+
+    return _map_quant_leaves(params, write)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+class AdapterRegistry:
+    """Loads/quantizes adapters against a quantized base model.
+
+    Records every adapter-targetable quantized linear of ``params`` (path,
+    shapes, smoothing diagonal). ``add`` registers an adapter's raw factors
+    (or synthesizes deterministic ones — the test/benchmark tenant
+    generator); ``folded`` returns the serving form with the recipe's
+    smoothing folded in and the rank padded; ``merged_params`` builds the
+    merged-weight reference model for exactness checks.
+    """
+
+    def __init__(self, params, *, rank: int = 8, seed: int = 0):
+        self.rank = int(rank)
+        self.ra = padded_rank(self.rank)
+        self.seed = int(seed)
+        self._targets = []            # (path, lead, k, n, m_diag f32)
+        for path, leaf in iter_quant_leaves(params):
+            lead = leaf["qw"].shape[:-2]
+            self._targets.append(
+                (path, lead, leaf["m"].shape[-1], leaf["sw"].shape[-1],
+                 np.asarray(leaf["m"], np.float32)))
+        if not self._targets:
+            raise ValueError("no quantized linears to adapt — "
+                             "AdapterRegistry needs a quantized base model")
+        self._raw = {}                # adapter_id -> {path: (A, B)}
+        self._folded = {}             # adapter_id -> {path: (a_s, b)}
+
+    @classmethod
+    def from_recipe(cls, params, recipe, *, seed: int = 0):
+        """Rank from the recipe's :class:`repro.quant.recipe.AdapterSpec`."""
+        return cls(params, rank=recipe.adapter.rank or 8, seed=seed)
+
+    def ids(self):
+        return list(self._raw)
+
+    def paths(self):
+        return [t[0] for t in self._targets]
+
+    def add(self, adapter_id, factors=None):
+        """Register an adapter. ``factors``: dict path -> (A [lead.., k, r],
+        B [lead.., r, n]) raw LoRA factors; None synthesizes deterministic
+        random factors (seeded by (seed, adapter_id, path))."""
+        if adapter_id in self._raw:
+            raise ValueError(f"adapter {adapter_id!r} already registered")
+        if factors is None:
+            factors = {path: self._synth(adapter_id, path, lead, k, n)
+                       for path, lead, k, n, _ in self._targets}
+        for path, lead, k, n, _ in self._targets:
+            if path not in factors:
+                raise KeyError(f"adapter {adapter_id!r} missing factors "
+                               f"for {path}")
+            a, b = factors[path]
+            if a.shape != lead + (k, a.shape[-1]) or \
+                    b.shape != lead + (b.shape[-2], n) or \
+                    a.shape[-1] != b.shape[-2]:
+                raise ValueError(
+                    f"adapter {adapter_id!r} factor shapes {a.shape} / "
+                    f"{b.shape} do not match target {path} "
+                    f"(lead={lead}, k={k}, n={n})")
+        self._raw[adapter_id] = factors
+        return adapter_id
+
+    def _synth(self, adapter_id, path, lead, k, n, amp: float = 0.25):
+        rng = np.random.default_rng(
+            zlib.crc32(f"{self.seed}/{adapter_id}/{path}".encode()))
+        a = rng.standard_normal(lead + (k, self.rank)).astype(np.float32)
+        b = rng.standard_normal(lead + (self.rank, n)).astype(np.float32)
+        return a * k ** -0.5, b * (amp * self.rank ** -0.5)
+
+    def folded(self, adapter_id):
+        """Serving factors: smoothing folded into A, rank zero-padded.
+
+        dict path -> (a_s [lead.., k, ra], b [lead.., ra, n]); with
+        ``x_s = x / m`` the routed epilogue ``(x_s @ a_s) @ b`` equals the
+        adapter's raw ``(x @ A) @ B``."""
+        if adapter_id not in self._folded:
+            raw = self._raw[adapter_id]
+            out = {}
+            for path, lead, k, n, m_diag in self._targets:
+                a, b = raw[path]
+                r = a.shape[-1]
+                a_s = m_diag[..., :, None] * np.asarray(a, np.float32)
+                pad = self.ra - r
+                if pad:
+                    a_s = np.pad(a_s, [(0, 0)] * (a_s.ndim - 1) + [(0, pad)])
+                    b = np.pad(np.asarray(b, np.float32),
+                               [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+                out[path] = (jnp.asarray(a_s), jnp.asarray(b, jnp.float32))
+            self._folded[adapter_id] = out
+        return self._folded[adapter_id]
+
+    def merged_params(self, params, adapter_id):
+        """Merged-weight reference: factors concatenated onto ``lb``/``la``.
+
+        The returned params serve the adapter through the plain base path
+        (no pools, no routing) — the token-exactness oracle for routed
+        serving. Installed pools are dropped from the copy."""
+        folded = self.folded(adapter_id)
+
+        def merge(path, leaf):
+            leaf = {k: v for k, v in leaf.items()
+                    if k not in ("alb", "ala", "aidx")}
+            a_s, b = folded[path]
+            leaf["lb"] = jnp.concatenate(
+                [leaf["lb"].astype(jnp.float32), a_s], axis=-1)
+            leaf["la"] = jnp.concatenate(
+                [leaf["la"].astype(jnp.float32), b], axis=-2)
+            return leaf
+
+        return _map_quant_leaves(params, merge)
+
+    def pool_bytes_per_adapter(self) -> int:
+        """Device bytes one pool slot costs across all target linears."""
+        total = 0
+        for _, lead, k, n, _ in self._targets:
+            stack = int(np.prod(lead)) if lead else 1
+            total += stack * (k + n) * self.ra * 4
+        return total

@@ -280,7 +280,7 @@ class Engine:
         return toks.T, caches                     # [b, n_steps]
 
     def _decode_chunk_impl(self, params, tok0, caches, key, done0, pos0,
-                           tables=None, *, n_steps: int):
+                           tables=None, aslots=None, *, n_steps: int):
         """Ragged device-resident decode chunk: per-row positions.
 
         Carries per-slot ``pos`` (each row writes KV at its own frontier)
@@ -292,7 +292,10 @@ class Engine:
         constant across the chunk — the scheduler grows tables only
         between chunks. Retired paged slots hold all-sentinel rows, so
         their writes drop on device and freed pages can be re-used by
-        neighbours mid-flight.
+        neighbours mid-flight. ``aslots`` ([b] int32, or None when no
+        adapter pools are routed) carries each slot's adapter-pool index —
+        constant across the chunk for the same reason; retired slots point
+        at slot 0 (the all-zero base adapter).
         """
         eos = self.scfg.eos_id
 
@@ -302,7 +305,8 @@ class Engine:
             logits, new_caches, _ = forward(params, self.cfg, tok[:, None],
                                             positions=pos[:, None],
                                             caches=caches, ragged=True,
-                                            block_tables=tables, rt=self.rt)
+                                            block_tables=tables,
+                                            adapter_idx=aslots, rt=self.rt)
             nxt = self._sample(logits[:, 0], sub)
             if eos >= 0:
                 nxt = jnp.where(done, jnp.int32(eos), nxt)
@@ -323,19 +327,21 @@ class Engine:
         tok, caches, key, done, pos = carry
         return toks.T, caches, key, done, pos     # toks: [b, n_steps]
 
-    def _prefill_slot_impl(self, params, tokens, length, caches, slot):
+    def _prefill_slot_impl(self, params, tokens, length, caches, slot,
+                           aslot=None):
         """Single-request prefill into one slot of a live batch cache.
 
         tokens: [1, s_bucket] right-padded; ``length``/``slot`` traced
         scalars. Runs a b=1 prefill against fresh caches, then scatters the
         resulting KV rows into ``caches`` at ``slot`` — the other slots'
         cached state is untouched, which is what lets the scheduler backfill
-        a retired slot while its neighbours keep decoding.
+        a retired slot while its neighbours keep decoding. ``aslot`` ([1]
+        int32 or None): the request's adapter-pool slot.
         """
         one = init_caches(self.cfg, 1, self.scfg.max_len,
                           kv_dtype=self.scfg.kv_dtype)
         logits, one, _ = forward(params, self.cfg, tokens, caches=one,
-                                 rt=self.rt)
+                                 adapter_idx=aslot, rt=self.rt)
         last = logits[0, jnp.maximum(length - 1, 0)]
 
         def put(bc, oc):
@@ -363,7 +369,7 @@ class Engine:
 
     # -- paged compiled steps ---------------------------------------------
     def _prefill_slot_paged_impl(self, params, tokens, length, start,
-                                 caches, table):
+                                 caches, table, aslot=None):
         """Single-request paged prefill of a prompt *suffix*.
 
         tokens: [1, s_bucket] right-padded; ``start`` is the number of
@@ -371,7 +377,8 @@ class Engine:
         read through ``table`` but never re-computed); ``length`` is the
         suffix length. Unlike the contiguous ``prefill_slot`` there is no
         scatter-into-slot step: the pool is global, so writing through the
-        table IS the admission.
+        table IS the admission. ``aslot`` ([1] int32 or None): the
+        request's adapter-pool slot.
         """
         b, w = tokens.shape
         positions = start + jnp.broadcast_to(
@@ -379,7 +386,7 @@ class Engine:
         logits, caches, _ = forward(params, self.cfg, tokens,
                                     positions=positions, caches=caches,
                                     ragged=True, block_tables=table,
-                                    rt=self.rt)
+                                    adapter_idx=aslot, rt=self.rt)
         last = logits[0, jnp.maximum(length - 1, 0)]
         return last, caches
 
@@ -422,8 +429,26 @@ class Engine:
         return init_caches(self.cfg, self.scfg.batch_slots, self.scfg.max_len,
                            kv_dtype=self.scfg.kv_dtype)
 
+    @property
+    def adapter_slots(self) -> int:
+        """Pool slots installed in this engine's params (0 = no pools)."""
+        from repro.serve.adapters import adapter_slot_count
+        return adapter_slot_count(self.params)
+
+    def load_adapter(self, factors, slot: int):
+        """Write one adapter's folded factors into pool slot ``slot`` of
+        every quantized leaf (see ``serve.adapters.load_adapter``).
+
+        Host-driven per-leaf functional updates — deliberately *not* a
+        whole-tree donated jit program: donating params would invalidate
+        the packed base weights (``qw``/``sw``/…) that other engines in
+        the process may share, and the pools are tiny next to them.
+        """
+        from repro.serve.adapters import load_adapter
+        self.params = load_adapter(self.params, factors, slot)
+
     def prefill_slot(self, tokens, length, caches, slot, *,
-                     block_table=None, start: int = 0):
+                     block_table=None, start: int = 0, adapter_slot=None):
         """Prefill one request into the live serving state.
 
         Args:
@@ -440,26 +465,30 @@ class Engine:
           start: paged only — prompt tokens already present via shared
             prefix pages; ``tokens`` then holds the remaining suffix and
             positions start at ``start``.
+          adapter_slot: adapter-pool index for this request (None = no
+            routing; 0 = explicit base). Requires installed pools.
 
         Returns ``(next_tok, caches)``: the greedily sampled first token
         ([] int32) and the updated cache tree.
         """
         self._check_ragged_supported()
+        aslot = (None if adapter_slot is None
+                 else jnp.asarray([adapter_slot], jnp.int32))
         if self.scfg.kv_layout == "paged":
             if block_table is None:
                 raise ValueError("paged prefill_slot needs a block_table")
             last, caches = self._prefill_slot_paged(
                 self.params, tokens, jnp.asarray(length, jnp.int32),
                 jnp.asarray(start, jnp.int32), caches,
-                jnp.asarray(block_table, jnp.int32)[None])
+                jnp.asarray(block_table, jnp.int32)[None], aslot)
         else:
             last, caches = self._prefill_slot(
                 self.params, tokens, jnp.asarray(length, jnp.int32), caches,
-                jnp.asarray(slot, jnp.int32))
+                jnp.asarray(slot, jnp.int32), aslot)
         return jnp.argmax(last, axis=-1).astype(jnp.int32), caches
 
     def decode_chunk(self, tok, caches, key, done, pos, n_steps: int,
-                     block_tables=None):
+                     block_tables=None, adapter_slots=None):
         """Run ``n_steps`` ragged decode steps as one compiled program.
 
         Args:
@@ -474,17 +503,24 @@ class Engine:
           n_steps: chunk length; static ⇒ one compiled program per value.
           block_tables: paged only — ``[batch_slots, blocks_per_seq]``
             int32, constant across the chunk (grow tables between chunks).
+          adapter_slots: ``[batch_slots]`` int32 adapter-pool indices
+            (0 = base), or None when no adapter routing is active. Like
+            ``block_tables`` it is constant across the chunk — the
+            scheduler only swaps a slot's adapter between chunks.
 
         Returns ``(toks [batch_slots, n_steps], caches, key, done, pos)``.
         """
+        aslots = (None if adapter_slots is None
+                  else jnp.asarray(adapter_slots, jnp.int32))
         if self.scfg.kv_layout == "paged":
             if block_tables is None:
                 raise ValueError("paged decode_chunk needs block_tables")
             return self._decode_chunk(
                 self.params, tok, caches, key, done, pos,
-                jnp.asarray(block_tables, jnp.int32), n_steps=n_steps)
+                jnp.asarray(block_tables, jnp.int32), aslots,
+                n_steps=n_steps)
         return self._decode_chunk(self.params, tok, caches, key, done, pos,
-                                  None, n_steps=n_steps)
+                                  None, aslots, n_steps=n_steps)
 
     def copy_blocks(self, caches, src, dst):
         """Copy pool blocks ``src → dst`` in every layer (copy-on-write).

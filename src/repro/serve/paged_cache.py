@@ -32,14 +32,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
-def block_hashes(tokens: np.ndarray, block_size: int) -> List[bytes]:
+def block_hashes(tokens: np.ndarray, block_size: int,
+                 salt: bytes = b"") -> List[bytes]:
     """Chained content hashes, one per *full* block of ``tokens``.
 
     Hash i commits to tokens[0 : (i+1) * block_size] — chaining via the
     previous digest, so a block only ever matches behind its exact prefix.
+    ``salt`` seeds the chain: contexts whose KV is *not* interchangeable
+    for identical tokens (different LoRA adapters rewrite the K/V
+    projections) must salt with their identity, or a prefix hit would
+    serve another adapter's KV.
     """
     out: List[bytes] = []
-    prev = b""
+    prev = salt
     for i in range(len(tokens) // block_size):
         h = hashlib.sha1()
         h.update(prev)
@@ -134,7 +139,8 @@ class BlockPool:
                 self._free.append(bid)
 
     # -- prefix cache ------------------------------------------------------
-    def match_prefix(self, tokens: np.ndarray) -> Tuple[List[int], int]:
+    def match_prefix(self, tokens: np.ndarray,
+                     salt: bytes = b"") -> Tuple[List[int], int]:
         """Longest chain of cached full blocks matching ``tokens``.
 
         Returns (physical ids with a reference taken per id, tokens
@@ -142,9 +148,11 @@ class BlockPool:
         block-aligned and fully cached — the scheduler then still has to
         re-prefill the final token for its logits, copy-on-writing the last
         shared block before that write (see ``Scheduler._admit``).
+        ``salt`` isolates hash chains whose KV is not interchangeable
+        (per-adapter prefixes).
         """
         ids: List[int] = []
-        for h in block_hashes(tokens, self.block_size):
+        for h in block_hashes(tokens, self.block_size, salt):
             bid = self._by_hash.get(h)
             if bid is None:
                 break
@@ -153,7 +161,8 @@ class BlockPool:
             ids.append(bid)
         return ids, len(ids) * self.block_size
 
-    def register_prefix(self, tokens: np.ndarray, table: Sequence[int]):
+    def register_prefix(self, tokens: np.ndarray, table: Sequence[int],
+                        salt: bytes = b""):
         """Index ``tokens``' full blocks (backed by ``table``'s physical
         ids) for future sharing. Idempotent per content hash; the index
         holds no reference of its own — a block becomes evictable once its
@@ -162,7 +171,7 @@ class BlockPool:
         so the hash↔block mapping stays a bijection — otherwise eviction
         through the stale entry could hand the block out while the fresh
         entry still resolves to it."""
-        for i, h in enumerate(block_hashes(tokens, self.block_size)):
+        for i, h in enumerate(block_hashes(tokens, self.block_size, salt)):
             bid = int(table[i])
             if bid >= self.num_blocks:           # sentinel: nothing mapped
                 break

@@ -49,12 +49,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .adapters import BASE_SLOT, AdapterPool
 from .engine import Engine
 from .paged_cache import BlockPool
 
@@ -64,6 +65,7 @@ class Request:
     rid: int
     prompt: np.ndarray            # [len] int32 token ids
     max_new_tokens: int
+    adapter_id: Optional[str] = None   # None = serve the quantized base
 
 
 class RequestHandle:
@@ -82,8 +84,9 @@ class RequestHandle:
         self.tokens: List[int] = []
         self.done = False
         self._cursor = 0
+        self._stats_fn = None         # set by the scheduler at submit
 
-    def poll(self) -> List[int]:
+    def poll(self, with_stats: bool = False):
         """Tokens generated since the last ``poll()``.
 
         Returns a (possibly empty) list of int token ids. Empty while the
@@ -91,10 +94,23 @@ class RequestHandle:
         (``done``), the first ``poll()`` drains the remaining delta and
         subsequent calls return ``[]`` forever — polling a retired handle
         is safe and idempotent.
+
+        With ``with_stats=True`` returns ``(delta, stats)`` where ``stats``
+        is a telemetry snapshot for this request's adapter: its id, its
+        per-adapter ``prefix_hit_rate``, and the scheduler's adapter-pool
+        counters (occupancy / hits / misses / evictions / loads). Requests
+        without an adapter (and adapter-free schedulers) report the base
+        view — ``adapter_id`` None and zeroed pool counters.
         """
         delta = self.tokens[self._cursor:]
         self._cursor = len(self.tokens)
-        return delta
+        if not with_stats:
+            return delta
+        stats = self._stats_fn() if self._stats_fn is not None else {
+            "adapter_id": None, "adapter_prefix_hit_rate": 0.0,
+            "adapter_loads": 0, "capacity": 0, "resident": 0, "live": 0,
+            "occupancy": 0.0, "hits": 0, "misses": 0, "evictions": 0}
+        return delta, stats
 
 
 def _bucket(n: int, cap: int, lo: int = 8) -> int:
@@ -118,10 +134,23 @@ class Scheduler:
     ``prefix_reuse`` (paged engines only) enables the block-granular
     prefix cache; it changes which pages hold a prompt's KV but never the
     tokens generated.
+
+    ``adapters`` (an :class:`repro.serve.adapters.AdapterRegistry`, against
+    an engine whose params carry installed factor pools) turns on
+    multi-tenant LoRA serving: ``submit(..., adapter_id=...)`` routes a
+    request through its adapter's factors. Admission then accounts adapter
+    pool slots alongside KV pages — an :class:`AdapterPool` ref-counts
+    residency, loads factors on a miss (LRU-evicting an idle adapter), and
+    a request whose adapter cannot get a slot waits in the queue exactly
+    like one the KV pool cannot admit. Prefix caching stays correct across
+    tenants because each adapter salts its hash chains (an adapter rewrites
+    the K/V projections, so identical tokens do *not* share KV across
+    adapters).
     """
 
     def __init__(self, engine: Engine, chunk_size: int = 8, seed: int = 0,
-                 prefix_reuse: bool = True):
+                 prefix_reuse: bool = True, adapters=None,
+                 adapter_pool: Optional[AdapterPool] = None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
         engine._check_ragged_supported()
@@ -152,6 +181,30 @@ class Scheduler:
             self._slot_blocks: List[List[int]] = [[] for _ in range(self.slots)]
             self._admit_seq = np.zeros((self.slots,), np.int64)
             self._seq_counter = 0
+        # -- adapter state --------------------------------------------------
+        self._adapters = adapters           # AdapterRegistry or None
+        self.apool: Optional[AdapterPool] = None
+        self._aslot = np.zeros((self.slots,), np.int32)   # BASE_SLOT lanes
+        self.adapter_loads = 0
+        # per-adapter prefix telemetry: id -> [shared_tokens, prompt_tokens]
+        self._adapter_prefix: Dict[Optional[str], List[int]] = {}
+        if adapter_pool is not None and adapters is None:
+            raise ValueError("adapter_pool without an adapter registry")
+        if adapters is not None:
+            n = engine.adapter_slots
+            if n < 2:
+                raise ValueError(
+                    "adapter registry given but the engine's params carry "
+                    "no factor pools — quantize with install_pools first")
+            if adapter_pool is not None and adapter_pool.num_slots != n:
+                raise ValueError(
+                    f"adapter_pool has {adapter_pool.num_slots} slots but "
+                    f"the engine's params carry {n}")
+            # a shared pool outlives this scheduler: its residency map
+            # mirrors the *engine's* device pools, so a restarted scheduler
+            # (or several schedulers over one engine) skips reloading
+            # factors that are already resident
+            self.apool = adapter_pool or AdapterPool(n)
         # prefix-cache telemetry (all zeros for contiguous engines)
         self.prompt_tokens = 0      # Σ effective prompt lengths admitted
         self.shared_tokens = 0      # Σ prompt tokens served from cached pages
@@ -161,8 +214,8 @@ class Scheduler:
         self.cow_copies = 0
 
     # -- submission --------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens: int
-               ) -> RequestHandle:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               adapter_id: Optional[str] = None) -> RequestHandle:
         """Queue one generation request.
 
         Args:
@@ -173,6 +226,9 @@ class Scheduler:
             at EOS (when the engine's ``eos_id >= 0``) or after exactly
             this many tokens, whichever comes first. ``len(prompt) +
             max_new_tokens`` must fit the engine's ``max_len``.
+          adapter_id: route this request through a registered adapter's
+            factors (requires the scheduler's ``adapters`` registry); None
+            serves the quantized base model.
 
         Returns a :class:`RequestHandle` immediately — generation happens
         during subsequent :meth:`step` / :meth:`run` calls; stream tokens
@@ -187,8 +243,16 @@ class Scheduler:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_len ({self.max_len})")
+        if adapter_id is not None:
+            if self._adapters is None:
+                raise ValueError(
+                    f"adapter_id {adapter_id!r} but this scheduler has no "
+                    f"adapter registry")
+            if adapter_id not in self._adapters.ids():
+                raise ValueError(f"unknown adapter {adapter_id!r}")
         handle = RequestHandle(Request(self._next_rid, prompt,
-                                       max_new_tokens))
+                                       max_new_tokens, adapter_id))
+        handle._stats_fn = lambda aid=adapter_id: self._request_stats(aid)
         self._next_rid += 1
         self._queue.append(handle)
         return handle
@@ -205,6 +269,61 @@ class Scheduler:
         return self.shared_tokens / self.prompt_tokens \
             if self.prompt_tokens else 0.0
 
+    def adapter_prefix_hit_rate(self, adapter_id: Optional[str] = None
+                                ) -> float:
+        """Per-adapter prefix hit rate (None = base traffic). Adapters only
+        ever share prefixes with themselves (salted hash chains), so this
+        is the number the benchmark reports per tenant."""
+        st = self._adapter_prefix.get(adapter_id)
+        return st[0] / st[1] if st and st[1] else 0.0
+
+    def adapter_stats(self) -> dict:
+        """Adapter-pool telemetry snapshot (zeros when adapter-free)."""
+        out = {"adapter_loads": self.adapter_loads}
+        if self.apool is not None:
+            out.update(self.apool.stats())
+        else:
+            out.update({"capacity": 0, "resident": 0, "live": 0,
+                        "occupancy": 0.0, "hits": 0, "misses": 0,
+                        "evictions": 0})
+        return out
+
+    def _request_stats(self, adapter_id: Optional[str]) -> dict:
+        stats = {"adapter_id": adapter_id,
+                 "adapter_prefix_hit_rate":
+                     self.adapter_prefix_hit_rate(adapter_id)}
+        stats.update(self.adapter_stats())
+        return stats
+
+    # -- adapter residency -------------------------------------------------
+    @staticmethod
+    def _salt(adapter_id: Optional[str]) -> bytes:
+        """Prefix-hash salt: adapters never share KV with each other or
+        with the base (their K/V projections differ)."""
+        return f"adapter:{adapter_id}".encode() \
+            if adapter_id is not None else b""
+
+    def _acquire_adapter(self, adapter_id: Optional[str]) -> Optional[int]:
+        """Resolve a request's adapter to a pool slot, loading factors on a
+        miss. Returns the slot (``BASE_SLOT`` for base requests), or None
+        when every slot is pinned by live requests — the caller leaves the
+        request queued, exactly like KV-page exhaustion."""
+        if adapter_id is None:
+            return BASE_SLOT
+        got = self.apool.acquire(adapter_id)
+        if got is None:
+            return None
+        aslot, needs_load = got
+        if needs_load:
+            self.engine.load_adapter(self._adapters.folded(adapter_id),
+                                     aslot)
+            self.adapter_loads += 1
+        return aslot
+
+    def _release_adapter(self, adapter_id: Optional[str]):
+        if adapter_id is not None and self.apool is not None:
+            self.apool.release(adapter_id)
+
     # -- admission ---------------------------------------------------------
     def _effective_prompt(self, handle: RequestHandle) -> np.ndarray:
         """Prompt plus tokens already generated (preempted requests resume
@@ -220,6 +339,8 @@ class Scheduler:
         if ((self.eos_id >= 0 and first == self.eos_id)
                 or len(handle.tokens) >= handle.request.max_new_tokens):
             handle.done = True           # one-token request: slot stays free
+            self._release_adapter(handle.request.adapter_id)
+            self._aslot[slot] = BASE_SLOT
             if self.paged:
                 self.pool.free(self._slot_blocks[slot])
                 self._slot_blocks[slot] = []
@@ -233,13 +354,19 @@ class Scheduler:
 
     def _admit_contiguous(self, slot) -> bool:
         while self._queue:
-            handle = self._queue.popleft()
+            handle = self._queue[0]
             req = handle.request
+            aslot = self._acquire_adapter(req.adapter_id)
+            if aslot is None:
+                return False     # adapter pool pinned solid: stop admitting
+            self._queue.popleft()
+            self._aslot[slot] = aslot
             width = _bucket(req.prompt.size, self.max_len)
             padded = np.zeros((1, width), np.int32)
             padded[0, :req.prompt.size] = req.prompt
             tok, self._caches = self.engine.prefill_slot(
-                jnp.asarray(padded), req.prompt.size, self._caches, slot)
+                jnp.asarray(padded), req.prompt.size, self._caches, slot,
+                adapter_slot=aslot if self.apool is not None else None)
             if self._finish_prefill(slot, handle, int(tok), req.prompt.size):
                 return True
         return False
@@ -247,9 +374,14 @@ class Scheduler:
     def _admit_paged(self, slot) -> bool:
         while self._queue:
             handle = self._queue[0]
+            aid = handle.request.adapter_id
             prompt = self._effective_prompt(handle)
             plen = prompt.size
-            shared_ids, shared_tok = (self.pool.match_prefix(prompt)
+            aslot = self._acquire_adapter(aid)
+            if aslot is None:
+                return False     # adapter pool pinned solid: stop admitting
+            salt = self._salt(aid)
+            shared_ids, shared_tok = (self.pool.match_prefix(prompt, salt)
                                       if self.prefix_reuse else ([], 0))
             cow_src = shared_ids[-1] if shared_tok == plen else None
             need = -(-(plen + 1) // self._bs) - len(shared_ids) \
@@ -259,8 +391,10 @@ class Scheduler:
                 # page-aware admission: pool (incl. evictable prefix cache)
                 # is exhausted — leave the request queued, stop admitting
                 self.pool.free(shared_ids)
+                self._release_adapter(aid)
                 return False
             self._queue.popleft()
+            self._aslot[slot] = aslot
             blocks = list(shared_ids)
             if cow_src is not None:
                 # whole prompt cached: take a private copy of the last
@@ -285,14 +419,15 @@ class Scheduler:
             padded[0, :suffix.size] = suffix
             tok, self._caches = self.engine.prefill_slot(
                 jnp.asarray(padded), suffix.size, self._caches, slot,
-                block_table=table, start=start)
+                block_table=table, start=start,
+                adapter_slot=aslot if self.apool is not None else None)
 
             self._slot_blocks[slot] = blocks
             self._tables[slot] = table
             self._seq_counter += 1
             self._admit_seq[slot] = self._seq_counter
             if self.prefix_reuse:
-                self.pool.register_prefix(prompt, blocks)
+                self.pool.register_prefix(prompt, blocks, salt)
             if not handle.tokens:
                 # telemetry counts fresh admissions only: a preempted
                 # request re-matching its own still-cached pages on resume
@@ -302,6 +437,9 @@ class Scheduler:
                 self.prefix_hits += bool(start)
                 self.prompt_tokens += plen
                 self.shared_tokens += start
+                st = self._adapter_prefix.setdefault(aid, [0, 0])
+                st[0] += start
+                st[1] += plen
             if self._finish_prefill(slot, handle, int(tok), plen):
                 return True
         return False
@@ -319,8 +457,12 @@ class Scheduler:
 
     # -- paged page management ---------------------------------------------
     def _release_slot(self, slot):
+        handle = self._slot_handle[slot]
+        if handle is not None:
+            self._release_adapter(handle.request.adapter_id)
         self._slot_handle[slot] = None
         self._done[slot] = True
+        self._aslot[slot] = BASE_SLOT
         if self.paged:
             self.pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
@@ -395,7 +537,8 @@ class Scheduler:
             jnp.asarray(self._tok), self._caches, self._key,
             jnp.asarray(self._done), jnp.asarray(self._pos),
             n_steps=self.chunk_size,
-            block_tables=self._tables if self.paged else None)
+            block_tables=self._tables if self.paged else None,
+            adapter_slots=self._aslot if self.apool is not None else None)
         self.chunks_run += 1
         toks = np.asarray(toks)                       # [slots, chunk]
         # adopt the device carry: pos is each slot's true KV frontier (the

@@ -15,7 +15,9 @@ the dry-run robust; hot leaves get explicit layouts:
   mamba out_proj         : in  (d_inner) → model
   quantized leaves       : qw/sw/la/lb follow the same axis as their w;
                            lb/la replicated when r is small (cheaper than
-                           shard + all-gather of a skinny GEMM)
+                           shard + all-gather of a skinny GEMM); adapter
+                           factor pools alb/ala mirror lb/la with the
+                           pool-slot axis replicated
 
 Batch: ("pod", "data"); long-context decode (batch 1): KV cache seq → data.
 """
@@ -86,7 +88,8 @@ def _spec_for_path(path: str, ndim: int, mesh: Mesh, shard_lr: bool,
 
     # ---- quantized leaves ------------------------------------------------
     if p.endswith("/qw") or p.endswith("/sw") or p.endswith("/la") \
-            or p.endswith("/lb") or p.endswith("/m"):
+            or p.endswith("/lb") or p.endswith("/m") \
+            or p.endswith("/alb") or p.endswith("/ala"):
         base = p.rsplit("/", 1)[0]
         out_sharded = _col_sharded(base)
         in_sharded = _row_sharded(base)
@@ -101,6 +104,12 @@ def _spec_for_path(path: str, ndim: int, mesh: Mesh, shard_lr: bool,
         if leaf == "lb":   # [k, r]
             return last2(model if (in_sharded and shard_lr) else None, None)
         if leaf == "la":   # [r, n]
+            return last2(None, model if (out_sharded and shard_lr) else None)
+        # adapter factor pools mirror lb/la with the pool-slot axis (and any
+        # leading stack dims) replicated — last2 already leaves them None
+        if leaf == "alb":  # [P, k, ra]
+            return last2(model if (in_sharded and shard_lr) else None, None)
+        if leaf == "ala":  # [P, ra, n]
             return last2(None, model if (out_sharded and shard_lr) else None)
 
     # ---- embeddings ------------------------------------------------------

@@ -1,0 +1,177 @@
+"""Property tests for the host-side adapter-slot manager invariants.
+
+`serve/adapters.py::AdapterPool` mirrors `BlockPool` for the device factor
+pools: a refcount bug here routes one tenant's requests through another
+tenant's factors. Random op sequences run against a shadow model and pin:
+
+* refcounts never go negative; slot 0 (the pinned base adapter) is never
+  allocated, never evicted, never refcounted;
+* every adapter-holding slot is in exactly one of three states (live /
+  cached / free) and the id<->slot maps stay a bijection;
+* LRU eviction never reclaims a live (referenced) adapter;
+* ``acquire`` when every slot is pinned fails cleanly (returns None,
+  state unchanged); re-acquire of a resident adapter is a hit (no load).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # fallback: deterministic samples, see _propstub
+    from _propstub import given, settings, st
+
+from repro.serve.adapters import BASE_SLOT, AdapterPool
+
+
+def _invariants(pool: AdapterPool):
+    """The global consistency every op sequence must preserve."""
+    assert (pool.ref >= 0).all(), "negative refcount"
+    assert pool.ref[BASE_SLOT] == 0, "base slot acquired a refcount"
+    assert BASE_SLOT not in pool._id_of, "base slot holds an adapter"
+    free = set(pool._free)
+    live = {int(s) for s in np.flatnonzero(pool.ref > 0)}
+    cached = {s for s in pool._id_of if pool.ref[s] == 0}
+    assert not (free & live), "free list holds a live slot"
+    assert not (free & set(pool._id_of)), "free list holds a resident slot"
+    assert free | live | cached == set(range(1, pool.num_slots))
+    assert pool.live() == len(live)
+    assert pool.cached() == len(cached)
+    assert pool.available() == len(free) + len(cached)
+    assert pool.resident() == len(pool._id_of)
+    # id<->slot maps are a bijection
+    assert len(pool._by_id) == len(pool._id_of)
+    for aid, slot in pool._by_id.items():
+        assert pool._id_of[slot] == aid
+
+
+def _random_ops(pool: AdapterPool, rng: np.random.Generator, n_ops: int):
+    """Random acquire/release traffic over more ids than slots."""
+    ids = [f"t{i}" for i in range(pool.capacity * 2)]
+    held = []                  # adapter ids we still owe releases for
+    resident = {}              # shadow residency: id -> slot
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        if op in (0, 1):       # acquire (biased: traffic dominates)
+            aid = ids[int(rng.integers(0, len(ids)))]
+            was_resident = aid in resident
+            got = pool.acquire(aid)
+            if got is None:    # every slot pinned — state unchanged
+                assert pool.available() == 0
+            else:
+                slot, needs_load = got
+                assert slot != BASE_SLOT
+                assert needs_load == (not was_resident), \
+                    "hit/miss disagrees with shadow residency"
+                if was_resident:
+                    assert slot == resident[aid], "resident adapter moved"
+                else:
+                    # a miss claimed a free or evicted slot — drop the
+                    # shadow entry of whoever held it before
+                    for other, s in list(resident.items()):
+                        if s == slot:
+                            del resident[other]
+                resident[aid] = slot
+                held.append(aid)
+        elif op == 2 and held:  # release one we hold
+            aid = held.pop(int(rng.integers(0, len(held))))
+            pool.release(aid)
+        _invariants(pool)
+    return held
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_pool_invariants_under_random_traffic(seed):
+    rng = np.random.default_rng(seed)
+    pool = AdapterPool(int(rng.integers(2, 10)))
+    held = _random_ops(pool, rng, 60)
+    # drain: every held reference releases exactly once; residents stay
+    # cached (warm for returning tenants), nothing is live
+    for aid in held:
+        pool.release(aid)
+    _invariants(pool)
+    assert pool.live() == 0
+    assert pool.available() == pool.capacity
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_eviction_never_reclaims_live_adapters(seed):
+    rng = np.random.default_rng(seed)
+    pool = AdapterPool(6)                  # 5 adapter slots + base
+    n_live = int(rng.integers(1, 4))
+    live = [f"live{i}" for i in range(n_live)]
+    live_slots = {aid: pool.acquire(aid)[0] for aid in live}
+    cached = [f"cached{i}" for i in range(pool.capacity - n_live)]
+    for aid in cached:
+        pool.acquire(aid)
+        pool.release(aid)                  # resident, evictable
+    _invariants(pool)
+    # exhaust the pool with fresh tenants: every miss must evict from the
+    # cached set only, and live adapters keep their slots
+    for i in range(len(cached)):
+        slot, needs_load = pool.acquire(f"fresh{i}")
+        assert needs_load and slot not in live_slots.values()
+    assert pool.acquire("one-too-many") is None
+    for aid in live:
+        slot, needs_load = pool.acquire(aid)   # still resident: hit
+        assert not needs_load and slot == live_slots[aid]
+    _invariants(pool)
+    assert pool.evictions == len(cached)
+
+
+def test_acquire_when_all_pinned_fails_cleanly():
+    pool = AdapterPool(3)
+    a = pool.acquire("a")
+    b = pool.acquire("b")
+    assert a[1] and b[1]
+    before = (pool.ref.copy(), list(pool._free), dict(pool._by_id),
+              pool.hits, pool.misses, pool.evictions)
+    assert pool.acquire("c") is None       # all pinned: clean failure
+    after = (pool.ref, list(pool._free), dict(pool._by_id),
+             pool.hits, pool.misses, pool.evictions)
+    assert (before[0] == after[0]).all() and before[1:] == after[1:], \
+        "failed acquire mutated pool state"
+    pool.release("a")
+    slot, needs_load = pool.acquire("c")   # evicts a, recovers fully
+    assert needs_load and slot == a[0]
+    assert pool.evictions == 1
+
+
+def test_lru_evicts_least_recently_acquired():
+    pool = AdapterPool(3)
+    pool.acquire("a")
+    pool.acquire("b")
+    pool.release("a")
+    pool.release("b")
+    sa, hit = pool.acquire("a")            # touch a — b is now LRU
+    assert not hit
+    pool.release("a")
+    slot, needs_load = pool.acquire("c")
+    assert needs_load
+    assert pool.slot_of("b") is None, "evicted the recently-touched adapter"
+    assert pool.slot_of("a") == sa
+
+
+def test_release_guards_and_base_slot_pinned():
+    pool = AdapterPool(2)
+    with pytest.raises(KeyError, match="non-resident"):
+        pool.release("ghost")
+    pool.acquire("a")
+    pool.release("a")
+    with pytest.raises(ValueError, match="double release"):
+        pool.release("a")
+    with pytest.raises(ValueError, match=">= 2 slots"):
+        AdapterPool(1)
+    _invariants(pool)
+
+
+def test_stats_track_hits_misses_occupancy():
+    pool = AdapterPool(4)
+    pool.acquire("a")
+    pool.acquire("a")
+    pool.acquire("b")
+    pool.release("a")
+    s = pool.stats()
+    assert s == {"capacity": 3, "resident": 2, "live": 2,
+                 "occupancy": 2 / 3, "hits": 1, "misses": 2, "evictions": 0}

@@ -1,0 +1,295 @@
+"""Multi-tenant adapter serving: registry folding, device pools, routed
+scheduler parity against merged-weight references, prefix isolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models import init_params
+from repro.quant import calibrate, quantize_model, reduce_shared, registry
+from repro.serve.adapters import (BASE_SLOT, AdapterPool, AdapterRegistry,
+                                  adapter_slot_count, install_pools,
+                                  iter_quant_leaves, load_adapter,
+                                  padded_rank)
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Scheduler
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny_quant():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(2, 4, 16)), cfg)
+    return cfg, quantize_model(params, tape, "aser_as(rank=8)")
+
+
+def _prompts(cfg, spec, seed=2):
+    key = jax.random.PRNGKey(seed)
+    return [(np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                           (L,), 0, cfg.vocab_size)), n)
+            for i, (L, n) in enumerate(spec)]
+
+
+# ---------------------------------------------------------------------------
+# Registry: folding correctness, validation, merged reference
+# ---------------------------------------------------------------------------
+
+def test_folded_factors_match_raw_epilogue(tiny_quant):
+    """With x_s = x / m, the served (x_s @ a_s) @ b must equal the
+    adapter's raw (x @ A) @ B on every target — smoothing folds into A."""
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=5)              # odd rank: pads to 8
+    reg.add("t0")
+    folded = reg.folded("t0")
+    raw = reg._raw["t0"]
+    leaves = dict(iter_quant_leaves(qp))
+    assert set(folded) == set(leaves) and len(folded) > 0
+    rng = np.random.default_rng(0)
+    for path, (a_s, b) in folded.items():
+        m = np.asarray(leaves[path]["m"], np.float32)
+        a, braw = raw[path]
+        assert a_s.shape[-1] == padded_rank(5) == 8
+        x = rng.standard_normal(m.shape[:-1] + (3, m.shape[-1]))
+        x = x.astype(np.float32)
+        want = (x @ a) @ braw
+        got = ((x / m[..., None, :]) @ np.asarray(a_s)) @ np.asarray(b)
+        np.testing.assert_allclose(got, want, atol=1e-4), path
+
+
+def test_registry_validation(tiny_quant):
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.add("t0")
+    with pytest.raises(KeyError, match="missing factors"):
+        reg.add("partial", factors={})
+    path, lead, k, n = (reg._targets[0][0], reg._targets[0][1],
+                        reg._targets[0][2], reg._targets[0][3])
+    bad = {p: (np.zeros(ld + (kk, 4), np.float32),
+               np.zeros(ld + (4, nn), np.float32))
+           for p, ld, kk, nn, _ in reg._targets}
+    bad[path] = (np.zeros(lead + (k + 1, 4), np.float32), bad[path][1])
+    with pytest.raises(ValueError, match="factor shapes"):
+        reg.add("bad", factors=bad)
+    # a pure-fp model has nothing to adapt
+    cfg2 = _tiny_cfg()
+    fp = init_params(jax.random.PRNGKey(1), cfg2)
+    with pytest.raises(ValueError, match="quantized base"):
+        AdapterRegistry(fp, rank=4)
+
+
+def test_merged_params_extend_lowrank_and_drop_pools(tiny_quant):
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    pooled = install_pools(qp, slots=3, rank=4)
+    merged = reg.merged_params(pooled, "t0")
+    for (_, base), (_, m) in zip(iter_quant_leaves(qp),
+                                 iter_quant_leaves(merged)):
+        assert "alb" not in m and "ala" not in m
+        assert m["lb"].shape[-1] == base["lb"].shape[-1] + reg.ra
+        assert m["la"].shape[-2] == base["la"].shape[-2] + reg.ra
+
+
+# ---------------------------------------------------------------------------
+# Device pools: install/load shapes, pinned base slot
+# ---------------------------------------------------------------------------
+
+def test_install_and_load_pools(tiny_quant):
+    cfg, qp = tiny_quant
+    assert adapter_slot_count(qp) == 0
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    pooled = install_pools(qp, slots=3, rank=4)
+    assert adapter_slot_count(pooled) == 3
+    for path, leaf in iter_quant_leaves(pooled):
+        lead = leaf["qw"].shape[:-2]
+        k, n = leaf["m"].shape[-1], leaf["sw"].shape[-1]
+        assert leaf["alb"].shape == lead + (3, k, 8)
+        assert leaf["ala"].shape == lead + (3, 8, n)
+    loaded = load_adapter(pooled, reg.folded("t0"), 1)
+    for (path, leaf), (_, src) in zip(iter_quant_leaves(loaded),
+                                      iter_quant_leaves(pooled)):
+        a_s, b = reg.folded("t0")[path]
+        # slot 0 (base) and slot 2 stay all-zero; slot 1 holds the factors
+        assert not np.asarray(leaf["alb"][..., BASE_SLOT, :, :]).any()
+        assert not np.asarray(leaf["alb"][..., 2, :, :]).any()
+        np.testing.assert_array_equal(leaf["alb"][..., 1, :, :], a_s)
+        np.testing.assert_array_equal(leaf["ala"][..., 1, :, :], b)
+    with pytest.raises(ValueError, match="base adapter"):
+        load_adapter(pooled, reg.folded("t0"), BASE_SLOT)
+    with pytest.raises(ValueError, match="slots >= 2"):
+        install_pools(qp, slots=1, rank=4)
+    assert reg.pool_bytes_per_adapter() == sum(
+        int(np.prod(ld or (1,))) * (k + n) * 8 * 4
+        for _, ld, k, n, _ in reg._targets)
+
+
+# ---------------------------------------------------------------------------
+# Routed serving ≡ merged-weight per-request generate (token-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("loop", ["scan", "step"])
+def test_scheduler_adapter_parity(tiny_quant, kv_layout, loop):
+    """Mixed adapter-tagged traffic through the continuous-batching
+    scheduler equals each request's dedicated merged-weight generation,
+    token for token — across both decode loops and both KV layouts. Base
+    requests (no tag) route slot 0 and must match the unpooled model."""
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    tenants = [reg.add(f"t{i}") for i in range(2)]
+    pooled = install_pools(qp, slots=3, rank=4)
+    kw = dict(kv_layout=kv_layout, block_size=8) \
+        if kv_layout == "paged" else {}
+    eng = Engine(pooled, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          decode_loop=loop, **kw))
+    sched = Scheduler(eng, chunk_size=3, adapters=reg)
+    tags = [None, tenants[0], tenants[1], tenants[0], None]
+    reqs = [(p, n, aid, sched.submit(p, n, adapter_id=aid))
+            for (p, n), aid in zip(
+                _prompts(cfg, [(5, 8), (7, 6), (4, 9), (6, 5), (3, 7)]),
+                tags)]
+    sched.run()
+    for p, n, aid, h in reqs:
+        assert h.done
+        refp = qp if aid is None else reg.merged_params(qp, aid)
+        ref_eng = Engine(refp, cfg, ServeConfig(max_len=64, batch_slots=1,
+                                                decode_loop=loop))
+        ref = np.asarray(ref_eng.generate(jnp.asarray(p[None]), n))[0]
+        assert np.array_equal(np.asarray(h.tokens), ref), (aid, len(p), n)
+
+
+def test_prefix_cache_isolated_across_adapters(tiny_quant):
+    """Two tenants sharing a prompt must NOT share prefix pages (the KV
+    content differs through the adapted layers); the same tenant repeating
+    its prompt must hit. Both repeats stay token-exact."""
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    ta, tb = reg.add("a"), reg.add("b")
+    pooled = install_pools(qp, slots=3, rank=4)
+    eng = Engine(pooled, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8))
+    (p, n), = _prompts(cfg, [(17, 4)], seed=11)
+    sched = Scheduler(eng, chunk_size=2, adapters=reg)
+    h1 = sched.submit(p, n, adapter_id=ta)
+    sched.run()
+    assert sched.adapter_prefix_hit_rate(ta) == 0.0      # cold
+    h2 = sched.submit(p, n, adapter_id=tb)               # other tenant
+    sched.run()
+    assert sched.adapter_prefix_hit_rate(tb) == 0.0, \
+        "tenant b reused tenant a's KV pages"
+    h3 = sched.submit(p, n, adapter_id=ta)               # same tenant again
+    sched.run()
+    assert sched.adapter_prefix_hit_rate(ta) > 0.0
+    for aid, h in ((ta, h1), (tb, h2), (ta, h3)):
+        ref_eng = Engine(reg.merged_params(qp, aid), cfg,
+                         ServeConfig(max_len=64, batch_slots=1))
+        ref = np.asarray(ref_eng.generate(jnp.asarray(p[None]), n))[0]
+        assert np.array_equal(np.asarray(h.tokens), ref), aid
+
+
+def test_pool_exhaustion_delays_admission(tiny_quant):
+    """More live tenants than adapter slots: the scheduler must keep the
+    extra request queued until a slot unpins, then serve it correctly."""
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    tenants = [reg.add(f"t{i}") for i in range(3)]
+    pooled = install_pools(qp, slots=3, rank=4)   # only 2 adapter slots
+    eng = Engine(pooled, cfg, ServeConfig(max_len=64, batch_slots=3))
+    sched = Scheduler(eng, chunk_size=2, adapters=reg)
+    reqs = [(p, n, aid, sched.submit(p, n, adapter_id=aid))
+            for (p, n), aid in zip(
+                _prompts(cfg, [(5, 10), (6, 10), (4, 6)], seed=5), tenants)]
+    assert sched.step()
+    # three batch slots but only two adapter slots: t2 must still be queued
+    h2 = reqs[2][3]
+    assert not h2.tokens and sched.pending == 3
+    sched.run()
+    for p, n, aid, h in reqs:
+        ref_eng = Engine(reg.merged_params(qp, aid), cfg,
+                         ServeConfig(max_len=64, batch_slots=1))
+        ref = np.asarray(ref_eng.generate(jnp.asarray(p[None]), n))[0]
+        assert h.done and np.array_equal(np.asarray(h.tokens), ref), aid
+    assert sched.apool.evictions >= 1
+
+
+def test_scheduler_adapter_validation(tiny_quant):
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    eng_plain = Engine(qp, cfg, ServeConfig(max_len=32, batch_slots=1))
+    with pytest.raises(ValueError, match="install_pools"):
+        Scheduler(eng_plain, adapters=reg)
+    with pytest.raises(ValueError, match="adapter registry"):
+        sched = Scheduler(eng_plain)
+        sched.submit([1, 2, 3], 2, adapter_id="t0")
+    pooled = install_pools(qp, slots=3, rank=4)
+    eng = Engine(pooled, cfg, ServeConfig(max_len=32, batch_slots=1))
+    sched = Scheduler(eng, adapters=reg)
+    with pytest.raises(ValueError, match="unknown adapter"):
+        sched.submit([1, 2, 3], 2, adapter_id="ghost")
+    with pytest.raises(ValueError, match="adapter_pool"):
+        Scheduler(eng, adapter_pool=AdapterPool(3))
+    with pytest.raises(ValueError, match="slots"):
+        Scheduler(eng, adapters=reg, adapter_pool=AdapterPool(5))
+
+
+def test_shared_pool_keeps_adapters_warm(tiny_quant):
+    """A pool handed across scheduler restarts skips reloading resident
+    factors — the long-lived-process serving pattern the bench times."""
+    cfg, qp = tiny_quant
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    pooled = install_pools(qp, slots=3, rank=4)
+    eng = Engine(pooled, cfg, ServeConfig(max_len=64, batch_slots=1))
+    apool = AdapterPool(3)
+    (p, n), = _prompts(cfg, [(5, 4)], seed=7)
+
+    def serve():
+        sched = Scheduler(eng, chunk_size=2, adapters=reg,
+                          adapter_pool=apool)
+        h = sched.submit(p, n, adapter_id="t0")
+        sched.run()
+        return sched, h
+
+    s1, h1 = serve()
+    assert s1.adapter_loads == 1
+    s2, h2 = serve()
+    assert s2.adapter_loads == 0, "warm pool reloaded resident factors"
+    assert apool.hits >= 1 and h1.tokens == h2.tokens
+
+
+# ---------------------------------------------------------------------------
+# Recipe plumbing: AdapterSpec round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_recipe_adapter_roundtrip_and_validation():
+    from repro.quant import AdapterSpec
+    r = registry.resolve("aser_as", rank=8, adapter_rank=4, adapter_slots=5)
+    assert r.adapter == AdapterSpec(rank=4, slots=5) and r.adapter.enabled
+    d = r.to_dict()
+    assert d["format_version"] == 3 and d["adapter"] == {"rank": 4,
+                                                         "slots": 5}
+    assert type(r).from_dict(d) == r
+    # v2 blobs (no adapter key) load as adapter-free
+    d2 = {k: v for k, v in d.items() if k != "adapter"}
+    d2["format_version"] = 2
+    assert type(r).from_dict(d2).adapter == AdapterSpec()
+    with pytest.raises(ValueError, match="slots"):
+        AdapterSpec(rank=4, slots=1)
+    with pytest.raises(ValueError, match="rank"):
+        AdapterSpec(rank=0, slots=4)
+    with pytest.raises(ValueError, match="quantized leaves"):
+        registry.resolve("fp16", adapter_rank=4, adapter_slots=3)

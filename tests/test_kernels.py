@@ -204,3 +204,74 @@ def test_weight_only_a16_path(rng):
     x_s = x / mdiag[None, :]
     y_ref = x_s @ w + (x_s @ lb) @ la
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Gathered adapter epilogue (multi-tenant pools)
+# ---------------------------------------------------------------------------
+
+def _adapter_setup(rng, m, k, n, p, ra):
+    alb = jnp.asarray(rng.normal(size=(p, k, ra)).astype(np.float32) * 0.02)
+    ala = jnp.asarray(rng.normal(size=(p, ra, n)).astype(np.float32) * 0.02)
+    alb = alb.at[0].set(0.0)                  # slot 0 = pinned base adapter
+    ala = ala.at[0].set(0.0)
+    idx = jnp.asarray(rng.integers(0, p, size=(m,)), jnp.int32)
+    return alb, ala, idx
+
+
+@pytest.mark.parametrize("m,k,n,p,ra,r", [
+    (8, 128, 128, 4, 8, 8), (16, 256, 192, 6, 16, 0), (5, 128, 320, 3, 8, 16),
+])
+def test_fused_gather_matches_batched_gather(rng, m, k, n, p, ra, r):
+    """Pallas fused gather ≡ XLA batched-gather epilogue over the same
+    quantized core, including rank-0 base factors and non-multiple grids."""
+    from repro.kernels import w4a8_fused_gather
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, m, k, n, max(r, 1))
+    if r == 0:
+        lb, la = jnp.zeros((k, 0), jnp.float32), jnp.zeros((0, n),
+                                                           jnp.float32)
+    alb, ala, idx = _adapter_setup(rng, m, k, n, p, ra)
+    y = w4a8_fused_gather(x, mdiag, qw, sw, lb, la, alb, ala, idx)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    y_ref = y_ref + ops.adapter_epilogue(x / mdiag[None, :], alb, ala, idx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_gather_base_rows_exact_zero_delta(rng):
+    """Rows routed to slot 0 must equal the adapter-free kernel bit for
+    bit — the base epilogue contribution is exactly +0.0, not epsilon."""
+    from repro.kernels import w4a8_fused, w4a8_fused_gather
+    m, k, n, p, ra = 8, 128, 128, 4, 8
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, m, k, n, 8)
+    alb, ala, _ = _adapter_setup(rng, m, k, n, p, ra)
+    idx = jnp.zeros((m,), jnp.int32)          # every row on the base slot
+    y = w4a8_fused_gather(x, mdiag, qw, sw, lb, la, alb, ala, idx)
+    y_base = w4a8_fused(x, mdiag, qw, sw, lb, la)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_base))
+
+
+def test_ops_linear_routes_adapter_both_paths(rng):
+    """ops.w4a8_linear(adapter=...) agrees between the Pallas path (fused
+    gather at decode shapes) and the XLA batched gather, and weight-only
+    a_bits=16 applies the same epilogue."""
+    from repro.runtime import RuntimeConfig
+    m, k, n, p, ra = 4, 128, 128, 3, 8
+    x, qw, sw, mdiag, lb, la = _quant_setup(rng, m, k, n, 8)
+    alb, ala, idx = _adapter_setup(rng, m, k, n, p, ra)
+    adapter = (alb, ala, idx)
+    y_xla = ops.w4a8_linear(x, qw, sw, mdiag, lb, la, adapter=adapter,
+                            rt=RuntimeConfig(use_pallas=False))
+    y_pl = ops.w4a8_linear(x, qw, sw, mdiag, lb, la, adapter=adapter,
+                           rt=RuntimeConfig(use_pallas=True))
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-3)
+    y16 = ops.w4a8_linear(x, qw, sw, mdiag, lb, la, adapter=adapter,
+                          a_bits=16)
+    x_s = x / mdiag[None, :]
+    from repro.core.quantizers import unpack_int4
+    w = unpack_int4(qw.T).T.astype(jnp.float32) * sw[None, :]
+    y16_ref = (x_s @ w + (x_s @ lb) @ la
+               + ops.adapter_epilogue(x_s, alb, ala, idx))
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y16_ref),
+                               rtol=1e-5, atol=1e-5)

@@ -329,13 +329,13 @@ def test_recipe_kv_roundtrip_and_backcompat():
     blob = r.to_json()
     assert QuantRecipe.from_json(blob) == r
     d = r.to_dict()
-    assert d["format_version"] == 2 and d["kv"] == {"dtype": "int8"}
+    assert d["format_version"] == 3 and d["kv"] == {"dtype": "int8"}
     # v1 blobs (pre-KV-quant) deserialize with the bf16 default
-    legacy = {k: v for k, v in d.items() if k != "kv"}
+    legacy = {k: v for k, v in d.items() if k not in ("kv", "adapter")}
     legacy["format_version"] = 1
     assert QuantRecipe.from_dict(legacy).kv == KVQuantSpec()
     with pytest.raises(ValueError, match="format version"):
-        QuantRecipe.from_dict({**d, "format_version": 3})
+        QuantRecipe.from_dict({**d, "format_version": 4})
 
 
 def test_registry_kv_dtype_override_everywhere():

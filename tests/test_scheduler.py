@@ -197,3 +197,55 @@ def test_retire_backfills_reusing_freed_pages(tiny):
     # the pool is far smaller than Σ request footprints: pages were reused
     total_blocks = sum(-(-(len(p) + n + 1) // 8) for p, n, _ in reqs)
     assert total_blocks > 10
+
+
+# ---------------------------------------------------------------------------
+# Adapter telemetry through the streaming API
+# ---------------------------------------------------------------------------
+
+def test_poll_with_stats_reports_adapter_telemetry(tiny):
+    """poll(with_stats=True) surfaces the per-adapter prefix hit rate and
+    the pool counters on every handle; adapter-free schedulers report the
+    zeroed base view with the same keys (stable client schema)."""
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.quant import calibrate, quantize_model, reduce_shared
+    from repro.serve.adapters import AdapterRegistry, install_pools
+    cfg, params = tiny
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(2, 4, 16)), cfg)
+    qp = quantize_model(params, tape, "aser_as(rank=8)")
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    pooled = install_pools(qp, slots=3, rank=4)
+    eng = _paged_engine(pooled, cfg, num_blocks=16)
+    sched = Scheduler(eng, chunk_size=2, adapters=reg)
+    (p, n), = _prompts(cfg, [(17, 4)], seed=3)
+    base_keys = {"adapter_id", "adapter_prefix_hit_rate", "adapter_loads",
+                 "capacity", "resident", "live", "occupancy", "hits",
+                 "misses", "evictions"}
+
+    h = sched.submit(p, n, adapter_id="t0")
+    sched.run()
+    delta, st = h.poll(with_stats=True)
+    assert delta == h.tokens and set(st) == base_keys
+    assert st["adapter_id"] == "t0" and st["adapter_loads"] == 1
+    assert st["misses"] == 1 and st["resident"] == 1
+    assert st["capacity"] == 2 and st["occupancy"] == 0.5
+    assert st["adapter_prefix_hit_rate"] == 0.0          # cold prefix
+
+    h2 = sched.submit(p, n, adapter_id="t0")             # warm repeat
+    sched.run()
+    _, st2 = h2.poll(with_stats=True)
+    assert st2["hits"] == 1 and st2["adapter_loads"] == 1   # no reload
+    assert st2["adapter_prefix_hit_rate"] > 0.0             # salted hit
+    assert sched.adapter_stats()["live"] == 0               # all released
+
+    # adapter-free scheduler: same keys, zeroed base view
+    plain = Scheduler(_paged_engine(params, cfg, num_blocks=16),
+                      chunk_size=2)
+    hp = plain.submit(p, n)
+    plain.run()
+    _, stp = hp.poll(with_stats=True)
+    assert set(stp) == base_keys and stp["adapter_id"] is None
+    assert stp["capacity"] == 0 and stp["adapter_loads"] == 0

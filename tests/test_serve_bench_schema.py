@@ -1,7 +1,7 @@
 """Unit tests for the ``serve_bench`` report validator.
 
 The validator is the CI gate between a benchmark run and the checked-in
-baseline; it must accept every released schema generation (v1–v4) and
+baseline; it must accept every released schema generation (v1–v5) and
 reject malformed payloads with errors that name the offending field —
 a silent pass here would let a NaN or truncated report become the perf
 baseline subsequent PRs are measured against.
@@ -10,8 +10,9 @@ import math
 
 import pytest
 
-from benchmarks.serve_bench import (CONT_ROW_FIELDS, KV_ROW_FIELDS,
-                                    PREFIX_ROW_FIELDS, ROW_FIELDS, validate)
+from benchmarks.serve_bench import (ADAPTER_ROW_FIELDS, CONT_ROW_FIELDS,
+                                    KV_ROW_FIELDS, PREFIX_ROW_FIELDS,
+                                    ROW_FIELDS, validate)
 
 
 def _static_row(mode="fp", **over):
@@ -58,25 +59,41 @@ def _kv_row(mode="fp", **over):
     return row
 
 
+def _adapter_row(mode="w4a8_aser", **over):
+    row = {"mode": mode, "requests": 9, "adapters": 4, "adapter_rank": 4,
+           "adapter_slots": 3, "batch_slots": 2, "chunk": 4,
+           "useful_tokens": 38, "base_s": 0.2, "mixed_s": 0.21,
+           "base_goodput_tok_s": 190.0, "goodput_tok_s": 181.0,
+           "goodput_ratio": 0.952, "adapter_loads": 4,
+           "adapter_evictions": 2, "token_exact": True}
+    assert set(row) == set(ADAPTER_ROW_FIELDS)
+    row.update(over)
+    return row
+
+
 def _report(schema):
     rep = {"schema": schema, "smoke": True,
            "model": {"name": "t", "n_layers": 2, "d_model": 64,
                      "vocab_size": 128},
            "decode_loop_default": "scan",
            "rows": [_static_row("fp"), _static_row("w4a8_aser")]}
-    if schema in ("serve_bench/v2", "serve_bench/v3", "serve_bench/v4"):
+    if schema in ("serve_bench/v2", "serve_bench/v3", "serve_bench/v4",
+                  "serve_bench/v5"):
         rep["continuous_rows"] = [_cont_row("fp"), _cont_row("w4a8_aser")]
-    if schema in ("serve_bench/v3", "serve_bench/v4"):
+    if schema in ("serve_bench/v3", "serve_bench/v4", "serve_bench/v5"):
         rep["prefix_rows"] = [_prefix_row("fp"), _prefix_row("w4a8_aser")]
-    if schema == "serve_bench/v4":
+    if schema in ("serve_bench/v4", "serve_bench/v5"):
         rep["kv_rows"] = [_kv_row("fp"), _kv_row("w4a8_aser")]
+    if schema == "serve_bench/v5":
+        rep["adapter_rows"] = [_adapter_row()]
     return rep
 
 
 # -- accepted generations ----------------------------------------------------
 
 @pytest.mark.parametrize("schema", ["serve_bench/v1", "serve_bench/v2",
-                                    "serve_bench/v3", "serve_bench/v4"])
+                                    "serve_bench/v3", "serve_bench/v4",
+                                    "serve_bench/v5"])
 def test_every_released_schema_validates(schema):
     assert validate(_report(schema)) is True
 
@@ -174,3 +191,43 @@ def test_nan_detection_is_not_string_typed():
     rep["continuous_rows"][0]["useful_tokens"] = math.nan
     with pytest.raises(ValueError, match="non-finite useful_tokens"):
         validate(rep)
+
+
+# -- adapter rows (v5) -------------------------------------------------------
+
+def test_adapter_rows_gate_mode_exactness_and_goodput():
+    rep = _report("serve_bench/v5")
+    rep["adapter_rows"] = []
+    with pytest.raises(ValueError, match="no adapter rows"):
+        validate(rep)
+    rep = _report("serve_bench/v5")
+    rep["adapter_rows"] = [_adapter_row(mode="fp")]
+    with pytest.raises(ValueError, match="w4a8_aser-only"):
+        validate(rep)
+    rep = _report("serve_bench/v5")
+    rep["adapter_rows"][0]["token_exact"] = False
+    with pytest.raises(ValueError, match="not token-exact"):
+        validate(rep)
+    # token_exact must be the bool True, not merely truthy
+    rep["adapter_rows"][0]["token_exact"] = 1.0
+    with pytest.raises(ValueError, match="not token-exact"):
+        validate(rep)
+    rep = _report("serve_bench/v5")
+    rep["adapter_rows"][0]["goodput_ratio"] = 0.8
+    with pytest.raises(ValueError, match="below 0.85x"):
+        validate(rep)
+    rep = _report("serve_bench/v5")
+    del rep["adapter_rows"][0]["adapter_loads"]
+    with pytest.raises(ValueError, match="missing fields.*adapter_loads"):
+        validate(rep)
+    rep = _report("serve_bench/v5")
+    rep["adapter_rows"][0]["mixed_s"] = math.nan
+    with pytest.raises(ValueError, match="non-finite mixed_s"):
+        validate(rep)
+
+
+def test_v4_fixture_ignores_adapter_rows():
+    """A v4 file with stray adapter rows is still just a v4 file."""
+    rep = _report("serve_bench/v4")
+    rep["adapter_rows"] = []               # would fail v5 validation
+    assert validate(rep) is True

@@ -256,20 +256,25 @@ def test_serve_bench_validator():
     crow = {f: 1.0 for f in sb.CONT_ROW_FIELDS}
     prow = {f: 1.0 for f in sb.PREFIX_ROW_FIELDS}
     krow = {f: 1.0 for f in sb.KV_ROW_FIELDS}
+    arow = {f: 1.0 for f in sb.ADAPTER_ROW_FIELDS}
+    arow.update(mode="w4a8_aser", token_exact=True)
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
     prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
     krows = [dict(krow, mode="fp"), dict(krow, mode="w4a8_aser")]
     good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
             "continuous_rows": crows, "prefix_rows": prows,
-            "kv_rows": krows}
+            "kv_rows": krows, "adapter_rows": [arow]}
     assert sb.validate(good)
-    # v1/v2/v3 generations must keep validating
+    # v1/v2/v3/v4 generations must keep validating
     assert sb.validate({"schema": sb.SCHEMA_V1, "smoke": True, "rows": rows})
     assert sb.validate({"schema": sb.SCHEMA_V2, "smoke": True, "rows": rows,
                         "continuous_rows": crows})
     assert sb.validate({"schema": sb.SCHEMA_V3, "smoke": True, "rows": rows,
                         "continuous_rows": crows, "prefix_rows": prows})
+    assert sb.validate({"schema": sb.SCHEMA_V4, "smoke": True, "rows": rows,
+                        "continuous_rows": crows, "prefix_rows": prows,
+                        "kv_rows": krows})
     with pytest.raises(ValueError):
         sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):

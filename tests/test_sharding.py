@@ -236,3 +236,40 @@ def test_launch_serve_driver():
          "--smoke", "--method", "aser_as", "--requests", "2", "--gen", "4"],
         capture_output=True, text=True, env=env, timeout=900)
     assert "generations" in r.stdout, r.stdout + r.stderr
+
+
+def test_adapter_pool_specs_mirror_base_lowrank():
+    """alb/ala follow lb/la (model axis only with shard_lr, on the k / n
+    dim respectively) with the pool-slot axis always replicated, and
+    param_shardings covers a pooled quantized tree leaf-for-leaf."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _make_mesh((1, 1), ("data", "model"))
+
+    def spec(path, ndim, shard_lr):
+        return rules._spec_for_path(path, ndim, mesh, shard_lr)
+
+    # wq is column-sharded (out dim n → ala), wo row-sharded (in dim
+    # k → alb); the opposite factor and the pool-slot axis stay replicated
+    assert spec("/groups/0/attn/wq/alb", 3, True) == P(None, None, None)
+    assert spec("/groups/0/attn/wq/ala", 3, True) == P(None, None, "model")
+    assert spec("/groups/0/attn/wo/alb", 3, True) == P(None, "model", None)
+    assert spec("/groups/0/attn/wo/ala", 3, True) == P(None, None, None)
+    # shard_lr off ⇒ fully replicated, like lb/la
+    assert spec("/groups/0/attn/wq/ala", 3, False) == P(None, None, None)
+    assert spec("/groups/0/attn/wo/alb", 3, False) == P(None, None, None)
+    # scanned stacks add leading replicated dims
+    assert spec("/groups/0/attn/wo/alb", 4, True) == \
+        P(None, None, "model", None)
+
+    # end to end: install pools on a quantized template and shard it
+    import jax.numpy as jnp
+    from repro.serve.adapters import install_pools
+    cfg = get_smoke_config("llama3_8b")
+    q_sds = quantized_template(params_template(cfg))
+    q = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), q_sds)
+    pooled = install_pools(q, slots=3, rank=8)
+    sh = rules.param_shardings(pooled, mesh)
+    assert jax.tree.structure(
+        jax.tree.map(lambda x: 0, pooled)) == jax.tree.structure(
+        jax.tree.map(lambda x: 0, sh,
+                     is_leaf=lambda x: isinstance(x, NamedSharding)))
