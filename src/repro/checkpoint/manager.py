@@ -72,6 +72,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- helpers -------------------------------------------------------------
@@ -89,33 +90,65 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state: Any, metadata: Optional[dict] = None):
+        """Write (or enqueue, when ``async_save``) one checkpoint.
+
+        A failure from a *previous* async save is re-raised here (or in
+        :meth:`wait`) — background write errors are never silently
+        swallowed: a train loop that keeps calling ``save`` finds out
+        about a dead disk at the very next step, not at restore time.
+        """
         # snapshot to host (cheap on CPU; on TPU this is the device→host copy)
         host_state = jax.tree.map(np.asarray, state)
         if self.async_save:
-            self.wait()
+            self.wait()                     # raises a pending async failure
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_state, metadata))
+                target=self._write_guarded, args=(step, host_state, metadata))
             self._thread.start()
         else:
             self._write(step, host_state, metadata)
 
     def wait(self):
+        """Block until the in-flight async save (if any) finishes.
+
+        Re-raises the exception of a failed background write — callers that
+        ``wait()`` before shutdown get the same error a synchronous save
+        would have raised in place.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write_guarded(self, step: int, host_state, metadata):
+        """Worker-thread entry: capture instead of dying silently (a raise
+        on a non-main thread only prints — the train loop would never
+        know the checkpoint is missing)."""
+        try:
+            self._write(step, host_state, metadata)
+        except BaseException as err:      # noqa: BLE001 - must not lose any
+            self._error = err
 
     def _write(self, step: int, host_state, metadata):
         tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
         final = os.path.join(self.dir, f"step_{step}")
-        os.makedirs(tmp, exist_ok=True)
-        flat = _flatten(host_state)
-        np.savez(os.path.join(tmp, "state.npz"), **flat)
-        meta = dict(step=step, time=time.time(), **(metadata or {}))
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        # fsync the npz for crash consistency
-        with open(os.path.join(tmp, "state.npz"), "rb") as f:
-            os.fsync(f.fileno())
+        try:
+            os.makedirs(tmp, exist_ok=True)
+            flat = _flatten(host_state)
+            np.savez(os.path.join(tmp, "state.npz"), **flat)
+            meta = dict(step=step, time=time.time(), **(metadata or {}))
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            # fsync the npz for crash consistency
+            with open(os.path.join(tmp, "state.npz"), "rb") as f:
+                os.fsync(f.fileno())
+        except BaseException:
+            # crash consistency: a failed write leaves no partial tmp dir
+            # behind (the atomic os.replace below never ran, so the last
+            # good step_<n> is untouched either way)
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -143,3 +176,33 @@ class CheckpointManager:
         if step is None:
             return None, None
         return step, self.restore(step, template, shardings)
+
+    def restore_flat(self, step: int) -> dict:
+        """The raw flat ``{key: np.ndarray}`` dict of one checkpoint —
+        template-free access for states whose structure is self-describing
+        (e.g. scheduler snapshots, whose entries vary per save)."""
+        path = os.path.join(self.dir, f"step_{step}", "state.npz")
+        with np.load(path, allow_pickle=False) as z:
+            return {k: z[k] for k in z.files}
+
+    def restore_pytree(self, step: int) -> dict:
+        """Rebuild a checkpoint of nested plain dicts without a template.
+
+        Inverse of ``_flatten`` for dict-only trees (the scheduler
+        snapshot format): keys split on ``/`` into nested dicts, arrays
+        stay leaves. Checkpoints holding list/namedtuple markers need the
+        templated :meth:`restore` instead.
+        """
+        flat = self.restore_flat(step)
+        out: dict = {}
+        for key, value in flat.items():
+            if key.endswith(("/__seq__", "/__namedtuple__")):
+                raise ValueError(
+                    f"{key!r}: non-dict node — restore_pytree only handles "
+                    f"dict trees; use restore() with a template")
+            parts = [p for p in key.split("/") if p]
+            node = out
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = value
+        return out

@@ -133,7 +133,8 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
         elif lb.shape[-1]:
             y = y + (x_s @ lb.astype(jnp.float32)) @ la.astype(jnp.float32)
         return y
-    if rt.use_pallas and bits == 8 and rt.act_granularity == "per_token" \
+    if rt.use_pallas and not rt.force_reference and bits == 8 \
+            and rt.act_granularity == "per_token" \
             and qw.shape[0] * 2 == m_diag.shape[0]:
         m, kd = x.shape
         n = qw.shape[1]
@@ -185,7 +186,7 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
 
 def attention(q, k, v, *, rt: RuntimeConfig | None = None, **kw):
     rt = DEFAULT_RUNTIME if rt is None else rt
-    if rt.use_pallas:
+    if rt.use_pallas and not rt.force_reference:
         return _flash_kernel(q, k, v, interpret=rt.interpret, **kw)
     return _ref.flash_attention_ref(q, k, v, **kw)
 
@@ -207,7 +208,7 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
     that path; the ``None`` contract matches the sharded-decode helper).
     """
     rt = DEFAULT_RUNTIME if rt is None else rt
-    if not rt.use_pallas:
+    if not rt.use_pallas or rt.force_reference:
         return None
     b, _, hq, hd = q.shape
     bs, hkv = k_pool.shape[1], k_pool.shape[2]

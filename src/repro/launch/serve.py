@@ -36,6 +36,16 @@ def main():
                          "scheduler); requires a quantized --method")
     ap.add_argument("--adapter-rank", type=int, default=8,
                     help="LoRA rank for the synthetic tenants")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="total per-request deadline in ms (enforced at "
+                         "chunk boundaries; expired requests end TIMED_OUT "
+                         "with partial tokens intact)")
+    ap.add_argument("--ttft-ms", type=float, default=None,
+                    help="first-token deadline in ms (queued requests past "
+                         "it are shed as TIMED_OUT)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bound the admission queue; submits over the cap "
+                         "are load-shed with status REJECTED")
     args = ap.parse_args()
 
     import dataclasses
@@ -96,7 +106,8 @@ def main():
         engine = Engine(params, cfg,
                         recipe.kv.serve_config(max_len=args.prompt_len
                                                + args.gen), rt=rt)
-        sched = Scheduler(engine, adapters=reg)
+        sched = Scheduler(engine, adapters=reg, queue_cap=args.queue_cap,
+                          ttft_ms=args.ttft_ms, deadline_ms=args.deadline_ms)
         prompts = corpus.sample(jnp.asarray(777), args.requests,
                                 args.prompt_len)
         handles = []
@@ -109,8 +120,10 @@ def main():
         print("[serve] generations (mixed adapter traffic):")
         for i, (aid, h) in enumerate(handles):
             toks, stats = h.poll(with_stats=True)
-            print(f"  req {i} [{aid or 'base'}]:", h.tokens)
+            print(f"  req {i} [{aid or 'base'}] "
+                  f"({h.status.value}):", h.tokens)
         print(f"[serve] adapter pool: {sched.adapter_stats()}")
+        print(f"[serve] lifecycle: {sched.lifecycle_stats()}")
         return
 
     # the recipe's KVQuantSpec picks the engine's cache storage
@@ -118,6 +131,21 @@ def main():
                     recipe.kv.serve_config(max_len=args.prompt_len
                                            + args.gen), rt=rt)
     prompts = corpus.sample(jnp.asarray(777), args.requests, args.prompt_len)
+    if (args.deadline_ms is not None or args.ttft_ms is not None
+            or args.queue_cap is not None):
+        # lifecycle controls live in the scheduler: route base traffic
+        # through one instead of the static-batch generate() path
+        from repro.serve.scheduler import Scheduler
+        sched = Scheduler(engine, queue_cap=args.queue_cap,
+                          ttft_ms=args.ttft_ms, deadline_ms=args.deadline_ms)
+        handles = [sched.submit(list(map(int, prompts[i])), args.gen)
+                   for i in range(args.requests)]
+        sched.run()
+        print("[serve] generations:")
+        for i, h in enumerate(handles):
+            print(f"  req {i} ({h.status.value}):", h.tokens)
+        print(f"[serve] lifecycle: {sched.lifecycle_stats()}")
+        return
     out = engine.generate(prompts, n_steps=args.gen)
     print("[serve] generations:")
     for i in range(args.requests):

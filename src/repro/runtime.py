@@ -47,6 +47,14 @@ class RuntimeConfig:
         the two-kernel act_quant → w4a8_gemm pipeline. Only consulted when
         ``use_pallas`` is on; turn off to pin the tiled pipeline for A/B
         debugging.
+    force_reference: numeric-guard escape hatch — route every kernel
+        entry point to the pure-XLA reference path regardless of
+        ``use_pallas``/``fused_decode``. This is the one-shot fallback the
+        serving stack flips when a non-finite value escapes the fused
+        Pallas kernels (``serve.Engine.activate_reference_fallback``): the
+        reference math is the ground truth the kernels are pinned against,
+        so a suspected-kernel NaN quarantines onto it instead of silently
+        poisoning co-batched requests.
     """
 
     a_bits: int = 8
@@ -54,6 +62,7 @@ class RuntimeConfig:
     use_pallas: bool = False
     interpret: bool = True
     fused_decode: bool = True
+    force_reference: bool = False
 
     def __post_init__(self):
         if self.a_bits not in SUPPORTED_ACT_BITS:

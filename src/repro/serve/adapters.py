@@ -155,6 +155,30 @@ class AdapterPool:
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions}
 
+    def verify(self) -> list:
+        """Internal-consistency audit (used by the drain leak checks).
+
+        Returns human-readable violations: negative refcounts, a
+        referenced base slot, broken ``_by_id``/``_id_of`` bijection, or a
+        slot that is neither free nor resident (stranded). Empty = clean.
+        """
+        out = []
+        if (self.ref < 0).any():
+            out.append(f"negative adapter refcounts at slots "
+                       f"{np.flatnonzero(self.ref < 0).tolist()}")
+        if self.ref[BASE_SLOT] != 0:
+            out.append(f"base slot holds {self.ref[BASE_SLOT]} refs")
+        for aid, slot in self._by_id.items():
+            if self._id_of.get(slot) != aid:
+                out.append(f"bijection broken: {aid!r} -> slot {slot} -> "
+                           f"{self._id_of.get(slot)!r}")
+        accounted = set(self._free) | set(self._id_of) | {BASE_SLOT}
+        stranded = set(range(self.num_slots)) - accounted
+        if stranded:
+            out.append(f"stranded slots (neither free nor resident): "
+                       f"{sorted(stranded)}")
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Quantized-leaf walking

@@ -167,6 +167,14 @@ class Engine:
         self.cfg = cfg
         self.scfg = scfg
         self.rt = rt                # None → ops.default_runtime() at trace
+        self.fallback_active = False
+        self._build_programs()
+
+    def _build_programs(self):
+        """(Re)create the jit wrappers. The impls read ``self.rt`` at trace
+        time and jit caches key on input avals only, so changing ``self.rt``
+        **must** go through here — mutating it in place would keep serving
+        the stale compiled programs."""
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_ragged = jax.jit(self._prefill_ragged_impl)
         # per-token steps donate the caches too: without it every debug-loop
@@ -193,6 +201,32 @@ class Engine:
                                            donate_argnums=(4,))
         self._copy_blocks = jax.jit(self._copy_blocks_impl,
                                     donate_argnums=(0,))
+        self._fill_blocks = jax.jit(self._fill_blocks_impl,
+                                    static_argnames=("value",),
+                                    donate_argnums=(0,))
+
+    def activate_reference_fallback(self) -> bool:
+        """One-shot numeric-guard fallback: reroute every kernel entry
+        point to the pure-XLA reference path
+        (``RuntimeConfig.force_reference``) and rebuild the compiled
+        programs. Called by the scheduler the first time a non-finite
+        value escapes a decode chunk while the Pallas path is active — the
+        reference math is the ground truth the kernels are pinned against,
+        so a suspected-kernel NaN is quarantined onto it instead of
+        poisoning co-batched requests. Returns True if the engine actually
+        switched (False when already on the reference path — including
+        engines that never used Pallas: there is nothing to fall back
+        from, and the quarantine/retry machinery alone handles the
+        fault)."""
+        from repro.kernels.ops import default_runtime
+        base = self.rt if self.rt is not None else default_runtime()
+        if not base.use_pallas or base.force_reference \
+                or self.fallback_active:
+            return False
+        self.rt = base.replace(force_reference=True)
+        self.fallback_active = True
+        self._build_programs()        # fresh jit caches ⇒ retrace on next call
+        return True
 
     # -- compiled steps ----------------------------------------------------
     def _prefill_impl(self, params, tokens, caches, encoder_out=None):
@@ -286,7 +320,7 @@ class Engine:
         Carries per-slot ``pos`` (each row writes KV at its own frontier)
         next to the ``done`` mask of :meth:`_decode_loop_impl`. Returns the
         full carry so the continuous-batching scheduler can stitch chunks:
-        ``(toks [b, n_steps], caches, key, done, pos)``.
+        ``(toks [b, n_steps], caches, key, done, pos, bad)``.
 
         ``tables`` ([b, nb] int32, or None for contiguous lanes) is
         constant across the chunk — the scheduler grows tables only
@@ -296,22 +330,30 @@ class Engine:
         adapter pools are routed) carries each slot's adapter-pool index —
         constant across the chunk for the same reason; retired slots point
         at slot 0 (the all-zero base adapter).
+
+        Numeric guard: the carry accumulates a per-slot ``bad`` mask — any
+        non-finite logit in a slot's row on any step of the chunk (rows
+        are independent in every batched op, so a NaN in slot i poisons
+        slot i alone). The scheduler quarantines flagged slots (their
+        chunk tokens are garbage) without touching their neighbours.
         """
         eos = self.scfg.eos_id
 
         def step(carry, _):
-            tok, caches, key, done, pos = carry
+            tok, caches, key, done, pos, bad = carry
             key, sub = jax.random.split(key)
             logits, new_caches, _ = forward(params, self.cfg, tok[:, None],
                                             positions=pos[:, None],
                                             caches=caches, ragged=True,
                                             block_tables=tables,
                                             adapter_idx=aslots, rt=self.rt)
-            nxt = self._sample(logits[:, 0], sub)
+            lg = logits[:, 0]
+            bad = bad | (~jnp.all(jnp.isfinite(lg), axis=-1) & ~done)
+            nxt = self._sample(lg, sub)
             if eos >= 0:
                 nxt = jnp.where(done, jnp.int32(eos), nxt)
                 done = done | (nxt == eos)
-            return (nxt, new_caches, key, done, pos + 1), nxt
+            return (nxt, new_caches, key, done, pos + 1, bad), nxt
 
         def body(carry, _):
             if eos < 0:
@@ -322,10 +364,12 @@ class Engine:
                 lambda c: step(c, _),
                 carry)
 
+        bad0 = jnp.zeros_like(done0)
         carry, toks = jax.lax.scan(
-            body, (tok0, caches, key, done0, pos0), None, length=n_steps)
-        tok, caches, key, done, pos = carry
-        return toks.T, caches, key, done, pos     # toks: [b, n_steps]
+            body, (tok0, caches, key, done0, pos0, bad0), None,
+            length=n_steps)
+        tok, caches, key, done, pos, bad = carry
+        return toks.T, caches, key, done, pos, bad  # toks: [b, n_steps]
 
     def _prefill_slot_impl(self, params, tokens, length, caches, slot,
                            aslot=None):
@@ -413,6 +457,38 @@ class Engine:
         return jax.tree.map(cp, caches,
                             is_leaf=lambda x: isinstance(x, PagedKVCache))
 
+    def _fill_blocks_impl(self, caches, ids, *, value: float):
+        """Overwrite pool blocks ``ids`` with ``value`` in every layer.
+
+        ``value=0.0`` is the quarantine **scrub**: freed pages that held
+        (possibly non-finite) garbage are zeroed before reuse, because a
+        NaN lingering in the masked tail of a recycled page would poison
+        its next owner through ``0 * NaN`` in the attention value product.
+        Non-float leaves (int8 KV codes) are filled with 0; float scale
+        pools take ``value`` directly (a NaN scale is how a corrupted
+        quantized page manifests).
+        """
+        ids = jnp.asarray(ids, jnp.int32)
+
+        def fill(leaf):
+            if not isinstance(leaf, PagedKVCache):
+                return leaf
+
+            def one(arr, tail):
+                ax = arr.ndim - tail
+                v = value if jnp.issubdtype(arr.dtype, jnp.floating) else 0
+                idx = [slice(None)] * arr.ndim
+                idx[ax] = ids
+                return arr.at[tuple(idx)].set(jnp.asarray(v, arr.dtype))
+            ks = vs = None
+            if leaf.k_scale is not None:
+                ks = one(leaf.k_scale, 3)
+                vs = one(leaf.v_scale, 3)
+            return PagedKVCache(one(leaf.k, 4), one(leaf.v, 4), leaf.length,
+                                ks, vs, leaf.qmax)
+        return jax.tree.map(fill, caches,
+                            is_leaf=lambda x: isinstance(x, PagedKVCache))
+
     # -- scheduler-facing API ---------------------------------------------
     def new_caches(self):
         """Fresh caches for this engine's layout.
@@ -468,8 +544,11 @@ class Engine:
           adapter_slot: adapter-pool index for this request (None = no
             routing; 0 = explicit base). Requires installed pools.
 
-        Returns ``(next_tok, caches)``: the greedily sampled first token
-        ([] int32) and the updated cache tree.
+        Returns ``(next_tok, caches, bad)``: the greedily sampled first
+        token ([] int32), the updated cache tree, and a python bool that
+        is True when the sampled logits contain a non-finite value — the
+        scheduler must then quarantine the request (and its freshly
+        written pages) instead of emitting the garbage token.
         """
         self._check_ragged_supported()
         aslot = (None if adapter_slot is None
@@ -485,7 +564,8 @@ class Engine:
             last, caches = self._prefill_slot(
                 self.params, tokens, jnp.asarray(length, jnp.int32), caches,
                 jnp.asarray(slot, jnp.int32), aslot)
-        return jnp.argmax(last, axis=-1).astype(jnp.int32), caches
+        bad = not bool(jnp.all(jnp.isfinite(last)))
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), caches, bad
 
     def decode_chunk(self, tok, caches, key, done, pos, n_steps: int,
                      block_tables=None, adapter_slots=None):
@@ -508,7 +588,10 @@ class Engine:
             ``block_tables`` it is constant across the chunk — the
             scheduler only swaps a slot's adapter between chunks.
 
-        Returns ``(toks [batch_slots, n_steps], caches, key, done, pos)``.
+        Returns ``(toks [batch_slots, n_steps], caches, key, done, pos,
+        bad)`` where ``bad`` is a ``[batch_slots]`` bool mask: slots whose
+        logits went non-finite at any step of the chunk (their tokens are
+        garbage and must be quarantined, not emitted).
         """
         aslots = (None if adapter_slots is None
                   else jnp.asarray(adapter_slots, jnp.int32))
@@ -528,6 +611,19 @@ class Engine:
         ``caches`` is donated — rebind to the returned tree."""
         return self._copy_blocks(caches, jnp.asarray(src, jnp.int32),
                                  jnp.asarray(dst, jnp.int32))
+
+    def fill_blocks(self, caches, ids, value: float = 0.0):
+        """Overwrite pool blocks ``ids`` with ``value`` in every layer.
+
+        ``value=0.0`` scrubs quarantined pages before they return to the
+        free list (a recycled page carrying NaN would poison its next
+        owner through the masked-lane ``0 * NaN`` in attention); the
+        fault-injection harness uses ``value=nan`` to plant a corrupted
+        page. ``caches`` is donated — rebind to the returned tree."""
+        if not ids:
+            return caches
+        return self._fill_blocks(caches, jnp.asarray(ids, jnp.int32),
+                                 value=float(value))
 
     def _check_ragged_supported(self):
         if self.cfg.family in ("ssm", "hybrid", "encdec"):

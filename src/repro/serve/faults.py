@@ -1,0 +1,276 @@
+"""Deterministic fault injection for the serving stack (chaos testing).
+
+The scheduler exposes three seams where real production failures enter —
+the per-step hook (``on_step``), the decode dispatch (``around_decode``)
+and the checkpoint writer (``wrap_checkpoint``) — and
+:class:`FaultInjector` drives all of them from one seeded
+``numpy.random.Generator``, so a failing chaos run is **replayable from
+its seed alone**. The injectable faults, and the recovery path each one
+exercises:
+
+=====================  =============================  =====================
+fault                  injected as                    recovery under test
+=====================  =============================  =====================
+device step failure    :class:`DeviceStepFault`       preempt-all + re-
+                       raised *before* the decode     prefill resume
+                       dispatch
+NaN logits             per-slot taint of the chunk's  slot quarantine +
+                       ``bad`` mask                   bounded retry +
+                                                      kernel fallback
+corrupted KV page      ``nan`` written into one live  on-device finite
+                       page via ``Engine.fill_blocks``  guard → quarantine,
+                       (scale tensors for int KV)     page scrub, prefix
+                                                      invalidation
+page-pool pressure     injector holds page refs for   page-aware admission,
+                       a few steps                    preempt-to-queue
+adapter-pool pressure  injector pins adapter slots    admission waits, no-
+                       for a few steps                progress detector
+checkpoint write fail  patched ``CheckpointManager._  async error surfaces
+                       write`` raises                 on wait()/next save()
+=====================  =============================  =====================
+
+Every injection appends a structured record to :attr:`FaultInjector.trace`
+(``save_trace`` writes it with a replay command line), which is the
+artifact CI uploads when a chaos seed fails.
+
+Injection contracts the recovery code relies on:
+
+* device faults raise **before** the dispatch runs, so the donated cache
+  tree is untouched — matching a real dispatch failure, where the caches
+  are invalid wholesale and recovery must not trust any of them;
+* KV corruption targets a **live** page through the same device op a real
+  scrub uses, so the NaN genuinely propagates through attention into the
+  logits and trips the same on-device finite guard a hardware flip would;
+* pool/adapter hogs acquire through the pools' public refcounting, so
+  releasing them can never unbalance accounting the leak auditor checks.
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+class FaultError(RuntimeError):
+    """Base class for injected faults."""
+
+
+class DeviceStepFault(FaultError):
+    """Injected decode-dispatch failure (device lost / launch error)."""
+
+
+class CheckpointWriteFault(FaultError, OSError):
+    """Injected checkpoint write failure (disk full / volume gone)."""
+
+
+class FaultInjector:
+    """Seeded chaos driver over a :class:`~repro.serve.scheduler.Scheduler`.
+
+    Construct with per-step probabilities (all default 0 = inert) and pass
+    as ``Scheduler(..., faults=injector)``; the scheduler calls
+    :meth:`on_step` at the top of every step and routes its decode
+    dispatch through :meth:`around_decode`. ``wrap_checkpoint`` is opt-in
+    for checkpoint chaos.
+
+    Args:
+      seed: seeds the private RNG — equal seeds replay identical fault
+        schedules against a deterministic workload.
+      p_device: probability a step's decode dispatch raises
+        :class:`DeviceStepFault` (before running).
+      p_nan: probability one active slot's chunk is tainted non-finite
+        (its ``bad`` bit set after a successful dispatch).
+      p_kv_corrupt: probability a ``nan`` is written into one live KV page
+        (paged engines only; no-op otherwise).
+      p_pool_hog: probability the injector grabs page refs this step,
+        holding them for ``1..max_hog_steps`` steps (transient memory
+        pressure).
+      p_adapter_hog: probability the injector pins a resident adapter slot
+        for ``1..max_hog_steps`` steps (tenant burst).
+      p_ckpt_fail: probability a wrapped checkpoint save's write raises
+        :class:`CheckpointWriteFault`.
+      max_hog_steps: upper bound on hog holding time, so injected pressure
+        is always transient and a chaos run always drains.
+    """
+
+    def __init__(self, seed: int = 0, *, p_device: float = 0.0,
+                 p_nan: float = 0.0, p_kv_corrupt: float = 0.0,
+                 p_pool_hog: float = 0.0, p_adapter_hog: float = 0.0,
+                 p_ckpt_fail: float = 0.0, max_hog_steps: int = 3):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.p_device = p_device
+        self.p_nan = p_nan
+        self.p_kv_corrupt = p_kv_corrupt
+        self.p_pool_hog = p_pool_hog
+        self.p_adapter_hog = p_adapter_hog
+        self.p_ckpt_fail = p_ckpt_fail
+        self.max_hog_steps = max_hog_steps
+        self.trace: List[dict] = []
+        self._sched = None
+        # held resources: (kind, payload, steps_left)
+        self._page_hogs: List[List] = []      # [ids, steps_left]
+        self._adapter_hogs: List[List] = []   # [adapter_id, steps_left]
+        self._armed_device = False
+
+    # -- wiring -------------------------------------------------------------
+    def attach(self, scheduler):
+        """Called by the Scheduler ctor; one injector drives one scheduler."""
+        self._sched = scheduler
+
+    def _record(self, kind: str, **detail):
+        self.trace.append({"step": self._sched.steps_run if self._sched
+                           else -1, "fault": kind, **detail})
+
+    # -- per-step hook ------------------------------------------------------
+    def on_step(self, sched):
+        """Top-of-step chaos: release expired hogs, maybe grab new ones,
+        maybe corrupt a live KV page, arm a device fault for this step's
+        dispatch."""
+        self._tick_hogs(sched)
+        if self.p_pool_hog and sched.paged \
+                and self.rng.random() < self.p_pool_hog:
+            self._hog_pages(sched)
+        if self.p_adapter_hog and sched.apool is not None \
+                and self.rng.random() < self.p_adapter_hog:
+            self._hog_adapter(sched)
+        if self.p_kv_corrupt and sched.paged \
+                and self.rng.random() < self.p_kv_corrupt:
+            self._corrupt_page(sched)
+        self._armed_device = bool(self.p_device
+                                  and self.rng.random() < self.p_device)
+
+    def _tick_hogs(self, sched):
+        for hog in self._page_hogs[:]:
+            hog[1] -= 1
+            if hog[1] <= 0:
+                sched.pool.free(hog[0])
+                self._record("pool_hog_release", ids=list(map(int, hog[0])))
+                self._page_hogs.remove(hog)
+        for hog in self._adapter_hogs[:]:
+            hog[1] -= 1
+            if hog[1] <= 0:
+                sched.apool.release(hog[0])
+                self._record("adapter_hog_release", adapter=hog[0])
+                self._adapter_hogs.remove(hog)
+
+    def _hog_pages(self, sched):
+        """Grab up to half the currently-free pages for a few steps."""
+        n_free = sched.pool.available()
+        if n_free < 2:
+            return
+        n = int(self.rng.integers(1, max(2, n_free // 2 + 1)))
+        ids = sched.pool.alloc(n)
+        if ids is None:                      # pragma: no cover - raced
+            return
+        steps = int(self.rng.integers(1, self.max_hog_steps + 1))
+        self._page_hogs.append([ids, steps])
+        self._record("pool_hog", ids=list(map(int, ids)), steps=steps)
+
+    def _hog_adapter(self, sched):
+        """Pin one registered adapter's slot for a few steps (tenant
+        burst holding residency against eviction)."""
+        reg = sched._adapters
+        ids = sorted(reg.ids()) if reg is not None else []
+        if not ids:
+            return
+        aid = ids[int(self.rng.integers(0, len(ids)))]
+        got = sched.apool.acquire(aid)
+        if got is None:
+            self._record("adapter_hog_denied", adapter=aid)
+            return
+        aslot, needs_load = got
+        if needs_load:
+            sched.engine.load_adapter(reg.folded(aid), aslot)
+            sched.adapter_loads += 1
+        steps = int(self.rng.integers(1, self.max_hog_steps + 1))
+        self._adapter_hogs.append([aid, steps])
+        self._record("adapter_hog", adapter=aid, slot=int(aslot),
+                     steps=steps)
+
+    def _corrupt_page(self, sched):
+        """Write nan into one page a live request owns — the bit flip the
+        on-device finite guard exists to catch."""
+        live = [bid for slot in range(sched.slots)
+                for bid in sched._slot_blocks[slot]]
+        if not live:
+            return
+        bid = live[int(self.rng.integers(0, len(live)))]
+        sched._caches = sched.engine.fill_blocks(
+            sched._caches, [bid], float("nan"))
+        self._record("kv_corrupt", block=int(bid))
+
+    # -- decode seam --------------------------------------------------------
+    def around_decode(self, sched, call: Callable):
+        """Decode dispatch wrapper: raise an armed device fault *before*
+        the dispatch (caches untouched), or taint one active slot's
+        ``bad`` bit after a successful one."""
+        if self._armed_device:
+            self._armed_device = False
+            self._record("device_fault")
+            raise DeviceStepFault("injected device failure at decode step")
+        out = call()
+        if self.p_nan and self.rng.random() < self.p_nan:
+            active = [s for s in range(sched.slots)
+                      if sched._slot_handle[s] is not None]
+            if active:
+                slot = active[int(self.rng.integers(0, len(active)))]
+                toks, caches, key, done, pos, bad = out
+                bad = np.array(bad)
+                bad[slot] = True
+                self._record("nan_logits", slot=int(slot))
+                out = (toks, caches, key, done, pos, bad)
+        return out
+
+    # -- checkpoint seam ----------------------------------------------------
+    def wrap_checkpoint(self, manager):
+        """Patch ``manager._write`` so each save's write may raise
+        :class:`CheckpointWriteFault`. Returns the manager. The patch
+        composes with the manager's own cleanup/error-capture paths — a
+        failed write must leave no partial step directory and must surface
+        on ``wait()`` / the next ``save()``."""
+        inner = manager._write
+
+        def chaotic_write(*args, **kwargs):
+            if self.rng.random() < self.p_ckpt_fail:
+                self._record("ckpt_write_fail")
+                raise CheckpointWriteFault(
+                    "injected checkpoint write failure")
+            return inner(*args, **kwargs)
+
+        manager._write = chaotic_write
+        return manager
+
+    # -- teardown / reporting ----------------------------------------------
+    def release_all(self):
+        """Drop every held hog (end-of-run teardown before leak audits)."""
+        sched = self._sched
+        for ids, _ in self._page_hogs:
+            sched.pool.free(ids)
+        self._page_hogs.clear()
+        for aid, _ in self._adapter_hogs:
+            sched.apool.release(aid)
+        self._adapter_hogs.clear()
+
+    def quiesce(self):
+        """Stop injecting entirely and release every held resource — the
+        end-of-run teardown before a final drain + leak audit (an injector
+        left armed would re-acquire hogs during the drain itself)."""
+        self.p_device = self.p_nan = self.p_kv_corrupt = 0.0
+        self.p_pool_hog = self.p_adapter_hog = self.p_ckpt_fail = 0.0
+        self._armed_device = False
+        self.release_all()
+
+    def save_trace(self, path, note: str = ""):
+        """Write the fault trace as JSON with a replay command — the
+        artifact CI uploads for a failing chaos seed."""
+        payload = {
+            "seed": self.seed,
+            "replay": f"CHAOS_SEED={self.seed} python -m pytest "
+                      f"tests/test_chaos.py -m slow -x -q",
+            "note": note,
+            "events": self.trace,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        return path

@@ -1,0 +1,214 @@
+"""Request lifecycle: terminal status machine, deadlines, leak checks.
+
+Production serving is judged on what happens when things go wrong. Before
+this module a request had exactly two observable states (``done`` or not),
+no way to be given up on, and the scheduler had no vocabulary for "this
+request was shed / timed out / hit a device fault". Now every submitted
+request walks an explicit state machine and **always** reaches a terminal
+status — the invariant the chaos suite (``tests/test_chaos.py``) pins:
+
+::
+
+                 submit()
+                    │ (capacity / queue_cap shed)──────────► REJECTED
+                    ▼
+                 QUEUED ──(cancel)────────────────────────► CANCELLED
+                 │  ▲ │ ──(ttft / total deadline)─────────► TIMED_OUT
+        admitted │  │ │ ──(no-progress detector)──────────► FAILED
+                 ▼  │ preempt / quarantine / device fault
+                RUNNING ──(cancel)────────────────────────► CANCELLED
+                    │ ──(total deadline)──────────────────► TIMED_OUT
+                    │ ──(fault retries exhausted)─────────► FAILED
+                    ▼ (EOS / budget)
+                COMPLETED
+
+Preemption (page exhaustion), quarantine (non-finite logits) and device
+faults bounce a RUNNING request back to QUEUED — those are *recoverable*
+and resume token-exactly through the re-prefill machinery; only the five
+states on the right are terminal.
+
+:class:`RequestHandle` (moved here from ``serve.scheduler``) is the
+caller's view: ``poll()`` streams deltas, ``status`` / ``error`` report
+the outcome, ``cancel()`` requests teardown at the next chunk boundary.
+
+:func:`check_drained` / :func:`assert_drained` are the leak auditors —
+after any drain (including chaos runs) the scheduler must hold zero
+pages, zero adapter references and zero occupied slots. They are part of
+the library, not the tests, so operators can assert them in production
+drains too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class RequestStatus(enum.Enum):
+    """Lifecycle states. The five right-column states are terminal."""
+
+    QUEUED = "queued"          # submitted, waiting for slot/pages/adapter
+    RUNNING = "running"        # admitted: occupies a slot + cache pages
+    COMPLETED = "completed"    # emitted EOS or exhausted max_new_tokens
+    CANCELLED = "cancelled"    # caller cancel()ed before completion
+    TIMED_OUT = "timed_out"    # missed its TTFT or total deadline
+    REJECTED = "rejected"      # shed at submit (capacity / queue bound)
+    FAILED = "failed"          # unrecoverable fault (retries exhausted /
+    #                            scheduler stalled)
+
+
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.COMPLETED, RequestStatus.CANCELLED,
+    RequestStatus.TIMED_OUT, RequestStatus.REJECTED, RequestStatus.FAILED,
+})
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [len] int32 token ids
+    max_new_tokens: int
+    adapter_id: Optional[str] = None   # None = serve the quantized base
+    ttft_ms: Optional[float] = None    # deadline to FIRST token (queued)
+    deadline_ms: Optional[float] = None  # total deadline (queued + running)
+
+
+class RequestHandle:
+    """Streaming view of one request's generation.
+
+    Attributes:
+      tokens: the full generation so far — plain python ints (EOS included
+        when one was emitted). Grows between ``Scheduler.step()`` calls.
+      status: the :class:`RequestStatus` lifecycle state. Every handle
+        eventually reaches a terminal status — including rejected, timed
+        out and cancelled ones.
+      error: human-readable reason for REJECTED / TIMED_OUT / FAILED
+        terminals (None otherwise).
+      done: True once ``status`` is terminal. A done handle no longer
+        occupies a slot, cache pages or an adapter reference. Partial
+        tokens of a cancelled/timed-out request stay readable.
+    """
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.tokens: List[int] = []
+        self.status = RequestStatus.QUEUED
+        self.error: Optional[str] = None
+        self.fault_retries = 0        # quarantines + device faults survived
+        self.submitted_at: float = 0.0  # scheduler clock at submit/restore
+        self._cursor = 0
+        self._cancel_requested = False
+        self._stats_fn = None         # set by the scheduler at submit
+
+    @property
+    def done(self) -> bool:
+        return self.status in TERMINAL_STATUSES
+
+    def cancel(self):
+        """Request cancellation. Takes effect at the next scheduler step
+        (chunk boundary): a queued request leaves the queue, a running one
+        releases its slot/pages; either way the handle terminates as
+        CANCELLED with its partial tokens intact. No-op on a handle that
+        already reached a terminal status. Safe to call repeatedly."""
+        if not self.done:
+            self._cancel_requested = True
+
+    def _finish(self, status: RequestStatus, error: Optional[str] = None):
+        """Terminal transition (scheduler-internal). Idempotent guard: a
+        handle never leaves a terminal status."""
+        assert status in TERMINAL_STATUSES, status
+        if self.done:                 # pragma: no cover - defensive
+            return
+        self.status = status
+        self.error = error
+
+    def poll(self, with_stats: bool = False):
+        """Tokens generated since the last ``poll()``.
+
+        Returns a (possibly empty) list of int token ids. Empty while the
+        request is queued or between chunks; after the handle reaches a
+        terminal status, the first ``poll()`` drains the remaining delta
+        and subsequent calls return ``[]`` forever — polling a finished
+        handle is safe and idempotent.
+
+        With ``with_stats=True`` returns ``(delta, stats)`` where ``stats``
+        is a telemetry snapshot for this request's adapter: its id, its
+        per-adapter ``prefix_hit_rate``, and the scheduler's adapter-pool
+        counters (occupancy / hits / misses / evictions / loads). Requests
+        without an adapter (and adapter-free schedulers) report the base
+        view — ``adapter_id`` None and zeroed pool counters.
+        """
+        delta = self.tokens[self._cursor:]
+        self._cursor = len(self.tokens)
+        if not with_stats:
+            return delta
+        stats = self._stats_fn() if self._stats_fn is not None else {
+            "adapter_id": None, "adapter_prefix_hit_rate": 0.0,
+            "adapter_loads": 0, "capacity": 0, "resident": 0, "live": 0,
+            "occupancy": 0.0, "hits": 0, "misses": 0, "evictions": 0}
+        return delta, stats
+
+
+# ---------------------------------------------------------------------------
+# Leak auditing
+# ---------------------------------------------------------------------------
+
+def check_drained(scheduler) -> List[str]:
+    """Audit a drained scheduler for leaked resources.
+
+    Returns a list of human-readable violations (empty = clean). To be
+    called once ``scheduler.pending == 0`` — after any drain, including
+    one that suffered cancellations, timeouts, preemptions, quarantines
+    and injected faults, the scheduler must be back at baseline:
+
+    * no occupied batch slots, every slot marked free (``done``);
+    * no queued handles, and every handle ever submitted terminal;
+    * paged: zero live pages, every page free or evictable
+      (``available() == num_blocks``), no negative refcounts, block
+      tables all-sentinel;
+    * adapters: zero live adapter references.
+    """
+    out: List[str] = []
+    if scheduler._queue:
+        out.append(f"queue not drained: {len(scheduler._queue)} handles")
+    occupied = [s for s, h in enumerate(scheduler._slot_handle)
+                if h is not None]
+    if occupied:
+        out.append(f"slots still occupied: {occupied}")
+    free_mask = np.asarray(scheduler._done)
+    if not bool(free_mask.all()):
+        out.append(f"slot done-mask not all free: {free_mask.tolist()}")
+    for h in getattr(scheduler, "_live_handles", ()):
+        out.append(f"request {h.request.rid} non-terminal: {h.status}")
+    if scheduler.paged:
+        pool = scheduler.pool
+        if pool.live() != 0:
+            out.append(f"leaked pages: {pool.live()} live "
+                       f"(refs {np.flatnonzero(pool.ref > 0).tolist()})")
+        if (pool.ref < 0).any():
+            out.append(f"negative page refcounts: "
+                       f"{np.flatnonzero(pool.ref < 0).tolist()}")
+        if pool.available() != pool.num_blocks:
+            out.append(f"pool not at baseline: {pool.available()} of "
+                       f"{pool.num_blocks} blocks available")
+        tables = np.asarray(scheduler._tables)
+        if not bool((tables == pool.sentinel).all()):
+            out.append("block tables not all-sentinel after drain")
+        if any(scheduler._slot_blocks[s] for s in range(scheduler.slots)):
+            out.append("slot block lists not empty after drain")
+    if scheduler.apool is not None:
+        ap = scheduler.apool
+        if ap.live() != 0:
+            out.append(f"leaked adapter refs: {ap.live()} live")
+        issues = ap.verify()
+        out.extend(f"adapter pool: {msg}" for msg in issues)
+    return out
+
+
+def assert_drained(scheduler):
+    """Raise AssertionError listing every leak ``check_drained`` found."""
+    issues = check_drained(scheduler)
+    assert not issues, "scheduler drain leaked resources:\n  " + \
+        "\n  ".join(issues)

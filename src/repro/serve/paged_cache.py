@@ -189,6 +189,19 @@ class BlockPool:
             self._by_hash[h] = bid
             self._hash_of[bid] = h
 
+    def invalidate(self, ids: Sequence[int]):
+        """Drop the prefix-index entries of ``ids`` (quarantine).
+
+        A corrupted page must never be served as a prefix hit: the
+        scheduler invalidates a poisoned request's chain *before* freeing
+        its pages, so the content hashes stop resolving and the blocks go
+        back to the free list instead of lingering as evictable cache.
+        Ids that aren't indexed are ignored; refcounts are untouched."""
+        for bid in ids:
+            h = self._hash_of.get(bid)
+            if h is not None:
+                self._unindex(bid, h)
+
     def _unindex(self, bid: int, h: bytes):
         """Drop ``bid``'s index entry; an unreferenced block must not be
         stranded (neither free nor cached), so it returns to the free

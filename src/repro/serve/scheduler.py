@@ -38,6 +38,45 @@ Results stream: ``submit`` returns a :class:`RequestHandle` whose ``poll()``
 yields the token delta generated since the last poll, so callers can
 stream partial generations while the batch keeps running.
 
+**Request lifecycle** (``serve.lifecycle``): every handle walks an explicit
+status machine and always reaches a terminal status —
+
+* **load shedding**: ``queue_cap`` bounds the admission queue; a submit
+  over the cap (or one whose prompt + budget can never fit the engine)
+  returns immediately with status ``REJECTED`` instead of growing the
+  queue without bound or hanging ``run()`` forever;
+* **deadlines**: per-request (or scheduler-default) TTFT and total
+  deadlines are enforced at every chunk boundary against an injectable
+  ``clock`` — expired requests terminate as ``TIMED_OUT`` with their
+  partial tokens intact;
+* **cancel**: ``handle.cancel()`` tears the request down at the next
+  chunk boundary (``CANCELLED``);
+* **numeric guard**: the engine flags any slot whose logits went
+  non-finite during a chunk. The scheduler quarantines *only that slot* —
+  its pages are dropped from the prefix index, scrubbed, and freed; the
+  request retries from its last good token (token-exact, greedy) — and
+  the first detection one-shot-falls-back the engine from the fused
+  Pallas kernels to the reference path
+  (``Engine.activate_reference_fallback``). Retries are bounded
+  (``max_fault_retries``); exhaustion terminates the request ``FAILED``;
+* **device faults**: a failed decode dispatch preempts every active
+  request back to the queue (their resume is token-exact via the
+  re-prefill machinery) under the same bounded-retry accounting;
+* **no-progress detector**: if the queue is non-empty but nothing can be
+  admitted for ``stall_limit`` consecutive steps (and nothing is
+  decoding), the head-of-queue request is failed instead of spinning
+  ``run()`` forever;
+* **snapshot/restore**: :meth:`snapshot` serializes the queue and every
+  in-flight request as host state (prompt + tokens so far — in-flight
+  requests are snapshotted *as preempted*, so restore replays the
+  existing re-prefill machinery and resumes token-exactly);
+  :meth:`restore` rebuilds the queue in a fresh scheduler. Round-trips
+  through :class:`repro.checkpoint.manager.CheckpointManager`.
+
+Fault injection (``serve.faults.FaultInjector``) hooks the same seams the
+real failures use, so the chaos suite drives every one of these paths
+deterministically.
+
 Chunk-size tradeoff: each chunk is one device dispatch, so large chunks
 amortize dispatch overhead, but a slot can only be retired/backfilled at a
 chunk boundary — up to ``chunk_size - 1`` wasted slot-steps per retirement.
@@ -47,7 +86,7 @@ the dispatch/step-cost break-even from ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -57,60 +96,13 @@ import numpy as np
 
 from .adapters import BASE_SLOT, AdapterPool
 from .engine import Engine
+from .faults import DeviceStepFault
+from .lifecycle import (Request, RequestHandle, RequestStatus,
+                        TERMINAL_STATUSES)
 from .paged_cache import BlockPool
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # [len] int32 token ids
-    max_new_tokens: int
-    adapter_id: Optional[str] = None   # None = serve the quantized base
-
-
-class RequestHandle:
-    """Streaming view of one request's generation.
-
-    Attributes:
-      tokens: the full generation so far — plain python ints (EOS included
-        when one was emitted). Grows between ``Scheduler.step()`` calls.
-      done: True once the request emitted EOS or exhausted
-        ``max_new_tokens``. A done handle is no longer occupying a slot or
-        any cache pages.
-    """
-
-    def __init__(self, request: Request):
-        self.request = request
-        self.tokens: List[int] = []
-        self.done = False
-        self._cursor = 0
-        self._stats_fn = None         # set by the scheduler at submit
-
-    def poll(self, with_stats: bool = False):
-        """Tokens generated since the last ``poll()``.
-
-        Returns a (possibly empty) list of int token ids. Empty while the
-        request is queued or between chunks; after the handle retires
-        (``done``), the first ``poll()`` drains the remaining delta and
-        subsequent calls return ``[]`` forever — polling a retired handle
-        is safe and idempotent.
-
-        With ``with_stats=True`` returns ``(delta, stats)`` where ``stats``
-        is a telemetry snapshot for this request's adapter: its id, its
-        per-adapter ``prefix_hit_rate``, and the scheduler's adapter-pool
-        counters (occupancy / hits / misses / evictions / loads). Requests
-        without an adapter (and adapter-free schedulers) report the base
-        view — ``adapter_id`` None and zeroed pool counters.
-        """
-        delta = self.tokens[self._cursor:]
-        self._cursor = len(self.tokens)
-        if not with_stats:
-            return delta
-        stats = self._stats_fn() if self._stats_fn is not None else {
-            "adapter_id": None, "adapter_prefix_hit_rate": 0.0,
-            "adapter_loads": 0, "capacity": 0, "resident": 0, "live": 0,
-            "occupancy": 0.0, "hits": 0, "misses": 0, "evictions": 0}
-        return delta, stats
+__all__ = ["Scheduler", "Request", "RequestHandle", "RequestStatus",
+           "TERMINAL_STATUSES"]
 
 
 def _bucket(n: int, cap: int, lo: int = 8) -> int:
@@ -146,13 +138,41 @@ class Scheduler:
     tenants because each adapter salts its hash chains (an adapter rewrites
     the K/V projections, so identical tokens do *not* share KV across
     adapters).
+
+    Robustness knobs (all keyword-only):
+
+    * ``queue_cap`` — bound on the admission queue; submits over it are
+      shed with status ``REJECTED``. Preemptions may transiently push the
+      queue past the cap (they re-queue work that was already admitted).
+    * ``ttft_ms`` / ``deadline_ms`` — default first-token / total
+      deadlines applied to every request that doesn't override them at
+      ``submit``; enforced at chunk boundaries against ``clock``.
+    * ``clock`` — monotonic-seconds source (injectable for deterministic
+      deadline tests; defaults to ``time.monotonic``).
+    * ``faults`` — a :class:`repro.serve.faults.FaultInjector` attached to
+      the scheduler's fault seams (chaos testing).
+    * ``max_fault_retries`` — quarantine/device-fault retries per request
+      before it terminates ``FAILED``.
+    * ``stall_limit`` — consecutive no-progress steps before the
+      head-of-queue request is failed instead of spinning forever.
     """
 
     def __init__(self, engine: Engine, chunk_size: int = 8, seed: int = 0,
                  prefix_reuse: bool = True, adapters=None,
-                 adapter_pool: Optional[AdapterPool] = None):
+                 adapter_pool: Optional[AdapterPool] = None, *,
+                 queue_cap: Optional[int] = None,
+                 ttft_ms: Optional[float] = None,
+                 deadline_ms: Optional[float] = None,
+                 clock=time.monotonic,
+                 faults=None,
+                 max_fault_retries: int = 3,
+                 stall_limit: int = 64):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1: {chunk_size}")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1: {queue_cap}")
+        if stall_limit < 1:
+            raise ValueError(f"stall_limit must be >= 1: {stall_limit}")
         engine._check_ragged_supported()
         self.engine = engine
         self.chunk_size = chunk_size
@@ -169,6 +189,25 @@ class Scheduler:
         self._done = np.ones((self.slots,), bool)      # free slots are "done"
         self._next_rid = 0
         self.chunks_run = 0
+        self.steps_run = 0
+        # -- lifecycle state ------------------------------------------------
+        self.queue_cap = queue_cap
+        self.default_ttft_ms = ttft_ms
+        self.default_deadline_ms = deadline_ms
+        self._clock = clock
+        self.max_fault_retries = max_fault_retries
+        self.stall_limit = stall_limit
+        self._live_handles: set = set()    # submitted, not yet terminal
+        self._stall_steps = 0
+        self._admitted_this_step = 0
+        self.completed = 0
+        self.rejected = 0
+        self.cancelled = 0
+        self.timed_out = 0
+        self.failed = 0
+        self.quarantines = 0
+        self.device_faults = 0
+        self.kernel_fallbacks = 0
         # -- paged state ----------------------------------------------------
         self.prefix_reuse = prefix_reuse and self.paged
         if self.paged:
@@ -212,10 +251,16 @@ class Scheduler:
         self.prefix_hits = 0
         self.preemptions = 0
         self.cow_copies = 0
+        # -- fault injection ------------------------------------------------
+        self._faults = faults
+        if faults is not None:
+            faults.attach(self)
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               adapter_id: Optional[str] = None) -> RequestHandle:
+               adapter_id: Optional[str] = None, *,
+               ttft_ms: Optional[float] = None,
+               deadline_ms: Optional[float] = None) -> RequestHandle:
         """Queue one generation request.
 
         Args:
@@ -224,25 +269,36 @@ class Scheduler:
             buckets it internally.
           max_new_tokens: generation budget, ``>= 1``. The request retires
             at EOS (when the engine's ``eos_id >= 0``) or after exactly
-            this many tokens, whichever comes first. ``len(prompt) +
-            max_new_tokens`` must fit the engine's ``max_len``.
+            this many tokens, whichever comes first.
           adapter_id: route this request through a registered adapter's
             factors (requires the scheduler's ``adapters`` registry); None
             serves the quantized base model.
+          ttft_ms: deadline to the FIRST token, milliseconds from submit
+            (None = the scheduler's ``ttft_ms`` default, which may itself
+            be None = no TTFT deadline).
+          deadline_ms: total deadline, milliseconds from submit (None =
+            scheduler default). Both are enforced at chunk boundaries.
 
         Returns a :class:`RequestHandle` immediately — generation happens
         during subsequent :meth:`step` / :meth:`run` calls; stream tokens
-        off the handle with ``poll()``.
+        off the handle with ``poll()`` and read the terminal outcome off
+        ``handle.status``.
+
+        Malformed input (empty prompt, non-positive budget, unknown
+        adapter) raises ``ValueError`` — a caller bug. *Capacity* is a
+        load condition, not a bug: a request that can never fit the engine
+        (``len(prompt) + max_new_tokens > max_len``) or that arrives while
+        the queue is at ``queue_cap`` is **shed** — the returned handle is
+        already terminal with status ``REJECTED`` and ``error`` says why.
+        Shedding instead of raising keeps one overloaded/oversized request
+        from ever wedging ``run()`` into the no-progress spin the old
+        scheduler suffered.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1: {max_new_tokens}")
-        if prompt.size + max_new_tokens > self.max_len:
-            raise ValueError(
-                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds max_len ({self.max_len})")
         if adapter_id is not None:
             if self._adapters is None:
                 raise ValueError(
@@ -250,10 +306,37 @@ class Scheduler:
                     f"adapter registry")
             if adapter_id not in self._adapters.ids():
                 raise ValueError(f"unknown adapter {adapter_id!r}")
-        handle = RequestHandle(Request(self._next_rid, prompt,
-                                       max_new_tokens, adapter_id))
+        handle = RequestHandle(Request(
+            self._next_rid, prompt, max_new_tokens, adapter_id,
+            ttft_ms if ttft_ms is not None else self.default_ttft_ms,
+            deadline_ms if deadline_ms is not None
+            else self.default_deadline_ms))
         handle._stats_fn = lambda aid=adapter_id: self._request_stats(aid)
+        handle.submitted_at = self._clock()
         self._next_rid += 1
+        # capacity validation: reject-with-status, never enqueue-and-hang
+        if prompt.size + max_new_tokens > self.max_len:
+            handle._finish(RequestStatus.REJECTED,
+                           f"prompt ({prompt.size}) + max_new_tokens "
+                           f"({max_new_tokens}) exceeds max_len "
+                           f"({self.max_len})")
+            self.rejected += 1
+            return handle
+        if self.paged:
+            need = -(-(prompt.size + max_new_tokens) // self._bs)
+            if need > self.pool.num_blocks:
+                handle._finish(RequestStatus.REJECTED,
+                               f"request needs {need} pages but the whole "
+                               f"pool holds {self.pool.num_blocks}")
+                self.rejected += 1
+                return handle
+        if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
+            handle._finish(RequestStatus.REJECTED,
+                           f"admission queue at capacity "
+                           f"({self.queue_cap}): load shed")
+            self.rejected += 1
+            return handle
+        self._live_handles.add(handle)
         self._queue.append(handle)
         return handle
 
@@ -288,12 +371,99 @@ class Scheduler:
                         "evictions": 0})
         return out
 
+    def lifecycle_stats(self) -> dict:
+        """Terminal-outcome and fault-recovery counters."""
+        return {"completed": self.completed, "rejected": self.rejected,
+                "cancelled": self.cancelled, "timed_out": self.timed_out,
+                "failed": self.failed, "preemptions": self.preemptions,
+                "quarantines": self.quarantines,
+                "device_faults": self.device_faults,
+                "kernel_fallbacks": self.kernel_fallbacks}
+
     def _request_stats(self, adapter_id: Optional[str]) -> dict:
         stats = {"adapter_id": adapter_id,
                  "adapter_prefix_hit_rate":
                      self.adapter_prefix_hit_rate(adapter_id)}
         stats.update(self.adapter_stats())
         return stats
+
+    # -- lifecycle transitions ---------------------------------------------
+    def _finish(self, handle: RequestHandle, status: RequestStatus,
+                error: Optional[str] = None):
+        """Terminal transition + outcome accounting."""
+        handle._finish(status, error)
+        self._live_handles.discard(handle)
+        if status == RequestStatus.COMPLETED:
+            self.completed += 1
+        elif status == RequestStatus.CANCELLED:
+            self.cancelled += 1
+        elif status == RequestStatus.TIMED_OUT:
+            self.timed_out += 1
+        elif status == RequestStatus.FAILED:
+            self.failed += 1
+        elif status == RequestStatus.REJECTED:   # pragma: no cover
+            self.rejected += 1                   # (rejects finish in submit)
+
+    def _expiry(self, handle: RequestHandle, now: float) -> Optional[str]:
+        """Which deadline (if any) ``handle`` has missed at time ``now``."""
+        req = handle.request
+        elapsed_ms = (now - handle.submitted_at) * 1e3
+        if req.deadline_ms is not None and elapsed_ms > req.deadline_ms:
+            return (f"total deadline {req.deadline_ms:g} ms missed "
+                    f"({elapsed_ms:.0f} ms elapsed)")
+        if not handle.tokens and req.ttft_ms is not None \
+                and elapsed_ms > req.ttft_ms:
+            return (f"TTFT deadline {req.ttft_ms:g} ms missed "
+                    f"({elapsed_ms:.0f} ms elapsed, no token yet)")
+        return None
+
+    def _sweep(self):
+        """Chunk-boundary lifecycle sweep: cancellations and deadlines,
+        queued and running alike."""
+        now = self._clock()
+        if self._queue:
+            kept: Deque[RequestHandle] = deque()
+            for handle in self._queue:
+                if handle._cancel_requested:
+                    self._finish(handle, RequestStatus.CANCELLED)
+                    continue
+                why = self._expiry(handle, now)
+                if why is not None:
+                    self._finish(handle, RequestStatus.TIMED_OUT, why)
+                    continue
+                kept.append(handle)
+            self._queue = kept
+        for slot in range(self.slots):
+            handle = self._slot_handle[slot]
+            if handle is None:
+                continue
+            if handle._cancel_requested:
+                self._release_slot(slot)
+                self._finish(handle, RequestStatus.CANCELLED)
+                continue
+            why = self._expiry(handle, now)
+            if why is not None:
+                self._release_slot(slot)
+                self._finish(handle, RequestStatus.TIMED_OUT, why)
+
+    def _requeue_or_fail(self, handle: RequestHandle, reason: str):
+        """Bounded-retry recovery: the request resumes token-exactly from
+        its last good token (front of queue), unless its fault budget is
+        spent — then it terminates ``FAILED``."""
+        handle.fault_retries += 1
+        if handle.fault_retries > self.max_fault_retries:
+            self._finish(handle, RequestStatus.FAILED,
+                         f"{reason} ({handle.fault_retries - 1} retries "
+                         f"exhausted)")
+            return
+        handle.status = RequestStatus.QUEUED
+        self._queue.appendleft(handle)
+
+    def _note_fallback(self):
+        """One-shot fused-kernel → reference-path fallback on the first
+        non-finite detection (no-op once flipped or already on XLA)."""
+        if self.engine.activate_reference_fallback():
+            self.kernel_fallbacks += 1
 
     # -- adapter residency -------------------------------------------------
     @staticmethod
@@ -336,21 +506,38 @@ class Scheduler:
     def _finish_prefill(self, slot, handle, first: int, plen: int) -> bool:
         """Shared admit tail: returns True if the slot is now occupied."""
         handle.tokens.append(first)
+        self._admitted_this_step += 1
         if ((self.eos_id >= 0 and first == self.eos_id)
                 or len(handle.tokens) >= handle.request.max_new_tokens):
-            handle.done = True           # one-token request: slot stays free
             self._release_adapter(handle.request.adapter_id)
             self._aslot[slot] = BASE_SLOT
             if self.paged:
                 self.pool.free(self._slot_blocks[slot])
                 self._slot_blocks[slot] = []
                 self._tables[slot] = self.pool.sentinel
-            return False
+            self._finish(handle, RequestStatus.COMPLETED)
+            return False                 # one-token request: slot stays free
+        handle.status = RequestStatus.RUNNING
         self._slot_handle[slot] = handle
         self._tok[slot] = first
         self._pos[slot] = plen
         self._done[slot] = False
         return True
+
+    def _quarantine_prefill(self, slot, handle, blocks: List[int]):
+        """A prefill whose sampled logits went non-finite: drop the pages
+        it touched from the prefix index, scrub + free them, and retry the
+        request on the (now reference-path) engine."""
+        self._note_fallback()
+        self.quarantines += 1
+        self._release_adapter(handle.request.adapter_id)
+        self._aslot[slot] = BASE_SLOT
+        if self.paged and blocks:
+            self.pool.invalidate(blocks)
+            self.pool.free(blocks)
+            scrub = [b for b in blocks if self.pool.ref[b] == 0]
+            self._caches = self.engine.fill_blocks(self._caches, scrub, 0.0)
+        self._requeue_or_fail(handle, "non-finite logits at prefill")
 
     def _admit_contiguous(self, slot) -> bool:
         while self._queue:
@@ -361,13 +548,17 @@ class Scheduler:
                 return False     # adapter pool pinned solid: stop admitting
             self._queue.popleft()
             self._aslot[slot] = aslot
-            width = _bucket(req.prompt.size, self.max_len)
+            prompt = self._effective_prompt(handle)
+            width = _bucket(prompt.size, self.max_len)
             padded = np.zeros((1, width), np.int32)
-            padded[0, :req.prompt.size] = req.prompt
-            tok, self._caches = self.engine.prefill_slot(
-                jnp.asarray(padded), req.prompt.size, self._caches, slot,
+            padded[0, :prompt.size] = prompt
+            tok, self._caches, bad = self.engine.prefill_slot(
+                jnp.asarray(padded), prompt.size, self._caches, slot,
                 adapter_slot=aslot if self.apool is not None else None)
-            if self._finish_prefill(slot, handle, int(tok), req.prompt.size):
+            if bad:
+                self._quarantine_prefill(slot, handle, [])
+                continue
+            if self._finish_prefill(slot, handle, int(tok), prompt.size):
                 return True
         return False
 
@@ -417,10 +608,16 @@ class Scheduler:
             width = _bucket(suffix.size, self.max_len)
             padded = np.zeros((1, width), np.int32)
             padded[0, :suffix.size] = suffix
-            tok, self._caches = self.engine.prefill_slot(
+            tok, self._caches, bad = self.engine.prefill_slot(
                 jnp.asarray(padded), suffix.size, self._caches, slot,
                 block_table=table, start=start,
                 adapter_slot=aslot if self.apool is not None else None)
+            if bad:
+                # the corrupted KV may live in the shared prefix pages this
+                # prefill read — quarantine the whole chain, never register
+                # it, and retry from a clean re-prefill
+                self._quarantine_prefill(slot, handle, blocks)
+                continue
 
             self._slot_blocks[slot] = blocks
             self._tables[slot] = table
@@ -473,8 +670,47 @@ class Scheduler:
         front; it resumes later by re-prefilling prompt + generation."""
         handle = self._slot_handle[slot]
         self._release_slot(slot)
+        handle.status = RequestStatus.QUEUED
         self._queue.appendleft(handle)
         self.preemptions += 1
+
+    def _quarantine_slot(self, slot, reason: str):
+        """Non-finite logits escaped in this slot's chunk: its tokens are
+        garbage. Tear down *only this slot* — invalidate its pages from
+        the prefix index (corrupted KV must never be a prefix hit), scrub
+        them to zero before they return to the free list (a recycled NaN
+        poisons the next owner through masked-lane ``0 * NaN``), and retry
+        the request from its last good token."""
+        handle = self._slot_handle[slot]
+        self._note_fallback()
+        self.quarantines += 1
+        self._release_adapter(handle.request.adapter_id)
+        self._slot_handle[slot] = None
+        self._done[slot] = True
+        self._aslot[slot] = BASE_SLOT
+        if self.paged:
+            blocks = self._slot_blocks[slot]
+            self.pool.invalidate(blocks)
+            self.pool.free(blocks)
+            scrub = [b for b in blocks if self.pool.ref[b] == 0]
+            self._caches = self.engine.fill_blocks(self._caches, scrub, 0.0)
+            self._slot_blocks[slot] = []
+            self._tables[slot] = self.pool.sentinel
+        self._requeue_or_fail(handle, reason)
+
+    def _on_device_fault(self, err: Exception):
+        """A decode dispatch failed. Per-slot KV can no longer be trusted
+        to advance, so every active request is preempted back to the queue
+        (bounded per-request retry accounting) and resumes token-exactly
+        by re-prefilling — the same machinery page exhaustion uses."""
+        self.device_faults += 1
+        order = sorted((s for s in range(self.slots)
+                        if self._slot_handle[s] is not None),
+                       key=lambda s: self._admit_seq[s] if self.paged else s)
+        for slot in reversed(order):       # newest first back onto the queue
+            handle = self._slot_handle[slot]
+            self._release_slot(slot)
+            self._requeue_or_fail(handle, f"decode device fault: {err}")
 
     def _ensure_pages(self):
         """Grow each active slot's table to cover the next chunk,
@@ -508,37 +744,75 @@ class Scheduler:
     def _retire_or_keep(self, slot: int, chunk_toks: np.ndarray):
         handle = self._slot_handle[slot]
         req = handle.request
+        finished = False
         for t in chunk_toks:
             t = int(t)
             handle.tokens.append(t)
             if self.eos_id >= 0 and t == self.eos_id:
-                handle.done = True
+                finished = True
                 break
             if len(handle.tokens) >= req.max_new_tokens:
-                handle.done = True
+                finished = True
                 break
-        if handle.done:
+        if finished:
             self._release_slot(slot)
+            self._finish(handle, RequestStatus.COMPLETED)
+
+    def _decode_active(self):
+        """One decode chunk through the (possibly fault-wrapped) engine."""
+        call = lambda: self.engine.decode_chunk(
+            jnp.asarray(self._tok), self._caches, self._key,
+            jnp.asarray(self._done), jnp.asarray(self._pos),
+            n_steps=self.chunk_size,
+            block_tables=self._tables if self.paged else None,
+            adapter_slots=self._aslot if self.apool is not None else None)
+        if self._faults is not None:
+            return self._faults.around_decode(self, call)
+        return call()
 
     def step(self) -> bool:
-        """Admit, run one decode chunk, distribute tokens, retire.
+        """Sweep lifecycle, admit, run one decode chunk, distribute tokens,
+        quarantine/retire.
 
         Returns False once nothing is queued or in flight (the scheduler is
         drained); True means there is more work.
         """
+        self.steps_run += 1
+        if self._faults is not None:
+            self._faults.on_step(self)
+        self._sweep()
+        self._admitted_this_step = 0
         self._admit()
         if self.paged:
             self._ensure_pages()
         active = [s for s in range(self.slots)
                   if self._slot_handle[s] is not None]
         if not active:
+            # no-progress detector: a queue nothing can ever be admitted
+            # from must not spin run() forever — fail the head-of-queue
+            # request once the stall budget is spent
+            if self._queue and self._admitted_this_step == 0:
+                self._stall_steps += 1
+                if self._stall_steps >= self.stall_limit:
+                    head = self._queue.popleft()
+                    self._finish(
+                        head, RequestStatus.FAILED,
+                        f"scheduler stalled: request unadmittable for "
+                        f"{self._stall_steps} consecutive steps")
+                    self._stall_steps = 0
+            else:
+                self._stall_steps = 0
             return bool(self._queue)
-        toks, self._caches, self._key, done, pos = self.engine.decode_chunk(
-            jnp.asarray(self._tok), self._caches, self._key,
-            jnp.asarray(self._done), jnp.asarray(self._pos),
-            n_steps=self.chunk_size,
-            block_tables=self._tables if self.paged else None,
-            adapter_slots=self._aslot if self.apool is not None else None)
+        self._stall_steps = 0
+        try:
+            out = self._decode_active()
+        except DeviceStepFault as err:
+            # the injector raises *before* the dispatch touches the donated
+            # caches, and a real device fault invalidates them wholesale
+            # either way: recover by preempt-all + re-prefill
+            self._on_device_fault(err)
+            return self.pending > 0
+        toks, self._caches, self._key, done, pos, bad = out
         self.chunks_run += 1
         toks = np.asarray(toks)                       # [slots, chunk]
         # adopt the device carry: pos is each slot's true KV frontier (the
@@ -547,12 +821,121 @@ class Scheduler:
         self._done = np.array(done)
         self._pos = np.array(pos)
         self._tok = toks[:, -1].astype(np.int32)
+        bad = np.array(bad)
         for slot in active:
-            self._retire_or_keep(slot, toks[slot])
+            if bad[slot]:
+                self._quarantine_slot(
+                    slot, "non-finite logits in decode chunk")
+            else:
+                self._retire_or_keep(slot, toks[slot])
         return self.pending > 0
 
-    def run(self):
-        """Drive until every submitted request is done."""
+    def run(self, max_steps: Optional[int] = None):
+        """Drive until every submitted request reaches a terminal status.
+
+        ``max_steps`` is a test/ops guard: exceed it and ``run`` raises
+        RuntimeError instead of looping (the no-progress detector should
+        fire long before any sane limit)."""
+        n = 0
         while self.step():
-            pass
+            n += 1
+            if max_steps is not None and n >= max_steps:
+                raise RuntimeError(
+                    f"Scheduler.run exceeded max_steps={max_steps} with "
+                    f"{self.pending} requests still pending")
         return self
+
+    # -- snapshot / restore ------------------------------------------------
+    SNAPSHOT_FORMAT = 1
+
+    def snapshot(self) -> dict:
+        """Crash-consistent host snapshot of every non-terminal request.
+
+        Device state (KV pages, adapter pools) is deliberately **not**
+        serialized: in-flight requests are snapshotted *as preempted* —
+        prompt plus tokens generated so far — so :meth:`restore` replays
+        the existing preempt/re-prefill machinery and the restored run
+        continues token-exactly (greedy decoding re-derives the same
+        continuation from the re-prefilled KV). Active requests come
+        first (admission order), then the queue, so restore preserves
+        scheduling fairness.
+
+        The returned tree is plain dicts of numpy scalars/arrays — it
+        round-trips through
+        :meth:`repro.checkpoint.manager.CheckpointManager.save` /
+        ``restore_pytree`` unchanged. Deadlines are serialized as their
+        original budgets; the deadline clock restarts at restore (a
+        restored server should not mass-expire everything it recovered).
+        """
+        order: List[RequestHandle] = []
+        slots = sorted((s for s in range(self.slots)
+                        if self._slot_handle[s] is not None),
+                       key=lambda s: self._admit_seq[s] if self.paged else s)
+        order += [self._slot_handle[s] for s in slots]
+        order += [h for h in self._queue]
+        entries = {}
+        for i, handle in enumerate(order):
+            req = handle.request
+            entries[f"{i:05d}"] = {
+                "rid": np.int64(req.rid),
+                "prompt": np.asarray(req.prompt, np.int32),
+                "tokens": np.asarray(handle.tokens, np.int32),
+                "max_new_tokens": np.int64(req.max_new_tokens),
+                "adapter_id": np.str_(req.adapter_id or ""),
+                "ttft_ms": np.float64(-1.0 if req.ttft_ms is None
+                                      else req.ttft_ms),
+                "deadline_ms": np.float64(-1.0 if req.deadline_ms is None
+                                          else req.deadline_ms),
+                "fault_retries": np.int64(handle.fault_retries),
+            }
+        return {"format": np.int64(self.SNAPSHOT_FORMAT),
+                "next_rid": np.int64(self._next_rid),
+                "requests": entries}
+
+    def restore(self, snapshot: dict) -> Dict[int, RequestHandle]:
+        """Rebuild a :meth:`snapshot` into this (fresh) scheduler.
+
+        Every snapshotted request re-enters the queue with its partial
+        generation; draining the scheduler finishes them token-exactly.
+        Returns ``{rid: handle}`` so callers can re-attach streams.
+        Raises ``ValueError`` on a non-empty scheduler, an unknown
+        snapshot format, or adapter traffic this scheduler can't route.
+        """
+        if self.pending:
+            raise ValueError(
+                f"restore into a scheduler with {self.pending} pending "
+                f"requests — restore only into a fresh one")
+        fmt = int(np.asarray(snapshot.get("format", -1)))
+        if fmt != self.SNAPSHOT_FORMAT:
+            raise ValueError(f"unknown scheduler snapshot format {fmt}")
+        now = self._clock()
+        out: Dict[int, RequestHandle] = {}
+        entries = snapshot.get("requests") or {}
+        for key in sorted(entries):
+            e = entries[key]
+            aid = str(np.asarray(e["adapter_id"])) or None
+            if aid is not None and (self._adapters is None
+                                    or aid not in self._adapters.ids()):
+                raise ValueError(
+                    f"snapshot routes adapter {aid!r} but this scheduler "
+                    f"cannot serve it")
+            ttft = float(np.asarray(e["ttft_ms"]))
+            deadline = float(np.asarray(e["deadline_ms"]))
+            req = Request(
+                int(np.asarray(e["rid"])),
+                np.asarray(e["prompt"], np.int32).reshape(-1),
+                int(np.asarray(e["max_new_tokens"])), aid,
+                None if ttft < 0 else ttft,
+                None if deadline < 0 else deadline)
+            handle = RequestHandle(req)
+            handle.tokens = [int(t) for t in
+                             np.asarray(e["tokens"]).reshape(-1)]
+            handle.fault_retries = int(np.asarray(e["fault_retries"]))
+            handle.submitted_at = now          # deadline clock restarts
+            handle._stats_fn = lambda a=aid: self._request_stats(a)
+            self._live_handles.add(handle)
+            self._queue.append(handle)
+            out[req.rid] = handle
+        self._next_rid = max(self._next_rid,
+                             int(np.asarray(snapshot["next_rid"])))
+        return out

@@ -14,6 +14,7 @@ from repro.serve.adapters import (BASE_SLOT, AdapterPool, AdapterRegistry,
                                   iter_quant_leaves, load_adapter,
                                   padded_rank)
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.lifecycle import assert_drained
 from repro.serve.scheduler import Scheduler
 
 
@@ -162,6 +163,7 @@ def test_scheduler_adapter_parity(tiny_quant, kv_layout, loop):
                 _prompts(cfg, [(5, 8), (7, 6), (4, 9), (6, 5), (3, 7)]),
                 tags)]
     sched.run()
+    assert_drained(sched)
     for p, n, aid, h in reqs:
         assert h.done
         refp = qp if aid is None else reg.merged_params(qp, aid)
@@ -262,6 +264,7 @@ def test_shared_pool_keeps_adapters_warm(tiny_quant):
                           adapter_pool=apool)
         h = sched.submit(p, n, adapter_id="t0")
         sched.run()
+        assert_drained(sched)
         return sched, h
 
     s1, h1 = serve()

@@ -47,6 +47,80 @@ def test_async_save(tmp_path, key):
                                   np.asarray(st["params"]["a"]))
 
 
+def test_async_save_failure_surfaces(tmp_path, key):
+    """A background write that dies must NOT be swallowed: the error
+    re-raises on wait() — and on the next save() for loops that never
+    wait — so a dead disk is caught at the next step, not at restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    st = _state(key)
+    real_write = mgr._write
+
+    def failing_write(*a, **k):
+        raise OSError("injected: disk full")
+
+    mgr._write = failing_write
+    mgr.save(1, st)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    mgr.wait()                                   # error surfaced once: clear
+    mgr._write = failing_write
+    mgr.save(2, st)                              # fails in the background...
+    mgr._write = real_write
+    with pytest.raises(OSError, match="disk full"):
+        mgr.save(3, st)                          # ...and surfaces here
+    mgr.save(4, st)                              # manager still usable
+    mgr.wait()
+    assert mgr.latest_step() == 4
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")], \
+        "failed writes left partial tmp dirs"
+
+
+def test_failed_write_cleans_tmp_and_keeps_latest(tmp_path, key):
+    """A write that dies mid-flight removes its tmp dir and leaves the
+    previous checkpoint untouched (atomicity under failure)."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    st = _state(key)
+    mgr.save(1, st)
+    real_savez = np.savez
+
+    def exploding_savez(*a, **k):
+        raise OSError("injected: volume gone")
+
+    np.savez = exploding_savez
+    try:
+        with pytest.raises(OSError, match="volume gone"):
+            mgr.save(2, st)
+    finally:
+        np.savez = real_savez
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+    assert mgr.latest_step() == 1
+    _, restored = mgr.restore_latest(st)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["a"]),
+                                  np.asarray(st["params"]["a"]))
+
+
+def test_restore_pytree_template_free(tmp_path):
+    """Dict-only trees (scheduler snapshots) restore without a template;
+    non-dict nodes are rejected with a pointer at restore()."""
+    mgr = CheckpointManager(str(tmp_path))
+    snap = {"format": np.int64(1),
+            "requests": {"00000": {"rid": np.int64(4),
+                                   "prompt": np.arange(5, dtype=np.int32)},
+                         "00001": {"rid": np.int64(9),
+                                   "prompt": np.arange(2, dtype=np.int32)}}}
+    mgr.save(3, snap)
+    out = mgr.restore_pytree(3)
+    assert set(out) == {"format", "requests"}
+    assert int(out["requests"]["00001"]["rid"]) == 9
+    np.testing.assert_array_equal(out["requests"]["00000"]["prompt"],
+                                  np.arange(5, dtype=np.int32))
+    flat = mgr.restore_flat(3)
+    assert "/requests/00000/rid" in flat
+    mgr.save(4, {"seq": [np.ones(2), np.zeros(2)]})      # list node
+    with pytest.raises(ValueError, match="template"):
+        mgr.restore_pytree(4)
+
+
 def test_crash_mid_save_leaves_previous_intact(tmp_path, key):
     """A stale tmp dir (simulated crash) must not shadow the good ckpt."""
     mgr = CheckpointManager(str(tmp_path), keep=3)

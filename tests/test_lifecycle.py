@@ -1,0 +1,345 @@
+"""Request lifecycle: terminal statuses, cancel, deadlines, shedding,
+stall detection, numeric-guard quarantine, device-fault recovery,
+snapshot/restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_smoke_config
+from repro.models import init_params
+from repro.runtime import RuntimeConfig
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.faults import DeviceStepFault, FaultInjector
+from repro.serve.lifecycle import (RequestStatus, assert_drained,
+                                   check_drained)
+from repro.serve.scheduler import Scheduler
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def paged(tiny):
+    """One shared paged engine — schedulers each build fresh caches, so
+    sharing it across tests only shares the compiled programs."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8,
+                                          num_blocks=16))
+    return cfg, eng
+
+
+def _prompt(cfg, L, seed=2):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (L,),
+                                         0, cfg.vocab_size))
+
+
+def _ref(eng, prompt, n):
+    return np.asarray(eng.generate(jnp.asarray(prompt[None]), n))[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Terminal statuses: completion, cancel, deadlines, shedding
+# ---------------------------------------------------------------------------
+
+def test_completed_is_terminal_and_drained(paged):
+    cfg, eng = paged
+    sched = Scheduler(eng, chunk_size=2)
+    h = sched.submit(_prompt(cfg, 9), 5)
+    assert h.status is RequestStatus.QUEUED and not h.done
+    sched.run()
+    assert h.status is RequestStatus.COMPLETED and h.done and h.error is None
+    assert sched.lifecycle_stats()["completed"] == 1
+    assert_drained(sched)
+    h.cancel()                                    # no-op on a terminal handle
+    assert h.status is RequestStatus.COMPLETED
+
+
+def test_cancel_queued_and_running(paged):
+    """Cancel tears down at the next chunk boundary: a queued request never
+    runs, a running one keeps its partial tokens; no pages leak."""
+    cfg, eng = paged
+    sched = Scheduler(eng, chunk_size=2)
+    h_run = sched.submit(_prompt(cfg, 9, seed=3), 12)
+    h_q1 = sched.submit(_prompt(cfg, 40, seed=4), 20)   # 6 pages: must wait
+    h_q2 = sched.submit(_prompt(cfg, 40, seed=5), 20)
+    sched.step()
+    assert h_run.tokens and not h_q2.done
+    h_q2.cancel()
+    h_run.cancel()
+    sched.run()
+    assert h_q2.status is RequestStatus.CANCELLED
+    assert h_run.status is RequestStatus.CANCELLED
+    assert h_q2.tokens == []                       # never admitted
+    partial = list(h_run.tokens)
+    assert 0 < len(partial) < 12                   # kept its partial tokens
+    assert partial == _ref(eng, _prompt(cfg, 9, seed=3), 12)[:len(partial)]
+    assert h_q1.status is RequestStatus.COMPLETED  # the rest drain normally
+    assert sched.cancelled == 2
+    assert_drained(sched)
+
+
+def test_deadlines_fake_clock(paged):
+    """TTFT expires queued requests; the total deadline expires running
+    ones (partial tokens intact). Both checked against an injected clock,
+    so the test is immune to wall-clock noise."""
+    cfg, eng = paged
+    clk = [100.0]
+    sched = Scheduler(eng, chunk_size=2, clock=lambda: clk[0])
+    h_fast = sched.submit(_prompt(cfg, 9, seed=6), 4)           # no deadline
+    h_total = sched.submit(_prompt(cfg, 10, seed=8), 30,
+                           deadline_ms=200.0)
+    h_ttft = sched.submit(_prompt(cfg, 12, seed=7), 8,
+                          ttft_ms=50.0)           # both slots taken: queued
+    sched.step()                                  # admits fast + total
+    assert h_total.tokens and not h_ttft.tokens
+    clk[0] += 0.1                                 # +100 ms: TTFT 50 missed
+    sched.step()
+    assert h_ttft.status is RequestStatus.TIMED_OUT
+    assert "TTFT" in h_ttft.error
+    clk[0] += 0.2                                 # +200 ms: total missed
+    sched.run()
+    assert h_total.status is RequestStatus.TIMED_OUT
+    assert "total deadline" in h_total.error
+    partial = h_total.tokens
+    assert 0 < len(partial) < 30                  # partial survives
+    assert partial == _ref(eng, _prompt(cfg, 10, seed=8), 30)[:len(partial)]
+    assert h_fast.status is RequestStatus.COMPLETED
+    assert sched.timed_out == 2
+    assert_drained(sched)
+
+
+def test_queue_cap_load_shedding(paged):
+    cfg, eng = paged
+    sched = Scheduler(eng, queue_cap=2, chunk_size=2)
+    accepted = [sched.submit(_prompt(cfg, 8, seed=i), 3) for i in (10, 11)]
+    shed = sched.submit(_prompt(cfg, 8, seed=12), 3)
+    assert shed.done and shed.status is RequestStatus.REJECTED
+    assert "load shed" in shed.error
+    sched.run()
+    assert all(h.status is RequestStatus.COMPLETED for h in accepted)
+    assert sched.rejected == 1
+    assert_drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# Stall detection (the old infinite busy-loop)
+# ---------------------------------------------------------------------------
+
+def _adapter_fixture(tiny):
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.quant import calibrate, quantize_model, reduce_shared
+    from repro.serve.adapters import AdapterRegistry, install_pools
+    cfg, params = tiny
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(2, 4, 16)), cfg)
+    qp = quantize_model(params, tape, "aser_as(rank=8)")
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    reg.add("t1")
+    return cfg, install_pools(qp, slots=2, rank=4), reg   # ONE adapter slot
+
+
+def test_stall_detector_fails_unadmittable_request(tiny):
+    """An unadmittable request (its adapter can never get a slot while
+    another tenant pins the only one) is FAILED by the no-progress
+    detector instead of spinning run() forever — the satellite-1 bug."""
+    from repro.serve.adapters import AdapterPool
+    cfg, pooled, reg = _adapter_fixture(tiny)
+    eng = Engine(pooled, cfg, ServeConfig(max_len=32, batch_slots=1))
+    apool = AdapterPool(2)
+    assert apool.acquire("t0") is not None        # external pin: slot taken
+    sched = Scheduler(eng, adapters=reg, adapter_pool=apool, stall_limit=3)
+    h = sched.submit(_prompt(cfg, 6, seed=13), 4, adapter_id="t1")
+    sched.run(max_steps=50)                       # terminates, no spin
+    assert h.status is RequestStatus.FAILED
+    assert "stalled" in h.error
+    apool.release("t0")
+    assert_drained(sched)
+
+
+def test_run_max_steps_guard(tiny):
+    """run(max_steps=...) raises rather than looping when something keeps
+    the scheduler busy past any sane bound."""
+    from repro.serve.adapters import AdapterPool
+    cfg, pooled, reg = _adapter_fixture(tiny)
+    eng = Engine(pooled, cfg, ServeConfig(max_len=32, batch_slots=1))
+    apool = AdapterPool(2)
+    assert apool.acquire("t0") is not None
+    sched = Scheduler(eng, adapters=reg, adapter_pool=apool,
+                      stall_limit=10_000)         # detector effectively off
+    sched.submit(_prompt(cfg, 6, seed=13), 4, adapter_id="t1")
+    with pytest.raises(RuntimeError, match="max_steps"):
+        sched.run(max_steps=5)
+    apool.release("t0")
+
+
+# ---------------------------------------------------------------------------
+# Numeric guard: quarantine + one-shot kernel fallback
+# ---------------------------------------------------------------------------
+
+def test_kv_corruption_quarantined_token_exact(paged):
+    """nan written into a live KV page trips the on-device finite guard;
+    the slot is quarantined (pages invalidated + scrubbed), the request
+    retries and still produces the exact fault-free tokens."""
+    cfg, eng = paged
+    p, n = _prompt(cfg, 17, seed=14), 6
+    want = _ref(eng, p, n)
+    sched = Scheduler(eng, chunk_size=2)
+    h = sched.submit(p, n)
+    sched.step()                                   # admitted, some tokens
+    assert not h.done
+    bad_block = sched._slot_blocks[0][0]           # a page the request owns
+    sched._caches = eng.fill_blocks(sched._caches, [bad_block],
+                                    float("nan"))
+    sched.run()
+    assert h.status is RequestStatus.COMPLETED
+    assert h.tokens == want
+    assert sched.quarantines >= 1 and h.fault_retries >= 1
+    assert_drained(sched)
+
+
+def test_nan_retries_exhaust_to_failed(paged):
+    """A slot that goes non-finite every single chunk exhausts its retry
+    budget and terminates FAILED — co-batched work is unaffected."""
+    cfg, eng = paged
+    inj = FaultInjector(seed=5, p_nan=1.0)
+    sched = Scheduler(eng, chunk_size=2, faults=inj, max_fault_retries=2)
+    h = sched.submit(_prompt(cfg, 9, seed=15), 6)
+    sched.run(max_steps=200)
+    assert h.status is RequestStatus.FAILED
+    assert "non-finite" in h.error and h.fault_retries == 3
+    assert sched.quarantines == 3
+    assert_drained(sched)
+
+
+def test_reference_fallback_one_shot(tiny):
+    """First quarantine on a Pallas engine reroutes it to the reference
+    path exactly once; XLA engines have nothing to fall back from."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=32, batch_slots=1),
+                 rt=RuntimeConfig(use_pallas=True, interpret=True))
+    assert eng.activate_reference_fallback() is True
+    assert eng.rt.force_reference and eng.fallback_active
+    assert eng.activate_reference_fallback() is False      # one-shot
+    xla = Engine(params, cfg, ServeConfig(max_len=32, batch_slots=1))
+    assert xla.activate_reference_fallback() is False
+
+
+def test_fallback_matches_reference_tokens(tiny):
+    """After the fallback flips, generation equals the pure-XLA reference
+    engine token-for-token (the kernels are pinned to the same math, so
+    this holds before the flip too — the invariant that makes mid-stream
+    fallback token-exact)."""
+    cfg, params = tiny
+    p, n = _prompt(cfg, 9, seed=16), 5
+    xla = Engine(params, cfg, ServeConfig(max_len=32, batch_slots=1))
+    want = _ref(xla, p, n)
+    eng = Engine(params, cfg, ServeConfig(max_len=32, batch_slots=1),
+                 rt=RuntimeConfig(use_pallas=True, interpret=True))
+    assert _ref(eng, p, n) == want
+    eng.activate_reference_fallback()
+    assert _ref(eng, p, n) == want
+
+
+# ---------------------------------------------------------------------------
+# Device-fault recovery
+# ---------------------------------------------------------------------------
+
+def test_device_fault_preempts_and_resumes_token_exact(paged):
+    """A decode dispatch failure preempts every active request; the drain
+    resumes them token-exactly through re-prefill."""
+    cfg, eng = paged
+    specs = [(_prompt(cfg, 9, seed=20), 8), (_prompt(cfg, 12, seed=21), 6)]
+    want = [_ref(eng, p, n) for p, n in specs]
+    inj = FaultInjector(seed=0, p_device=0.0)
+    sched = Scheduler(eng, chunk_size=2, faults=inj)
+    handles = [sched.submit(p, n) for p, n in specs]
+    sched.step()                                   # both running
+    inj.p_device = 1.0
+    sched.step()                                   # dispatch fails: preempt
+    inj.p_device = 0.0
+    assert sched.device_faults == 1
+    assert all(h.status is RequestStatus.QUEUED for h in handles)
+    sched.run()
+    assert [h.tokens for h in handles] == want
+    assert all(h.fault_retries == 1 for h in handles)
+    assert_drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_token_exact(paged, tmp_path):
+    """Kill-and-restore mid-flight: the snapshot round-trips through
+    CheckpointManager on disk, a fresh scheduler restores it, and every
+    request finishes with exactly its fault-free tokens."""
+    cfg, eng = paged
+    specs = [(_prompt(cfg, 9, seed=30), 10), (_prompt(cfg, 12, seed=31), 8),
+             (_prompt(cfg, 40, seed=32), 6)]      # 3rd waits in the queue
+    want = [_ref(eng, p, n) for p, n in specs]
+    sched = Scheduler(eng, chunk_size=2)
+    handles = [sched.submit(p, n) for p, n in specs]
+    sched.step()                                   # two in flight, one queued
+    assert any(h.tokens for h in handles) and sched.pending == 3
+    snap = sched.snapshot()
+    assert len(snap["requests"]) == 3
+
+    mgr = CheckpointManager(str(tmp_path / "sched"))
+    mgr.save(7, snap)
+    del sched                                      # "crash"
+
+    fresh = Scheduler(eng, chunk_size=2)
+    restored = fresh.restore(mgr.restore_pytree(7))
+    assert sorted(restored) == [h.request.rid for h in handles]
+    fresh.run()
+    for (p, n), tokens, (rid, h2) in zip(specs, want,
+                                         sorted(restored.items())):
+        assert h2.status is RequestStatus.COMPLETED
+        assert h2.tokens == tokens, rid
+    assert fresh._next_rid >= 3                    # rid space preserved
+    assert_drained(fresh)
+
+
+def test_restore_guards(paged):
+    cfg, eng = paged
+    sched = Scheduler(eng, chunk_size=2)
+    sched.submit(_prompt(cfg, 8, seed=33), 3)
+    snap = sched.snapshot()
+    with pytest.raises(ValueError, match="fresh"):
+        sched.restore(snap)                        # non-empty target
+    fresh = Scheduler(eng, chunk_size=2)
+    with pytest.raises(ValueError, match="format"):
+        fresh.restore({"format": np.int64(99), "next_rid": np.int64(0),
+                       "requests": {}})
+    sched.run()
+    assert_drained(sched)
+
+
+def test_check_drained_reports_leaks(paged):
+    """The auditor actually sees a leak (not vacuously empty)."""
+    cfg, eng = paged
+    sched = Scheduler(eng, chunk_size=2)
+    sched.submit(_prompt(cfg, 9, seed=34), 8)
+    sched.step()                                   # mid-flight: not drained
+    issues = check_drained(sched)
+    assert any("occupied" in s for s in issues)
+    assert any("non-terminal" in s for s in issues)
+    with pytest.raises(AssertionError, match="leaked"):
+        assert_drained(sched)
+    sched.run()
+    assert_drained(sched)

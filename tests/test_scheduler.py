@@ -7,7 +7,9 @@ import pytest
 from repro.configs.registry import get_smoke_config
 from repro.models import init_params
 from repro.serve.engine import Engine, ServeConfig
-from repro.serve.scheduler import RequestHandle, Scheduler, _bucket
+from repro.serve.lifecycle import assert_drained
+from repro.serve.scheduler import (RequestHandle, RequestStatus, Scheduler,
+                                   _bucket)
 
 
 def _tiny_cfg():
@@ -45,6 +47,7 @@ def test_scheduler_matches_per_request_generate(tiny):
     assert sched.pending == 6
     sched.run()
     assert sched.pending == 0
+    assert_drained(sched)
     for prompt, n, handle in reqs:
         assert handle.done
         ref = np.asarray(eng.generate(jnp.asarray(prompt[None]), n))[0]
@@ -108,17 +111,24 @@ def test_one_token_requests_never_occupy_a_slot(tiny):
 
 
 def test_submit_validation(tiny):
+    """Malformed input raises (caller bug); capacity sheds with REJECTED
+    (load condition) — an oversized request must never wedge run()."""
     cfg, params = tiny
     eng = Engine(params, cfg, ServeConfig(max_len=16, batch_slots=1))
     sched = Scheduler(eng)
     with pytest.raises(ValueError, match="max_new_tokens"):
         sched.submit([1, 2], 0)
-    with pytest.raises(ValueError, match="exceeds max_len"):
-        sched.submit(list(range(10)), 10)
     with pytest.raises(ValueError, match="empty"):
         sched.submit([], 2)
     with pytest.raises(ValueError, match="chunk_size"):
         Scheduler(eng, chunk_size=0)
+    # capacity is shed, not raised: terminal handle, nothing enqueued
+    h = sched.submit(list(range(10)), 10)
+    assert h.done and h.status is RequestStatus.REJECTED
+    assert "exceeds max_len" in h.error
+    assert sched.pending == 0 and sched.rejected == 1
+    sched.run()                                  # returns immediately
+    assert_drained(sched)
 
 
 def test_bucket_bounds_recompiles():
