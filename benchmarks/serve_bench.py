@@ -46,9 +46,17 @@ Two workloads:
   (acceptance pin: ≥ 0.85) plus a ``token_exact`` bool certifying one
   request per tenant against its merged-weight reference generation.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v5`` =
-v4's rows + ``adapter_rows``; the validator still accepts v1–v4 files) so
-subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
+  Every continuous row also carries the two **steady-state sanitizer
+  counters** (serve_bench/v6): after the warm run, the identical workload
+  replays under ``jax.transfer_guard("disallow")`` with the
+  backend-compile counter armed (``repro.analysis.sanitizers``), and the
+  row records ``recompiles_after_warmup`` and ``h2d_transfers_per_step``.
+  The validator rejects any nonzero value — a retrace bomb or implicit
+  host→device upload on the decode path fails the bench outright.
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v6`` =
+v5's rows + sanitizer counters; the validator still accepts v1–v5 files)
+so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
 seconds-scale variant with the same schema for CI.
 Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
 meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
@@ -66,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import common  # noqa: F401  (sys.path side effect for src/)
+from repro.analysis.sanitizers import audit_steady_state
 from repro.configs.registry import get_smoke_config
 from repro.data.synthetic import CorpusConfig, SyntheticCorpus
 from repro.models import init_params
@@ -75,7 +84,8 @@ from repro.serve.engine import (Engine, ServeConfig, blocks_for_hbm_budget,
                                 kv_page_bytes)
 from repro.serve.scheduler import Scheduler
 
-SCHEMA = "serve_bench/v5"
+SCHEMA = "serve_bench/v6"
+SCHEMA_V5 = "serve_bench/v5"
 SCHEMA_V4 = "serve_bench/v4"
 SCHEMA_V3 = "serve_bench/v3"
 SCHEMA_V2 = "serve_bench/v2"
@@ -94,6 +104,15 @@ CONT_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk",
                    "new_tokens_max", "useful_tokens", "static_s",
                    "continuous_s", "static_goodput_tok_s", "goodput_tok_s",
                    "goodput_speedup")
+
+# steady-state sanitizer counters added by serve_bench/v6 continuous rows:
+# after the warm run, an identical replay runs under
+# jax.transfer_guard("disallow") with the backend-compile counter armed
+# (repro.analysis.sanitizers.audit_steady_state). Both must be exactly
+# zero — the validator rejects any nonzero value, so a retrace bomb or an
+# implicit h2d upload on the decode path fails the bench, not just lint.
+SANITIZER_FIELDS = ("recompiles_after_warmup", "h2d_transfers_per_step")
+CONT_ROW_FIELDS_V6 = CONT_ROW_FIELDS + SANITIZER_FIELDS
 
 # shared-prefix paged-cache fields added by serve_bench/v3 prefix rows
 PREFIX_ROW_FIELDS = ("mode", "requests", "prefix_groups", "prefix_len",
@@ -210,11 +229,16 @@ def _time_continuous(params, cfg, rt, *, slots, max_len, chunk, reqs, reps):
                                           batch_slots=slots), rt=rt)
     handles = _run_continuous(eng, reqs, chunk)    # correctness gate + warm
     assert all(h.done for h in handles)
+    # steady-state audit: replay the identical workload on the warmed
+    # engine under the transfer guard + compile counter (serve_bench/v6)
+    audit = audit_steady_state(
+        lambda: Scheduler(eng, chunk_size=chunk),
+        lambda sched: [sched.submit(p, n) for p, n in reqs])
     # both legs through _best_time: one timing policy for the comparison
     static_s = _best_time(lambda: _run_static(eng, reqs), reps)
     cont_s = _best_time(lambda: _run_continuous(eng, reqs, chunk), reps)
     useful = sum(n for _, n in reqs)      # eos disabled ⇒ budget == useful
-    return static_s, cont_s, useful
+    return static_s, cont_s, useful, audit
 
 
 # -- shared-prefix prefix-cache goodput --------------------------------------
@@ -427,7 +451,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
             n_lo, n_hi = (2, 12) if smoke else (4, 56)
             c_reps = 2 if smoke else 3
             reqs = _workload(n_req, p_lo, p_hi, n_lo, n_hi, cfg.vocab_size)
-            static_s, cont_s, useful = _time_continuous(
+            static_s, cont_s, useful, audit = _time_continuous(
                 p, cfg, rt, slots=slots, max_len=max_len, chunk=chunk,
                 reqs=reqs, reps=c_reps)
             crow = {
@@ -440,6 +464,8 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                 "static_goodput_tok_s": useful / static_s,
                 "goodput_tok_s": useful / cont_s,
                 "goodput_speedup": static_s / cont_s,
+                "recompiles_after_warmup": audit.recompiles,
+                "h2d_transfers_per_step": audit.h2d_transfers_per_step,
             }
             cont_rows.append(crow)
             if verbose:
@@ -611,14 +637,22 @@ def _validate_static_rows(rows):
         raise ValueError(f"need fp and w4a8_aser rows, got {modes}")
 
 
-def _validate_continuous_rows(rows):
+def _validate_continuous_rows(rows, sanitizers=False):
     if not isinstance(rows, list) or not rows:
         raise ValueError("no continuous rows (serve_bench/v2+ requires them)")
     modes = set()
+    fields = CONT_ROW_FIELDS_V6 if sanitizers else CONT_ROW_FIELDS
     for row in rows:
-        _check_finite(row, CONT_ROW_FIELDS,
+        _check_finite(row, fields,
                       positive=("useful_tokens", "static_s", "continuous_s",
                                 "static_goodput_tok_s", "goodput_tok_s"))
+        if sanitizers:
+            for f in SANITIZER_FIELDS:
+                if row[f] != 0:
+                    raise ValueError(
+                        f"steady-state decode is not clean: {f}={row[f]!r} "
+                        f"(must be exactly 0 — a retrace or implicit "
+                        f"transfer survived warmup): {row}")
         modes.add(row["mode"])
     if not {"fp", "w4a8_aser"} <= modes:
         raise ValueError(f"need fp and w4a8_aser continuous rows, "
@@ -685,21 +719,24 @@ def validate(report: dict):
     Accepts every released schema generation: ``serve_bench/v1`` (static
     rows only), ``serve_bench/v2`` (+ continuous goodput rows),
     ``serve_bench/v3`` (+ shared-prefix paged-cache rows),
-    ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows) and
-    ``serve_bench/v5`` (+ multi-tenant adapter rows), so old baselines
-    keep validating.
+    ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows),
+    ``serve_bench/v5`` (+ multi-tenant adapter rows) and
+    ``serve_bench/v6`` (+ steady-state sanitizer counters on continuous
+    rows, required to be exactly zero), so old baselines keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2,
+                      SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
     _validate_static_rows(report.get("rows"))
-    if schema in (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2):
-        _validate_continuous_rows(report.get("continuous_rows"))
-    if schema in (SCHEMA, SCHEMA_V4, SCHEMA_V3):
+    if schema != SCHEMA_V1:
+        _validate_continuous_rows(report.get("continuous_rows"),
+                                  sanitizers=schema == SCHEMA)
+    if schema not in (SCHEMA_V1, SCHEMA_V2):
         _validate_prefix_rows(report.get("prefix_rows"))
-    if schema in (SCHEMA, SCHEMA_V4):
+    if schema not in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
         _validate_kv_rows(report.get("kv_rows"))
-    if schema == SCHEMA:
+    if schema in (SCHEMA, SCHEMA_V5):
         _validate_adapter_rows(report.get("adapter_rows"))
     return True
 

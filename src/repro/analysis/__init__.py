@@ -1,0 +1,29 @@
+"""Static analysis and runtime sanitizers for the JAX/Pallas serving stack.
+
+Three layers, one purpose: keep the decode hot path sync-free,
+retrace-free, and inside its modeled VMEM budget —
+
+* :mod:`repro.analysis.lint` — a stdlib-``ast`` lint with JAX-specific
+  rules (``RA001``–``RA005``: host syncs on the hot path, side effects
+  under trace, donation hazards, retrace bombs, unordered-set pytrees).
+  Rule catalogue: ``docs/static_analysis.md``.
+* :mod:`repro.analysis.contracts` — a static Pallas kernel-contract
+  checker that walks every ``pallas_call`` site and the full tuning
+  candidate cross-product without touching a device.
+* :mod:`repro.analysis.sanitizers` — runtime transfer-guard / retrace
+  counters shared by ``tests/sanitizers.py`` and ``benchmarks/serve_bench``.
+
+CLI entry point: ``tools/repro_analyze.py``.
+"""
+from repro.analysis.findings import Finding, findings_to_json
+from repro.analysis.lint import lint_source, lint_paths, lint_tree
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "findings_to_json",
+    "lint_source",
+    "lint_paths",
+    "lint_tree",
+]

@@ -1,0 +1,66 @@
+"""Finding records and ``# repro: noqa[RULE]`` suppression parsing."""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Set
+
+# `# repro: noqa[RA001]` / `# repro: noqa[RA001,RA003]` — rule list is
+# mandatory: a bare blanket suppression would hide new rules silently.
+NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint/contract finding with a stable rule ID and location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+        }
+
+
+@dataclass
+class Suppressions:
+    """Per-line rule suppressions parsed from source comments."""
+
+    by_line: Dict[int, Set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, source: str) -> "Suppressions":
+        by_line: Dict[int, Set[str]] = {}
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = NOQA_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                by_line.setdefault(lineno, set()).update(rules)
+        return cls(by_line)
+
+    def suppressed(self, finding: Finding) -> bool:
+        return finding.rule in self.by_line.get(finding.line, ())
+
+    def apply(self, findings: Iterable[Finding]) -> List[Finding]:
+        return [f for f in findings if not self.suppressed(f)]
+
+
+def findings_to_json(findings: Iterable[Finding], **extra) -> str:
+    """Stable JSON document for CI artifacts / editor integration."""
+    items = [f.to_dict() for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.col, f.rule))]
+    payload = {"findings": items, "count": len(items)}
+    payload.update(extra)
+    return json.dumps(payload, indent=2, sort_keys=True)

@@ -1,0 +1,62 @@
+"""Lint driver: file walking, hot-path classification, noqa filtering."""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List, Optional
+
+from repro.analysis.findings import Finding, Suppressions
+from repro.analysis.rules import run_rules
+
+# Directories whose modules sit on (or feed) the decode hot path: RA001's
+# host-sync scope. Everything else in src/repro is host-side orchestration
+# where syncs are the point (calibration, checkpoint IO, reporting).
+HOT_PATH_DIRS = ("kernels", "models", "serve")
+
+
+def is_hot_path(path: str) -> bool:
+    parts = os.path.normpath(path).replace("\\", "/").split("/")
+    return any(d in parts for d in HOT_PATH_DIRS)
+
+
+def lint_source(source: str, path: str = "<memory>",
+                hot: Optional[bool] = None) -> List[Finding]:
+    """Lint one module's source text. ``hot=None`` infers RA001 scope
+    from the path (see :func:`is_hot_path`)."""
+    if hot is None:
+        hot = is_hot_path(path)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        return [Finding(rule="RA000", path=path, line=err.lineno or 0,
+                        col=(err.offset or 0), message=f"syntax error: "
+                        f"{err.msg}")]
+    findings = run_rules(tree, path, hot)
+    return Suppressions.parse(source).apply(findings)
+
+
+def lint_paths(paths: Iterable[str],
+               root: Optional[str] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in paths:
+        rel = os.path.relpath(path, root) if root else path
+        with open(path, "r", encoding="utf-8") as f:
+            findings.extend(lint_source(f.read(), rel))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def python_files(root: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                   if f.endswith(".py"))
+    return out
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``.py`` file under ``root`` (paths reported relative to
+    ``root``'s parent so findings read ``repro/serve/engine.py:…``)."""
+    base = os.path.dirname(os.path.abspath(root))
+    return lint_paths(python_files(root), root=base)

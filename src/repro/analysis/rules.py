@@ -1,0 +1,507 @@
+"""JAX-specific AST lint rules (stdlib ``ast`` only — no third-party deps).
+
+Rule catalogue (see ``docs/static_analysis.md`` for rationale + examples):
+
+* ``RA001`` — host-sync calls on the decode hot path: ``.item()``,
+  ``.block_until_ready()``, ``jax.device_get``, and ``np.asarray`` /
+  ``np.array`` / ``int()`` / ``float()`` / ``bool()`` applied to a
+  device-valued expression. Scope: ``kernels/``, ``models/``, ``serve/``.
+* ``RA002`` — Python side effects inside traced scopes (``@jax.jit``
+  functions, functions handed to ``jax.jit``/``pallas_call``): ``print``,
+  ``jax.debug.print`` / ``jax.debug.breakpoint`` left enabled, ``global``
+  mutation.
+* ``RA003`` — donation hazards: a buffer passed at a ``donate_argnums``
+  position of a jitted program is read again before being rebound.
+* ``RA004`` — retrace bombs: f-strings or unhashable literals passed as
+  ``static_argnames`` arguments of a jitted program.
+* ``RA005`` — iteration over unordered sets feeding pytree / output
+  construction (nondeterministic structure order).
+
+Design notes: the pass is *per module* and *flow-approximate*. Within a
+function, statements are walked in source order; names assigned from
+``jnp.`` / ``jax.``-rooted expressions (or from calls whose method name
+looks device-returning: ``*decode*``, ``*prefill*``, …) are tainted as
+device values, and explicit host escapes (``jax.device_get``) clear the
+taint. Branches of ``if``/``try`` are walked sequentially and loop
+back-edges are not modeled — precise enough for this tree, cheap enough
+to run on every push.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+RULES: Dict[str, str] = {
+    "RA001": "host sync on the decode hot path",
+    "RA002": "Python side effect inside a traced scope",
+    "RA003": "donated buffer read after donation",
+    "RA004": "non-hashable / f-string static jit argument (retrace bomb)",
+    "RA005": "iteration over an unordered set feeding pytree construction",
+}
+
+# Method-name substrings treated as device-returning at call sites
+# (``self.engine.decode_chunk(...)`` returns device arrays even though the
+# linter can't see across the module boundary).
+_DEVICE_HINTS = ("decode", "prefill", "generate", "forward", "sample")
+
+_UNHASHABLE_NODES = (ast.JoinedStr, ast.List, ast.Dict, ast.Set,
+                     ast.ListComp, ast.SetComp, ast.DictComp,
+                     ast.GeneratorExp)
+
+
+@dataclass
+class JitMeta:
+    """donate/static info recorded from one ``jax.jit(...)`` site."""
+
+    donate: Tuple[int, ...] = ()
+    static_names: Tuple[str, ...] = ()
+
+
+@dataclass
+class ModuleInfo:
+    """Pass-1 facts: import aliases, jit wiring, traced function names."""
+
+    np_aliases: Set[str] = field(default_factory=set)
+    jnp_aliases: Set[str] = field(default_factory=set)
+    jax_aliases: Set[str] = field(default_factory=set)
+    # callee name (bare or dotted tail, e.g. "_decode") -> JitMeta
+    jit_meta: Dict[str, JitMeta] = field(default_factory=dict)
+    # function names whose bodies run under trace (jitted impls, kernels)
+    traced_names: Set[str] = field(default_factory=set)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _root_and_attr(node: ast.AST) -> Tuple[Optional[str], Optional[str]]:
+    """(root name, terminal attr) of an Attribute chain; (name, None) for
+    a bare Name."""
+    if isinstance(node, ast.Name):
+        return node.id, None
+    if isinstance(node, ast.Attribute):
+        attr = node.attr
+        base = node.value
+        while isinstance(base, ast.Attribute):
+            base = base.value
+        if isinstance(base, ast.Name):
+            return base.id, attr
+        return None, attr
+    return None, None
+
+
+def _const_ints(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+def _const_strs(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    return ()
+
+
+def collect_module_info(tree: ast.Module) -> ModuleInfo:
+    info = ModuleInfo()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.asname or alias.name.split(".")[0]
+                if alias.name == "numpy":
+                    info.np_aliases.add(alias.asname or "numpy")
+                elif alias.name == "jax.numpy":
+                    info.jnp_aliases.add(alias.asname or "jax")
+                elif alias.name == "jax" or alias.name.startswith("jax."):
+                    info.jax_aliases.add(name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for alias in node.names:
+                    if alias.name == "numpy":
+                        info.jnp_aliases.add(alias.asname or "numpy")
+            elif node.module == "numpy":
+                # `from numpy import asarray` — treat bare name as np-rooted
+                for alias in node.names:
+                    if alias.name in ("asarray", "array"):
+                        info.np_aliases.add("")  # marker; not resolvable
+
+    def is_jax_jit(fn: ast.AST) -> bool:
+        root, attr = _root_and_attr(fn)
+        return attr == "jit" and root in info.jax_aliases
+
+    def record_jit_call(call: ast.Call, key: Optional[str]):
+        meta = JitMeta()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                meta.donate = _const_ints(kw.value)
+            elif kw.arg == "static_argnames":
+                meta.static_names = _const_strs(kw.value)
+        if call.args:
+            _, impl_attr = _root_and_attr(call.args[0])
+            impl_name = impl_attr or (
+                call.args[0].id if isinstance(call.args[0], ast.Name)
+                else None)
+            if impl_name:
+                info.traced_names.add(impl_name)
+        if key:
+            info.jit_meta[key] = meta
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            val = node.value
+            if isinstance(val, ast.Call) and is_jax_jit(val.func):
+                for tgt in node.targets:
+                    _, tattr = _root_and_attr(tgt)
+                    key = tattr or (tgt.id if isinstance(tgt, ast.Name)
+                                    else None)
+                    record_jit_call(val, key)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if is_jax_jit(dec):
+                    info.traced_names.add(node.name)
+                    info.jit_meta.setdefault(node.name, JitMeta())
+                elif isinstance(dec, ast.Call):
+                    _, dattr = _root_and_attr(dec.func)
+                    if is_jax_jit(dec.func):
+                        info.traced_names.add(node.name)
+                        record_jit_call(dec, node.name)
+                    elif dattr == "partial" or (
+                            isinstance(dec.func, ast.Name)
+                            and dec.func.id == "partial"):
+                        if dec.args and is_jax_jit(dec.args[0]):
+                            info.traced_names.add(node.name)
+                            record_jit_call(dec, node.name)
+        elif isinstance(node, ast.Call):
+            _, attr = _root_and_attr(node.func)
+            if attr == "pallas_call" or (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id == "pallas_call"):
+                if node.args and isinstance(node.args[0], ast.Name):
+                    info.traced_names.add(node.args[0].id)
+    return info
+
+
+class _ScopeWalker:
+    """Source-order walk of one function (or the module body) applying
+    RA001/RA003/RA004/RA005 with local device/set taint tracking."""
+
+    def __init__(self, info: ModuleInfo, path: str, hot: bool,
+                 findings: List[Finding]):
+        self.info = info
+        self.path = path
+        self.hot = hot
+        self.findings = findings
+        self.tainted: Set[str] = set()     # device-valued local names
+        self.set_names: Set[str] = set()   # names bound to set objects
+        self.donated: Dict[str, int] = {}  # name -> line it was donated at
+
+    def flag(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=node.lineno,
+            col=node.col_offset + 1, message=message))
+
+    # -- device-taint classification ---------------------------------------
+    def is_device_expr(self, node: ast.AST) -> bool:
+        for sub in self._walk_skipping_host_escapes(node):
+            if isinstance(sub, ast.Name) and sub.id in self.tainted:
+                return True
+            if isinstance(sub, ast.Attribute):
+                root, _ = _root_and_attr(sub)
+                if root in self.info.jnp_aliases:
+                    return True
+                if root in self.info.jax_aliases and sub.attr != "device_get":
+                    return True
+            if isinstance(sub, ast.Call):
+                _, attr = _root_and_attr(sub.func)
+                if attr and any(h in attr for h in _DEVICE_HINTS):
+                    return True
+        return False
+
+    def _walk_skipping_host_escapes(self, node: ast.AST):
+        """ast.walk, but don't descend into jax.device_get(...) calls or
+        np-conversion calls — their results live on the host."""
+        stack = [node]
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, ast.Call) and self._is_host_escape(cur):
+                continue
+            yield cur
+            stack.extend(ast.iter_child_nodes(cur))
+
+    def _is_host_escape(self, call: ast.Call) -> bool:
+        root, attr = _root_and_attr(call.func)
+        if attr == "device_get" and root in self.info.jax_aliases:
+            return True
+        if attr in ("asarray", "array") and root in self.info.np_aliases:
+            return True
+        return False
+
+    # -- statement sequencing ----------------------------------------------
+    def walk_body(self, body: List[ast.stmt]):
+        for stmt in body:
+            self.walk_stmt(stmt)
+
+    def walk_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs get their own scope walk
+        if isinstance(stmt, ast.Assign):
+            self.visit_loads(stmt.value)
+            dev = self.is_device_expr(stmt.value)
+            is_set = self._is_set_expr(stmt.value)
+            for tgt in stmt.targets:
+                self.bind_target(tgt, dev, is_set)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self.visit_loads(stmt.value)
+                self.bind_target(stmt.target,
+                                 self.is_device_expr(stmt.value),
+                                 self._is_set_expr(stmt.value))
+        elif isinstance(stmt, ast.For):
+            self.visit_loads(stmt.iter)
+            self.check_set_iteration(stmt.iter)
+            self.bind_target(stmt.target, self.is_device_expr(stmt.iter),
+                             False)
+            self.walk_body(stmt.body)
+            self.walk_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self.visit_loads(stmt.test)
+            self.walk_body(stmt.body)
+            self.walk_body(stmt.orelse)
+        elif isinstance(stmt, ast.If):
+            self.visit_loads(stmt.test)
+            self._walk_branch(stmt.body)
+            self._walk_branch(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.visit_loads(item.context_expr)
+            self.walk_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.walk_body(stmt.body)
+            for handler in stmt.handlers:
+                self.walk_body(handler.body)
+            self.walk_body(stmt.orelse)
+            self.walk_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.Return, ast.Expr, ast.Raise,
+                               ast.Assert, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                self.visit_loads(child)
+        # Pass/Break/Continue/Import/Global: nothing to scan here (Global
+        # is handled by the RA002 traced-scope pass).
+
+    def _walk_branch(self, body: List[ast.stmt]):
+        """Walk a conditional branch; if it terminates (return/raise/…),
+        its donations and taints never reach the fall-through code."""
+        if not body:
+            return
+        snap = (dict(self.donated), set(self.tainted), set(self.set_names))
+        self.walk_body(body)
+        if isinstance(body[-1], (ast.Return, ast.Raise, ast.Break,
+                                 ast.Continue)):
+            self.donated, self.tainted, self.set_names = \
+                snap[0], snap[1], snap[2]
+
+    def bind_target(self, tgt: ast.AST, device: bool, is_set: bool):
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for elt in tgt.elts:
+                self.bind_target(elt, device, is_set)
+            return
+        name = _dotted(tgt)
+        if name is None:
+            return
+        self.donated.pop(name, None)
+        if device:
+            self.tainted.add(name)
+        else:
+            self.tainted.discard(name)
+        if is_set:
+            self.set_names.add(name)
+        else:
+            self.set_names.discard(name)
+
+    def _is_set_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Set) or isinstance(node, ast.SetComp):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub)):
+            return self._is_set_expr(node.left) or \
+                self._is_set_expr(node.right)
+        if isinstance(node, ast.Name):
+            return node.id in self.set_names
+        return False
+
+    # -- expression scanning (loads) ---------------------------------------
+    def visit_loads(self, node: ast.AST):
+        # donated reads first, against donations from *earlier* statements
+        # only: a statement's arg reads happen before its own call donates
+        # (`caches = f(caches)` is the sound rebind pattern, not a hazard).
+        self._check_donated_reads(node)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self.check_call(sub)
+            elif isinstance(sub, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                  ast.GeneratorExp)):
+                for gen in sub.generators:
+                    self.check_set_iteration(gen.iter)
+
+    def _check_donated_reads(self, node: ast.AST):
+        for sub in ast.walk(node):
+            name = _dotted(sub) if isinstance(
+                sub, (ast.Name, ast.Attribute)) else None
+            if name in self.donated and isinstance(
+                    getattr(sub, "ctx", None), ast.Load):
+                line = self.donated.pop(name)
+                self.flag("RA003", sub,
+                          f"`{name}` was donated to a jitted program at "
+                          f"line {line} and read again before being "
+                          f"rebound — donated buffers are invalidated by "
+                          f"the call")
+
+    def check_call(self, call: ast.Call):
+        root, attr = _root_and_attr(call.func)
+        fname = call.func.id if isinstance(call.func, ast.Name) else None
+
+        # RA001 — host syncs (hot-path scope only)
+        if self.hot:
+            if attr == "item" and not call.args:
+                self.flag("RA001", call,
+                          "`.item()` forces a device→host sync")
+            elif attr == "block_until_ready":
+                self.flag("RA001", call,
+                          "`.block_until_ready()` blocks the dispatch "
+                          "pipeline")
+            elif attr == "device_get" and root in self.info.jax_aliases:
+                self.flag("RA001", call,
+                          "`jax.device_get` is a device→host sync")
+            elif attr in ("asarray", "array") \
+                    and root in self.info.np_aliases and call.args \
+                    and self.is_device_expr(call.args[0]):
+                self.flag("RA001", call,
+                          f"`np.{attr}` of a device value is an implicit "
+                          f"device→host sync")
+            elif fname in ("int", "float", "bool") \
+                    and len(call.args) == 1 \
+                    and self.is_device_expr(call.args[0]):
+                self.flag("RA001", call,
+                          f"`{fname}()` of a device value is an implicit "
+                          f"device→host sync")
+
+        # RA003 / RA004 — jitted-program call sites
+        key = attr or fname
+        meta = self.info.jit_meta.get(key) if key else None
+        if meta is not None:
+            for idx in meta.donate:
+                if idx < len(call.args):
+                    name = _dotted(call.args[idx])
+                    if name:
+                        self.donated[name] = call.lineno
+            for kw in call.keywords:
+                if kw.arg in meta.static_names and isinstance(
+                        kw.value, _UNHASHABLE_NODES):
+                    what = ("an f-string"
+                            if isinstance(kw.value, ast.JoinedStr)
+                            else "an unhashable literal")
+                    self.flag("RA004", kw.value,
+                              f"static jit arg `{kw.arg}` built from "
+                              f"{what} — every call compiles a new "
+                              f"program (retrace bomb)")
+
+    def check_set_iteration(self, iter_node: ast.AST):
+        if self._is_set_expr(iter_node):
+            self.flag("RA005", iter_node,
+                      "iterating an unordered set — ordering is "
+                      "nondeterministic across processes; sort first if "
+                      "the order feeds pytree/output structure")
+
+
+class _TracedScopeChecker(ast.NodeVisitor):
+    """RA002: side effects in functions that run under trace."""
+
+    def __init__(self, info: ModuleInfo, path: str,
+                 findings: List[Finding]):
+        self.info = info
+        self.path = path
+        self.findings = findings
+        self._traced_depth = 0
+
+    def flag(self, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule="RA002", path=self.path, line=node.lineno,
+            col=node.col_offset + 1, message=message))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        traced = node.name in self.info.traced_names
+        if traced:
+            self._traced_depth += 1
+        self.generic_visit(node)
+        if traced:
+            self._traced_depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        if self._traced_depth > 0:
+            root, attr = _root_and_attr(node.func)
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                self.flag(node, "`print` inside a traced scope runs at "
+                                "trace time only (or forces a callback) — "
+                                "remove or use jax.debug.print behind a "
+                                "debug flag")
+            elif attr in ("print", "breakpoint") and root in \
+                    self.info.jax_aliases:
+                self.flag(node, f"`jax.debug.{attr}` left enabled in a "
+                                f"traced scope — every decode step pays "
+                                f"for the host callback")
+        self.generic_visit(node)
+
+    def visit_Global(self, node: ast.Global):
+        if self._traced_depth > 0:
+            names = ", ".join(node.names)
+            self.flag(node, f"`global {names}` inside a traced scope — "
+                            f"mutation runs at trace time, not per call")
+        self.generic_visit(node)
+
+
+def run_rules(tree: ast.Module, path: str, hot: bool) -> List[Finding]:
+    """All rules over one parsed module; returns unsuppressed findings."""
+    info = collect_module_info(tree)
+    findings: List[Finding] = []
+
+    # RA001/RA003/RA004/RA005 — one scope walk per function + module body
+    module_walker = _ScopeWalker(info, path, hot, findings)
+    module_walker.walk_body([s for s in tree.body
+                             if not isinstance(s, (ast.FunctionDef,
+                                                   ast.AsyncFunctionDef,
+                                                   ast.ClassDef))])
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walker = _ScopeWalker(info, path, hot, findings)
+            walker.walk_body(node.body)
+
+    # RA002 — traced-scope side effects
+    _TracedScopeChecker(info, path, findings).visit(tree)
+    return findings

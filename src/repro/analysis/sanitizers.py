@@ -1,0 +1,143 @@
+"""Runtime sanitizers: retrace counting and implicit-transfer guarding.
+
+Shared by the ``tests/sanitizers.py`` pytest plugin and the
+``serve_bench`` steady-state audit, so the test suite and the benchmark
+enforce the same two invariants on continuous decode after warmup:
+
+* **zero recompiles** — every scheduler step reuses compiled programs
+  (counted via the ``jax.monitoring`` backend-compile event, which fires
+  once per compilation and never on cache hits);
+* **zero implicit transfers** — the only device↔host crossings are the
+  explicit ``jax.device_get`` readbacks / ``jnp.asarray`` uploads the
+  scheduler owns (enforced with ``jax.transfer_guard("disallow")``,
+  which permits explicit transfers and aborts on implicit ones).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Iterator, List
+
+import jax
+
+# Fired once per backend compilation (trace -> lower -> compile); cache
+# hits emit nothing, so deltas of this counter count retraces exactly.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_compile_count = 0
+_listener_installed = False
+
+
+def _on_event_duration(event: str, duration: float, **kwargs) -> None:
+    global _compile_count
+    if event == _COMPILE_EVENT:
+        _compile_count += 1
+
+
+def _ensure_listener() -> None:
+    # One process-lifetime listener; jax.monitoring has no public
+    # unregister, so contexts snapshot the counter instead.
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _listener_installed = True
+
+
+def compile_count() -> int:
+    """Total backend compilations observed so far in this process."""
+    _ensure_listener()
+    return _compile_count
+
+
+@dataclass
+class CompileCounter:
+    """Snapshot-delta view over the process compile counter."""
+
+    start: int = 0
+    end: int = 0
+    closed: bool = False
+
+    @property
+    def count(self) -> int:
+        return (self.end if self.closed else compile_count()) - self.start
+
+
+@contextlib.contextmanager
+def compile_counter() -> Iterator[CompileCounter]:
+    """Count backend compilations inside the block::
+
+        with compile_counter() as cc:
+            scheduler.run()
+        assert cc.count == 0
+    """
+    _ensure_listener()
+    counter = CompileCounter(start=compile_count())
+    try:
+        yield counter
+    finally:
+        counter.end = compile_count()
+        counter.closed = True
+
+
+@contextlib.contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Forbid implicit device↔host transfers inside the block.
+
+    Explicit crossings (``jax.device_get``, ``jax.device_put``,
+    ``jnp.asarray`` of host data) stay legal; implicit ones (a numpy
+    array silently uploaded into a jitted call, ``int()`` of a device
+    scalar) raise at the offending call site.
+    """
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@dataclass
+class SteadyStateReport:
+    """Result of :func:`audit_steady_state`."""
+
+    recompiles: int
+    implicit_transfers: int
+    steps: int
+    errors: List[str] = field(default_factory=list)
+
+    @property
+    def clean(self) -> bool:
+        return self.recompiles == 0 and self.implicit_transfers == 0
+
+    @property
+    def h2d_transfers_per_step(self) -> float:
+        return self.implicit_transfers / max(1, self.steps)
+
+
+def audit_steady_state(make_scheduler, submit) -> SteadyStateReport:
+    """Warm up, then replay the identical workload under the sanitizers.
+
+    ``make_scheduler()`` must build a fresh scheduler over a *shared,
+    already-constructed* engine (so jit caches persist across the two
+    runs) and ``submit(scheduler)`` enqueues the workload. The first
+    run compiles every program the workload needs; the second run is the
+    steady state under audit: it must hit only compiled programs and
+    perform only explicit transfers.
+    """
+    warm = make_scheduler()
+    submit(warm)
+    warm.run()
+
+    sched = make_scheduler()
+    submit(sched)
+    steps = 0
+    errors: List[str] = []
+    implicit = 0
+    with compile_counter() as cc:
+        try:
+            with no_implicit_transfers():
+                while sched.step():
+                    steps += 1
+        except Exception as err:  # transfer guard aborts at 1st violation
+            implicit = 1
+            errors.append(f"{type(err).__name__}: {err}")
+    return SteadyStateReport(recompiles=cc.count,
+                             implicit_transfers=implicit,
+                             steps=max(steps, 1), errors=errors)

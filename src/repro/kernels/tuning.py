@@ -34,6 +34,16 @@ VMEM_BUDGET = 8 * 1024 * 1024
 # tiled path that recomputing the quant per n-tile stops paying for itself.
 DECODE_M_MAX = 16
 
+# Candidate lattices the block selectors search, exported as data so the
+# static kernel-contract checker (``repro.analysis.contracts``) can walk
+# the *entire* cross-product offline: every (bm, bn, bk) / bn candidate a
+# selector could ever return must satisfy the kernel contracts, not just
+# the ones today's serving shapes happen to hit.
+FUSED_BN_CANDIDATES = (2048, 1024, 512, 256, 128)
+GEMM_BM_CANDIDATES = (128, 256, 512)
+GEMM_BN_CANDIDATES = (128, 256, 512)
+GEMM_BK_CANDIDATES = (256, 512, 1024)
+
 
 def vmem_bytes(bm: int, bn: int, bk: int, r: int) -> int:
     """Per-grid-step VMEM working set of the tiled w4a8 GEMM kernel."""
@@ -78,7 +88,7 @@ def fused_bn(m: int, k: int, n: int, r: int,
              budget: int = VMEM_BUDGET) -> int | None:
     """Largest n-tile (multiple of 128, capped at n) that keeps the fused
     kernel's working set under budget; None if even bn=128 doesn't fit."""
-    for bn in (2048, 1024, 512, 256, 128):
+    for bn in FUSED_BN_CANDIDATES:
         bn_ = min(bn, n)
         if fused_vmem_bytes(m, k, bn_, r) <= budget:
             return bn_
@@ -102,7 +112,7 @@ def gather_vmem_bytes(k: int, bn: int, r: int, ra: int) -> int:
 def fused_gather_bn(k: int, n: int, r: int, ra: int,
                     budget: int = VMEM_BUDGET) -> int | None:
     """Largest n-tile that keeps the gathered fused kernel under budget."""
-    for bn in (2048, 1024, 512, 256, 128):
+    for bn in FUSED_BN_CANDIDATES:
         bn_ = min(bn, n)
         if gather_vmem_bytes(k, bn_, r, ra) <= budget:
             return bn_
@@ -183,9 +193,9 @@ def select_gemm_blocks(m: int, k: int, n: int, r: int,
     if hit is not None:
         return hit
     best, best_ai = (256, 256, 512), -1.0
-    for bm in (128, 256, 512):
-        for bn in (128, 256, 512):
-            for bk in (256, 512, 1024):
+    for bm in GEMM_BM_CANDIDATES:
+        for bn in GEMM_BN_CANDIDATES:
+            for bk in GEMM_BK_CANDIDATES:
                 bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
                 vm = vmem_bytes(bm_, bn_, bk_, r)
                 if vm > budget:

@@ -72,8 +72,10 @@ def _extrapolate(c1, c2, g_full: int):
         a = v1 - b
         return max(a + b * g_full, 0.0)
     kinds = set(c1["coll"]) | set(c2["coll"])
+    # sorted: set order is hash-seed dependent and this dict lands in the
+    # results JSON — keep report diffs stable across processes
     coll = {kk: lin(c1["coll"].get(kk, 0.0), c2["coll"].get(kk, 0.0))
-            for kk in kinds}
+            for kk in sorted(kinds)}
     return {"flops": lin(c1["flops"], c2["flops"]),
             "bytes": lin(c1["bytes"], c2["bytes"]),
             "coll": coll}

@@ -37,7 +37,9 @@ from __future__ import annotations
 
 import zlib
 from collections import OrderedDict, deque
+from functools import partial
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -272,12 +274,26 @@ def load_adapter(params, factors, slot: int):
         if path not in factors:
             raise KeyError(f"adapter factors missing for {path}")
         a_s, b = factors[path]
+        a_s = jax.device_put(np.asarray(a_s, np.float32))
+        b = jax.device_put(np.asarray(b, np.float32))
         leaf = dict(leaf)
-        leaf["alb"] = leaf["alb"].at[..., slot, :, :].set(a_s)
-        leaf["ala"] = leaf["ala"].at[..., slot, :, :].set(b)
+        leaf["alb"], leaf["ala"] = _pool_write(
+            leaf["alb"], leaf["ala"], a_s, b, slot=slot)
         return leaf
 
     return _map_quant_leaves(params, write)
+
+
+@partial(jax.jit, static_argnames=("slot",))
+def _pool_write(alb, ala, a_s, b, *, slot):
+    # Jitted so the slot index is a static constant: an eager
+    # ``.at[..., slot, :, :].set`` would upload the index (and the axis
+    # bound from index normalization) as implicit h2d scalar transfers on
+    # the serving loop, tripping the steady-state transfer guard. Inside
+    # jit the scatter is baked at compile time; slot swaps at steady state
+    # reuse the cached executable (slots are few and shapes fixed).
+    return (alb.at[..., slot, :, :].set(a_s),
+            ala.at[..., slot, :, :].set(b))
 
 
 # ---------------------------------------------------------------------------

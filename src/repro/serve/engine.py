@@ -545,27 +545,41 @@ class Engine:
             routing; 0 = explicit base). Requires installed pools.
 
         Returns ``(next_tok, caches, bad)``: the greedily sampled first
-        token ([] int32), the updated cache tree, and a python bool that
-        is True when the sampled logits contain a non-finite value — the
-        scheduler must then quarantine the request (and its freshly
-        written pages) instead of emitting the garbage token.
+        token as a **host int**, the updated cache tree, and a python bool
+        that is True when the sampled logits contain a non-finite value —
+        the scheduler must then quarantine the request (and its freshly
+        written pages) instead of emitting the garbage token. Token and
+        guard bit come back through one explicit ``jax.device_get`` — the
+        admission-time sync point; steady-state decode chunks never sync
+        (see ``Scheduler.step``).
         """
         self._check_ragged_supported()
+        # jax.device_put, not jnp.asarray: scalar/list uploads through
+        # jnp.asarray are *implicit* transfers (blocked under
+        # jax.transfer_guard("disallow"), which the serving sanitizers run
+        # steady-state paths under); device_put is the explicit form.
         aslot = (None if adapter_slot is None
-                 else jnp.asarray([adapter_slot], jnp.int32))
+                 else jax.device_put(np.asarray([adapter_slot], np.int32)))
         if self.scfg.kv_layout == "paged":
             if block_table is None:
                 raise ValueError("paged prefill_slot needs a block_table")
             last, caches = self._prefill_slot_paged(
-                self.params, tokens, jnp.asarray(length, jnp.int32),
-                jnp.asarray(start, jnp.int32), caches,
-                jnp.asarray(block_table, jnp.int32)[None], aslot)
+                self.params, tokens, jax.device_put(np.int32(length)),
+                jax.device_put(np.int32(start)), caches,
+                jax.device_put(np.asarray(block_table, np.int32)[None]),
+                aslot)
         else:
             last, caches = self._prefill_slot(
-                self.params, tokens, jnp.asarray(length, jnp.int32), caches,
-                jnp.asarray(slot, jnp.int32), aslot)
-        bad = not bool(jnp.all(jnp.isfinite(last)))
-        return jnp.argmax(last, axis=-1).astype(jnp.int32), caches, bad
+                self.params, tokens, jax.device_put(np.int32(length)),
+                caches, jax.device_put(np.int32(slot)), aslot)
+        tok_dev = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        ok_dev = jnp.all(jnp.isfinite(last))
+        # One explicit transfer for both scalars: the sampled token must
+        # reach the host scheduler to enter its Python token list, and the
+        # finite guard gates quarantine. Admission-time only — legal under
+        # jax.transfer_guard("disallow").
+        tok, ok = jax.device_get((tok_dev, ok_dev))  # repro: noqa[RA001] admission sync point: token + finite guard leave the device here by design
+        return int(tok), caches, not bool(ok)
 
     def decode_chunk(self, tok, caches, key, done, pos, n_steps: int,
                      block_tables=None, adapter_slots=None):
@@ -593,14 +607,16 @@ class Engine:
         logits went non-finite at any step of the chunk (their tokens are
         garbage and must be quarantined, not emitted).
         """
+        # explicit uploads (see prefill_slot): these run every chunk under
+        # the transfer sanitizer's disallow guard
         aslots = (None if adapter_slots is None
-                  else jnp.asarray(adapter_slots, jnp.int32))
+                  else jax.device_put(np.asarray(adapter_slots, np.int32)))
         if self.scfg.kv_layout == "paged":
             if block_tables is None:
                 raise ValueError("paged decode_chunk needs block_tables")
             return self._decode_chunk(
                 self.params, tok, caches, key, done, pos,
-                jnp.asarray(block_tables, jnp.int32), aslots,
+                jax.device_put(np.asarray(block_tables, np.int32)), aslots,
                 n_steps=n_steps)
         return self._decode_chunk(self.params, tok, caches, key, done, pos,
                                   None, aslots, n_steps=n_steps)

@@ -558,7 +558,7 @@ class Scheduler:
             if bad:
                 self._quarantine_prefill(slot, handle, [])
                 continue
-            if self._finish_prefill(slot, handle, int(tok), prompt.size):
+            if self._finish_prefill(slot, handle, int(tok), prompt.size):  # repro: noqa[RA001] tok is already a host int (prefill_slot owns the admission sync)
                 return True
         return False
 
@@ -637,7 +637,7 @@ class Scheduler:
                 st = self._adapter_prefix.setdefault(aid, [0, 0])
                 st[0] += start
                 st[1] += plen
-            if self._finish_prefill(slot, handle, int(tok), plen):
+            if self._finish_prefill(slot, handle, int(tok), plen):  # repro: noqa[RA001] tok is already a host int (prefill_slot owns the admission sync)
                 return True
         return False
 
@@ -814,10 +814,17 @@ class Scheduler:
             return self.pending > 0
         toks, self._caches, self._key, done, pos, bad = out
         self.chunks_run += 1
+        # The designed once-per-chunk host readback: chunk tokens, done
+        # mask, KV frontiers and the finite-guard bits cross to the host
+        # in ONE explicit transfer. pos is each slot's true KV frontier
+        # (the all-done early-exit can freeze it mid-chunk). Explicit
+        # device_get keeps the steady-state path legal under
+        # jax.transfer_guard("disallow") — anything else syncing in this
+        # loop is a bug the transfer sanitizer catches.
+        toks, done, pos, bad = jax.device_get((toks, done, pos, bad))  # repro: noqa[RA001] the per-chunk readback: one explicit transfer per decode chunk by design
         toks = np.asarray(toks)                       # [slots, chunk]
-        # adopt the device carry: pos is each slot's true KV frontier (the
-        # all-done early-exit can freeze it mid-chunk). np.array: writable
-        # copies (np.asarray of a jax array is a read-only view).
+        # np.array: writable copies (device_get may return read-only
+        # zero-copy views on CPU backends)
         self._done = np.array(done)
         self._pos = np.array(pos)
         self._tok = toks[:, -1].astype(np.int32)

@@ -4,10 +4,16 @@ import sys
 # smoke tests / benches must see ONE device; only the dry-run sets 512.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+# runtime sanitizer fixtures (retrace_counter / transfer_guard /
+# steady_state_audit) — imported so pytest discovers them everywhere
+from sanitizers import (retrace_counter, transfer_guard,  # noqa: E402,F401
+                        steady_state_audit)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,35 @@
+"""Pytest plugin: runtime sanitizer fixtures for the serving stack.
+
+Imported by ``tests/conftest.py`` so every test can assert the two
+steady-state invariants the static analyzer can't prove alone:
+
+* ``retrace_counter`` — context manager counting backend compilations
+  (``with retrace_counter() as cc: ...; assert cc.count == 0``);
+* ``transfer_guard`` — context manager forbidding *implicit* device↔host
+  transfers (explicit ``jax.device_get``/``jnp.asarray`` stay legal);
+* ``steady_state_audit`` — warm-up-then-replay driver returning a
+  :class:`repro.analysis.sanitizers.SteadyStateReport`.
+
+The mechanisms live in ``repro.analysis.sanitizers`` and are shared with
+``benchmarks/serve_bench.py``, which records the same two counters into
+the ``serve_bench/v6`` schema — CI enforces zero on both paths.
+"""
+import pytest
+
+from repro.analysis.sanitizers import (audit_steady_state, compile_counter,
+                                       no_implicit_transfers)
+
+
+@pytest.fixture
+def retrace_counter():
+    return compile_counter
+
+
+@pytest.fixture
+def transfer_guard():
+    return no_implicit_transfers
+
+
+@pytest.fixture
+def steady_state_audit():
+    return audit_steady_state

@@ -1,18 +1,20 @@
 """Unit tests for the ``serve_bench`` report validator.
 
 The validator is the CI gate between a benchmark run and the checked-in
-baseline; it must accept every released schema generation (v1–v5) and
+baseline; it must accept every released schema generation (v1–v6) and
 reject malformed payloads with errors that name the offending field —
 a silent pass here would let a NaN or truncated report become the perf
-baseline subsequent PRs are measured against.
+baseline subsequent PRs are measured against. v6 adds the steady-state
+sanitizer counters to continuous rows and pins them to exactly zero.
 """
 import math
 
 import pytest
 
 from benchmarks.serve_bench import (ADAPTER_ROW_FIELDS, CONT_ROW_FIELDS,
-                                    KV_ROW_FIELDS, PREFIX_ROW_FIELDS,
-                                    ROW_FIELDS, validate)
+                                    CONT_ROW_FIELDS_V6, KV_ROW_FIELDS,
+                                    PREFIX_ROW_FIELDS, ROW_FIELDS,
+                                    SANITIZER_FIELDS, validate)
 
 
 def _static_row(mode="fp", **over):
@@ -25,13 +27,17 @@ def _static_row(mode="fp", **over):
     return row
 
 
-def _cont_row(mode="fp", **over):
+def _cont_row(mode="fp", v6=False, **over):
     row = {"mode": mode, "requests": 8, "batch_slots": 2, "chunk": 4,
            "prompt_len_min": 2, "prompt_len_max": 10, "new_tokens_min": 2,
            "new_tokens_max": 12, "useful_tokens": 64, "static_s": 0.2,
            "continuous_s": 0.1, "static_goodput_tok_s": 320.0,
            "goodput_tok_s": 640.0, "goodput_speedup": 2.0}
     assert set(row) == set(CONT_ROW_FIELDS)
+    if v6:
+        row.update({"recompiles_after_warmup": 0,
+                    "h2d_transfers_per_step": 0.0})
+        assert set(row) == set(CONT_ROW_FIELDS_V6)
     row.update(over)
     return row
 
@@ -77,14 +83,16 @@ def _report(schema):
                      "vocab_size": 128},
            "decode_loop_default": "scan",
            "rows": [_static_row("fp"), _static_row("w4a8_aser")]}
-    if schema in ("serve_bench/v2", "serve_bench/v3", "serve_bench/v4",
-                  "serve_bench/v5"):
-        rep["continuous_rows"] = [_cont_row("fp"), _cont_row("w4a8_aser")]
-    if schema in ("serve_bench/v3", "serve_bench/v4", "serve_bench/v5"):
+    if schema != "serve_bench/v1":
+        v6 = schema == "serve_bench/v6"
+        rep["continuous_rows"] = [_cont_row("fp", v6=v6),
+                                  _cont_row("w4a8_aser", v6=v6)]
+    if schema not in ("serve_bench/v1", "serve_bench/v2"):
         rep["prefix_rows"] = [_prefix_row("fp"), _prefix_row("w4a8_aser")]
-    if schema in ("serve_bench/v4", "serve_bench/v5"):
+    if schema not in ("serve_bench/v1", "serve_bench/v2",
+                      "serve_bench/v3"):
         rep["kv_rows"] = [_kv_row("fp"), _kv_row("w4a8_aser")]
-    if schema == "serve_bench/v5":
+    if schema in ("serve_bench/v5", "serve_bench/v6"):
         rep["adapter_rows"] = [_adapter_row()]
     return rep
 
@@ -93,7 +101,7 @@ def _report(schema):
 
 @pytest.mark.parametrize("schema", ["serve_bench/v1", "serve_bench/v2",
                                     "serve_bench/v3", "serve_bench/v4",
-                                    "serve_bench/v5"])
+                                    "serve_bench/v5", "serve_bench/v6"])
 def test_every_released_schema_validates(schema):
     assert validate(_report(schema)) is True
 
@@ -230,4 +238,38 @@ def test_v4_fixture_ignores_adapter_rows():
     """A v4 file with stray adapter rows is still just a v4 file."""
     rep = _report("serve_bench/v4")
     rep["adapter_rows"] = []               # would fail v5 validation
+    assert validate(rep) is True
+
+
+# -- steady-state sanitizer counters (v6) ------------------------------------
+
+def test_v6_requires_sanitizer_fields():
+    rep = _report("serve_bench/v6")
+    for field in SANITIZER_FIELDS:
+        broken = _report("serve_bench/v6")
+        del broken["continuous_rows"][0][field]
+        with pytest.raises(ValueError, match=f"missing fields.*{field}"):
+            validate(broken)
+    assert validate(rep) is True
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("recompiles_after_warmup", 1),
+    ("recompiles_after_warmup", 3),
+    ("h2d_transfers_per_step", 0.25),
+    ("h2d_transfers_per_step", 1.0),
+])
+def test_v6_rejects_nonzero_sanitizer_counters(field, bad):
+    rep = _report("serve_bench/v6")
+    rep["continuous_rows"][1][field] = bad
+    with pytest.raises(ValueError, match="steady-state decode is not "
+                                         "clean"):
+        validate(rep)
+
+
+def test_v5_fixture_ignores_sanitizer_fields():
+    """Pre-v6 baselines neither need the counters nor get them enforced:
+    a v5 file with a stray nonzero counter is still just a v5 file."""
+    rep = _report("serve_bench/v5")
+    rep["continuous_rows"][0]["recompiles_after_warmup"] = 7
     assert validate(rep) is True

@@ -254,16 +254,20 @@ def test_serve_bench_validator():
     sb = importlib.import_module("benchmarks.serve_bench")
     row = {f: 1.0 for f in sb.ROW_FIELDS}
     crow = {f: 1.0 for f in sb.CONT_ROW_FIELDS}
+    # v6 rows carry the steady-state sanitizer counters, pinned to zero
+    crow6 = dict({f: 1.0 for f in sb.CONT_ROW_FIELDS_V6},
+                 **{f: 0 for f in sb.SANITIZER_FIELDS})
     prow = {f: 1.0 for f in sb.PREFIX_ROW_FIELDS}
     krow = {f: 1.0 for f in sb.KV_ROW_FIELDS}
     arow = {f: 1.0 for f in sb.ADAPTER_ROW_FIELDS}
     arow.update(mode="w4a8_aser", token_exact=True)
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
+    crows6 = [dict(crow6, mode="fp"), dict(crow6, mode="w4a8_aser")]
     prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
     krows = [dict(krow, mode="fp"), dict(krow, mode="w4a8_aser")]
     good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
-            "continuous_rows": crows, "prefix_rows": prows,
+            "continuous_rows": crows6, "prefix_rows": prows,
             "kv_rows": krows, "adapter_rows": [arow]}
     assert sb.validate(good)
     # v1/v2/v3/v4 generations must keep validating
@@ -275,6 +279,9 @@ def test_serve_bench_validator():
     assert sb.validate({"schema": sb.SCHEMA_V4, "smoke": True, "rows": rows,
                         "continuous_rows": crows, "prefix_rows": prows,
                         "kv_rows": krows})
+    assert sb.validate({"schema": sb.SCHEMA_V5, "smoke": True, "rows": rows,
+                        "continuous_rows": crows, "prefix_rows": prows,
+                        "kv_rows": krows, "adapter_rows": [arow]})
     with pytest.raises(ValueError):
         sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):

@@ -8,7 +8,11 @@ Two checks, so the docs cannot silently rot as the code moves:
    ``#anchor`` fragments must match a heading (GitHub slug rules) in the
    target file. External (http/https/mailto) links are skipped — CI has no
    business depending on the network.
-2. **Quickstart smoke** (``--run-quickstart``): every ``PYTHONPATH=src
+2. **Rule-catalogue check** (always): every analyzer rule ID declared in
+   ``repro.analysis`` (``RA…``/``KC…``) must have a matching heading in
+   ``docs/static_analysis.md``, and every documented rule must exist in
+   the code — findings point users at the catalogue, so it cannot rot.
+3. **Quickstart smoke** (``--run-quickstart``): every ``PYTHONPATH=src
    python …`` command inside the README's ```bash fences is executed from
    the repo root and must exit 0. The README is written so each command is
    seconds-to-a-minute scale (``--smoke`` flags, synthetic data); a
@@ -92,6 +96,36 @@ def check_links() -> list:
     return errors
 
 
+def check_rule_anchors() -> list:
+    """Every analyzer rule ID (RA…/KC… in repro.analysis) must have its
+    own heading in docs/static_analysis.md — the catalogue the findings
+    point users at cannot silently fall behind the code."""
+    errors = []
+    rule_ids = set()
+    for mod in ("rules.py", "contracts.py"):
+        path = os.path.join(ROOT, "src", "repro", "analysis", mod)
+        with open(path) as f:
+            # only catalogue keys ("RA001": …), not IDs in prose
+            rule_ids |= set(re.findall(r'"([A-Z]{2}\d{3})":', f.read()))
+    if not rule_ids:
+        return ["repro.analysis: no rule IDs found — catalogue check "
+                "would be vacuous"]
+    doc = os.path.join(ROOT, "docs", "static_analysis.md")
+    if not os.path.exists(doc):
+        return ["docs/static_analysis.md missing (the rule catalogue)"]
+    with open(doc) as f:
+        headed = {m.group(1) for m in re.finditer(
+            r"^#{1,6}\s+([A-Z]{2}\d{3})\b", _strip_fences(f.read()),
+            re.MULTILINE)}
+    for rule in sorted(rule_ids - headed):
+        errors.append(f"docs/static_analysis.md: rule {rule} has no "
+                      f"'### {rule} — …' heading")
+    for rule in sorted(headed - rule_ids):
+        errors.append(f"docs/static_analysis.md: heading for {rule} but "
+                      f"no such rule in repro.analysis")
+    return errors
+
+
 def quickstart_commands() -> list:
     with open(os.path.join(ROOT, "README.md")) as f:
         text = f.read()
@@ -140,7 +174,7 @@ def main():
                     help="also execute the README quickstart commands "
                          "(smoke-scale) from the repo root")
     args = ap.parse_args()
-    errors = check_links()
+    errors = check_links() + check_rule_anchors()
     n_cmds = len(quickstart_commands())
     if n_cmds == 0:
         errors.append("README.md: no PYTHONPATH=src quickstart commands "

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""repro-analyze: JAX/Pallas hazard lint + static kernel-contract checks.
+
+Runs two stdlib-only passes over the tree (no device, no third-party
+deps — ruff covers generic Python hygiene in CI):
+
+1. the AST lint of ``repro.analysis.rules`` (RA001–RA005: hot-path host
+   syncs, traced side effects, donation hazards, retrace bombs,
+   unordered-set pytrees), with ``# repro: noqa[RULE]`` suppression;
+2. the kernel-contract checker of ``repro.analysis.contracts``
+   (KC001–KC005: VMEM budgets, divisibility, dtype contracts, pallas_call
+   registry, cost-model consistency) over the full tuning candidate
+   cross-product.
+
+Exit status: 0 when clean, 1 when any finding survives (``--strict`` is
+the default and is accepted for CI-readability). ``--json`` emits a
+machine-readable report. Rule catalogue: docs/static_analysis.md.
+
+Usage::
+
+    PYTHONPATH=src python tools/repro_analyze.py --strict
+    PYTHONPATH=src python tools/repro_analyze.py --json out.json src/repro
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis.contracts import CONTRACT_RULES, check_kernel_contracts  # noqa: E402
+from repro.analysis.findings import findings_to_json  # noqa: E402
+from repro.analysis.lint import lint_tree  # noqa: E402
+from repro.analysis.rules import RULES  # noqa: E402
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("root", nargs="?",
+                        default=os.path.join(REPO_ROOT, "src", "repro"),
+                        help="tree to lint (default: src/repro)")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit nonzero on any finding (the default; "
+                             "kept explicit for CI readability)")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write findings as JSON ('-' for stdout)")
+    parser.add_argument("--no-lint", action="store_true",
+                        help="skip the AST lint pass")
+    parser.add_argument("--no-contracts", action="store_true",
+                        help="skip the kernel-contract pass")
+    parser.add_argument("--rules", action="store_true",
+                        help="print the rule catalogue and exit")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        for rule, desc in sorted({**RULES, **CONTRACT_RULES}.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    findings = []
+    if not args.no_lint:
+        findings += lint_tree(args.root)
+    if not args.no_contracts:
+        kernels_dir = os.path.join(args.root, "kernels")
+        if os.path.isdir(kernels_dir):
+            findings += check_kernel_contracts(kernels_dir)
+
+    if args.json:
+        doc = findings_to_json(findings, root=os.path.relpath(
+            args.root, REPO_ROOT))
+        if args.json == "-":
+            print(doc)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(doc + "\n")
+
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"repro-analyze: {n} finding{'s' if n != 1 else ''}"
+          f"{'' if n else ' — clean'}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
