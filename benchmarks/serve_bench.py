@@ -54,10 +54,35 @@ Two workloads:
   The validator rejects any nonzero value — a retrace bomb or implicit
   host→device upload on the decode path fails the bench outright.
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v6`` =
-v5's rows + sanitizer counters; the validator still accepts v1–v5 files)
-so subsequent PRs have a perf trajectory to beat; ``--smoke`` runs a
-seconds-scale variant with the same schema for CI.
+  The **latency** leg (``latency_rows``, serve_bench/v7) is the
+  tail-latency story chunked prefill exists for: a heavy-tailed open-loop
+  arrival pattern — waves of short requests with long-prompt stragglers
+  arriving on a fixed token-time cadence — served twice on the paged
+  engine: one-shot prefill vs chunked + token-budgeted steps
+  (``ServeConfig(prefill_chunk, step_token_budget)``). It is measured in
+  deterministic **token-time**: the scheduler's injectable clock advances
+  by each step's dispatched token positions (bucketed prompt widths for
+  one-shot admission, ``last_step_tokens`` under a budget, decode chunks
+  for occupied slots — the identical cost model the head-of-line
+  regression test pins), so TTFT includes real queueing and the
+  percentiles are exactly reproducible. CPU wall-clock would measure
+  Python dispatch overhead, not scheduling policy — at toy scale the
+  chunked leg's extra dispatches swamp the padding it saves, which is why
+  the wall seconds are reported unguarded while the gates ride on
+  token-time. Each row records exact nearest-rank p50/p95/p99 TTFT and
+  TPOT for both legs in token units (``repro.serve.telemetry``), goodput
+  as useful tokens per dispatched position (utilization — one-shot
+  prefill pays power-of-two bucket padding the chunked leg avoids), the
+  p95-TTFT speedup, and the chunked leg's steady-state sanitizer counters
+  (the chunk loop must add zero recompiles and zero implicit transfers).
+  The non-smoke acceptance gates: chunked p95 TTFT must beat one-shot
+  (``ttft_p95_speedup >= 1``) at equal-or-better goodput
+  (``goodput_ratio >= 1``).
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v7`` =
+v6's rows + chunked-vs-oneshot latency rows; the validator still accepts
+v1–v6 files) so subsequent PRs have a perf trajectory to beat;
+``--smoke`` runs a seconds-scale variant with the same schema for CI.
 Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
 meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
 """
@@ -82,9 +107,12 @@ from repro.quant import calibrate, quantize_model, reduce_shared
 from repro.runtime import RuntimeConfig
 from repro.serve.engine import (Engine, ServeConfig, blocks_for_hbm_budget,
                                 kv_page_bytes)
-from repro.serve.scheduler import Scheduler
+from repro.serve.lifecycle import RequestStatus
+from repro.serve.scheduler import Scheduler, _bucket
+from repro.serve.telemetry import latency_summary
 
-SCHEMA = "serve_bench/v6"
+SCHEMA = "serve_bench/v7"
+SCHEMA_V6 = "serve_bench/v6"
 SCHEMA_V5 = "serve_bench/v5"
 SCHEMA_V4 = "serve_bench/v4"
 SCHEMA_V3 = "serve_bench/v3"
@@ -128,6 +156,33 @@ KV_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk", "block_size",
                  "useful_tokens", "bf16_s", "int8_s", "bf16_preemptions",
                  "int8_preemptions", "bf16_goodput_tok_s", "goodput_tok_s",
                  "goodput_speedup")
+
+# chunked-prefill tail-latency fields added by serve_bench/v7 latency
+# rows: the same wave-arrival workload served one-shot vs chunked +
+# budgeted, measured in deterministic **token-time** (the scheduler's
+# injectable clock advanced by each step's dispatched token positions —
+# the same cost model as the head-of-line regression pin in
+# tests/test_scheduler.py; `_tok` fields are token units, not seconds).
+# Exact nearest-rank TTFT/TPOT percentiles for both legs
+# (repro.serve.telemetry — NaN-free by construction, the reducer raises),
+# goodput as useful tokens per dispatched token position (utilization —
+# one-shot prefill pays power-of-two bucket padding the chunked leg
+# avoids), wall-clock for reference, the p95-TTFT speedup, and the
+# chunked leg's steady-state sanitizer counters (must be exactly zero:
+# the chunk loop adds no retraces and no implicit transfers).
+LATENCY_ROW_FIELDS = (
+    "mode", "requests", "batch_slots", "chunk", "prefill_chunk",
+    "step_token_budget", "block_size", "wave", "arrival_gap_tok",
+    "useful_tokens",
+    "oneshot_s", "chunked_s",
+    "oneshot_tokens_dispatched", "tokens_dispatched",
+    "oneshot_goodput_util", "goodput_util", "goodput_ratio",
+    "oneshot_ttft_p50_tok", "oneshot_ttft_p95_tok", "oneshot_ttft_p99_tok",
+    "oneshot_tpot_p50_tok", "oneshot_tpot_p95_tok", "oneshot_tpot_p99_tok",
+    "ttft_p50_tok", "ttft_p95_tok", "ttft_p99_tok",
+    "tpot_p50_tok", "tpot_p95_tok", "tpot_p99_tok",
+    "ttft_p95_speedup",
+    "chunked_recompiles_after_warmup", "chunked_h2d_transfers_per_step")
 
 # multi-tenant adapter fields added by serve_bench/v5 adapter rows.
 # w4a8_aser only: adapter pools ride on quantized leaves, fp has none.
@@ -324,6 +379,124 @@ def _time_kv_budget(params, cfg, rt, *, slots, max_len, block_size, chunk,
             out["bf16_preemptions"], out["int8_preemptions"])
 
 
+# -- chunked-prefill tail latency --------------------------------------------
+
+def _latency_workload(n_requests, vocab, *, p_short, p_strag, n_lo, n_hi,
+                      seed=31, straggler_frac=0.25):
+    """Wave traffic for the TTFT-tail comparison: mostly short prompts
+    with a ``straggler_frac`` tail of long-prompt requests. The long
+    prompts are the head-of-line blockers — one-shot admission prefills
+    each as a single power-of-two-bucketed dispatch (a 33-token prompt
+    pays for 64 positions) that every co-scheduled request's step waits
+    behind; chunked prefill pays only per-chunk buckets and spreads the
+    work across budgeted steps."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        lo, hi = p_strag if rng.random() < straggler_frac else p_short
+        plen = int(rng.integers(lo, hi + 1))
+        n = int(rng.integers(n_lo, n_hi + 1))
+        reqs.append((rng.integers(0, vocab, size=plen).astype(np.int32), n))
+    return reqs
+
+
+def _run_latency(engine, reqs, chunk, arrivals):
+    """Serve ``reqs`` under open-loop arrivals on a deterministic
+    token-time clock.
+
+    ``arrivals[i]`` is request *i*'s arrival instant in token-time. The
+    scheduler's injectable ``clock`` reads a counter this driver advances
+    after every step by the step's dispatched token positions — the same
+    cost model the head-of-line regression pins in
+    ``tests/test_scheduler.py``: under a token budget the scheduler's own
+    ``last_step_tokens`` accounting; one-shot, the power-of-two-bucketed
+    prompt width of each admission this step plus one decode chunk per
+    occupied slot. Submissions happen *between* steps whenever their
+    arrival instant has passed, so TTFT (stamped from submit by the same
+    clock) includes real admission queueing — the SLO number, not just
+    prefill latency. When the scheduler goes idle before the next
+    arrival, the clock jumps forward to it (open-loop traffic does not
+    wait for the server). Returns the scheduler, the handles, and the
+    total token positions dispatched (excluding idle time)."""
+    clk = [0.0]
+    sched = Scheduler(engine, chunk_size=chunk, clock=lambda: clk[0])
+    handles = []
+    dispatched = 0
+    i = 0
+    while True:
+        while i < len(reqs) and arrivals[i] <= clk[0]:
+            p, n = reqs[i]
+            handles.append(sched.submit(p, n))
+            i += 1
+        queued = [h for h in handles if h.status is RequestStatus.QUEUED]
+        more = sched.step()
+        if sched.prefill_chunk:
+            cost = sched.last_step_tokens
+        else:
+            admitted = sum(
+                _bucket(len(h.request.prompt), sched.max_len)
+                for h in queued if h.status is not RequestStatus.QUEUED)
+            decoding = sum(1 for s in range(sched.slots)
+                           if sched._slot_handle[s] is not None)
+            cost = admitted + chunk * decoding
+        dispatched += cost
+        clk[0] += max(cost, 1)
+        if i < len(reqs):
+            if not more:                       # idle until the next arrival
+                clk[0] = max(clk[0], arrivals[i])
+        elif not more:
+            break
+    assert all(h.done for h in handles)
+    return sched, handles, dispatched
+
+
+def _time_latency(params, cfg, rt, *, slots, max_len, block_size, chunk,
+                  prefill_chunk, step_token_budget, reqs, wave, gap, reps):
+    """One-shot vs chunked+budgeted prefill over the same open-loop
+    traffic: waves of ``wave`` requests arriving every ``gap`` token-time
+    units.
+
+    Both legs run the paged engine and the identical arrival schedule;
+    the chunked leg's engine sets ``ServeConfig(prefill_chunk,
+    step_token_budget)``. Percentiles and dispatched-token totals come
+    from the deterministic token-time driver (a gate run pays
+    compilation first, then a warm measurement run — token-time is
+    wall-clock-independent, but the warm run keeps the wall seconds
+    comparable); wall seconds come from ``_best_time`` and are reported
+    unguarded (CPU wall-clock measures Python dispatch overhead, not
+    scheduling policy). The chunked leg additionally replays under the
+    steady-state audit — the chunk loop must add zero recompiles and
+    zero implicit transfers."""
+    arrivals = [(i // wave) * gap for i in range(len(reqs))]
+
+    def mk(chunked):
+        sc = ServeConfig(max_len=max_len, batch_slots=slots,
+                         kv_layout="paged", block_size=block_size)
+        if chunked:
+            sc = dataclasses.replace(sc, prefill_chunk=prefill_chunk,
+                                     step_token_budget=step_token_budget)
+        return Engine(params, cfg, sc, rt=rt)
+
+    legs = {"oneshot": mk(False), "chunked": mk(True)}
+    out = {}
+    for name, eng in legs.items():
+        _run_latency(eng, reqs, chunk, arrivals)       # gate + warm
+        _, handles, dispatched = _run_latency(eng, reqs, chunk, arrivals)
+        summ = latency_summary([h.timing for h in handles])
+        # latency_summary scales to milliseconds for wall clocks; undo it —
+        # this clock counts token positions, not seconds
+        out[name] = {fam: {q: v / 1e3 for q, v in summ[fam].items()}
+                     for fam in ("ttft_ms", "tpot_ms")}
+        out[name + "_tokens"] = dispatched
+        out[name + "_s"] = _best_time(
+            lambda e=eng: _run_latency(e, reqs, chunk, arrivals), reps)
+    audit = audit_steady_state(
+        lambda: Scheduler(legs["chunked"], chunk_size=chunk),
+        lambda sched: [sched.submit(p, n) for p, n in reqs])
+    useful = sum(n for _, n in reqs)
+    return out, useful, audit
+
+
 # -- multi-tenant adapter goodput --------------------------------------------
 
 def _run_adapters(engine, reqs, chunk, registry, apool=None):
@@ -415,6 +588,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     prefix_rows = []
     kv_rows = []
     adapter_rows = []
+    latency_rows = []
     for m, p in (("fp", params), ("w4a8_aser", qparams)):
         if mode in ("both", "static"):
             for (b, prompt) in buckets:
@@ -539,6 +713,65 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                       f"(×{krow['goodput_speedup']:.2f}, preemptions "
                       f"{bf16_pre}→{int8_pre})", flush=True)
 
+            # chunked-prefill tail latency: open-loop wave arrivals in
+            # token-time, served one-shot vs chunked + token-budgeted on
+            # the paged engine. Straggler prompts sit just past a
+            # power-of-two bucket boundary so the one-shot leg pays
+            # maximal prefill padding; the chunked leg pays per-chunk
+            # buckets and bounded steps. The arrival gap undercuts the
+            # service rate — the tail only exists under queueing pressure,
+            # and bounding step size is precisely what drains a backlog
+            # fairly. Scheduler ctor constraint:
+            # prefill_chunk + chunk <= step_token_budget.
+            l_pc = 8 if smoke else 32
+            l_budget = 20 if smoke else 160
+            lp_short = (2, 6) if smoke else (4, 12)
+            lp_strag = (17, 24) if smoke else (65, 80)
+            ln_lo, ln_hi = (2, 6) if smoke else (4, 12)
+            wave = 3 if smoke else 6
+            gap = 40 if smoke else 120
+            lreqs = _latency_workload(n_req, cfg.vocab_size,
+                                      p_short=lp_short, p_strag=lp_strag,
+                                      n_lo=ln_lo, n_hi=ln_hi)
+            lat, useful, laudit = _time_latency(
+                p, cfg, rt, slots=slots, max_len=max_len,
+                block_size=block_size, chunk=chunk, prefill_chunk=l_pc,
+                step_token_budget=l_budget, reqs=lreqs, wave=wave,
+                gap=gap, reps=c_reps)
+            lrow = {
+                "mode": m, "requests": n_req, "batch_slots": slots,
+                "chunk": chunk, "prefill_chunk": l_pc,
+                "step_token_budget": l_budget, "block_size": block_size,
+                "wave": wave, "arrival_gap_tok": gap,
+                "useful_tokens": useful,
+                "oneshot_s": lat["oneshot_s"],
+                "chunked_s": lat["chunked_s"],
+                "oneshot_tokens_dispatched": lat["oneshot_tokens"],
+                "tokens_dispatched": lat["chunked_tokens"],
+                "oneshot_goodput_util": useful / lat["oneshot_tokens"],
+                "goodput_util": useful / lat["chunked_tokens"],
+                "goodput_ratio": (lat["oneshot_tokens"]
+                                  / lat["chunked_tokens"]),
+                "ttft_p95_speedup": (lat["oneshot"]["ttft_ms"]["p95"]
+                                     / lat["chunked"]["ttft_ms"]["p95"]),
+                "chunked_recompiles_after_warmup": laudit.recompiles,
+                "chunked_h2d_transfers_per_step":
+                    laudit.h2d_transfers_per_step,
+            }
+            for prefix, leg in (("oneshot_", "oneshot"), ("", "chunked")):
+                for fam in ("ttft", "tpot"):
+                    for q in (50, 95, 99):
+                        lrow[f"{prefix}{fam}_p{q}_tok"] = \
+                            lat[leg][f"{fam}_ms"][f"p{q}"]
+            latency_rows.append(lrow)
+            if verbose:
+                print(f"  {m:>10} latency: {n_req} reqs in waves of {wave} "
+                      f"every {gap} tok (prefill_chunk {l_pc}, budget "
+                      f"{l_budget}): p95 TTFT {lrow['ttft_p95_tok']:6.0f} "
+                      f"tok vs one-shot {lrow['oneshot_ttft_p95_tok']:6.0f} "
+                      f"(×{lrow['ttft_p95_speedup']:.2f}, goodput ratio "
+                      f"{lrow['goodput_ratio']:.2f})", flush=True)
+
     if mode in ("both", "continuous"):
         # multi-tenant adapters: w4a8_aser only (pools ride on quantized
         # leaves — fp params have nothing to install them on)
@@ -596,6 +829,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
         report["prefix_rows"] = prefix_rows
         report["kv_rows"] = kv_rows
         report["adapter_rows"] = adapter_rows
+        report["latency_rows"] = latency_rows
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     if verbose:
@@ -713,6 +947,67 @@ def _validate_adapter_rows(rows):
                              f"{row}")
 
 
+def _validate_latency_rows(rows, smoke):
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no latency rows (serve_bench/v7 requires them)")
+    pct = tuple(f"{prefix}{fam}_p{q}_tok" for prefix in ("", "oneshot_")
+                for fam in ("ttft", "tpot") for q in (50, 95, 99))
+    modes = set()
+    for row in rows:
+        # percentiles are finite-checked but may legitimately be zero: on
+        # the token-time clock an uncontended request admitted in the step
+        # after its arrival has TTFT 0 (events stamp at step granularity)
+        _check_finite(row, LATENCY_ROW_FIELDS,
+                      positive=("useful_tokens", "oneshot_s", "chunked_s",
+                                "prefill_chunk", "step_token_budget",
+                                "wave", "arrival_gap_tok",
+                                "oneshot_tokens_dispatched",
+                                "tokens_dispatched",
+                                "oneshot_goodput_util", "goodput_util",
+                                "goodput_ratio", "ttft_p95_speedup"))
+        for f in pct:
+            if row[f] < 0:
+                raise ValueError(f"negative percentile {f}={row[f]!r} "
+                                 f"in {row}")
+        for f in ("oneshot_goodput_util", "goodput_util"):
+            if row[f] > 1:
+                raise ValueError(
+                    f"{f}={row[f]!r} > 1: useful tokens cannot exceed "
+                    f"dispatched token positions: {row}")
+        for fam in ("ttft", "tpot"):
+            for prefix in ("", "oneshot_"):
+                p50, p95, p99 = (row[f"{prefix}{fam}_p{q}_tok"]
+                                 for q in (50, 95, 99))
+                if not p50 <= p95 <= p99:
+                    raise ValueError(
+                        f"{prefix}{fam} percentiles out of order "
+                        f"(p50 {p50} / p95 {p95} / p99 {p99} must be "
+                        f"non-decreasing): {row}")
+        for f in ("chunked_recompiles_after_warmup",
+                  "chunked_h2d_transfers_per_step"):
+            if row[f] != 0:
+                raise ValueError(
+                    f"chunked steady state is not clean: {f}={row[f]!r} "
+                    f"(must be exactly 0 — the chunk loop retraced or "
+                    f"uploaded implicitly): {row}")
+        if not smoke:
+            # the acceptance gates chunked prefill ships under: better
+            # p95 TTFT at equal-or-better goodput. Smoke runs are too
+            # small for stable tails (p95 of 8 requests is the max) and
+            # only have to be well-formed.
+            if row["ttft_p95_speedup"] < 1.0:
+                raise ValueError(
+                    f"chunked prefill did not improve p95 TTFT "
+                    f"(speedup {row['ttft_p95_speedup']:.3f} < 1): {row}")
+            if row["goodput_ratio"] < 1.0:
+                raise ValueError(
+                    f"chunked goodput below one-shot "
+                    f"(ratio {row['goodput_ratio']:.3f} < 1): {row}")
+        modes.add(row["mode"])
+    if not {"fp", "w4a8_aser"} <= modes:
+        raise ValueError(f"need fp and w4a8_aser latency rows, got {modes}")
+
+
 def validate(report: dict):
     """Raise ValueError unless ``report`` is a valid serve_bench file.
 
@@ -720,24 +1015,29 @@ def validate(report: dict):
     rows only), ``serve_bench/v2`` (+ continuous goodput rows),
     ``serve_bench/v3`` (+ shared-prefix paged-cache rows),
     ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows),
-    ``serve_bench/v5`` (+ multi-tenant adapter rows) and
-    ``serve_bench/v6`` (+ steady-state sanitizer counters on continuous
-    rows, required to be exactly zero), so old baselines keep validating.
+    ``serve_bench/v5`` (+ multi-tenant adapter rows), ``serve_bench/v6``
+    (+ steady-state sanitizer counters on continuous rows, required to be
+    exactly zero) and ``serve_bench/v7`` (+ chunked-vs-one-shot prefill
+    tail-latency rows with exact TTFT/TPOT percentiles and, on non-smoke
+    baselines, the improvement gates), so old baselines keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2,
-                      SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3,
+                      SCHEMA_V2, SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
     _validate_static_rows(report.get("rows"))
     if schema != SCHEMA_V1:
         _validate_continuous_rows(report.get("continuous_rows"),
-                                  sanitizers=schema == SCHEMA)
+                                  sanitizers=schema in (SCHEMA, SCHEMA_V6))
     if schema not in (SCHEMA_V1, SCHEMA_V2):
         _validate_prefix_rows(report.get("prefix_rows"))
     if schema not in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
         _validate_kv_rows(report.get("kv_rows"))
-    if schema in (SCHEMA, SCHEMA_V5):
+    if schema in (SCHEMA, SCHEMA_V6, SCHEMA_V5):
         _validate_adapter_rows(report.get("adapter_rows"))
+    if schema == SCHEMA:
+        _validate_latency_rows(report.get("latency_rows"),
+                               smoke=bool(report.get("smoke")))
     return True
 
 

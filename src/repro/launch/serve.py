@@ -46,6 +46,15 @@ def main():
     ap.add_argument("--queue-cap", type=int, default=None,
                     help="bound the admission queue; submits over the cap "
                          "are load-shed with status REJECTED")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prefill into chunks of this many tokens, "
+                         "interleaved with decode (0 = one-shot prefill); "
+                         "cancel/TTFT deadlines are enforced at every "
+                         "chunk boundary")
+    ap.add_argument("--step-token-budget", type=int, default=0,
+                    help="cap the tokens one scheduler step may spend "
+                         "across prefill chunks + the decode chunk "
+                         "(requires --prefill-chunk; 0 = unbudgeted)")
     args = ap.parse_args()
 
     import dataclasses
@@ -90,6 +99,11 @@ def main():
         tape = reduce_shared(tape, cfg)
         params = quantize_model(params, tape, recipe)
 
+    scfg = recipe.kv.serve_config(max_len=args.prompt_len + args.gen)
+    if args.prefill_chunk or args.step_token_budget:
+        scfg = dataclasses.replace(scfg, prefill_chunk=args.prefill_chunk,
+                                   step_token_budget=args.step_token_budget)
+
     if args.adapters > 0:
         if recipe.is_noop:
             raise SystemExit("--adapters needs a quantized --method "
@@ -103,9 +117,7 @@ def main():
         print(f"[serve] {args.adapters} tenants, rank "
               f"{recipe.adapter.rank} → pool "
               f"{reg.pool_bytes_per_adapter() / 1024:.1f} KiB/adapter")
-        engine = Engine(params, cfg,
-                        recipe.kv.serve_config(max_len=args.prompt_len
-                                               + args.gen), rt=rt)
+        engine = Engine(params, cfg, scfg, rt=rt)
         sched = Scheduler(engine, adapters=reg, queue_cap=args.queue_cap,
                           ttft_ms=args.ttft_ms, deadline_ms=args.deadline_ms)
         prompts = corpus.sample(jnp.asarray(777), args.requests,
@@ -127,12 +139,10 @@ def main():
         return
 
     # the recipe's KVQuantSpec picks the engine's cache storage
-    engine = Engine(params, cfg,
-                    recipe.kv.serve_config(max_len=args.prompt_len
-                                           + args.gen), rt=rt)
+    engine = Engine(params, cfg, scfg, rt=rt)
     prompts = corpus.sample(jnp.asarray(777), args.requests, args.prompt_len)
     if (args.deadline_ms is not None or args.ttft_ms is not None
-            or args.queue_cap is not None):
+            or args.queue_cap is not None or args.prefill_chunk):
         # lifecycle controls live in the scheduler: route base traffic
         # through one instead of the static-batch generate() path
         from repro.serve.scheduler import Scheduler

@@ -69,6 +69,10 @@ class ServeConfig:
     block_size: int = 16           # tokens per page (paged layout)
     num_blocks: int = 0            # pool size; 0 → batch_slots * max_len/bs
     kv_dtype: str = "bf16"         # "bf16" (native) | "int8" | "int4"
+    prefill_chunk: int = 0         # tokens prefilled per chunk (0 = one-shot)
+    step_token_budget: int = 0     # max tokens one Scheduler.step spends
+    #                                across prefill chunks + the decode chunk
+    #                                (0 = unbounded)
 
     def __post_init__(self):
         if self.decode_loop not in DECODE_LOOPS:
@@ -96,6 +100,23 @@ class ServeConfig:
                     f"({self.block_size}) must cover max_len "
                     f"({self.max_len}): one max-length request must fit a "
                     f"drained pool or admission can livelock")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0: {self.prefill_chunk}")
+        if self.step_token_budget < 0:
+            raise ValueError(
+                f"step_token_budget must be >= 0: {self.step_token_budget}")
+        if self.step_token_budget and not self.prefill_chunk:
+            raise ValueError(
+                "step_token_budget requires chunked prefill "
+                "(prefill_chunk > 0): a one-shot prefill is a single "
+                "unbudgetable dispatch")
+        if self.step_token_budget \
+                and self.step_token_budget < self.prefill_chunk:
+            raise ValueError(
+                f"step_token_budget ({self.step_token_budget}) must be >= "
+                f"prefill_chunk ({self.prefill_chunk}) or no chunk could "
+                f"ever be scheduled")
 
     @property
     def blocks_per_seq(self) -> int:
@@ -193,6 +214,12 @@ class Engine:
                                      donate_argnums=(2,))
         self._prefill_slot = jax.jit(self._prefill_slot_impl,
                                      donate_argnums=(3,))
+        # resumable chunked prefill (contiguous lanes): unlike the one-shot
+        # _prefill_slot it must *read* KV earlier chunks wrote, so it
+        # gathers the slot's lane, runs the ragged forward at explicit
+        # positions, and scatters the lane back
+        self._prefill_slot_chunk = jax.jit(self._prefill_slot_chunk_impl,
+                                           donate_argnums=(4,))
         # paged-only programs: suffix prefill through a block table and the
         # device-side COW copy; the ragged prefill/decode programs above
         # serve both layouts (``tables=None`` ⇒ contiguous), with the pool
@@ -411,6 +438,76 @@ class Engine:
                               is_leaf=lambda x: isinstance(x, KVCache))
         return last, caches
 
+    def _prefill_slot_chunk_impl(self, params, tokens, length, start,
+                                 caches, slot, aslot=None):
+        """Resumable contiguous prefill: one chunk of a prompt into one
+        slot's live lane, at positions ``[start, start + length)``.
+
+        tokens: [1, w_bucket] right-padded; ``length``/``start``/``slot``
+        traced scalars. The one-shot :meth:`_prefill_slot_impl` runs
+        against *fresh* b=1 caches and scatters — sound only because a
+        whole prompt never attends KV outside itself. A later chunk must
+        attend the KV earlier chunks already wrote into the slot's lane,
+        so this impl gathers that lane into a b=1 view, runs the ragged
+        forward at explicit positions (writes land at the chunk's own
+        offsets, causal attention reads everything before them), and
+        scatters the lane back. Pad positions beyond ``length`` write
+        garbage KV past the chunk's frontier — safe under the same
+        positional-overwrite discipline as bucketed one-shot prefill: the
+        next chunk (or decode) rewrites those positions before any real
+        query can attend them.
+
+        Returns the logits at the chunk's last real position (only the
+        final chunk's are ever sampled) and the updated cache tree.
+        """
+        b, w = tokens.shape
+        positions = start + jnp.broadcast_to(
+            jnp.arange(w, dtype=jnp.int32)[None], (b, w))
+
+        def take(bc):
+            if not isinstance(bc, KVCache):
+                return bc      # SSM caches are gated out of ragged mode
+
+            def sl(x, a):
+                return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=a)
+
+            ks = vs = None
+            if bc.k_scale is not None:
+                s_ax = bc.k_scale.ndim - 3
+                ks = sl(bc.k_scale, s_ax)
+                vs = sl(bc.v_scale, s_ax)
+            ax = bc.k.ndim - 4     # batch axis (scanned groups lead with G)
+            return KVCache(sl(bc.k, ax), sl(bc.v, ax), bc.length, bc.pos,
+                           ks, vs, bc.qmax)
+
+        one = jax.tree.map(take, caches,
+                           is_leaf=lambda x: isinstance(x, KVCache))
+        logits, one, _ = forward(params, self.cfg, tokens,
+                                 positions=positions, caches=one,
+                                 ragged=True, adapter_idx=aslot, rt=self.rt)
+        last = logits[0, jnp.maximum(length - 1, 0)]
+
+        def put(bc, oc):
+            if not isinstance(bc, KVCache):
+                return bc
+            ax = bc.k.ndim - 4
+
+            def upd_ax(dst, src, a):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), slot, axis=a)
+
+            ks = vs = None
+            if bc.k_scale is not None:
+                s_ax = bc.k_scale.ndim - 3
+                ks = upd_ax(bc.k_scale, oc.k_scale, s_ax)
+                vs = upd_ax(bc.v_scale, oc.v_scale, s_ax)
+            return KVCache(upd_ax(bc.k, oc.k, ax), upd_ax(bc.v, oc.v, ax),
+                           bc.length, bc.pos, ks, vs, bc.qmax)
+
+        caches = jax.tree.map(put, caches, one,
+                              is_leaf=lambda x: isinstance(x, KVCache))
+        return last, caches
+
     # -- paged compiled steps ---------------------------------------------
     def _prefill_slot_paged_impl(self, params, tokens, length, start,
                                  caches, table, aslot=None):
@@ -579,6 +676,65 @@ class Engine:
         # finite guard gates quarantine. Admission-time only — legal under
         # jax.transfer_guard("disallow").
         tok, ok = jax.device_get((tok_dev, ok_dev))  # repro: noqa[RA001] admission sync point: token + finite guard leave the device here by design
+        return int(tok), caches, not bool(ok)
+
+    def prefill_slot_chunk(self, tokens, length, caches, slot, *,
+                           start: int = 0, block_table=None,
+                           adapter_slot=None, final: bool = False):
+        """Prefill one *chunk* of a request, resumably.
+
+        The chunked counterpart of :meth:`prefill_slot`: the scheduler
+        calls it repeatedly with ``start`` advancing by the chunk length,
+        writing KV for positions ``[start, start + length)`` only. Unlike
+        one-shot prefill, a chunk must attend KV written by earlier
+        chunks, so the contiguous path runs a dedicated gather → ragged
+        forward → scatter program; the paged path reads earlier KV through
+        the block table exactly like suffix prefill already does.
+
+        Args:
+          tokens: ``[1, w_bucket]`` int32, the chunk's tokens right-padded
+            to a power-of-two bucket width.
+          length: true chunk token count (``1 <= length <= w_bucket``).
+          caches: live cache tree. **Donated** — rebind to the result.
+          slot: destination batch row (contiguous; ignored for paged).
+          start: absolute position of the chunk's first token (prompt
+            tokens already written by earlier chunks / shared prefix
+            pages).
+          block_table: paged only — ``[blocks_per_seq]`` int32 physical
+            ids covering at least ``start + length`` token slots.
+          adapter_slot: adapter-pool index (None = no routing).
+          final: True for the prompt's last chunk — sample the first
+            generated token and run the finite guard.
+
+        Returns ``(tok, caches, bad)``. Non-final chunks return
+        ``(None, caches, False)`` with **zero host syncs** — interleaving
+        prefill chunks with decode must not stall the step pipeline; only
+        the final chunk performs the one explicit admission
+        ``device_get`` (token + finite guard), identical to
+        :meth:`prefill_slot`.
+        """
+        self._check_ragged_supported()
+        aslot = (None if adapter_slot is None
+                 else jax.device_put(np.asarray([adapter_slot], np.int32)))
+        if self.scfg.kv_layout == "paged":
+            if block_table is None:
+                raise ValueError("paged prefill_slot_chunk needs a "
+                                 "block_table")
+            last, caches = self._prefill_slot_paged(
+                self.params, tokens, jax.device_put(np.int32(length)),
+                jax.device_put(np.int32(start)), caches,
+                jax.device_put(np.asarray(block_table, np.int32)[None]),
+                aslot)
+        else:
+            last, caches = self._prefill_slot_chunk(
+                self.params, tokens, jax.device_put(np.int32(length)),
+                jax.device_put(np.int32(start)), caches,
+                jax.device_put(np.int32(slot)), aslot)
+        if not final:
+            return None, caches, False
+        tok_dev = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        ok_dev = jnp.all(jnp.isfinite(last))
+        tok, ok = jax.device_get((tok_dev, ok_dev))  # repro: noqa[RA001] final-chunk admission sync: the first token + finite guard leave the device by design
         return int(tok), caches, not bool(ok)
 
     def decode_chunk(self, tok, caches, key, done, pos, n_steps: int,

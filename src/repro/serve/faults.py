@@ -1,8 +1,9 @@
 """Deterministic fault injection for the serving stack (chaos testing).
 
-The scheduler exposes three seams where real production failures enter —
-the per-step hook (``on_step``), the decode dispatch (``around_decode``)
-and the checkpoint writer (``wrap_checkpoint``) — and
+The scheduler exposes four seams where real production failures enter —
+the per-step hook (``on_step``), the decode dispatch (``around_decode``),
+the prefill-chunk dispatch (``around_prefill_chunk``) and the checkpoint
+writer (``wrap_checkpoint``) — and
 :class:`FaultInjector` drives all of them from one seeded
 ``numpy.random.Generator``, so a failing chaos run is **replayable from
 its seed alone**. The injectable faults, and the recovery path each one
@@ -14,6 +15,11 @@ fault                  injected as                    recovery under test
 device step failure    :class:`DeviceStepFault`       preempt-all + re-
                        raised *before* the decode     prefill resume
                        dispatch
+prefill-chunk fault    :class:`DeviceStepFault`       partial-prefill
+                       raised *before* a prefill      quarantine: page
+                       chunk's dispatch               chain freed, bounded
+                       (``around_prefill_chunk``)     retry, token-exact
+                                                      re-prefill
 NaN logits             per-slot taint of the chunk's  slot quarantine +
                        ``bad`` mask                   bounded retry +
                                                       kernel fallback
@@ -78,6 +84,11 @@ class FaultInjector:
         schedules against a deterministic workload.
       p_device: probability a step's decode dispatch raises
         :class:`DeviceStepFault` (before running).
+      p_prefill_fault: probability any given prefill *chunk* dispatch
+        raises :class:`DeviceStepFault` (before running) — the fault that
+        lands on a chunk boundary mid-prefill, exercising the
+        partial-prefill quarantine (chunked-prefill schedulers only;
+        inert when ``ServeConfig.prefill_chunk == 0``).
       p_nan: probability one active slot's chunk is tainted non-finite
         (its ``bad`` bit set after a successful dispatch).
       p_kv_corrupt: probability a ``nan`` is written into one live KV page
@@ -94,12 +105,14 @@ class FaultInjector:
     """
 
     def __init__(self, seed: int = 0, *, p_device: float = 0.0,
+                 p_prefill_fault: float = 0.0,
                  p_nan: float = 0.0, p_kv_corrupt: float = 0.0,
                  p_pool_hog: float = 0.0, p_adapter_hog: float = 0.0,
                  p_ckpt_fail: float = 0.0, max_hog_steps: int = 3):
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.p_device = p_device
+        self.p_prefill_fault = p_prefill_fault
         self.p_nan = p_nan
         self.p_kv_corrupt = p_kv_corrupt
         self.p_pool_hog = p_pool_hog
@@ -222,6 +235,19 @@ class FaultInjector:
                 out = (toks, caches, key, done, pos, bad)
         return out
 
+    # -- prefill-chunk seam -------------------------------------------------
+    def around_prefill_chunk(self, sched, slot: int, call: Callable):
+        """Prefill-chunk dispatch wrapper: maybe raise a device fault
+        *before* the chunk runs (caches untouched — the partial page chain
+        is still wholesale suspect and must be quarantined, which is
+        exactly the recovery path under test). Drawn per chunk, so a
+        multi-chunk prompt faces the fault at every boundary."""
+        if self.p_prefill_fault and self.rng.random() < self.p_prefill_fault:
+            self._record("prefill_chunk_fault", slot=int(slot))
+            raise DeviceStepFault(
+                "injected device failure at prefill chunk")
+        return call()
+
     # -- checkpoint seam ----------------------------------------------------
     def wrap_checkpoint(self, manager):
         """Patch ``manager._write`` so each save's write may raise
@@ -258,6 +284,7 @@ class FaultInjector:
         left armed would re-acquire hogs during the drain itself)."""
         self.p_device = self.p_nan = self.p_kv_corrupt = 0.0
         self.p_pool_hog = self.p_adapter_hog = self.p_ckpt_fail = 0.0
+        self.p_prefill_fault = 0.0
         self._armed_device = False
         self.release_all()
 

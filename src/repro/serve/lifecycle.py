@@ -17,15 +17,26 @@ status — the invariant the chaos suite (``tests/test_chaos.py``) pins:
         admitted │  │ │ ──(no-progress detector)──────────► FAILED
                  ▼  │ preempt / quarantine / device fault
                 RUNNING ──(cancel)────────────────────────► CANCELLED
-                    │ ──(total deadline)──────────────────► TIMED_OUT
-                    │ ──(fault retries exhausted)─────────► FAILED
-                    ▼ (EOS / budget)
+         (incl.     │ ──(total / ttft deadline)───────────► TIMED_OUT
+          mid-      │ ──(fault retries exhausted)─────────► FAILED
+          prefill)  ▼ (EOS / budget)
                 COMPLETED
 
 Preemption (page exhaustion), quarantine (non-finite logits) and device
 faults bounce a RUNNING request back to QUEUED — those are *recoverable*
 and resume token-exactly through the re-prefill machinery; only the five
 states on the right are terminal.
+
+With chunked prefill (``ServeConfig(prefill_chunk > 0)``) RUNNING covers
+a **mid-prefill** sub-state: the request holds a slot (and its pages) but
+has emitted no token yet while its prompt prefills chunk-by-chunk. Every
+transition out of RUNNING applies between chunks too — cancellation and
+the **TTFT deadline** are checked at each chunk boundary (a long prompt
+can no longer sail past ``ttft_ms`` inside one admission call), an
+injected/real device fault at a chunk boundary quarantines the partial
+page chain and re-queues the request (bounded retries, token-exact
+resume), and ``snapshot()`` serializes a half-prefilled request exactly
+like a preempted one (no tokens yet ⇒ restore simply re-prefills).
 
 :class:`RequestHandle` (moved here from ``serve.scheduler``) is the
 caller's view: ``poll()`` streams deltas, ``status`` / ``error`` report
@@ -44,6 +55,8 @@ import enum
 from typing import List, Optional
 
 import numpy as np
+
+from .telemetry import RequestTiming
 
 
 class RequestStatus(enum.Enum):
@@ -98,6 +111,7 @@ class RequestHandle:
         self.error: Optional[str] = None
         self.fault_retries = 0        # quarantines + device faults survived
         self.submitted_at: float = 0.0  # scheduler clock at submit/restore
+        self.timing = RequestTiming()   # latency trace (scheduler-stamped)
         self._cursor = 0
         self._cancel_requested = False
         self._stats_fn = None         # set by the scheduler at submit
@@ -180,6 +194,10 @@ def check_drained(scheduler) -> List[str]:
     free_mask = np.asarray(scheduler._done)
     if not bool(free_mask.all()):
         out.append(f"slot done-mask not all free: {free_mask.tolist()}")
+    prefilling = [s for s, p in enumerate(
+        getattr(scheduler, "_prefill_prompt", ())) if p is not None]
+    if prefilling:
+        out.append(f"slots still mid-prefill: {prefilling}")
     for h in getattr(scheduler, "_live_handles", ()):
         out.append(f"request {h.request.rid} non-terminal: {h.status}")
     if scheduler.paged:

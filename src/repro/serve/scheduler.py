@@ -73,6 +73,32 @@ status machine and always reaches a terminal status —
   :meth:`restore` rebuilds the queue in a fresh scheduler. Round-trips
   through :class:`repro.checkpoint.manager.CheckpointManager`.
 
+**Chunked prefill + token-budgeted steps**
+(``ServeConfig(prefill_chunk=N, step_token_budget=B)``): one-shot
+admission prefills the whole prompt inside ``_admit`` — a long prompt
+head-of-line-blocks every in-flight decode for its full prefill. With
+``prefill_chunk > 0`` admission becomes a host-only *claim* (slot, pages,
+adapter ref — no device work), and the prompt then prefills
+``prefill_chunk`` tokens at a time through
+``Engine.prefill_slot_chunk``, round-robin across claiming slots in
+admission order and interleaved with the decode chunk, so a short
+prompt's first token is never stuck behind a long prompt's prefill. With
+``step_token_budget > 0`` each ``step()`` spends at most that many
+tokens: the decode chunk's ``chunk_size × n_decoding`` is reserved first
+(decodes are never starved by prefill), and the remainder is dealt to
+pending prefill chunks. No token is sampled until the final chunk;
+intermediate chunks perform **zero host syncs**. Cancellation and the
+TTFT/total deadlines are enforced *between chunks* — with one-shot
+prefill a long prompt could sail past its ``ttft_ms`` inside one
+admission call. Prefix registration is deferred to prefill completion
+(a partial page chain must never be a prefix hit), and a mid-prefill
+request preempts / quarantines / snapshots exactly like a decoding one
+(no tokens yet ⇒ resume is a plain re-prefill). Per-request latency is
+stamped against ``clock`` into ``handle.timing``
+(:class:`repro.serve.telemetry.RequestTiming`) in both modes — TTFT/TPOT
+percentiles for a drained run come from
+:func:`repro.serve.telemetry.latency_summary`.
+
 Fault injection (``serve.faults.FaultInjector``) hooks the same seams the
 real failures use, so the chaos suite drives every one of these paths
 deterministically.
@@ -180,6 +206,34 @@ class Scheduler:
         self.max_len = engine.scfg.max_len
         self.eos_id = engine.scfg.eos_id
         self.paged = engine.scfg.kv_layout == "paged"
+        # -- chunked prefill / token budget ---------------------------------
+        self.prefill_chunk = engine.scfg.prefill_chunk
+        self.step_token_budget = engine.scfg.step_token_budget
+        if self.step_token_budget and chunk_size > self.step_token_budget:
+            raise ValueError(
+                f"chunk_size ({chunk_size}) exceeds step_token_budget "
+                f"({self.step_token_budget}): one decode chunk alone would "
+                f"blow the per-step budget")
+        if self.step_token_budget and \
+                self.prefill_chunk + chunk_size > self.step_token_budget:
+            raise ValueError(
+                f"prefill_chunk + chunk_size "
+                f"({self.prefill_chunk} + {chunk_size}) exceeds "
+                f"step_token_budget ({self.step_token_budget}): a final "
+                f"prefill chunk joins the same step's decode, so both "
+                f"must fit the budget together or the prefill can stall")
+        # per-slot resumable-prefill state (all idle when prefill_chunk=0):
+        # the effective prompt being prefilled (None = not prefilling), the
+        # next absolute position to write, the prompt length, and the
+        # deferred prefix registration (prompt, blocks, salt) applied only
+        # once the final chunk lands — a partial chain must never be a hit
+        self._prefill_prompt: List[Optional[np.ndarray]] = [None] * self.slots
+        self._prefill_pos = np.zeros((self.slots,), np.int64)
+        self._prefill_len = np.zeros((self.slots,), np.int64)
+        self._prefill_register: List[Optional[tuple]] = [None] * self.slots
+        self.prefill_chunks_run = 0
+        self.tokens_spent = 0         # cumulative device tokens, all steps
+        self.last_step_tokens = 0     # tokens the most recent step() spent
         self._caches = engine.new_caches()
         self._key = jax.random.PRNGKey(seed)
         self._queue: Deque[RequestHandle] = deque()
@@ -313,6 +367,7 @@ class Scheduler:
             else self.default_deadline_ms))
         handle._stats_fn = lambda aid=adapter_id: self._request_stats(aid)
         handle.submitted_at = self._clock()
+        handle.timing.submitted_at = handle.submitted_at
         self._next_rid += 1
         # capacity validation: reject-with-status, never enqueue-and-hang
         if prompt.size + max_new_tokens > self.max_len:
@@ -392,6 +447,8 @@ class Scheduler:
                 error: Optional[str] = None):
         """Terminal transition + outcome accounting."""
         handle._finish(status, error)
+        if handle.timing.finished_at is None:
+            handle.timing.finished_at = self._clock()
         self._live_handles.discard(handle)
         if status == RequestStatus.COMPLETED:
             self.completed += 1
@@ -506,6 +563,15 @@ class Scheduler:
     def _finish_prefill(self, slot, handle, first: int, plen: int) -> bool:
         """Shared admit tail: returns True if the slot is now occupied."""
         handle.tokens.append(first)
+        now = self._clock()
+        t = handle.timing
+        if t.admitted_at is None:
+            t.admitted_at = now
+        if t.first_token_at is None:
+            # resumed (preempted) requests keep their original first-token
+            # stamp: TTFT measures the first token the *caller* saw
+            t.first_token_at = now
+        t.token_events.append((now, len(handle.tokens)))
         self._admitted_this_step += 1
         if ((self.eos_id >= 0 and first == self.eos_id)
                 or len(handle.tokens) >= handle.request.max_new_tokens):
@@ -641,13 +707,268 @@ class Scheduler:
                 return True
         return False
 
+    # -- chunked-prefill admission (claim, then chunk-by-chunk) ------------
+    def _is_prefilling(self, slot) -> bool:
+        return self._prefill_prompt[slot] is not None
+
+    def _begin_prefill(self, slot, handle, prompt: np.ndarray, start: int):
+        """Occupy ``slot`` for a claimed request whose prompt will prefill
+        chunk-by-chunk from absolute position ``start``. Host-only: no
+        device work happens until :meth:`_run_prefill_chunk`."""
+        handle.status = RequestStatus.RUNNING
+        self._slot_handle[slot] = handle
+        self._done[slot] = True       # not decoding until the final chunk
+        self._prefill_prompt[slot] = prompt
+        self._prefill_pos[slot] = start
+        self._prefill_len[slot] = prompt.size
+        if handle.timing.admitted_at is None:
+            handle.timing.admitted_at = self._clock()
+        self._admitted_this_step += 1
+
+    def _claim_contiguous(self, slot) -> bool:
+        """Chunked-mode contiguous admission: claim the slot (and adapter
+        ref) for the head-of-queue request; its prefill runs in chunks."""
+        if not self._queue:
+            return False
+        handle = self._queue[0]
+        aslot = self._acquire_adapter(handle.request.adapter_id)
+        if aslot is None:
+            return False         # adapter pool pinned solid: stop admitting
+        self._queue.popleft()
+        self._aslot[slot] = aslot
+        self._begin_prefill(slot, handle, self._effective_prompt(handle), 0)
+        return True
+
+    def _claim_paged(self, slot) -> bool:
+        """Chunked-mode paged admission: allocate the full page chain (and
+        COW a fully-cached prompt's last shared page) up front — identical
+        accounting to one-shot ``_admit_paged`` — but run no prefill yet.
+        Prefix *registration* is deferred to prefill completion: the chain
+        holds garbage beyond the shared prefix until the last chunk lands,
+        and a partial chain must never be a prefix hit."""
+        if not self._queue:
+            return False
+        handle = self._queue[0]
+        aid = handle.request.adapter_id
+        prompt = self._effective_prompt(handle)
+        plen = prompt.size
+        aslot = self._acquire_adapter(aid)
+        if aslot is None:
+            return False
+        salt = self._salt(aid)
+        shared_ids, shared_tok = (self.pool.match_prefix(prompt, salt)
+                                  if self.prefix_reuse else ([], 0))
+        cow_src = shared_ids[-1] if shared_tok == plen else None
+        need = -(-(plen + 1) // self._bs) - len(shared_ids) \
+            + (1 if cow_src is not None else 0)
+        fresh = self.pool.alloc(need)
+        if fresh is None:
+            self.pool.free(shared_ids)
+            self._release_adapter(aid)
+            return False
+        self._queue.popleft()
+        self._aslot[slot] = aslot
+        blocks = list(shared_ids)
+        if cow_src is not None:
+            cow_dst = fresh[0]
+            self._caches = self.engine.copy_blocks(
+                self._caches, [cow_src], [cow_dst])
+            self.pool.free([cow_src])
+            blocks[-1] = cow_dst
+            fresh = fresh[1:]
+            self.cow_copies += 1
+        blocks += fresh
+        start = plen - 1 if cow_src is not None else shared_tok
+        table = np.full((self._nbr,), self.pool.sentinel, np.int32)
+        table[:len(blocks)] = blocks
+        self._slot_blocks[slot] = blocks
+        self._tables[slot] = table
+        self._seq_counter += 1
+        self._admit_seq[slot] = self._seq_counter
+        if self.prefix_reuse:
+            self._prefill_register[slot] = (prompt, blocks, salt)
+        if not handle.tokens:
+            # fresh admissions only (see _admit_paged): resumed requests
+            # re-matching their own pages must not inflate the hit rate
+            self.prefix_queries += 1
+            self.prefix_hits += bool(start)
+            self.prompt_tokens += plen
+            self.shared_tokens += start
+            st = self._adapter_prefix.setdefault(aid, [0, 0])
+            st[0] += start
+            st[1] += plen
+        self._begin_prefill(slot, handle, prompt, start)
+        return True
+
+    def _quarantine_partial_prefill(self, slot, reason: str, *,
+                                    fallback: bool):
+        """Tear down a mid-prefill slot after a fault at a chunk boundary:
+        the partial page chain (which was never prefix-registered) is
+        invalidated, scrubbed and freed, and the request retries from
+        scratch under the bounded-retry accounting — resuming
+        token-exactly, since no token was sampled yet. ``fallback=True``
+        (non-finite logits on the final chunk) additionally one-shot
+        falls back the engine to the reference path."""
+        handle = self._slot_handle[slot]
+        if fallback:
+            self._note_fallback()
+        self.quarantines += 1
+        self._release_adapter(handle.request.adapter_id)
+        self._slot_handle[slot] = None
+        self._done[slot] = True
+        self._aslot[slot] = BASE_SLOT
+        self._prefill_prompt[slot] = None
+        self._prefill_pos[slot] = 0
+        self._prefill_len[slot] = 0
+        self._prefill_register[slot] = None
+        if self.paged:
+            blocks = self._slot_blocks[slot]
+            if blocks:
+                self.pool.invalidate(blocks)
+                self.pool.free(blocks)
+                scrub = [b for b in blocks if self.pool.ref[b] == 0]
+                self._caches = self.engine.fill_blocks(self._caches, scrub,
+                                                       0.0)
+            self._slot_blocks[slot] = []
+            self._tables[slot] = self.pool.sentinel
+        self._requeue_or_fail(handle, reason)
+
+    def _run_prefill_chunk(self, slot) -> int:
+        """Advance ``slot``'s pending prefill by one chunk. Returns the
+        device tokens spent (0 when the request was torn down at the
+        boundary instead of dispatched)."""
+        handle = self._slot_handle[slot]
+        now = self._clock()
+        # lifecycle between chunks: with one-shot prefill a long prompt
+        # could sail past cancel() or its ttft_ms inside one admission
+        # call — here every chunk boundary is an enforcement point
+        if handle._cancel_requested:
+            self._release_slot(slot)
+            self._finish(handle, RequestStatus.CANCELLED)
+            return 0
+        why = self._expiry(handle, now)
+        if why is not None:
+            self._release_slot(slot)
+            self._finish(handle, RequestStatus.TIMED_OUT, why)
+            return 0
+        prompt = self._prefill_prompt[slot]
+        ppos = int(self._prefill_pos[slot])
+        plen = int(self._prefill_len[slot])
+        n = min(self.prefill_chunk, plen - ppos)
+        final = ppos + n >= plen
+        width = _bucket(n, self.max_len)
+        padded = np.zeros((1, width), np.int32)
+        padded[0, :n] = prompt[ppos:ppos + n]
+        aslot = self._aslot[slot] if self.apool is not None else None
+        call = lambda: self.engine.prefill_slot_chunk(
+            jnp.asarray(padded), n, self._caches, slot, start=ppos,
+            block_table=self._tables[slot] if self.paged else None,
+            adapter_slot=aslot, final=final)
+        try:
+            if self._faults is not None:
+                tok, self._caches, bad = \
+                    self._faults.around_prefill_chunk(self, slot, call)
+            else:
+                tok, self._caches, bad = call()
+        except DeviceStepFault as err:
+            # the injector raises before the dispatch (caches untouched);
+            # a real fault invalidates the partial chain wholesale — drop
+            # it either way and retry from a clean re-prefill
+            self.device_faults += 1
+            self._quarantine_partial_prefill(
+                slot, f"prefill-chunk device fault: {err}", fallback=False)
+            return 0
+        self.prefill_chunks_run += 1
+        self._prefill_pos[slot] = ppos + n
+        handle.timing.prefill_chunks.append(self._clock())
+        if not final:
+            return n
+        if bad:
+            self._quarantine_partial_prefill(
+                slot, "non-finite logits at prefill", fallback=True)
+            return n
+        # prefill complete: the chain now holds the whole prompt's real
+        # KV — register it for prefix reuse, then hand off to decode
+        reg = self._prefill_register[slot]
+        if reg is not None:
+            self.pool.register_prefix(*reg)
+            self._prefill_register[slot] = None
+        self._prefill_prompt[slot] = None
+        self._prefill_pos[slot] = 0
+        self._prefill_len[slot] = 0
+        if not self._finish_prefill(slot, handle, int(tok), plen):  # repro: noqa[RA001] tok is already a host int (prefill_slot_chunk owns the final-chunk sync)
+            # one-token request: completed at prefill. _finish_prefill
+            # released its pages/adapter but the slot handle was set at
+            # claim time — clear it so the slot is free again
+            self._slot_handle[slot] = None
+        return n
+
+    def _advance_prefills(self) -> int:
+        """Spend this step's prefill token budget on pending chunks.
+
+        Round-robin in admission order, one chunk per slot per pass, so a
+        short prompt finishing in one chunk never waits for a long
+        prompt's full prefill — the head-of-line-blocking fix. With a
+        finite ``step_token_budget`` the decode chunk's cost
+        (``chunk_size × n_decoding``) is reserved *first* (decode is never
+        starved), and passes repeat until the remainder is spent; with no
+        budget, exactly one pass runs per step (pure interleaving).
+        Returns the tokens spent."""
+        budget_left = None
+        if self.step_token_budget:
+            n_decoding = sum(
+                1 for s in range(self.slots)
+                if self._slot_handle[s] is not None
+                and not self._is_prefilling(s))
+            budget_left = max(0, self.step_token_budget
+                              - self.chunk_size * n_decoding)
+        spent = 0
+        while True:
+            order = sorted(
+                (s for s in range(self.slots) if self._is_prefilling(s)),
+                key=lambda s: self._admit_seq[s] if self.paged else s)
+            if not order:
+                break
+            progressed = False
+            for slot in order:
+                if not self._is_prefilling(slot):
+                    continue            # torn down earlier in this pass
+                rem = int(self._prefill_len[slot]  # repro: noqa[RA001] host numpy bookkeeping, not a device value
+                          - self._prefill_pos[slot])
+                n = min(self.prefill_chunk, rem)
+                final = n >= rem
+                # a FINAL chunk's slot joins this same step's decode
+                # chunk, so its decode cost must be reserved with it —
+                # otherwise the join overdraws the step's hard cap
+                cost = n + (self.chunk_size if final else 0)
+                if budget_left is not None and cost > budget_left:
+                    continue            # a smaller chunk later may still fit
+                used = self._run_prefill_chunk(slot)
+                spent += used
+                if budget_left is not None:
+                    budget_left -= used
+                    if final and used and not self._is_prefilling(slot):
+                        budget_left -= self.chunk_size
+                # a boundary teardown (cancel/timeout/fault) spends no
+                # tokens but IS progress — the slot left the prefill set
+                progressed = True
+            if budget_left is None or not progressed:
+                break
+        return spent
+
     def _admit(self):
-        """Fill free slots from the queue via per-slot prefill."""
+        """Fill free slots from the queue — per-slot one-shot prefill, or
+        (chunked mode) host-only claims whose prefill runs in chunks."""
         for slot in range(self.slots):
             if self._slot_handle[slot] is not None:
                 continue
-            if not (self._admit_paged(slot) if self.paged
-                    else self._admit_contiguous(slot)):
+            if self.prefill_chunk:
+                ok = (self._claim_paged(slot) if self.paged
+                      else self._claim_contiguous(slot))
+            else:
+                ok = (self._admit_paged(slot) if self.paged
+                      else self._admit_contiguous(slot))
+            if not ok:
                 if not self._queue:
                     continue
                 break                     # paged pool exhausted: stop here
@@ -660,6 +981,13 @@ class Scheduler:
         self._slot_handle[slot] = None
         self._done[slot] = True
         self._aslot[slot] = BASE_SLOT
+        # a mid-prefill slot releases like any other: the partial KV is
+        # simply abandoned (contiguous) or freed with the pages (paged) —
+        # it was never prefix-registered, so nothing can ever read it
+        self._prefill_prompt[slot] = None
+        self._prefill_pos[slot] = 0
+        self._prefill_len[slot] = 0
+        self._prefill_register[slot] = None
         if self.paged:
             self.pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
@@ -716,13 +1044,14 @@ class Scheduler:
         """Grow each active slot's table to cover the next chunk,
         preempting the newest request(s) when the pool runs dry."""
         order = sorted((s for s in range(self.slots)
-                        if self._slot_handle[s] is not None),
+                        if self._slot_handle[s] is not None
+                        and not self._is_prefilling(s)),
                        key=lambda s: self._admit_seq[s])
         for slot in order:
             if self._slot_handle[slot] is None:
                 continue                      # preempted below, skip
             while True:
-                target = min(int(self._pos[slot]) + self.chunk_size,
+                target = min(int(self._pos[slot]) + self.chunk_size,  # repro: noqa[RA001] host numpy bookkeeping, not a device value
                              self.max_len)
                 need = -(-target // self._bs) - len(self._slot_blocks[slot])
                 if need <= 0:
@@ -745,26 +1074,47 @@ class Scheduler:
         handle = self._slot_handle[slot]
         req = handle.request
         finished = False
+        appended = 0
         for t in chunk_toks:
             t = int(t)
             handle.tokens.append(t)
+            appended += 1
             if self.eos_id >= 0 and t == self.eos_id:
                 finished = True
                 break
             if len(handle.tokens) >= req.max_new_tokens:
                 finished = True
                 break
+        if appended:
+            handle.timing.token_events.append(
+                (self._clock(), len(handle.tokens)))
         if finished:
             self._release_slot(slot)
             self._finish(handle, RequestStatus.COMPLETED)
 
     def _decode_active(self):
         """One decode chunk through the (possibly fault-wrapped) engine."""
+        pos = self._pos
+        tables = self._tables if self.paged else None
+        if self.prefill_chunk:
+            pre = [s for s in range(self.slots) if self._is_prefilling(s)]
+            if pre:
+                # mid-prefill slots ride the decode chunk as done rows, but
+                # a done row still *writes* KV at its position every step —
+                # park those writes where they drop (beyond max_len /
+                # through a sentinel table row) so they can never land
+                # inside the slot's partial prefill. Host-side copies of
+                # two small numpy arrays; the device shapes are unchanged.
+                pos = self._pos.copy()
+                pos[pre] = self.max_len
+                if self.paged:
+                    tables = self._tables.copy()
+                    tables[pre] = self.pool.sentinel
         call = lambda: self.engine.decode_chunk(
             jnp.asarray(self._tok), self._caches, self._key,
-            jnp.asarray(self._done), jnp.asarray(self._pos),
+            jnp.asarray(self._done), jnp.asarray(pos),
             n_steps=self.chunk_size,
-            block_tables=self._tables if self.paged else None,
+            block_tables=tables,
             adapter_slots=self._aslot if self.apool is not None else None)
         if self._faults is not None:
             return self._faults.around_decode(self, call)
@@ -778,20 +1128,36 @@ class Scheduler:
         drained); True means there is more work.
         """
         self.steps_run += 1
+        self.last_step_tokens = 0
         if self._faults is not None:
             self._faults.on_step(self)
         self._sweep()
         self._admitted_this_step = 0
         self._admit()
+        prefill_spent = 0
+        if self.prefill_chunk:
+            prefill_spent = self._advance_prefills()
+            if self._queue:
+                # final chunks may have retired one-token requests or
+                # re-queued faulted ones — backfill the freed slots so
+                # their first chunks run next step
+                self._admit()
         if self.paged:
             self._ensure_pages()
+        # decoding set: occupied slots past their prefill (mid-prefill
+        # slots keep done=True so the decode chunk ignores their rows)
         active = [s for s in range(self.slots)
-                  if self._slot_handle[s] is not None]
+                  if self._slot_handle[s] is not None
+                  and not self._is_prefilling(s)]
         if not active:
+            self.last_step_tokens = prefill_spent
+            self.tokens_spent += prefill_spent
             # no-progress detector: a queue nothing can ever be admitted
             # from must not spin run() forever — fail the head-of-queue
-            # request once the stall budget is spent
-            if self._queue and self._admitted_this_step == 0:
+            # request once the stall budget is spent. Prefill-chunk
+            # progress counts as progress.
+            if self._queue and self._admitted_this_step == 0 \
+                    and prefill_spent == 0:
                 self._stall_steps += 1
                 if self._stall_steps >= self.stall_limit:
                     head = self._queue.popleft()
@@ -802,7 +1168,7 @@ class Scheduler:
                     self._stall_steps = 0
             else:
                 self._stall_steps = 0
-            return bool(self._queue)
+            return self.pending > 0
         self._stall_steps = 0
         try:
             out = self._decode_active()
@@ -811,9 +1177,13 @@ class Scheduler:
             # caches, and a real device fault invalidates them wholesale
             # either way: recover by preempt-all + re-prefill
             self._on_device_fault(err)
+            self.last_step_tokens = prefill_spent
+            self.tokens_spent += prefill_spent
             return self.pending > 0
         toks, self._caches, self._key, done, pos, bad = out
         self.chunks_run += 1
+        self.last_step_tokens = prefill_spent + self.chunk_size * len(active)
+        self.tokens_spent += self.last_step_tokens
         # The designed once-per-chunk host readback: chunk tokens, done
         # mask, KV frontiers and the finite-guard bits cross to the host
         # in ONE explicit transfer. pos is each slot's true KV frontier
@@ -939,6 +1309,7 @@ class Scheduler:
                              np.asarray(e["tokens"]).reshape(-1)]
             handle.fault_retries = int(np.asarray(e["fault_retries"]))
             handle.submitted_at = now          # deadline clock restarts
+            handle.timing.submitted_at = now   # latency clock too
             handle._stats_fn = lambda a=aid: self._request_stats(a)
             self._live_handles.add(handle)
             self._queue.append(handle)

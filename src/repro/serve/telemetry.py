@@ -1,0 +1,141 @@
+"""Per-request serving latency telemetry: timestamps + exact percentiles.
+
+Production serving is judged on TTFT/TPOT *tails*, not goodput averages —
+a single head-of-line-blocking prefill is invisible in tokens/sec and
+glaring at p99. This module is the measurement half of the chunked-prefill
+work: the scheduler stamps every request's :class:`RequestTiming` against
+its injectable ``clock`` (the same one deadlines use, so deterministic
+tests drive both), and :func:`latency_summary` reduces a drained run to
+the p50/p95/p99 numbers ``serve_bench/v7`` reports.
+
+Percentiles are **exact** (sort + nearest-rank), never interpolated or
+approximated: the sample sets here are at most thousands of requests, and
+an approximate quantile sketch would let a pathological tail hide inside
+its error bound — the exact rank statistic is the whole point of the
+measurement. ``percentile`` raises on empty samples and non-finite values
+instead of guessing; a NaN timing is a stamping bug upstream, not a data
+point.
+
+Definitions (matching vLLM / industry convention):
+
+* **TTFT** — ``first_token_at - submitted_at``: queueing + (possibly
+  chunked) prefill + first sample. Measured from *submit*, not admission,
+  so admission-queue waits count — that is the number an SLO bounds.
+* **TPOT** — ``(last_token_at - first_token_at) / (n_tokens - 1)``: mean
+  inter-token time over the decode phase. Requests with fewer than two
+  tokens have no inter-token gap and are excluded from the TPOT sample
+  (not counted as zero, which would drag the tail down artificially).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["RequestTiming", "percentile", "percentiles", "latency_summary"]
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Exact nearest-rank percentile of ``values``.
+
+    ``q`` in [0, 100]. Sorts a copy and returns the element at rank
+    ``ceil(q/100 * n)`` (1-indexed; q=0 returns the minimum) — the
+    classic nearest-rank definition, so the result is always an actual
+    observed sample, never an interpolation between two.
+
+    Raises ``ValueError`` on an empty sample, a non-finite value (NaN or
+    inf is a measurement bug, not a latency), or ``q`` outside [0, 100].
+    """
+    vals: List[float] = [float(v) for v in values]
+    if not vals:
+        raise ValueError("percentile of an empty sample")
+    if not 0.0 <= float(q) <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100]: {q}")
+    for v in vals:
+        if not math.isfinite(v):
+            raise ValueError(f"non-finite value in percentile sample: {v!r}")
+    vals.sort()
+    rank = math.ceil(float(q) / 100.0 * len(vals))
+    return vals[max(rank - 1, 0)]
+
+
+def percentiles(values: Sequence[float],
+                qs: Sequence[float] = (50, 95, 99)) -> dict:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` via :func:`percentile`.
+
+    One sort for all ranks; same raising behaviour as :func:`percentile`.
+    """
+    vals = sorted(float(v) for v in values)
+    out = {}
+    for q in qs:
+        out[f"p{q:g}"] = percentile(vals, q)
+    return out
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """One request's latency trace, stamped by the scheduler's clock.
+
+    All timestamps are in the scheduler clock's units (seconds for the
+    default ``time.monotonic``); ``None`` means the event has not happened
+    (yet, or ever — a rejected request never gets ``first_token_at``).
+
+    ``prefill_chunks`` records the completion time of every prefill chunk
+    the request's admission ran (a single entry for one-shot prefill);
+    ``token_events`` records ``(time, cumulative_tokens)`` after every
+    chunk that appended tokens, which is what TPOT is derived from.
+    """
+
+    submitted_at: Optional[float] = None
+    admitted_at: Optional[float] = None      # first slot claim
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None      # any terminal status
+    prefill_chunks: List[float] = dataclasses.field(default_factory=list)
+    token_events: List[Tuple[float, int]] = \
+        dataclasses.field(default_factory=list)
+
+    def ttft(self) -> Optional[float]:
+        """Submit → first token, or None if no token was ever emitted."""
+        if self.first_token_at is None or self.submitted_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    def tpot(self) -> Optional[float]:
+        """Mean inter-token time over the decode phase, or None when the
+        request produced fewer than two tokens (no inter-token gap
+        exists — excluded from the sample, not zero)."""
+        if self.first_token_at is None or not self.token_events:
+            return None
+        t_last, n_last = self.token_events[-1]
+        if n_last < 2:
+            return None
+        return (t_last - self.first_token_at) / (n_last - 1)
+
+
+def latency_summary(timings: Iterable[RequestTiming],
+                    qs: Sequence[float] = (50, 95, 99)) -> dict:
+    """Reduce a run's timings to TTFT/TPOT percentiles (milliseconds).
+
+    Returns ``{"n_ttft": ..., "n_tpot": ..., "ttft_ms": {"p50": ...},
+    "tpot_ms": {...}}``. Requests that never emitted a token contribute to
+    neither sample; single-token requests contribute TTFT only. Raises
+    ``ValueError`` when a sample is empty — summarizing a run in which
+    nothing generated is a harness bug, not a zero.
+    """
+    ttft = []
+    tpot = []
+    for t in timings:
+        v = t.ttft()
+        if v is not None:
+            ttft.append(v * 1e3)
+        v = t.tpot()
+        if v is not None:
+            tpot.append(v * 1e3)
+    if not ttft:
+        raise ValueError("latency_summary: no request ever emitted a token")
+    if not tpot:
+        raise ValueError("latency_summary: no request emitted two tokens "
+                         "(TPOT sample empty)")
+    return {"n_ttft": len(ttft), "n_tpot": len(tpot),
+            "ttft_ms": percentiles(ttft, qs),
+            "tpot_ms": percentiles(tpot, qs)}

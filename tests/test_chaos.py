@@ -83,6 +83,20 @@ def adapter_engine():
     return cfg, eng, {"adapters": reg}
 
 
+@pytest.fixture(scope="module")
+def chunked_engine():
+    """Paged engine with chunked + budgeted prefill: the full chaos mix
+    plus prefill-chunk-boundary faults lands on a scheduler whose
+    admissions hold partial page chains across steps."""
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8,
+                                          num_blocks=14, prefill_chunk=4,
+                                          step_token_budget=12))
+    return cfg, eng, {}
+
+
 def _workload(cfg, with_adapters):
     """Deterministic request mix: shared prefixes, varied lengths."""
     key = jax.random.PRNGKey(99)
@@ -135,15 +149,16 @@ def _check_invariants(handles, refs, scheds):
 
 
 @pytest.mark.parametrize("seed", SEEDS)
-@pytest.mark.parametrize("stack", ["base", "adapter"])
+@pytest.mark.parametrize("stack", ["base", "adapter", "chunked"])
 def test_chaos_drain(stack, seed, request, tmp_path):
     cfg, eng, extra = request.getfixturevalue(f"{stack}_engine")
     workload = _workload(cfg, with_adapters=bool(extra))
     refs = _reference(eng, workload, extra)
 
+    # p_prefill_fault only fires on chunk dispatches — inert off-chunked
     inj = FaultInjector(seed, p_device=0.06, p_nan=0.08, p_kv_corrupt=0.12,
                         p_pool_hog=0.2, p_adapter_hog=0.15,
-                        max_hog_steps=2)
+                        p_prefill_fault=0.08, max_hog_steps=2)
     sched = Scheduler(eng, chunk_size=2, faults=inj, max_fault_retries=6,
                       stall_limit=30, **extra)
     handles = [sched.submit(p, n, adapter_id=aid)
@@ -165,7 +180,8 @@ def test_chaos_drain(stack, seed, request, tmp_path):
                 old, prior_trace = sched, inj.trace
                 inj = FaultInjector(seed + 1000, p_device=0.06, p_nan=0.08,
                                     p_kv_corrupt=0.12, p_pool_hog=0.2,
-                                    p_adapter_hog=0.15, max_hog_steps=2)
+                                    p_adapter_hog=0.15,
+                                    p_prefill_fault=0.08, max_hog_steps=2)
                 # one trace across the kill: the whole run (both injector
                 # phases) replays from the matrix seed alone
                 inj.seed = seed
@@ -237,3 +253,94 @@ def test_chaos_checkpoint_write_failures(base_engine, seed, tmp_path):
         assert_drained(fresh)
     sched.run(max_steps=400)
     assert_drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-chunk-boundary faults (deterministic, beyond the seeded matrix)
+# ---------------------------------------------------------------------------
+
+def test_prefill_fault_quarantines_partial_chain_and_retries(chunked_engine):
+    """A device fault on a prefill-chunk boundary quarantines the partial
+    page chain (freed + never prefix-registered), and the bounded retry
+    re-prefills from scratch token-exactly."""
+    cfg, eng, _ = chunked_engine
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(41), (17,),
+                                      0, cfg.vocab_size))
+    ref = Scheduler(eng, chunk_size=2)
+    hr = ref.submit(p, 6)
+    ref.run(max_steps=200)
+
+    inj = FaultInjector(0, p_prefill_fault=1.0)
+    sched = Scheduler(eng, chunk_size=2, faults=inj, max_fault_retries=4,
+                      prefix_reuse=True)
+    h = sched.submit(p, 6)
+    sched.step()                      # claim, fault, requeue, re-claim
+    assert sched.device_faults >= 1 and sched.quarantines >= 1
+    assert not h.done and not h.tokens
+    assert h.fault_retries >= 1       # bounded-retry accounting ticked
+    # the faulted chain was freed wholesale; only the re-claim's fresh
+    # chain (ceil((17+1)/8) = 3 pages) is held now
+    assert sched.pool.available() == sched.pool.num_blocks - 3
+    assert inj.trace and inj.trace[0]["fault"] == "prefill_chunk_fault"
+    inj.p_prefill_fault = 0.0         # storm over: retry must complete
+    sched.run(max_steps=200)
+    assert h.status is RequestStatus.COMPLETED
+    assert h.tokens == hr.tokens      # token-exact resume
+    # a quarantined partial chain must never have become a prefix hit
+    assert sched.prefix_hits == 0
+    assert_drained(sched)
+
+
+def test_prefill_fault_retries_are_bounded(chunked_engine):
+    """A permanent prefill fault exhausts max_fault_retries and the
+    request terminates FAILED — never an infinite requeue loop — with
+    the pool clean."""
+    cfg, eng, _ = chunked_engine
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(42), (12,),
+                                      0, cfg.vocab_size))
+    inj = FaultInjector(0, p_prefill_fault=1.0)
+    sched = Scheduler(eng, chunk_size=2, faults=inj, max_fault_retries=3,
+                      stall_limit=50)
+    h = sched.submit(p, 4)
+    sched.run(max_steps=200)
+    assert h.status is RequestStatus.FAILED
+    assert "prefill-chunk device fault" in h.error
+    assert h.fault_retries > 3
+    assert not h.tokens
+    assert_drained(sched)
+
+
+def test_snapshot_roundtrips_half_prefilled_request(chunked_engine,
+                                                    tmp_path):
+    """Kill-and-restore with a request caught mid-prefill: it serializes
+    as preempted (prompt, zero tokens) and the restored scheduler
+    re-prefills it token-exactly."""
+    cfg, eng, _ = chunked_engine
+    p_long = np.asarray(jax.random.randint(jax.random.PRNGKey(43), (20,),
+                                           0, cfg.vocab_size))
+    p_short = np.asarray(jax.random.randint(jax.random.PRNGKey(44), (3,),
+                                            0, cfg.vocab_size))
+    ref = Scheduler(eng, chunk_size=2)
+    r_long, r_short = ref.submit(p_long, 5), ref.submit(p_short, 7)
+    ref.run(max_steps=200)
+
+    sched = Scheduler(eng, chunk_size=2)
+    h_long, h_short = sched.submit(p_long, 5), sched.submit(p_short, 7)
+    sched.step()                      # long: mid-prefill; short: decoding
+    assert h_long.status is RequestStatus.RUNNING and not h_long.tokens
+    assert any(pp is not None for pp in sched._prefill_prompt)
+    mgr = CheckpointManager(str(tmp_path / "snap"))
+    mgr.save(1, sched.snapshot())
+
+    fresh = Scheduler(eng, chunk_size=2)
+    restored = fresh.restore(mgr.restore_pytree(1))
+    assert len(restored) == 2         # the half-prefilled one came along
+    h2_long = restored[h_long.request.rid]
+    h2_short = restored[h_short.request.rid]
+    assert h2_long.tokens == []       # no token yet: plain re-prefill
+    assert h2_short.tokens[:len(h_short.tokens)] == h_short.tokens
+    fresh.run(max_steps=200)
+    assert h2_long.status is RequestStatus.COMPLETED
+    assert h2_long.tokens == r_long.tokens
+    assert h2_short.tokens == r_short.tokens
+    assert_drained(fresh)

@@ -1,0 +1,219 @@
+"""Chunked prefill ≡ one-shot prefill: the token-exactness property.
+
+The chunked-prefill tentpole splits a prompt's prefill into fixed-token
+chunks interleaved with decode so short requests stop queueing behind
+long prompts. The *only* acceptable observable difference is latency:
+for every request the generated stream must equal the one-shot run token
+for token — chunking changes when KV is written, never what is written.
+
+The matrix here pins that across every axis that shares the write path:
+
+* chunk size 1 (every boundary a scheduling point), a prime that never
+  divides the prompt length (ragged final chunks), and one at least as
+  large as any prompt (degenerate single-chunk = one-shot shape);
+* contiguous and paged KV layouts (two different scatter disciplines);
+* both decode loops (``scan`` device-resident and ``step`` debug);
+* fp stack and the full quantized stack (w4a8 ASER base + int8 KV +
+  LoRA adapter routing), where KV writes go through scale tensors;
+* prefix-reuse hits landing mid-chunk: a cached-prefix admission starts
+  its chunked prefill at ``start = shared_tok`` inside a chunk;
+* a finite ``step_token_budget``, which changes chunk interleaving
+  order but must not change tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.lifecycle import RequestStatus, assert_drained
+from repro.serve.scheduler import Scheduler
+
+
+def _tiny_cfg():
+    return get_smoke_config("llama3_8b").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32", remat=False)
+
+
+# mixed lengths: one-token generation, prompts longer/shorter than the
+# prime chunk, and one prompt longer than the decode chunk
+SPEC = [(5, 8), (2, 4), (7, 11), (3, 1), (11, 6)]
+CHUNKS = (1, 3, 64)     # 1, a prime, >= every prompt
+
+
+def _prompts(cfg, spec, seed=2):
+    key = jax.random.PRNGKey(seed)
+    return [(np.asarray(jax.random.randint(jax.random.fold_in(key, i),
+                                           (L,), 0, cfg.vocab_size)), n)
+            for i, (L, n) in enumerate(spec)]
+
+
+def _scfg(layout, loop, chunk, budget=0):
+    kw = dict(max_len=64, batch_slots=2, decode_loop=loop,
+              prefill_chunk=chunk, step_token_budget=budget)
+    if layout == "paged":
+        kw.update(kv_layout="paged", block_size=8, num_blocks=40)
+    return ServeConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def fp():
+    cfg = _tiny_cfg()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def quant():
+    """w4a8 ASER base + two LoRA tenants; engines add int8 KV."""
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.quant import calibrate, quantize_model, reduce_shared
+    from repro.serve.adapters import AdapterRegistry, install_pools
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(2, 4, 16)), cfg)
+    qp = quantize_model(params, tape, "aser_as(rank=8)")
+    reg = AdapterRegistry(qp, rank=4)
+    reg.add("t0")
+    reg.add("t1")
+    return cfg, install_pools(qp, slots=3, rank=4), reg
+
+
+def _run(engine, prompts, extra=None, aids=None, **sched_kw):
+    sched = Scheduler(engine, chunk_size=3, **dict(extra or {}, **sched_kw))
+    hs = [sched.submit(p, n, adapter_id=aids[i] if aids else None)
+          for i, (p, n) in enumerate(prompts)]
+    sched.run(max_steps=500)
+    assert_drained(sched)
+    for h in hs:
+        assert h.status is RequestStatus.COMPLETED, h.status
+    return [list(h.tokens) for h in hs], sched
+
+
+# ---------------------------------------------------------------------------
+# The property: chunked == one-shot, across the matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_chunked_matches_oneshot_fp(fp, layout):
+    """fp stack, scan loop: every chunk size and a budgeted variant
+    reproduce the one-shot scheduler's streams exactly."""
+    cfg, params = fp
+    prompts = _prompts(cfg, SPEC)
+    ref, _ = _run(Engine(params, cfg, _scfg(layout, "scan", 0)), prompts)
+    for chunk in CHUNKS:
+        eng = Engine(params, cfg, _scfg(layout, "scan", chunk))
+        got, sched = _run(eng, prompts)
+        assert got == ref, (layout, chunk)
+        n_chunks = sum(-(-len(p) // chunk) for p, _ in prompts)
+        assert sched.prefill_chunks_run == n_chunks
+    # a finite budget reorders chunk interleaving, never tokens
+    eng = Engine(params, cfg, _scfg(layout, "scan", 3, budget=9))
+    got, sched = _run(eng, prompts)
+    assert got == ref, (layout, "budgeted")
+    assert sched.tokens_spent > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_chunked_matches_oneshot_fp_step_loop(fp, layout):
+    """The step debug loop shares the property (different decode path,
+    same chunked prefill writes)."""
+    cfg, params = fp
+    prompts = _prompts(cfg, SPEC)
+    ref, _ = _run(Engine(params, cfg, _scfg(layout, "step", 0)), prompts)
+    for chunk in CHUNKS:
+        got, _ = _run(Engine(params, cfg, _scfg(layout, "step", chunk)),
+                      prompts)
+        assert got == ref, (layout, chunk)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("loop", ["scan", "step"])
+def test_chunked_matches_oneshot_quantized(quant, loop):
+    """Full quantized stack: w4a8 ASER + int8 KV + adapter routing. The
+    chunked scatter goes through KV scale tensors and adapter-salted
+    prefixes; tokens must still match one-shot exactly."""
+    cfg, pooled, reg = quant
+    prompts = _prompts(cfg, SPEC)
+    aids = [None, "t0", "t1", "t0", None]
+
+    def scfg(chunk):
+        return ServeConfig(max_len=64, batch_slots=2, decode_loop=loop,
+                           kv_layout="paged", block_size=8, num_blocks=40,
+                           kv_dtype="int8", prefill_chunk=chunk)
+
+    extra = {"adapters": reg}
+    ref, _ = _run(Engine(pooled, cfg, scfg(0)), prompts, extra, aids)
+    for chunk in CHUNKS:
+        got, _ = _run(Engine(pooled, cfg, scfg(chunk)), prompts, extra,
+                      aids)
+        assert got == ref, (loop, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-reuse hits landing mid-chunk
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_resumes_mid_chunk(fp):
+    """A cached-prefix admission starts its chunked prefill at
+    ``start = shared_tok``, which lands strictly inside a chunk for
+    chunk sizes that don't divide it — the stream must still be exact
+    and the hit must be counted."""
+    cfg, params = fp
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (21,),
+                                      0, cfg.vocab_size))
+    ref, _ = _run(Engine(params, cfg, _scfg("paged", "scan", 0)),
+                  [(p, 6)], prefix_reuse=True)
+    for chunk in (3, 5, 32):       # 16 % 3, 16 % 5 != 0: mid-chunk starts
+        eng = Engine(params, cfg, _scfg("paged", "scan", chunk))
+        sched = Scheduler(eng, chunk_size=3, prefix_reuse=True)
+        h1 = sched.submit(p, 6)
+        sched.run(max_steps=200)
+        h2 = sched.submit(p, 6)
+        sched.run(max_steps=200)
+        assert_drained(sched)
+        assert [h1.tokens, h2.tokens] == [ref[0], ref[0]], chunk
+        # 21 tokens / block 8 -> two full pages cached: 16 shared tokens
+        assert sched.prefix_hits == 1 and sched.shared_tokens == 16, chunk
+
+
+def test_fully_cached_prompt_cow_mid_chunk(fp):
+    """A 100%-cached prompt takes the COW path (private copy of the last
+    shared page, re-prefill only the final token) — in chunked mode that
+    final token is a single one-token chunk."""
+    cfg, params = fp
+    p = np.asarray(jax.random.randint(jax.random.PRNGKey(6), (16,),
+                                      0, cfg.vocab_size))
+    ref, _ = _run(Engine(params, cfg, _scfg("paged", "scan", 0)),
+                  [(p, 5)], prefix_reuse=True)
+    eng = Engine(params, cfg, _scfg("paged", "scan", 4))
+    sched = Scheduler(eng, chunk_size=3, prefix_reuse=True)
+    h1 = sched.submit(p, 5)
+    sched.run(max_steps=200)
+    h2 = sched.submit(p, 5)
+    sched.run(max_steps=200)
+    assert_drained(sched)
+    assert [h1.tokens, h2.tokens] == [ref[0], ref[0]]
+    assert sched.cow_copies == 1
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+def test_chunked_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(max_len=64, prefill_chunk=-1)
+    with pytest.raises(ValueError):
+        # budgeting a one-shot prefill is meaningless: the whole prompt
+        # is a single unbudgetable dispatch
+        ServeConfig(max_len=64, step_token_budget=8)
+    with pytest.raises(ValueError):
+        # a budget smaller than one chunk can never schedule that chunk
+        ServeConfig(max_len=64, prefill_chunk=8, step_token_budget=4)
+    ServeConfig(max_len=64, prefill_chunk=8, step_token_budget=8)

@@ -343,3 +343,87 @@ def test_check_drained_reports_leaks(paged):
         assert_drained(sched)
     sched.run()
     assert_drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: deadlines + cancellation enforced BETWEEN chunks
+# ---------------------------------------------------------------------------
+
+def _chunked_paged(tiny, **kw):
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          kv_layout="paged", block_size=8,
+                                          num_blocks=16, prefill_chunk=4,
+                                          **kw))
+    return cfg, eng
+
+
+def test_ttft_deadline_enforced_mid_prefill(tiny):
+    """The TTFT-gap fix: a mid-prefill request (RUNNING, no token yet)
+    must expire at a chunk boundary when its TTFT deadline passes — with
+    one-shot prefill a long prompt could sail past ``ttft_ms`` inside a
+    single admission dispatch. The partial page chain must be freed and
+    the drain must be clean."""
+    cfg, eng = _chunked_paged(tiny)
+    clk = [50.0]
+    sched = Scheduler(eng, chunk_size=2, clock=lambda: clk[0])
+    h = sched.submit(_prompt(cfg, 20, seed=31), 8, ttft_ms=40.0)
+    sched.step()                      # claim + first chunk(s): mid-prefill
+    assert h.status is RequestStatus.RUNNING and not h.tokens
+    assert any(p is not None for p in sched._prefill_prompt), \
+        "request should be mid-prefill"
+    baseline = sched.pool.available()
+    assert baseline < sched.pool.num_blocks     # chain is held
+    clk[0] += 0.1                     # +100 ms: TTFT 40 ms long gone
+    sched.step()                      # next chunk boundary enforces it
+    assert h.status is RequestStatus.TIMED_OUT
+    assert "TTFT" in h.error and not h.tokens
+    assert sched.pool.available() == sched.pool.num_blocks  # chain freed
+    assert sched.pending == 0
+    assert_drained(sched)
+
+
+def test_total_deadline_enforced_mid_prefill(tiny):
+    cfg, eng = _chunked_paged(tiny)
+    clk = [10.0]
+    sched = Scheduler(eng, chunk_size=2, clock=lambda: clk[0])
+    h = sched.submit(_prompt(cfg, 20, seed=32), 8, deadline_ms=30.0)
+    sched.step()
+    assert h.status is RequestStatus.RUNNING
+    clk[0] += 0.1
+    sched.step()
+    assert h.status is RequestStatus.TIMED_OUT
+    assert "total deadline" in h.error
+    assert_drained(sched)
+
+
+def test_cancel_mid_prefill_frees_chain(tiny):
+    """cancel() between chunks tears the claim down at the next boundary:
+    no token, no leak, CANCELLED terminal."""
+    cfg, eng = _chunked_paged(tiny)
+    sched = Scheduler(eng, chunk_size=2)
+    h = sched.submit(_prompt(cfg, 20, seed=33), 8)
+    sched.step()
+    assert h.status is RequestStatus.RUNNING and not h.tokens
+    h.cancel()
+    sched.step()
+    assert h.status is RequestStatus.CANCELLED and not h.tokens
+    assert sched.cancelled == 1
+    assert sched.pool.available() == sched.pool.num_blocks
+    assert_drained(sched)
+
+
+def test_ttft_met_by_chunked_prefill_completes(tiny):
+    """Control for the gap fix: a chunked prefill that finishes inside
+    its TTFT budget completes normally and stamps first_token_at."""
+    cfg, eng = _chunked_paged(tiny)
+    clk = [5.0]
+    sched = Scheduler(eng, chunk_size=2, clock=lambda: clk[0])
+    h = sched.submit(_prompt(cfg, 20, seed=34), 4, ttft_ms=1000.0)
+    sched.run()
+    assert h.status is RequestStatus.COMPLETED
+    assert h.tokens == _ref(eng, _prompt(cfg, 20, seed=34), 4)
+    t = h.timing
+    assert t.submitted_at == t.admitted_at == t.first_token_at == 5.0
+    assert len(t.prefill_chunks) == 5          # ceil(20 / 4)
+    assert t.finished_at is not None and t.ttft() == 0.0

@@ -259,3 +259,108 @@ def test_poll_with_stats_reports_adapter_telemetry(tiny):
     _, stp = hp.poll(with_stats=True)
     assert set(stp) == base_keys and stp["adapter_id"] is None
     assert stp["capacity"] == 0 and stp["adapter_loads"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Head-of-line blocking: the chunked + budgeted regression pin
+# ---------------------------------------------------------------------------
+
+def _drive(sched, clock_cell, short, long_prompt, long_n, submit_at=4):
+    """Step the scheduler under a token-proportional cost model: after
+    each step the fake clock advances by the device tokens that step
+    dispatched — prefill (one-shot or chunked) plus the decode chunk.
+    That makes inter-token *time* gaps equal token costs, so head-of-line
+    blocking shows up deterministically without wall-clock noise."""
+    costs = []
+    h_long = None
+    for step in range(400):
+        if step == submit_at:
+            h_long = sched.submit(long_prompt, long_n)
+        queued = {h for h in (h_long,) if h is not None
+                  and h.status is RequestStatus.QUEUED}
+        more = sched.step()
+        admitted = sum(len(h.request.prompt) for h in queued
+                       if h.status is not RequestStatus.QUEUED
+                       and not getattr(sched, "prefill_chunk", 0))
+        cost = admitted + sched.last_step_tokens \
+            if sched.prefill_chunk else \
+            admitted + sched.chunk_size * sum(
+                1 for s in range(sched.slots)
+                if sched._slot_handle[s] is not None)
+        costs.append(cost)
+        clock_cell[0] += cost
+        if not more and h_long is not None:
+            break
+    return h_long, costs
+
+
+def test_chunked_budget_bounds_inter_token_gaps(tiny):
+    """The head-of-line-blocking pin: a max-length prompt arriving while
+    a short request decodes must not open an inter-token gap beyond the
+    per-step token budget — chunked+budgeted bounds every step's token
+    cost, where one-shot prefill dispatches the whole prompt inside one
+    step and stalls the in-flight stream for its full length."""
+    cfg, params = tiny
+    long_prompt = _prompts(cfg, [(48, 1)], seed=7)[0][0]   # near max_len
+    short, short_n = _prompts(cfg, [(4, 24)], seed=8)[0]
+    budget = 10
+
+    def gaps(handle):
+        ev = handle.timing.token_events
+        return [b[0] - a[0] for a, b in zip(ev, ev[1:])]
+
+    # chunked + budgeted: every in-flight gap obeys the budget bound
+    clk = [0.0]
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          prefill_chunk=4,
+                                          step_token_budget=budget))
+    sched = Scheduler(eng, chunk_size=3, clock=lambda: clk[0])
+    h_short = sched.submit(short, short_n)
+    h_long, costs = _drive(sched, clk, h_short, long_prompt, 1)
+    assert_drained(sched)
+    assert h_short.status is RequestStatus.COMPLETED
+    assert h_long.status is RequestStatus.COMPLETED
+    assert max(costs) <= budget                  # per-step hard cap
+    assert all(sched.last_step_tokens <= budget for _ in (0,))
+    chunked_gaps = gaps(h_short)
+    assert chunked_gaps and max(chunked_gaps) <= budget
+    chunked_tokens = list(h_short.tokens)
+
+    # one-shot: the long admission step blows a > budget gap into the
+    # short request's stream (the regression this test exists to catch)
+    clk = [0.0]
+    eng1 = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2))
+    sched1 = Scheduler(eng1, chunk_size=3, clock=lambda: clk[0])
+    h_short1 = sched1.submit(short, short_n)
+    h_long1, _ = _drive(sched1, clk, h_short1, long_prompt, 1)
+    assert_drained(sched1)
+    oneshot_gaps = gaps(h_short1)
+    assert max(oneshot_gaps) > budget            # HOL blocking, visible
+    # and chunking changed latency shape only — never the tokens
+    assert chunked_tokens == h_short1.tokens
+
+
+def test_step_token_budget_accounting(tiny):
+    """`tokens_spent` / `last_step_tokens` account every device token a
+    step dispatches: prefill chunks plus decode-chunk cost; the run total
+    covers every prompt token exactly once plus all decode chunks."""
+    cfg, params = tiny
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_slots=2,
+                                          prefill_chunk=4,
+                                          step_token_budget=12))
+    sched = Scheduler(eng, chunk_size=3)
+    reqs = _prompts(cfg, [(5, 8), (11, 4), (2, 6)])
+    hs = [sched.submit(p, n) for p, n in reqs]
+    per_step = []
+    while True:
+        more = sched.step()
+        per_step.append(sched.last_step_tokens)   # final step counts too
+        if not more:
+            break
+    assert_drained(sched)
+    assert all(c <= 12 for c in per_step), per_step
+    assert sum(per_step) == sched.tokens_spent
+    prompt_toks = sum(len(p) for p, _ in reqs)
+    # every prompt token prefilled exactly once; the rest is decode chunks
+    assert sched.tokens_spent >= prompt_toks
+    assert (sched.tokens_spent - prompt_toks) % sched.chunk_size == 0

@@ -1,11 +1,14 @@
 """Unit tests for the ``serve_bench`` report validator.
 
 The validator is the CI gate between a benchmark run and the checked-in
-baseline; it must accept every released schema generation (v1–v6) and
+baseline; it must accept every released schema generation (v1–v7) and
 reject malformed payloads with errors that name the offending field —
 a silent pass here would let a NaN or truncated report become the perf
 baseline subsequent PRs are measured against. v6 adds the steady-state
-sanitizer counters to continuous rows and pins them to exactly zero.
+sanitizer counters to continuous rows and pins them to exactly zero; v7
+adds the chunked-prefill tail-latency rows (exact TTFT/TPOT percentiles
+for both legs, ordering-checked, with the p95-TTFT and goodput
+improvement gates enforced on non-smoke baselines only).
 """
 import math
 
@@ -13,8 +16,8 @@ import pytest
 
 from benchmarks.serve_bench import (ADAPTER_ROW_FIELDS, CONT_ROW_FIELDS,
                                     CONT_ROW_FIELDS_V6, KV_ROW_FIELDS,
-                                    PREFIX_ROW_FIELDS, ROW_FIELDS,
-                                    SANITIZER_FIELDS, validate)
+                                    LATENCY_ROW_FIELDS, PREFIX_ROW_FIELDS,
+                                    ROW_FIELDS, SANITIZER_FIELDS, validate)
 
 
 def _static_row(mode="fp", **over):
@@ -77,14 +80,36 @@ def _adapter_row(mode="w4a8_aser", **over):
     return row
 
 
-def _report(schema):
-    rep = {"schema": schema, "smoke": True,
+def _latency_row(mode="fp", **over):
+    row = {"mode": mode, "requests": 8, "batch_slots": 2, "chunk": 4,
+           "prefill_chunk": 8, "step_token_budget": 20, "block_size": 8,
+           "wave": 3, "arrival_gap_tok": 40,
+           "useful_tokens": 40, "oneshot_s": 0.2, "chunked_s": 0.25,
+           "oneshot_tokens_dispatched": 320, "tokens_dispatched": 288,
+           "oneshot_goodput_util": 0.125, "goodput_util": 0.139,
+           "goodput_ratio": 1.11,
+           "oneshot_ttft_p50_tok": 8.0, "oneshot_ttft_p95_tok": 40.0,
+           "oneshot_ttft_p99_tok": 55.0,
+           "oneshot_tpot_p50_tok": 1.0, "oneshot_tpot_p95_tok": 3.0,
+           "oneshot_tpot_p99_tok": 4.0,
+           "ttft_p50_tok": 0.0, "ttft_p95_tok": 25.0, "ttft_p99_tok": 30.0,
+           "tpot_p50_tok": 1.1, "tpot_p95_tok": 2.5, "tpot_p99_tok": 3.5,
+           "ttft_p95_speedup": 1.6,
+           "chunked_recompiles_after_warmup": 0,
+           "chunked_h2d_transfers_per_step": 0.0}
+    assert set(row) == set(LATENCY_ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _report(schema, smoke=True):
+    rep = {"schema": schema, "smoke": smoke,
            "model": {"name": "t", "n_layers": 2, "d_model": 64,
                      "vocab_size": 128},
            "decode_loop_default": "scan",
            "rows": [_static_row("fp"), _static_row("w4a8_aser")]}
     if schema != "serve_bench/v1":
-        v6 = schema == "serve_bench/v6"
+        v6 = schema in ("serve_bench/v6", "serve_bench/v7")
         rep["continuous_rows"] = [_cont_row("fp", v6=v6),
                                   _cont_row("w4a8_aser", v6=v6)]
     if schema not in ("serve_bench/v1", "serve_bench/v2"):
@@ -92,8 +117,11 @@ def _report(schema):
     if schema not in ("serve_bench/v1", "serve_bench/v2",
                       "serve_bench/v3"):
         rep["kv_rows"] = [_kv_row("fp"), _kv_row("w4a8_aser")]
-    if schema in ("serve_bench/v5", "serve_bench/v6"):
+    if schema in ("serve_bench/v5", "serve_bench/v6", "serve_bench/v7"):
         rep["adapter_rows"] = [_adapter_row()]
+    if schema == "serve_bench/v7":
+        rep["latency_rows"] = [_latency_row("fp"),
+                               _latency_row("w4a8_aser")]
     return rep
 
 
@@ -101,7 +129,8 @@ def _report(schema):
 
 @pytest.mark.parametrize("schema", ["serve_bench/v1", "serve_bench/v2",
                                     "serve_bench/v3", "serve_bench/v4",
-                                    "serve_bench/v5", "serve_bench/v6"])
+                                    "serve_bench/v5", "serve_bench/v6",
+                                    "serve_bench/v7"])
 def test_every_released_schema_validates(schema):
     assert validate(_report(schema)) is True
 
@@ -272,4 +301,138 @@ def test_v5_fixture_ignores_sanitizer_fields():
     a v5 file with a stray nonzero counter is still just a v5 file."""
     rep = _report("serve_bench/v5")
     rep["continuous_rows"][0]["recompiles_after_warmup"] = 7
+    assert validate(rep) is True
+
+
+# -- chunked-prefill latency rows (v7) ----------------------------------------
+
+def test_v7_requires_latency_rows():
+    rep = _report("serve_bench/v7")
+    del rep["latency_rows"]
+    with pytest.raises(ValueError, match="no latency rows"):
+        validate(rep)
+    rep = _report("serve_bench/v7")
+    rep["latency_rows"] = []
+    with pytest.raises(ValueError, match="no latency rows"):
+        validate(rep)
+
+
+def test_v7_missing_percentile_field_named():
+    rep = _report("serve_bench/v7")
+    del rep["latency_rows"][0]["ttft_p95_tok"]
+    with pytest.raises(ValueError, match="missing fields.*ttft_p95_tok"):
+        validate(rep)
+    rep = _report("serve_bench/v7")
+    del rep["latency_rows"][1]["oneshot_tpot_p99_tok"]
+    with pytest.raises(ValueError,
+                       match="missing fields.*oneshot_tpot_p99_tok"):
+        validate(rep)
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("ttft_p95_tok", math.nan),
+    ("oneshot_ttft_p50_tok", math.inf),
+    ("tpot_p50_tok", "3.1"),
+    ("ttft_p95_speedup", None),
+])
+def test_v7_non_finite_latency_metric_rejected(field, bad):
+    rep = _report("serve_bench/v7")
+    rep["latency_rows"][0][field] = bad
+    with pytest.raises(ValueError, match=f"non-finite {field}"):
+        validate(rep)
+
+
+@pytest.mark.parametrize("field", ["prefill_chunk", "step_token_budget",
+                                   "arrival_gap_tok", "tokens_dispatched",
+                                   "goodput_util"])
+def test_v7_non_positive_latency_metric_rejected(field):
+    for bad in (0, -1.5):
+        rep = _report("serve_bench/v7")
+        rep["latency_rows"][1][field] = bad
+        with pytest.raises(ValueError, match=f"non-positive {field}"):
+            validate(rep)
+
+
+def test_v7_percentiles_allow_zero_but_not_negative():
+    """Token-time percentiles may legitimately be 0 (an uncontended
+    request admitted the step after its arrival has TTFT 0 — events stamp
+    at step granularity) but can never be negative."""
+    rep = _report("serve_bench/v7", smoke=False)
+    rep["latency_rows"][0]["oneshot_ttft_p50_tok"] = 0.0
+    assert validate(rep) is True
+    rep["latency_rows"][0]["oneshot_ttft_p50_tok"] = -1.0
+    with pytest.raises(ValueError,
+                       match="negative percentile oneshot_ttft_p50_tok"):
+        validate(rep)
+
+
+def test_v7_utilization_capped_at_one():
+    """goodput_util = useful / dispatched can never exceed 1 — a value
+    above it means the dispatched-token accounting dropped work."""
+    rep = _report("serve_bench/v7")
+    rep["latency_rows"][0]["goodput_util"] = 1.2
+    with pytest.raises(ValueError, match="cannot exceed dispatched"):
+        validate(rep)
+
+
+@pytest.mark.parametrize("prefix", ["", "oneshot_"])
+@pytest.mark.parametrize("fam", ["ttft", "tpot"])
+def test_v7_percentile_ordering_enforced(prefix, fam):
+    """p50 <= p95 <= p99 must hold for every percentile family — an exact
+    nearest-rank reducer can never produce an inversion, so one in a
+    report means the fields were scrambled during row assembly."""
+    rep = _report("serve_bench/v7")
+    row = rep["latency_rows"][0]
+    row[f"{prefix}{fam}_p50_tok"] = row[f"{prefix}{fam}_p99_tok"] * 2
+    with pytest.raises(ValueError, match=f"{prefix}{fam} percentiles out "
+                                         f"of order"):
+        validate(rep)
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("chunked_recompiles_after_warmup", 1),
+    ("chunked_h2d_transfers_per_step", 0.5),
+])
+def test_v7_rejects_dirty_chunked_steady_state(field, bad):
+    rep = _report("serve_bench/v7")
+    rep["latency_rows"][1][field] = bad
+    with pytest.raises(ValueError, match="chunked steady state is not "
+                                         "clean"):
+        validate(rep)
+
+
+def test_v7_mode_coverage_required():
+    rep = _report("serve_bench/v7")
+    rep["latency_rows"] = [_latency_row("fp")]
+    with pytest.raises(ValueError,
+                       match="need fp and w4a8_aser latency rows"):
+        validate(rep)
+
+
+def test_v7_improvement_gates_non_smoke_only():
+    """The p95-TTFT and goodput gates are the shipping acceptance for
+    chunked prefill — enforced on real baselines, waived for smoke runs
+    whose 8-request tails are all noise (p95 of 8 samples is the max)."""
+    # regressions pass while smoke...
+    rep = _report("serve_bench/v7", smoke=True)
+    rep["latency_rows"][0]["ttft_p95_speedup"] = 0.7
+    rep["latency_rows"][1]["goodput_ratio"] = 0.9
+    assert validate(rep) is True
+    # ...and fail on a non-smoke baseline
+    rep = _report("serve_bench/v7", smoke=False)
+    assert validate(rep) is True           # healthy rows pass either way
+    rep["latency_rows"][0]["ttft_p95_speedup"] = 0.99
+    with pytest.raises(ValueError, match="did not improve p95 TTFT"):
+        validate(rep)
+    rep = _report("serve_bench/v7", smoke=False)
+    rep["latency_rows"][1]["goodput_ratio"] = 0.97
+    with pytest.raises(ValueError, match="goodput below one-shot"):
+        validate(rep)
+
+
+def test_v6_fixture_ignores_latency_rows():
+    """Pre-v7 baselines neither need latency rows nor get them enforced:
+    a v6 file with stray (even malformed) latency rows is still v6."""
+    rep = _report("serve_bench/v6")
+    rep["latency_rows"] = [_latency_row("fp", ttft_p95_tok=math.nan)]
     assert validate(rep) is True

@@ -261,15 +261,25 @@ def test_serve_bench_validator():
     krow = {f: 1.0 for f in sb.KV_ROW_FIELDS}
     arow = {f: 1.0 for f in sb.ADAPTER_ROW_FIELDS}
     arow.update(mode="w4a8_aser", token_exact=True)
+    # v7 latency rows: chunked steady-state counters pinned to zero
+    lrow = dict({f: 1.0 for f in sb.LATENCY_ROW_FIELDS},
+                chunked_recompiles_after_warmup=0,
+                chunked_h2d_transfers_per_step=0)
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
     crows6 = [dict(crow6, mode="fp"), dict(crow6, mode="w4a8_aser")]
     prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
     krows = [dict(krow, mode="fp"), dict(krow, mode="w4a8_aser")]
+    lrows = [dict(lrow, mode="fp"), dict(lrow, mode="w4a8_aser")]
     good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
             "continuous_rows": crows6, "prefix_rows": prows,
-            "kv_rows": krows, "adapter_rows": [arow]}
+            "kv_rows": krows, "adapter_rows": [arow],
+            "latency_rows": lrows}
     assert sb.validate(good)
+    # v6 files neither need nor get latency rows enforced
+    assert sb.validate({"schema": sb.SCHEMA_V6, "smoke": True, "rows": rows,
+                        "continuous_rows": crows6, "prefix_rows": prows,
+                        "kv_rows": krows, "adapter_rows": [arow]})
     # v1/v2/v3/v4 generations must keep validating
     assert sb.validate({"schema": sb.SCHEMA_V1, "smoke": True, "rows": rows})
     assert sb.validate({"schema": sb.SCHEMA_V2, "smoke": True, "rows": rows,

@@ -1,0 +1,132 @@
+"""Latency telemetry: exact percentiles, timing traces, summaries.
+
+The percentile reducer feeds the ``serve_bench/v7`` TTFT/TPOT rows the
+CI improvement gates read, so its edge behaviour is pinned hard here:
+empty samples and non-finite values must *raise* (a NaN latency is a
+stamping bug upstream, not a data point), and ranks are exact
+nearest-rank — always an observed sample, never an interpolation.
+"""
+import math
+
+import pytest
+
+from repro.serve.telemetry import (RequestTiming, latency_summary,
+                                   percentile, percentiles)
+
+
+# ---------------------------------------------------------------------------
+# percentile: exact nearest-rank
+# ---------------------------------------------------------------------------
+
+def test_percentile_single_sample():
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 0) == 7.0
+    assert percentile([7.0], 100) == 7.0
+
+
+def test_percentile_exact_ranks():
+    vals = list(range(1, 101))          # 1..100: pN == N exactly
+    assert percentile(vals, 50) == 50
+    assert percentile(vals, 95) == 95
+    assert percentile(vals, 99) == 99
+    assert percentile(vals, 100) == 100
+    assert percentile(vals, 0) == 1     # q=0 is the minimum
+    assert percentile(vals, 1) == 1     # ceil(0.01 * 100) = rank 1
+
+
+def test_percentile_is_an_observed_sample():
+    """Nearest-rank never interpolates: the result is always an element
+    of the input, even for awkward sample sizes."""
+    vals = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.3]
+    for q in (0, 10, 25, 50, 75, 90, 95, 99, 100):
+        assert percentile(vals, q) in vals
+
+
+def test_percentile_unsorted_input_and_copy():
+    vals = [9.0, 1.0, 5.0]
+    assert percentile(vals, 50) == 5.0
+    assert vals == [9.0, 1.0, 5.0]      # input not mutated
+
+
+def test_percentile_empty_raises():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+
+
+def test_percentile_rejects_non_finite():
+    for bad in (float("nan"), float("inf"), -float("inf")):
+        with pytest.raises(ValueError, match="non-finite"):
+            percentile([1.0, bad, 3.0], 50)
+
+
+def test_percentile_rejects_bad_q():
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+    with pytest.raises(ValueError):
+        percentile([1.0], 100.5)
+
+
+def test_percentiles_dict():
+    out = percentiles(list(range(1, 101)))
+    assert out == {"p50": 50, "p95": 95, "p99": 99}
+    assert percentiles([2.0, 1.0], qs=(50,)) == {"p50": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# RequestTiming: TTFT / TPOT derivations
+# ---------------------------------------------------------------------------
+
+def test_ttft_none_until_first_token():
+    t = RequestTiming(submitted_at=1.0)
+    assert t.ttft() is None             # rejected/expired: no first token
+    t.first_token_at = 1.25
+    assert t.ttft() == pytest.approx(0.25)
+
+
+def test_tpot_excludes_sub_two_token_requests():
+    t = RequestTiming(submitted_at=0.0, first_token_at=1.0)
+    assert t.tpot() is None             # no events at all
+    t.token_events.append((1.0, 1))
+    assert t.tpot() is None             # one token: no inter-token gap
+    t.token_events.append((1.6, 4))     # 3 more tokens by t=1.6
+    assert t.tpot() == pytest.approx(0.2)
+
+
+def test_latency_summary_converts_to_ms():
+    timings = []
+    for i in range(4):
+        t = RequestTiming(submitted_at=0.0, first_token_at=0.010 * (i + 1))
+        t.token_events.append((t.first_token_at + 0.005, 3))
+        timings.append(t)
+    out = latency_summary(timings)
+    assert out["n_ttft"] == 4 and out["n_tpot"] == 4
+    assert out["ttft_ms"]["p50"] == pytest.approx(20.0)
+    assert out["ttft_ms"]["p99"] == pytest.approx(40.0)
+    assert out["tpot_ms"]["p50"] == pytest.approx(2.5)
+    assert out["ttft_ms"]["p50"] <= out["ttft_ms"]["p95"] \
+        <= out["ttft_ms"]["p99"]
+
+
+def test_latency_summary_tokenless_requests_excluded():
+    emitted = RequestTiming(submitted_at=0.0, first_token_at=0.5)
+    emitted.token_events.append((1.0, 2))
+    silent = RequestTiming(submitted_at=0.0)      # shed before any token
+    out = latency_summary([emitted, silent])
+    assert out["n_ttft"] == 1 and out["n_tpot"] == 1
+
+
+def test_latency_summary_empty_raises():
+    with pytest.raises(ValueError, match="no request"):
+        latency_summary([])
+    # tokens emitted but never a second one: TPOT sample empty -> raise
+    only_one = RequestTiming(submitted_at=0.0, first_token_at=0.5)
+    only_one.token_events.append((0.5, 1))
+    with pytest.raises(ValueError, match="TPOT"):
+        latency_summary([only_one])
+
+
+def test_latency_summary_propagates_nan_rejection():
+    t = RequestTiming(submitted_at=0.0, first_token_at=math.nan)
+    t.token_events.append((1.0, 2))
+    with pytest.raises(ValueError, match="non-finite"):
+        latency_summary([t])
