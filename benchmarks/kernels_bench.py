@@ -1,24 +1,72 @@
-"""Kernel benchmark: correctness sweep + modeled TPU tile economics.
+"""Kernel benchmark: correctness sweep, tile economics, autotune refresh.
 
-Wall-clock on CPU interpret mode is meaningless; instead we verify
-allclose across serving shapes and report the modeled VMEM footprint and
-arithmetic intensity per BlockSpec choice (what the TPU scheduler sees).
-The cost model itself lives in ``repro.kernels.tuning`` — the same one the
-serving dispatch uses for block selection and fused-decode routing — so
-the numbers reported here are the numbers the router acts on.
+Three jobs, one report (``BENCH_kernels.json`` at the repo root, schema
+``kernels_bench/v1``):
+
+1. **Correctness sweep** — allclose of every kernel route (tiled GEMM,
+   fused decode, tiled-m fused prefill) against the XLA reference across
+   serving shapes, plus the modeled VMEM footprint and arithmetic
+   intensity per BlockSpec choice (what the TPU scheduler sees).
+2. **Autotune cache refresh** (``--refresh-cache``) — (re)populate the
+   measured autotune cache (``repro.kernels.autotune``) for the swept
+   shapes. On backends that compile Pallas the BlockSpec winners are
+   wall-clocked over the candidate lattices; on interpret-only backends
+   (CPU) wall-clock measures the interpreter, not the kernel, so the
+   entries carry the modeled winner labeled ``source: "model"``. The
+   ``decode_plan`` entries are genuinely **measured on every backend**
+   (the candidates are end-to-end XLA formulations, not Pallas kernels —
+   see ``autotune.measure_decode_plan``).
+3. **Measured-vs-modeled report** — every cache entry is emitted next to
+   the modeled decision for its key, with an ``agrees_with_model`` bit,
+   so a reader can see exactly where measurement overruled the cost
+   model. The validator (``--validate``) re-checks every entry against
+   the exported candidate lattices and the VMEM budget — the same
+   ``validate_entry`` the KC005 contract check and consult-time lookups
+   apply.
+
+The cost model itself lives in ``repro.kernels.tuning`` — the same one
+the serving dispatch uses for block selection and fused-decode routing —
+so the numbers reported here are the numbers the router acts on.
 """
-import time
+import argparse
+import json
+import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantizers import W4, pack_int4, quantize_weight
 from repro.kernels import act_quant, w4a8_fused, w4a8_gemm
+from repro.kernels import autotune
 from repro.kernels import ref as kref
-from repro.kernels.tuning import (fused_bn, fused_vmem_bytes,
+from repro.kernels import tuning
+from repro.kernels.tuning import (fused_bn, fused_tiles, fused_vmem_bytes,
                                   select_gemm_blocks, use_fused_decode,
-                                  vmem_bytes)
+                                  use_fused_prefill, vmem_bytes)
 from .common import save_json
+
+SCHEMA = "kernels_bench/v1"
+ROOT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_kernels.json")
+
+# Serving shapes swept (and, under --refresh-cache, recorded): the classic
+# large-model projections plus the serve_bench offline config's leaf
+# shapes — the entries quantized decode actually consults.
+GEMM_SHAPES = [(128, 2048, 2048, 64), (256, 4096, 4096, 64),
+               (512, 2048, 8192, 64)]
+FUSED_SHAPES = [(1, 2048, 2048, 64), (4, 4096, 4096, 64),
+                (8, 2048, 8192, 64), (1, 4096, 11008, 64)]
+PREFILL_SHAPES = [(64, 2048, 2048, 64), (128, 4096, 4096, 64)]
+# decode_plan: (m, d_model, d_ff, r, n_groups) — serve_bench's non-smoke
+# offline config at its static decode batches
+PLAN_SHAPES = [(1, 256, 512, 64, 4), (4, 256, 512, 64, 4),
+               (8, 256, 512, 64, 4)]
+
+GEMM_SHAPES_SMOKE = [(128, 2048, 2048, 64)]
+FUSED_SHAPES_SMOKE = [(1, 2048, 2048, 64), (8, 2048, 8192, 64)]
+PREFILL_SHAPES_SMOKE = [(64, 2048, 2048, 64)]
+PLAN_SHAPES_SMOKE = [(1, 64, 128, 8, 2)]
 
 
 def _setup(rng, m, k, n, r):
@@ -32,13 +80,125 @@ def _setup(rng, m, k, n, r):
     return x, qw, sw[:, 0], mdiag, lb, la
 
 
-def run(verbose=True):
+def _modeled_gemm_lattice(m, k, n, r):
+    """The modeled search of ``tuning.select_gemm_blocks`` in *lattice*
+    coordinates (unclamped) — cache entries must name lattice members so
+    the KC005 cross-product covers them."""
+    best, best_ai = None, -1.0
+    for bm in tuning.GEMM_BM_CANDIDATES:
+        for bn in tuning.GEMM_BN_CANDIDATES:
+            for bk in tuning.GEMM_BK_CANDIDATES:
+                bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+                vm = vmem_bytes(bm_, bn_, bk_, r)
+                if vm > tuning.VMEM_BUDGET:
+                    continue
+                ai = (2 * bm_ * bn_ * bk_) / vm
+                if ai > best_ai:
+                    best, best_ai = (bm, bn, bk), ai
+    return best
+
+
+def _modeled_choice(key):
+    """The modeled (autotune-off) decision for one cache key, for the
+    measured-vs-modeled report."""
+    ks = autotune._parse_key(key)
+    if ks is None:
+        return None
+    kern = ks["kernel"]
+    if kern == "w4a8_gemm":
+        return _modeled_gemm_lattice(ks["m"], ks["k"], ks["n"], ks["r"])
+    if kern == "w4a8_fused":
+        return fused_bn(ks["m"], ks["k"], ks["n"], ks["r"])
+    if kern == "fused_tiles":
+        return fused_tiles(ks["m"], ks["k"], ks["n"], ks["r"])
+    if kern == "paged_attention":
+        return tuning.paged_vmem_bytes(ks["b"], ks["g"], ks["h"],
+                                       bool(ks["q"])) <= tuning.VMEM_BUDGET
+    if kern == "decode_plan":
+        return "default"        # the model has no better idea than today's
+    return None
+
+
+def refresh_cache(smoke: bool = False, verbose: bool = True):
+    """(Re)populate the autotune cache for the swept shapes; returns the
+    saved cache. BlockSpec winners are measured on compiled-Pallas
+    backends and recorded from the model (``source: "model"``) on
+    interpret-only ones; decode_plan entries are measured everywhere."""
+    backend = jax.default_backend()
+    on_device = backend != "cpu"
+    cache = autotune.get_cache(backend)
+    gemm = GEMM_SHAPES_SMOKE if smoke else GEMM_SHAPES
+    fused = FUSED_SHAPES_SMOKE if smoke else FUSED_SHAPES
+    prefill = PREFILL_SHAPES_SMOKE if smoke else PREFILL_SHAPES
+    plans = PLAN_SHAPES_SMOKE if smoke else PLAN_SHAPES
+
+    for (m, k, n, r) in gemm:
+        if on_device:
+            choice, us = autotune.measure_gemm_blocks(m, k, n, r)
+            src = "measured"
+        else:
+            choice, us, src = _modeled_gemm_lattice(m, k, n, r), None, "model"
+        cache.put(autotune.gemm_key(m, k, n, r), list(choice), us, src)
+    for (m, k, n, r) in fused:
+        if on_device:
+            choice, us = autotune.measure_fused_bn(m, k, n, r)
+            src = "measured"
+        else:
+            choice, us, src = fused_bn(m, k, n, r), None, "model"
+        cache.put(autotune.fused_key(m, k, n, r), choice, us, src)
+    for (m, k, n, r) in prefill:
+        if on_device:
+            choice, us = autotune.measure_fused_tiles(m, k, n, r)
+            src = "measured"
+        else:
+            choice, us, src = fused_tiles(m, k, n, r), None, "model"
+        cache.put(autotune.fused_tiles_key(m, k, n, r), list(choice), us,
+                  src)
+    for (m, d, ff, r, L) in plans:
+        winner, results = autotune.measure_decode_plan(
+            m, d, ff, r, L, n_steps=8 if smoke else 24)
+        cache.put(autotune.decode_plan_key(m, d, ff, r, L), winner,
+                  results[winner])
+        if verbose:
+            us = {p: f"{v:.0f}us" for p, v in results.items()}
+            print(f"  decode_plan m={m} d={d} ff={ff} r={r} L={L}: "
+                  f"{winner} wins ({us})", flush=True)
+    path = cache.save()
+    if verbose:
+        print(f"  autotune cache ({len(cache.entries)} entries) -> {path}")
+    return cache
+
+
+def _autotune_report(cache):
+    entries = []
+    for key, e in sorted(cache.entries.items()):
+        modeled = _modeled_choice(key)
+        choice = e.get("choice")
+        norm = (list(choice) if isinstance(choice, (list, tuple))
+                else choice)
+        mnorm = (list(modeled) if isinstance(modeled, (list, tuple))
+                 else modeled)
+        entries.append({
+            "key": key, "choice": norm, "us": e.get("us"),
+            "source": e.get("source"),
+            "disabled": bool(e.get("disabled", False)),
+            "modeled_choice": mnorm,
+            "agrees_with_model": norm == mnorm,
+        })
+    return {"backend": cache.backend, "cache_file": str(cache.path),
+            "loaded_from": cache._loaded_from, "entries": entries}
+
+
+def run(verbose=True, smoke: bool = False, refresh: bool = False,
+        out_path: str = ROOT_OUT):
     rng = np.random.default_rng(0)
     rows = []
+    gemm = GEMM_SHAPES_SMOKE if smoke else GEMM_SHAPES
+    fused = FUSED_SHAPES_SMOKE if smoke else FUSED_SHAPES
+    prefill = PREFILL_SHAPES_SMOKE if smoke else PREFILL_SHAPES
 
     # -- tiled GEMM path: prefill/batch shapes ------------------------------
-    for (m, k, n, r) in [(128, 2048, 2048, 64), (256, 4096, 4096, 64),
-                         (512, 2048, 8192, 64)]:
+    for (m, k, n, r) in gemm:
         x, qw, sw, mdiag, lb, la = _setup(rng, m, k, n, r)
         y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
         xq, sx, xlr = act_quant(x, mdiag, lb)
@@ -65,8 +225,7 @@ def run(verbose=True):
         assert err < 1e-4
 
     # -- fused decode path: small-m GEMV shapes -----------------------------
-    for (m, k, n, r) in [(1, 2048, 2048, 64), (4, 4096, 4096, 64),
-                         (8, 2048, 8192, 64), (1, 4096, 11008, 64)]:
+    for (m, k, n, r) in fused:
         assert use_fused_decode(m, k, n, r), (m, k, n, r)
         x, qw, sw, mdiag, lb, la = _setup(rng, m, k, n, r)
         y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
@@ -84,9 +243,108 @@ def run(verbose=True):
                   f"bn {bn}, vmem {vm/1e6:.2f}MB, "
                   f"saves {saved/1024:.1f}KB xq/sx/xlr round-trip")
         assert err < 1e-4
+
+    # -- tiled-m fused prefill variant --------------------------------------
+    for (m, k, n, r) in prefill:
+        assert use_fused_prefill(m, k, n, r), (m, k, n, r)
+        bm, bn = fused_tiles(m, k, n, r)
+        x, qw, sw, mdiag, lb, la = _setup(rng, m, k, n, r)
+        y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+        y = w4a8_fused(x, mdiag, qw, sw, lb, la, bn=bn, bm=bm)
+        err = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
+        vm = fused_vmem_bytes(min(bm, m), k, min(bn, n), r)
+        rows.append({"kernel": "w4a8_fused_prefill", "m": m, "k": k, "n": n,
+                     "r": r, "bm": bm, "bn": bn, "vmem_kb": vm / 1024,
+                     "max_rel_err": err})
+        if verbose:
+            print(f"  fused-prefill {m}x{k}x{n} r{r}: rel err {err:.2e}, "
+                  f"tiles ({bm},{bn}), vmem {vm/1e6:.2f}MB")
+        assert err < 1e-4
+
+    if refresh:
+        cache = refresh_cache(smoke=smoke, verbose=verbose)
+    else:
+        cache = autotune.get_cache()
+
+    report = {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "autotune": _autotune_report(cache),
+    }
     save_json("kernels_bench", rows)
-    return rows
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    if verbose:
+        print(f"  wrote {os.path.abspath(out_path)}")
+    return report
+
+
+# -- schema validation (CI smoke gate) ---------------------------------------
+
+def validate(report: dict):
+    """Raise ValueError unless ``report`` is a valid kernels_bench file:
+    correct schema, a non-empty correctness sweep with every route inside
+    tolerance, and every autotune entry passing the same lattice + VMEM
+    validation consult-time lookups and the KC005 contract check apply."""
+    if report.get("schema") != SCHEMA:
+        raise ValueError(f"schema mismatch: {report.get('schema')!r}")
+    rows = report.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("no kernel rows")
+    kernels = set()
+    for row in rows:
+        err = row.get("max_rel_err")
+        if not isinstance(err, (int, float)) or not err == err:
+            raise ValueError(f"non-finite max_rel_err in {row}")
+        if err >= 1e-4:
+            raise ValueError(f"kernel route out of tolerance: {row}")
+        kernels.add(row.get("kernel"))
+    if not {"w4a8_gemm", "w4a8_fused"} <= kernels:
+        raise ValueError(f"need w4a8_gemm and w4a8_fused rows, "
+                         f"got {kernels}")
+    at = report.get("autotune")
+    if not isinstance(at, dict) or not isinstance(at.get("entries"), list):
+        raise ValueError("missing autotune section")
+    for e in at["entries"]:
+        key, choice = e.get("key"), e.get("choice")
+        if e.get("source") not in ("model", "measured"):
+            raise ValueError(f"bad entry source: {e}")
+        if not isinstance(e.get("agrees_with_model"), bool):
+            raise ValueError(f"missing agrees_with_model bit: {e}")
+        reason = autotune.validate_entry(
+            key, {"choice": tuple(choice) if isinstance(choice, list)
+                  else choice})
+        if reason is not None:
+            raise ValueError(f"invalid autotune entry: {reason}")
+    return True
+
+
+def validate_file(path: str = ROOT_OUT):
+    with open(path) as f:
+        validate(json.load(f))
+    print(f"{path}: kernels_bench schema OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI variant (same schema)")
+    ap.add_argument("--refresh-cache", action="store_true",
+                    help="(re)measure and persist the autotune cache for "
+                         "the swept shapes")
+    ap.add_argument("--out", default=ROOT_OUT)
+    ap.add_argument("--validate", metavar="PATH", default=None,
+                    help="validate an existing BENCH_kernels.json and exit")
+    args = ap.parse_args()
+    if args.validate:
+        validate_file(args.validate)
+        return
+    report = run(smoke=args.smoke, refresh=args.refresh_cache,
+                 out_path=args.out)
+    validate(report)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -79,12 +79,30 @@ Two workloads:
   (``ttft_p95_speedup >= 1``) at equal-or-better goodput
   (``goodput_ratio >= 1``).
 
-Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v7`` =
-v6's rows + chunked-vs-oneshot latency rows; the validator still accepts
-v1–v6 files) so subsequent PRs have a perf trajectory to beat;
-``--smoke`` runs a seconds-scale variant with the same schema for CI.
-Latency rows use the XLA serving path (interpret-mode Pallas wall-clock is
-meaningless on CPU); kernel-level tile economics live in ``kernels_bench``.
+  The **static quant rows** run under the measured autotune cache
+  (serve_bench/v8): the ``w4a8_aser`` leg builds its engines with
+  ``RuntimeConfig(autotune="force")`` — the decode-plan entry is measured
+  on a miss (``repro.kernels.autotune``) and the winning plan (e.g. the
+  prepared f32-code layout that sidesteps XLA's refusal to hoist sliced
+  scanned weights out of the decode loop) is applied at engine build.
+  Each quant bucket is ALSO timed on the modeled routing the cache
+  displaced (``autotune="off"``), and the row asserts the routed path is
+  never slower: if it is, the measured winner lied on this machine — the
+  bench **demotes** the cache entry (a tombstone consults skip) and
+  serves/reports the displaced path instead. Non-smoke baselines gate
+  ``decode_vs_fp >= 1`` on every quant row: quantized decode
+  tokens/sec must beat fp, which is the whole point of serving W4A8.
+  (The gate rides on decode throughput, not end-to-end: quantized
+  *prefill* legitimately pays the quant chain at large m, and that
+  trade is visible in the prefill_ms column, not hidden in the gate.)
+
+Writes ``BENCH_serve.json`` at the repo root (schema ``serve_bench/v8`` =
+v7's rows + autotuned-vs-displaced quant static columns; the validator
+still accepts v1–v7 files) so subsequent PRs have a perf trajectory to
+beat; ``--smoke`` runs a seconds-scale variant with the same schema for
+CI. Latency rows use the XLA serving path (interpret-mode Pallas
+wall-clock is meaningless on CPU); kernel-level tile economics live in
+``kernels_bench``.
 """
 from __future__ import annotations
 
@@ -111,7 +129,8 @@ from repro.serve.lifecycle import RequestStatus
 from repro.serve.scheduler import Scheduler, _bucket
 from repro.serve.telemetry import latency_summary
 
-SCHEMA = "serve_bench/v7"
+SCHEMA = "serve_bench/v8"
+SCHEMA_V7 = "serve_bench/v7"
 SCHEMA_V6 = "serve_bench/v6"
 SCHEMA_V5 = "serve_bench/v5"
 SCHEMA_V4 = "serve_bench/v4"
@@ -125,6 +144,19 @@ ROW_FIELDS = ("mode", "batch", "prompt", "n_steps", "prefill_ms",
               "decode_ms_per_tok", "tokens_per_s", "scan_decode_ms_per_tok",
               "step_decode_ms_per_tok", "dispatch_overhead_ms_per_tok",
               "scan_speedup")
+
+# measured-autotune fields added by serve_bench/v8 static rows. Quant rows
+# are timed twice — under the measured autotune cache ("force") and on the
+# modeled routing it displaced ("off") — and must never report the routed
+# path slower than the displaced one: when it is, the bench demotes the
+# cache entry and reports the displaced timings (autotune_demoted=True).
+# decode_vs_fp = fp scan decode s/tok ÷ this row's scan decode s/tok at
+# the same (batch, prompt); 1.0 on fp rows by construction. Non-smoke
+# validation gates decode_vs_fp >= 1 on every w4a8_aser row.
+AUTOTUNE_ROW_FIELDS = ("decode_tokens_per_s", "autotune", "decode_plan",
+                       "displaced_decode_ms_per_tok", "autotune_demoted",
+                       "decode_vs_fp")
+ROW_FIELDS_V8 = ROW_FIELDS + AUTOTUNE_ROW_FIELDS
 
 # goodput fields added by serve_bench/v2 continuous rows
 CONT_ROW_FIELDS = ("mode", "requests", "batch_slots", "chunk",
@@ -232,6 +264,37 @@ def _time_engine(params, cfg, rt, b, prompt, n_steps, max_len, reps):
                      "decode_s_per_tok": max(tn - t1, 1e-9) / (n_steps - 1),
                      "total_s": tn}
     return out
+
+
+def _time_quant_autotuned(qparams, cfg, rt, b, prompt, n_steps, max_len,
+                          reps):
+    """Time the quant static bucket under measured autotune next to the
+    modeled routing it displaced, and enforce routed-never-slower.
+
+    Returns ``(t, displaced, plan, demoted)`` where ``t`` are the timings
+    to report, ``displaced`` the ``autotune="off"`` timings, ``plan`` the
+    decode plan actually served, and ``demoted`` whether the cache entry
+    was tombstoned because the measured winner lost the rematch on this
+    machine (in which case ``t is displaced`` and ``plan == "default"``)."""
+    from repro.kernels import autotune
+
+    t_at = _time_engine(qparams, cfg, rt.replace(autotune="force"), b,
+                        prompt, n_steps, max_len, reps)
+    t_off = _time_engine(qparams, cfg, rt, b, prompt, n_steps, max_len, reps)
+    key = autotune.engine_plan_key(qparams, cfg, ServeConfig(max_len=max_len))
+    cache = autotune.get_cache()
+    plan = "default"
+    if key is not None:
+        hit = cache.lookup(key)
+        if hit is not None:
+            plan = hit
+    if t_at["scan"]["decode_s_per_tok"] > t_off["scan"]["decode_s_per_tok"]:
+        if key is not None and plan != "default":
+            cache.demote(key, f"slower than displaced modeled path at "
+                              f"b={b} prompt={prompt}")
+            cache.save()
+        return t_off, t_off, "default", True
+    return t_at, t_off, plan, False
 
 
 # -- continuous-batching goodput --------------------------------------------
@@ -584,6 +647,7 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     max_len = 64 if smoke else 128
 
     rows = []
+    fp_scan_tok = {}    # (batch, prompt) -> fp scan decode s/tok
     cont_rows = []
     prefix_rows = []
     kv_rows = []
@@ -592,10 +656,20 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
     for m, p in (("fp", params), ("w4a8_aser", qparams)):
         if mode in ("both", "static"):
             for (b, prompt) in buckets:
-                t = _time_engine(p, cfg, rt, b, prompt, n_steps, max_len,
-                                 reps)
+                if m == "fp":
+                    t = _time_engine(p, cfg, rt, b, prompt, n_steps,
+                                     max_len, reps)
+                    displaced, plan, demoted = t, "default", False
+                    at_mode = "off"
+                else:
+                    t, displaced, plan, demoted = _time_quant_autotuned(
+                        p, cfg, rt, b, prompt, n_steps, max_len, reps)
+                    at_mode = "force"
                 scan_tok = t["scan"]["decode_s_per_tok"]
                 step_tok = t["step"]["decode_s_per_tok"]
+                if m == "fp":
+                    fp_scan_tok[(b, prompt)] = scan_tok
+                fp_tok = fp_scan_tok.get((b, prompt), scan_tok)
                 row = {
                     "mode": m, "batch": b, "prompt": prompt,
                     "n_steps": n_steps,
@@ -607,6 +681,13 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                     "dispatch_overhead_ms_per_tok": 1e3 * (step_tok
                                                            - scan_tok),
                     "scan_speedup": step_tok / max(scan_tok, 1e-12),
+                    "decode_tokens_per_s": b / scan_tok,
+                    "autotune": at_mode,
+                    "decode_plan": plan,
+                    "displaced_decode_ms_per_tok":
+                        1e3 * displaced["scan"]["decode_s_per_tok"],
+                    "autotune_demoted": demoted,
+                    "decode_vs_fp": fp_tok / scan_tok,
                 }
                 rows.append(row)
                 if verbose:
@@ -615,7 +696,10 @@ def run(smoke: bool = False, out_path: str = ROOT_OUT, verbose: bool = True,
                           f"decode {row['decode_ms_per_tok']:6.2f}ms/tok "
                           f"(step {row['step_decode_ms_per_tok']:6.2f})  "
                           f"{row['tokens_per_s']:8.1f} tok/s  "
-                          f"scan×{row['scan_speedup']:.2f}", flush=True)
+                          f"scan×{row['scan_speedup']:.2f}  "
+                          f"plan={row['decode_plan']}"
+                          f"{' DEMOTED' if demoted else ''}  "
+                          f"vs fp ×{row['decode_vs_fp']:.2f}", flush=True)
 
         if mode in ("both", "continuous"):
             slots = 2 if smoke else 8
@@ -844,9 +928,11 @@ def _check_finite(row, fields, positive=()):
     if missing:
         raise ValueError(f"row missing fields {missing}: {row}")
     for f in fields:
-        if f == "mode":                    # the one legitimate string field
+        # legitimate string fields
+        if f in ("mode", "autotune", "decode_plan"):
             continue
-        if f == "token_exact":             # bool, checked by its validator
+        # bools, checked by their row validators
+        if f in ("token_exact", "autotune_demoted"):
             continue
         v = row[f]
         if isinstance(v, bool) or not isinstance(v, (int, float)) \
@@ -856,16 +942,41 @@ def _check_finite(row, fields, positive=()):
             raise ValueError(f"non-positive {f}={v!r} in {row}")
 
 
-def _validate_static_rows(rows):
+def _validate_static_rows(rows, v8=False, smoke=True):
     if not isinstance(rows, list) or not rows:
         raise ValueError("no benchmark rows")
     modes = set()
     for row in rows:
         # deltas (dispatch_overhead, speedup) may dip negative/below-1 on a
         # noisy CI machine; absolute latencies must be positive
-        _check_finite(row, ROW_FIELDS,
-                      positive=("prefill_ms", "decode_ms_per_tok",
-                                "tokens_per_s"))
+        fields = ROW_FIELDS_V8 if v8 else ROW_FIELDS
+        positive = ("prefill_ms", "decode_ms_per_tok", "tokens_per_s")
+        if v8:
+            positive += ("decode_tokens_per_s",
+                         "displaced_decode_ms_per_tok", "decode_vs_fp")
+        _check_finite(row, fields, positive=positive)
+        if v8:
+            if row["autotune"] not in ("off", "cache", "force"):
+                raise ValueError(f"bad autotune mode in {row}")
+            if not isinstance(row["decode_plan"], str):
+                raise ValueError(f"decode_plan must be a string: {row}")
+            if not isinstance(row["autotune_demoted"], bool):
+                raise ValueError(f"autotune_demoted must be a bool: {row}")
+            # satellite assertion: the routed kernel is never slower than
+            # the path it displaced (a demotion reports displaced == routed,
+            # so this holds by construction unless the bench is broken)
+            if row["decode_ms_per_tok"] > \
+                    row["displaced_decode_ms_per_tok"] * 1.001 + 1e-9:
+                raise ValueError(
+                    f"routed path slower than the displaced path it was "
+                    f"measured to beat (demotion failed?): {row}")
+            if not smoke and row["mode"] == "w4a8_aser" \
+                    and row["decode_vs_fp"] < 1.0:
+                raise ValueError(
+                    f"quantized decode lost to fp "
+                    f"(decode_vs_fp={row['decode_vs_fp']:.3f} < 1) — the "
+                    f"W4A8 serving path must win on decode throughput: "
+                    f"{row}")
         modes.add(row["mode"])
     if not {"fp", "w4a8_aser"} <= modes:
         raise ValueError(f"need fp and w4a8_aser rows, got {modes}")
@@ -1017,25 +1128,30 @@ def validate(report: dict):
     ``serve_bench/v4`` (+ fixed-HBM-budget KV-quant rows),
     ``serve_bench/v5`` (+ multi-tenant adapter rows), ``serve_bench/v6``
     (+ steady-state sanitizer counters on continuous rows, required to be
-    exactly zero) and ``serve_bench/v7`` (+ chunked-vs-one-shot prefill
+    exactly zero), ``serve_bench/v7`` (+ chunked-vs-one-shot prefill
     tail-latency rows with exact TTFT/TPOT percentiles and, on non-smoke
-    baselines, the improvement gates), so old baselines keep validating.
+    baselines, the improvement gates) and ``serve_bench/v8`` (+ measured
+    autotune columns on static rows: routed-never-slower-than-displaced
+    always, and on non-smoke baselines ``decode_vs_fp >= 1`` on every
+    quant row), so old baselines keep validating.
     """
     schema = report.get("schema")
-    if schema not in (SCHEMA, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3,
-                      SCHEMA_V2, SCHEMA_V1):
+    if schema not in (SCHEMA, SCHEMA_V7, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4,
+                      SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
         raise ValueError(f"schema mismatch: {schema!r}")
-    _validate_static_rows(report.get("rows"))
+    _validate_static_rows(report.get("rows"), v8=schema == SCHEMA,
+                          smoke=bool(report.get("smoke")))
     if schema != SCHEMA_V1:
-        _validate_continuous_rows(report.get("continuous_rows"),
-                                  sanitizers=schema in (SCHEMA, SCHEMA_V6))
+        _validate_continuous_rows(
+            report.get("continuous_rows"),
+            sanitizers=schema in (SCHEMA, SCHEMA_V7, SCHEMA_V6))
     if schema not in (SCHEMA_V1, SCHEMA_V2):
         _validate_prefix_rows(report.get("prefix_rows"))
     if schema not in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
         _validate_kv_rows(report.get("kv_rows"))
-    if schema in (SCHEMA, SCHEMA_V6, SCHEMA_V5):
+    if schema in (SCHEMA, SCHEMA_V7, SCHEMA_V6, SCHEMA_V5):
         _validate_adapter_rows(report.get("adapter_rows"))
-    if schema == SCHEMA:
+    if schema in (SCHEMA, SCHEMA_V7):
         _validate_latency_rows(report.get("latency_rows"),
                                smoke=bool(report.get("smoke")))
     return True

@@ -19,7 +19,11 @@ selectors in ``repro.kernels.tuning`` can ever return:
 * ``KC005`` — cost-model consistency: each tuning cost function must
   equal the working set re-derived here from the kernel's actual
   BlockSpec shapes (an undercounting model would silently re-admit
-  over-budget shapes).
+  over-budget shapes). The same rule covers the **measured autotune
+  cache** (``repro.kernels.autotune``): every persisted winner must name
+  a choice inside the exported candidate lattices and under the VMEM
+  budget (``check_autotune_cache``), so a cached BlockSpec can never
+  reach a kernel the offline cross-product didn't validate.
 
 Everything is pure Python over static shapes: the kernels are parsed with
 ``ast``, never imported, and no array is ever created.
@@ -275,6 +279,53 @@ def check_fused_candidates(budget: int = tuning.VMEM_BUDGET) -> List[Finding]:
                     out.append(_finding(
                         "KC002", path, 1,
                         f"fused bn={bn} exceeds n={n}"))
+    # tiled-m prefill variant: everything fused_tiles can return must fit
+    for m in CONTRACT_GEMM_MS:
+        if m <= tuning.DECODE_M_MAX:
+            continue
+        for k, n in CONTRACT_KN_SHAPES:
+            for raw_r in CONTRACT_RAW_RANKS:
+                r = _padded_rank(raw_r)
+                tiles = tuning.fused_tiles(m, k, n, r, budget=budget)
+                if tiles is None:
+                    continue
+                bm, bn = tiles
+                derived = derived_fused_vmem(bm, k, bn, r)
+                if derived > budget:
+                    out.append(_finding(
+                        "KC001", path, 1,
+                        f"fused_tiles(m={m},k={k},n={n},r={r}) -> "
+                        f"({bm},{bn}) needs {derived} B (> budget "
+                        f"{budget})"))
+                if bn % 128 != 0 and bn != n:
+                    out.append(_finding(
+                        "KC002", path, 1,
+                        f"fused_tiles bn={bn} neither lane-aligned (128) "
+                        f"nor the whole n={n}"))
+    return out
+
+
+def check_autotune_cache(budget: int = tuning.VMEM_BUDGET,
+                         backend: str | None = None) -> List[Finding]:
+    """KC005 cache mode: every entry in the measured autotune cache must
+    name a choice inside the exported candidate lattices and under the
+    VMEM budget (``repro.kernels.autotune.validate_entry`` — the same
+    check consult-time lookups apply, so a finding here means the entry
+    would also be silently ignored at runtime; CI fails instead of
+    shipping a cache that quietly falls back to the model). Walks the
+    active cache for ``backend`` — user file if present, else the
+    checked-in baseline — plus any demoted tombstones, which are reported
+    as informational-grade findings only when *also* invalid."""
+    from repro.kernels import autotune
+    out: List[Finding] = []
+    cache = autotune.AutotuneCache(backend)   # fresh load, not the singleton
+    rel = str(cache.path) if cache._loaded_from == "user" else \
+        "repro/kernels/autotune_baseline.json"
+    for key, entry in sorted(cache.entries.items()):
+        reason = autotune.validate_entry(key, entry, budget)
+        if reason is not None:
+            out.append(_finding("KC005", rel, 1,
+                                f"autotune cache entry invalid: {reason}"))
     return out
 
 
@@ -434,4 +485,5 @@ def check_kernel_contracts(kernels_dir: str,
     findings += check_paged_candidates(budget)
     findings += check_flash_candidates(budget)
     findings += check_kernel_sources(kernels_dir)
+    findings += check_autotune_cache(budget)
     return findings

@@ -1,0 +1,696 @@
+"""Measured autotune cache for the W4A8 kernel plans.
+
+The routing decisions in ``repro.kernels.tuning`` are driven by a modeled
+VMEM cost table — fine for "does this BlockSpec fit", useless for "which of
+the fitting candidates is fastest", and (per ``BENCH_serve.json`` before
+this subsystem) capable of hiding multi-x regressions: the modeled router
+happily kept quantized decode 2–3× slower than fp. This module replaces
+"model only" with **measure once, persist, consult**:
+
+  * A versioned JSON cache of measured winners, keyed per backend
+    (``~/.cache/repro/autotune_<backend>.json``; override the directory
+    with ``$REPRO_AUTOTUNE_CACHE_DIR``). A checked-in baseline
+    (``autotune_baseline.json`` next to this file) seeds fresh machines.
+  * Measurement walks the exact candidate lattices ``tuning`` exports
+    (``GEMM_BM/BN/BK_CANDIDATES``, ``FUSED_BN_CANDIDATES``, …) — the same
+    lattices the static kernel-contract checker
+    (``repro.analysis.contracts``) validates offline, so a cached winner
+    can never name a BlockSpec the contracts don't cover (KC005 checks
+    exactly this for every entry).
+  * ``RuntimeConfig.autotune`` selects the mode: ``"off"`` reproduces the
+    modeled decisions bit-for-bit, ``"cache"`` consults persisted winners
+    and falls back to the model on a miss, ``"force"`` measures on miss.
+
+Entry kinds
+-----------
+``w4a8_gemm``    — (bm, bn, bk) for the tiled GEMM, keyed
+                   ``m<bucket>|k|n|r``. Measured by ``kernels_bench`` on
+                   backends with compiled Pallas; on interpret-only
+                   backends (CPU) wall-clock of the interpreter is
+                   meaningless, so entries carry the modeled winner with
+                   ``source: "model"`` — honestly labeled, same contract
+                   checks.
+``w4a8_fused``   — bn for the fused decode kernel, same key/caveats.
+``fused_tiles``  — (bm, bn) for the tiled-m fused prefill variant.
+``decode_plan``  — the serving-engine execution plan for quantized decode,
+                   keyed by architecture signature. This one is genuinely
+                   measured on every backend: candidates are end-to-end
+                   formulations of the quantized linear stack (reference
+                   scanned layout vs the prepared f32-code plan on an
+                   unstacked layer list), timed through a decode-loop
+                   proxy. See ``measure_decode_plan``.
+
+The decode plan is where CPU serving wins or loses: inside a decode
+``lax.scan``, XLA never hoists per-iteration slices of stacked layer
+weights out of the while body, so every dot on a sliced operand lowers to
+a naive loop an order of magnitude slower than the backend's GEMM path.
+The ``prepared`` plan unpacks the int4 codes once at engine build into f32
+code matrices (exact: |code·act| sums stay far below 2^24), folds the
+weight scale and smoothing diagonal into them, stacks the low-rank factor
+against the code matrix (one augmented GEMM instead of GEMM + two-dot
+epilogue), and unstacks the layer axis into a Python-level
+``models.model.LayerList`` so each weight reaches its dot as a whole
+loop-invariant buffer. ``prepare_params`` applies exactly that transform.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tuning as _tuning
+
+CACHE_VERSION = 1
+
+# decode_plan candidates: execution plans for the quantized serving stack.
+#   "default"  — today's path: stacked groups scanned by lax.scan, packed
+#                int4 leaves unpacked per step (reference/Pallas routing).
+#   "prepared" — f32-code augmented leaves on an unstacked LayerList.
+DECODE_PLANS = ("default", "prepared")
+
+_BASELINE = Path(__file__).with_name("autotune_baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+
+def gemm_key(m: int, k: int, n: int, r: int) -> str:
+    return f"w4a8_gemm|m{_tuning._m_bucket(m)}|k{k}|n{n}|r{r}"
+
+
+def fused_key(m: int, k: int, n: int, r: int) -> str:
+    return f"w4a8_fused|m{_tuning._m_bucket(m)}|k{k}|n{n}|r{r}"
+
+
+def fused_tiles_key(m: int, k: int, n: int, r: int) -> str:
+    return f"fused_tiles|m{_tuning._m_bucket(m)}|k{k}|n{n}|r{r}"
+
+
+def paged_key(block_size: int, group: int, hd: int,
+              quantized: bool) -> str:
+    return (f"paged_attention|b{block_size}|g{group}|h{hd}"
+            f"|q{int(quantized)}")
+
+
+def decode_plan_key(m: int, d_model: int, d_ff: int, r: int,
+                    n_groups: int) -> str:
+    return (f"decode_plan|m{_tuning._m_bucket(m)}|d{d_model}|ff{d_ff}"
+            f"|r{r}|L{n_groups}")
+
+
+# ---------------------------------------------------------------------------
+# Entry validation (shared with analysis.contracts KC005)
+# ---------------------------------------------------------------------------
+
+def _parse_key(key: str) -> dict | None:
+    """``kernel|m4|k256|…`` → {"kernel": ..., "m": 4, "k": 256, …}."""
+    parts = key.split("|")
+    out = {"kernel": parts[0]}
+    for p in parts[1:]:
+        i = 0
+        while i < len(p) and not p[i].isdigit():
+            i += 1
+        if i == 0 or i == len(p):
+            return None
+        try:
+            out[p[:i]] = int(p[i:])
+        except ValueError:
+            return None
+    return out
+
+
+def validate_entry(key: str, entry: dict,
+                   budget: int = _tuning.VMEM_BUDGET) -> str | None:
+    """KC001-style check of one cache entry against the exported lattices
+    and the VMEM budget. Returns None when valid, else a reason string.
+    Used both at consult time (a bad entry silently falls back to the
+    model) and by the static contract checker's KC005 cache mode."""
+    ks = _parse_key(key)
+    if ks is None:
+        return f"unparseable key {key!r}"
+    kern = ks["kernel"]
+    choice = entry.get("choice")
+    if kern == "w4a8_gemm":
+        if (not isinstance(choice, (list, tuple)) or len(choice) != 3
+                or not all(isinstance(c, int) for c in choice)):
+            return f"{key}: choice {choice!r} is not (bm, bn, bk)"
+        bm, bn, bk = choice
+        if bm not in _tuning.GEMM_BM_CANDIDATES \
+                or bn not in _tuning.GEMM_BN_CANDIDATES \
+                or bk not in _tuning.GEMM_BK_CANDIDATES:
+            return f"{key}: ({bm},{bn},{bk}) outside the candidate lattice"
+        vm = _tuning.vmem_bytes(min(bm, ks["m"]), min(bn, ks["n"]),
+                                min(bk, ks["k"]), ks["r"])
+        if vm > budget:
+            return f"{key}: working set {vm} B over budget {budget} B"
+    elif kern == "w4a8_fused":
+        if not isinstance(choice, int):
+            return f"{key}: choice {choice!r} is not an int bn"
+        if choice not in _tuning.FUSED_BN_CANDIDATES and choice != ks["n"]:
+            return f"{key}: bn {choice} outside the candidate lattice"
+        vm = _tuning.fused_vmem_bytes(ks["m"], ks["k"],
+                                      min(choice, ks["n"]), ks["r"])
+        if vm > budget:
+            return f"{key}: working set {vm} B over budget {budget} B"
+    elif kern == "fused_tiles":
+        if (not isinstance(choice, (list, tuple)) or len(choice) != 2
+                or not all(isinstance(c, int) for c in choice)):
+            return f"{key}: choice {choice!r} is not (bm, bn)"
+        bm, bn = choice
+        if bm not in _tuning.FUSED_BM_CANDIDATES \
+                or (bn not in _tuning.FUSED_BN_CANDIDATES and bn != ks["n"]):
+            return f"{key}: ({bm},{bn}) outside the candidate lattice"
+        vm = _tuning.fused_vmem_bytes(min(bm, ks["m"]), ks["k"],
+                                      min(bn, ks["n"]), ks["r"])
+        if vm > budget:
+            return f"{key}: working set {vm} B over budget {budget} B"
+    elif kern == "decode_plan":
+        if choice not in DECODE_PLANS:
+            return f"{key}: plan {choice!r} not one of {DECODE_PLANS}"
+    elif kern == "paged_attention":
+        if not isinstance(choice, (bool, int)):
+            return f"{key}: choice {choice!r} is not a routing verdict"
+        if choice and _tuning.paged_vmem_bytes(
+                ks["b"], ks["g"], ks["h"], bool(ks["q"])) > budget:
+            return f"{key}: kernel routing over budget {budget} B"
+    else:
+        return f"{key}: unknown kernel {kern!r}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cache store
+# ---------------------------------------------------------------------------
+
+def cache_dir() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE_DIR")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro"
+
+
+def cache_path(backend: str | None = None) -> Path:
+    backend = backend or jax.default_backend()
+    return cache_dir() / f"autotune_{backend}.json"
+
+
+class AutotuneCache:
+    """One backend's measured-winner store.
+
+    Load order: user cache file, else the checked-in baseline (when its
+    backend matches), else empty. Every failure mode — missing file,
+    corrupt JSON, stale version, wrong backend — degrades to an empty
+    cache: consulting callers fall back to the modeled tables, they never
+    raise. Writes are atomic (tmp + replace)."""
+
+    def __init__(self, backend: str | None = None):
+        self.backend = backend or jax.default_backend()
+        self.path = cache_path(self.backend)
+        self.entries: dict[str, dict] = {}
+        self._loaded_from: str = "empty"
+        for path, tag in ((self.path, "user"), (_BASELINE, "baseline")):
+            loaded = self._read(path)
+            if loaded is not None:
+                self.entries = loaded
+                self._loaded_from = tag
+                break
+
+    def _read(self, path: Path) -> dict | None:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            if not isinstance(raw, dict):
+                return None
+            if raw.get("version") != CACHE_VERSION:
+                return None
+            if raw.get("backend") != self.backend:
+                return None
+            entries = raw.get("entries")
+            if not isinstance(entries, dict):
+                return None
+            return {k: v for k, v in entries.items() if isinstance(v, dict)}
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            return None
+
+    def save(self, path: Path | None = None) -> Path:
+        path = path or self.path
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump({"version": CACHE_VERSION, "backend": self.backend,
+                       "entries": self.entries}, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    def get(self, key: str) -> dict | None:
+        return self.entries.get(key)
+
+    def put(self, key: str, choice, us: float | None,
+            source: str = "measured") -> dict:
+        entry = {"choice": choice, "us": us, "source": source}
+        reason = validate_entry(key, entry)
+        if reason is not None:
+            raise ValueError(f"refusing to cache invalid entry: {reason}")
+        self.entries[key] = entry
+        _invalidate_selector_caches()
+        return entry
+
+    def demote(self, key: str, reason: str = "") -> bool:
+        """Disable a measured winner (it lost to the path it displaced —
+        see serve_bench's routed-vs-displaced assertion). Consults fall
+        back to the model; the entry stays in the file as a tombstone so a
+        refresh can see what was demoted and why."""
+        e = self.entries.get(key)
+        if e is None:
+            return False
+        e["disabled"] = True
+        if reason:
+            e["demoted_because"] = reason
+        _invalidate_selector_caches()
+        return True
+
+    def lookup(self, key: str):
+        """choice for a valid, enabled entry; None otherwise."""
+        e = self.entries.get(key)
+        if e is None or e.get("disabled"):
+            return None
+        if validate_entry(key, e) is not None:
+            return None
+        return e["choice"]
+
+
+_CACHES: dict[str, AutotuneCache] = {}
+
+
+def get_cache(backend: str | None = None) -> AutotuneCache:
+    backend = backend or jax.default_backend()
+    if backend not in _CACHES:
+        _CACHES[backend] = AutotuneCache(backend)
+    return _CACHES[backend]
+
+
+def reset(backend: str | None = None) -> None:
+    """Drop the in-process cache singleton(s) (tests, post-refresh)."""
+    if backend is None:
+        _CACHES.clear()
+    else:
+        _CACHES.pop(backend, None)
+    _invalidate_selector_caches()
+
+
+def _invalidate_selector_caches() -> None:
+    # tuning's selectors memoize (shape, mode) → choice; cache content
+    # changes (put/demote/reset) must drop those memos or they serve stale
+    # winners for the life of the process.
+    _tuning.select_gemm_blocks.cache_clear()
+
+
+def lookup(key: str, mode: str, backend: str | None = None):
+    """Consult the cache under a RuntimeConfig.autotune mode.
+
+    ``"off"`` never touches the cache (modeled decisions, bit-for-bit).
+    ``"cache"`` and ``"force"`` return a valid enabled entry's choice or
+    None — measurement-on-miss for ``"force"`` is driven by the callers
+    that can afford it (engine build, kernels_bench), never from inside a
+    trace-time selector."""
+    if mode == "off":
+        return None
+    return get_cache(backend).lookup(key)
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def _best_time_us(fn, reps: int = 3) -> float:
+    # benchmark timer: the sync IS the measurement  # repro: noqa[RA001]
+    jax.block_until_ready(fn())          # repro: noqa[RA001]
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())      # repro: noqa[RA001]
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def measure_gemm_blocks(m: int, k: int, n: int, r: int, *,
+                        interpret: bool | None = None,
+                        reps: int = 3) -> tuple[tuple[int, int, int], float]:
+    """Wall-clock the tiled GEMM over every in-budget lattice candidate.
+
+    Returns (winner, best_us). Only meaningful on backends that compile
+    Pallas (``interpret=False``); interpret-mode wall-clock measures the
+    Python interpreter, not the kernel, so callers on CPU should record
+    the modeled winner instead (``kernels_bench`` does exactly that and
+    labels the entry ``source: "model"``)."""
+    from .act_quant import act_quant as _act_quant
+    from .w4a8_gemm import w4a8_gemm as _gemm
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    m_diag = jnp.abs(jax.random.normal(ks[1], (k,))) + 0.5
+    qw = jax.random.randint(ks[2], (k // 2, n), -128, 128, jnp.int8)
+    sw = jnp.abs(jax.random.normal(ks[3], (n,))) * 0.01 + 1e-3
+    lb = jax.random.normal(ks[4], (k, r), jnp.float32) * 0.01
+    la = jax.random.normal(ks[5], (r, n), jnp.float32) * 0.01
+    xq, sx, xlr = _act_quant(x, m_diag, lb, interpret=interpret)
+    best, best_us = None, float("inf")
+    for bm in _tuning.GEMM_BM_CANDIDATES:
+        for bn in _tuning.GEMM_BN_CANDIDATES:
+            for bk in _tuning.GEMM_BK_CANDIDATES:
+                bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+                if _tuning.vmem_bytes(bm_, bn_, bk_, r) > _tuning.VMEM_BUDGET:
+                    continue
+                us = _best_time_us(
+                    lambda: _gemm(xq, sx, qw, sw, xlr, la, bm=bm_, bn=bn_,
+                                  bk=bk_, interpret=interpret), reps)
+                if us < best_us:
+                    best, best_us = (bm, bn, bk), us
+    if best is None:
+        raise ValueError(f"no candidate fits VMEM for (m={m},k={k},n={n},r={r})")
+    return best, best_us
+
+
+def measure_fused_bn(m: int, k: int, n: int, r: int, *,
+                     interpret: bool | None = None,
+                     reps: int = 3) -> tuple[int, float]:
+    """Wall-clock the fused decode kernel over in-budget bn candidates.
+    Same interpret-mode caveat as ``measure_gemm_blocks``."""
+    from .w4a8_fused import w4a8_fused as _fused
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    m_diag = jnp.abs(jax.random.normal(ks[1], (k,))) + 0.5
+    qw = jax.random.randint(ks[2], (k // 2, n), -128, 128, jnp.int8)
+    sw = jnp.abs(jax.random.normal(ks[3], (n,))) * 0.01 + 1e-3
+    lb = jax.random.normal(ks[4], (k, r), jnp.float32) * 0.01
+    la = jax.random.normal(ks[5], (r, n), jnp.float32) * 0.01
+    best, best_us = None, float("inf")
+    for bn in _tuning.FUSED_BN_CANDIDATES:
+        bn_ = min(bn, n)
+        if _tuning.fused_vmem_bytes(m, k, bn_, r) > _tuning.VMEM_BUDGET:
+            continue
+        us = _best_time_us(
+            lambda: _fused(x, m_diag, qw, sw, lb, la, bn=bn_,
+                           interpret=interpret), reps)
+        if us < best_us:
+            best, best_us = bn_, us
+    if best is None:
+        raise ValueError(f"no bn fits VMEM for (m={m},k={k},n={n},r={r})")
+    return best, best_us
+
+
+def measure_fused_tiles(m: int, k: int, n: int, r: int, *,
+                        interpret: bool | None = None,
+                        reps: int = 3) -> tuple[tuple[int, int], float]:
+    """Wall-clock the tiled-m fused prefill kernel over in-budget
+    (bm, bn) candidates. Same interpret-mode caveat as
+    ``measure_gemm_blocks``."""
+    from .w4a8_fused import w4a8_fused as _fused
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    m_diag = jnp.abs(jax.random.normal(ks[1], (k,))) + 0.5
+    qw = jax.random.randint(ks[2], (k // 2, n), -128, 128, jnp.int8)
+    sw = jnp.abs(jax.random.normal(ks[3], (n,))) * 0.01 + 1e-3
+    lb = jax.random.normal(ks[4], (k, r), jnp.float32) * 0.01
+    la = jax.random.normal(ks[5], (r, n), jnp.float32) * 0.01
+    best, best_us = None, float("inf")
+    for bm in _tuning.FUSED_BM_CANDIDATES:
+        bm_ = min(bm, m)
+        for bn in _tuning.FUSED_BN_CANDIDATES:
+            bn_ = min(bn, n)
+            if _tuning.fused_vmem_bytes(bm_, k, bn_, r) \
+                    > _tuning.VMEM_BUDGET:
+                continue
+            us = _best_time_us(
+                lambda: _fused(x, m_diag, qw, sw, lb, la, bn=bn_, bm=bm_,
+                               interpret=interpret), reps)
+            if us < best_us:
+                best, best_us = (bm, bn_), us
+    if best is None:
+        raise ValueError(
+            f"no (bm, bn) fits VMEM for (m={m},k={k},n={n},r={r})")
+    return best, best_us
+
+
+def _plan_leaves(d_model: int, d_ff: int, r: int, n_groups: int, seed: int = 0):
+    """Synthetic quantized leaves for the decode-plan proxy: the per-group
+    linear stack of a llama-style block (qkv/o + gate/up/down), stacked
+    over the group axis like real serving params."""
+    shapes = [(d_model, d_model), (d_model, d_model),   # wq, wo (+kv folded)
+              (d_model, d_ff), (d_model, d_ff), (d_ff, d_model)]
+    rng = np.random.default_rng(seed)
+    leaves = []
+    for (k, n) in shapes:
+        leaves.append({
+            "qw": jnp.asarray(rng.integers(-128, 128,
+                                           (n_groups, k // 2, n), np.int8)),
+            "sw": jnp.asarray(rng.random((n_groups, n), np.float32) * 0.01
+                              + 1e-3),
+            "m": jnp.asarray(rng.random((n_groups, k), np.float32) + 0.5),
+            "lb": jnp.asarray(rng.standard_normal((n_groups, k, r))
+                              .astype(np.float32) * 0.01),
+            "la": jnp.asarray(rng.standard_normal((n_groups, r, n))
+                              .astype(np.float32) * 0.01),
+        })
+    return leaves
+
+
+def measure_decode_plan(m: int, d_model: int, d_ff: int, r: int,
+                        n_groups: int, *, n_steps: int = 24,
+                        reps: int = 3) -> tuple[str, dict[str, float]]:
+    """Wall-clock the decode-plan candidates through a decode-loop proxy.
+
+    The proxy is an N-step ``lax.scan`` whose body runs one group-stack of
+    quantized linears per layer — the same structural skeleton as
+    ``serve.Engine``'s decode loop (weights as jit arguments, layer
+    iteration inside the step) so the measurement sees the same XLA
+    behaviors the engine does: naive slice-fused dots for the scanned
+    stacked layout, the backend GEMM path for prepared unstacked leaves.
+    Returns (winner, {plan: us_per_step}). Honest wall-clock on every
+    backend — this is the entry that makes quantized decode win or lose."""
+    from . import ref as _ref
+    leaves = _plan_leaves(d_model, d_ff, r, n_groups)
+    x0 = jnp.asarray(np.random.default_rng(1)
+                     .standard_normal((m, d_model)).astype(np.float32))
+
+    def step_default(h, sliced):
+        u = None
+        for (qw, sw, m_diag, lb, la) in sliced:
+            src = h if m_diag.shape[-1] == d_model else u
+            y = _ref.w4a8_linear_ref(src, qw, sw, m_diag, lb, la)
+            if y.shape[-1] == d_ff:
+                u = y
+            else:
+                h = h + 0.001 * y
+        return h / (1.0 + 0.001 * jnp.max(jnp.abs(h)))
+
+    def run_default(x, *stacked):
+        def dbody(h, _):
+            def gbody(hh, sliced):
+                return step_default(hh, sliced), None
+            hh, _ = jax.lax.scan(gbody, h, tuple(stacked))
+            return hh, None
+        h, _ = jax.lax.scan(dbody, x, None, length=n_steps)
+        return h
+
+    def run_prepared(x, *flat_prepped):
+        # flat_prepped: n_groups × leaves × (waug, blb, m, sw_keep) tuples,
+        # unstacked at trace time — whole loop-invariant buffers.
+        per_group = len(flat_prepped) // n_groups
+        def dbody(h, _):
+            hh = h
+            for g in range(n_groups):
+                u = None
+                for (waug, blb, m_diag) in flat_prepped[g * per_group:
+                                                        (g + 1) * per_group]:
+                    src = hh if m_diag.shape[-1] == d_model else u
+                    y = _aug_linear(src, waug, blb, m_diag)
+                    if y.shape[-1] == d_ff:
+                        u = y
+                    else:
+                        hh = hh + 0.001 * y
+            return hh / (1.0 + 0.001 * jnp.max(jnp.abs(hh))), None
+        h, _ = jax.lax.scan(dbody, x, None, length=n_steps)
+        return h
+
+    results: dict[str, float] = {}
+    stacked = tuple(tuple(lv[k] for k in ("qw", "sw", "m", "lb", "la"))
+                    for lv in leaves)
+    f_def = jax.jit(run_default)
+    results["default"] = _best_time_us(
+        lambda: f_def(x0, *stacked), reps) / n_steps
+
+    prepped = []
+    for g in range(n_groups):
+        for lv in leaves:
+            pl = prepare_leaf({k: v[g] for k, v in lv.items()})
+            prepped.append((pl["waug"], pl["blb"], pl["m"]))
+    f_prep = jax.jit(run_prepared)
+    results["prepared"] = _best_time_us(
+        lambda: f_prep(x0, *prepped), reps) / n_steps
+
+    winner = min(results, key=results.get)
+    return winner, results
+
+
+# ---------------------------------------------------------------------------
+# The prepared decode plan
+# ---------------------------------------------------------------------------
+
+def _aug_linear(x, waug, blb, m_diag, qmax: int = 127):
+    """The augmented-GEMM quantized linear on prepared leaves.
+
+    y = [xq·sx | x@blb] @ waug, where waug = [[codes·sw], [la]] and
+    blb = lb / m_diag. Same math as the reference chain (codes are exact
+    in f32; only f32 reduction order differs — the scale fold and the
+    low-rank epilogue ride inside the one augmented reduction)."""
+    x = x.astype(jnp.float32)
+    x_s = x / m_diag[None, :]
+    sx = jnp.maximum(jnp.max(jnp.abs(x_s), axis=1, keepdims=True),
+                     1e-8) / qmax
+    xq = jnp.clip(jnp.round(x_s / sx), -qmax - 1, qmax)
+    z = jnp.concatenate([xq * sx, x @ blb], axis=1)
+    return z @ waug
+
+
+def prepare_leaf(p: dict) -> dict:
+    """Augment one quantized leaf dict with the prepared-plan arrays.
+
+    Adds ``waug`` [(k+r), n] f32 (unpacked int4 codes × sw stacked over
+    la) and ``blb`` [k, r] f32 (lb with the smoothing diagonal folded in).
+    The original packed leaves stay — fallback paths (force_reference,
+    adapter routing, weight-only) still work. Leaves carrying adapter
+    pools are returned untouched: the adapter serving path is token-exact
+    against a merged-weight reference *because* its reduction order is
+    pinned (see ``ops.adapter_epilogue``); re-ordering the base linear
+    under it would break that certification."""
+    if "alb" in p:
+        return p
+    from repro.core.quantizers import unpack_int4
+    qw, sw, m_diag = p["qw"], p["sw"], p["m"]
+    lb, la = p["lb"], p["la"]
+    wf = unpack_int4(qw.T).T.astype(jnp.float32)          # [k, n] codes
+    waug = jnp.concatenate(
+        [wf * sw[None, :].astype(jnp.float32),
+         la.astype(jnp.float32)], axis=0)                 # [(k+r), n]
+    blb = lb.astype(jnp.float32) / m_diag[:, None].astype(jnp.float32)
+    q = dict(p)
+    q["waug"], q["blb"] = waug, blb
+    return q
+
+
+def _prepare_tree(p):
+    if isinstance(p, dict):
+        if "qw" in p:
+            return prepare_leaf(p)
+        return {k: _prepare_tree(v) for k, v in p.items()}
+    if isinstance(p, (list, tuple)):
+        return type(p)(_prepare_tree(v) for v in p)
+    return p
+
+
+def prepare_params(params: dict) -> dict:
+    """Apply the prepared decode plan to a quantized param tree.
+
+    Unstacks ``params["groups"]`` into a :class:`models.model.LayerList`
+    (Python-level layer iteration — see the module docstring for why) and
+    augments every quantized leaf via :func:`prepare_leaf`. Non-quantized
+    trees come back unchanged. The transform is pure and idempotent."""
+    from repro.models.model import LayerList
+    has_quant = any("qw" in d for d in _iter_dicts(params))
+    if not has_quant:
+        return params
+    out = dict(params)
+    groups = params.get("groups")
+    if groups is not None and not isinstance(groups, LayerList):
+        n_groups = jax.tree.leaves(groups)[0].shape[0]
+        unstacked = [jax.tree.map(lambda a, i=i: a[i], groups)
+                     for i in range(n_groups)]
+        out["groups"] = LayerList(_prepare_tree(g) for g in unstacked)
+    elif groups is not None:
+        out["groups"] = LayerList(_prepare_tree(g) for g in groups)
+    for key in ("prefix",):
+        if key in out:
+            out[key] = _prepare_tree(out[key])
+    return out
+
+
+def _iter_dicts(p):
+    if isinstance(p, dict):
+        yield p
+        for v in p.values():
+            yield from _iter_dicts(v)
+    elif isinstance(p, (list, tuple)):
+        for v in p:
+            yield from _iter_dicts(v)
+
+
+# ---------------------------------------------------------------------------
+# Engine hook
+# ---------------------------------------------------------------------------
+
+def engine_plan_key(params, cfg, scfg) -> str | None:
+    """The decode_plan cache key an engine with these (params, cfg, scfg)
+    consults — or None when no plan applies (no quantized leaves, pooled
+    adapters, no scanned groups). Shared by the engine-build hook below
+    and serve_bench's routed-vs-displaced demotion."""
+    quant_leaves = [d for d in _iter_dicts(params) if "qw" in d]
+    if not quant_leaves:
+        return None
+    if any("alb" in d for d in quant_leaves):
+        # pooled-adapter engines keep the pinned-reduction path everywhere
+        return None
+    groups = params.get("groups")
+    if groups is None:
+        return None
+    r = quant_leaves[0]["lb"].shape[-1]
+    from repro.models.model import LayerList
+    if isinstance(groups, LayerList):
+        n_groups = len(groups)
+    else:
+        n_groups = jax.tree.leaves(groups)[0].shape[0]
+    m = getattr(scfg, "batch_slots", 1) or 1
+    return decode_plan_key(m, cfg.d_model, cfg.d_ff, r, n_groups)
+
+
+def maybe_prepare_engine_params(params, cfg, scfg, rt):
+    """Engine-build hook: consult (or measure) the decode-plan entry and
+    apply the winning plan to the engine's params.
+
+    Returns (params, plan). ``rt.autotune == "off"`` or a cache miss in
+    ``"cache"`` mode returns the params untouched — the engine then runs
+    today's modeled routing bit-for-bit. ``"force"`` measures the plan on
+    a miss and persists the winner."""
+    if rt is None or rt.autotune == "off":
+        return params, "default"
+    key = engine_plan_key(params, cfg, scfg)
+    if key is None:
+        return params, "default"
+    ks = _parse_key(key)
+    m, r, n_groups = ks["m"], ks["r"], ks["L"]
+    cache = get_cache()
+    plan = cache.lookup(key)
+    if plan is None and rt.autotune == "force":
+        winner, results = measure_decode_plan(
+            min(m, _tuning.DECODE_M_MAX), cfg.d_model, cfg.d_ff, r, n_groups)
+        cache.put(key, winner, results[winner])
+        cache.save()
+        plan = winner
+    if plan == "prepared":
+        return prepare_params(params), "prepared"
+    return params, "default"

@@ -104,7 +104,8 @@ def adapter_epilogue(x_s, alb, ala, idx, lb=None, la=None,
 
 def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
                 rt: RuntimeConfig | None = None, a_bits: int | None = None,
-                adapter=None, adapter_uniform: bool = False):
+                adapter=None, adapter_uniform: bool = False,
+                waug=None, blb=None):
     """Full quantized linear: smooth → quantize → int4×int8 GEMM → dequant
     → low-rank compensation. x: [m, k] → [m, n] (f32).
 
@@ -114,9 +115,23 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
     on the Pallas path, the XLA batched gather otherwise. Rank-0 base
     factors (``lb.shape[-1] == 0``) skip the base epilogue entirely.
     ``adapter_uniform=True`` promises every row carries ``idx[0]`` (set by
-    single-sequence callers) and routes the shared-GEMM epilogue."""
+    single-sequence callers) and routes the shared-GEMM epilogue.
+
+    ``waug``/``blb`` are the prepared-plan arrays the autotuner's engine
+    hook attaches to leaves (``repro.kernels.autotune.prepare_leaf``):
+    when present — and the call is the plain per-token W4A8 shape they
+    encode (no adapter, no reference pin) — the whole chain runs as ONE
+    augmented GEMM on f32 code matrices. Same math, f32 reduction order
+    only; the win is that the weight reaches the dot as a whole
+    loop-invariant buffer instead of a per-step slice of a scanned stack
+    (see the autotune module docstring)."""
     rt = DEFAULT_RUNTIME if rt is None else rt
     bits = rt.a_bits if a_bits is None else a_bits
+    if (waug is not None and adapter is None and bits == 8
+            and rt.act_granularity == "per_token"
+            and not rt.force_reference):
+        from .autotune import _aug_linear
+        return _aug_linear(x, waug, blb, m_diag)
     if bits >= 16:
         # weight-only: dequantize W and run in float (no act quant)
         from repro.core.quantizers import unpack_int4
@@ -150,11 +165,30 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
                 return _w4a8_gather_kernel(x, m_diag, qw, sw, lb, la,
                                            alb, ala, idx,
                                            interpret=rt.interpret)
-        if rt.fused_decode and _tuning.use_fused_decode(m, kd, n, r):
+        # The router owns the tile choice: fused_bn is computed ONCE here,
+        # under the caller's autotune mode, and threaded through to the
+        # kernel — the kernel's own bn=None re-derivation runs under the
+        # default budget and would silently discard a measured winner.
+        fused_bn = (_tuning.fused_bn(m, kd, n, r, autotune=rt.autotune)
+                    if rt.fused_decode and m <= _tuning.DECODE_M_MAX
+                    else None)
+        fused_mt = None
+        if (fused_bn is None and rt.fused_decode and rt.autotune != "off"
+                and m > _tuning.DECODE_M_MAX):
+            # tiled-m fused prefill: autotune-gated (the modeled tables
+            # keep prefill on the two-kernel pipeline, so "off" stays
+            # bit-for-bit today's routing)
+            fused_mt = _tuning.fused_tiles(m, kd, n, r,
+                                           autotune=rt.autotune)
+        if fused_bn is not None:
             # decode/GEMV fast path: one pallas_call, no xq/sx/xlr HBM
             # round-trip between kernels
-            y = _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la,
+            y = _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la, bn=fused_bn,
                                    interpret=rt.interpret)
+        elif fused_mt is not None:
+            bm_f, bn_f = fused_mt
+            y = _w4a8_fused_kernel(x, m_diag, qw, sw, lb, la, bn=bn_f,
+                                   bm=bm_f, interpret=rt.interpret)
         else:
             if r == 0:
                 # the tiled pipeline threads xlr between its two kernels;
@@ -162,7 +196,8 @@ def w4a8_linear(x, qw, sw, m_diag, lb, la, *,
                 # ones that matter — took the fast path above)
                 lb, la = pad_lowrank(lb, la)
                 r = lb.shape[1]
-            bm, bn, bk = _tuning.select_gemm_blocks(m, kd, n, r)
+            bm, bn, bk = _tuning.select_gemm_blocks(m, kd, n, r,
+                                                    autotune=rt.autotune)
             xq, sx, xlr = _act_quant_kernel(x, m_diag, lb,
                                             interpret=rt.interpret)
             y = _w4a8_kernel(xq, sx, qw, sw, xlr, la, bm=bm, bn=bn, bk=bk,
@@ -216,7 +251,8 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
     if hq % hkv != 0:
         return None
     if not _tuning.use_paged_kernel(b, block_tables.shape[1], bs,
-                                    hq // hkv, hd, quantized=quantized):
+                                    hq // hkv, hd, quantized=quantized,
+                                    autotune=rt.autotune):
         return None
     return _paged_kernel(q, k_pool, v_pool, block_tables, kv_len,
                          k_scale, v_scale,

@@ -40,9 +40,22 @@ DECODE_M_MAX = 16
 # selector could ever return must satisfy the kernel contracts, not just
 # the ones today's serving shapes happen to hit.
 FUSED_BN_CANDIDATES = (2048, 1024, 512, 256, 128)
+FUSED_BM_CANDIDATES = (128, 64, 32, 16)
 GEMM_BM_CANDIDATES = (128, 256, 512)
 GEMM_BN_CANDIDATES = (128, 256, 512)
 GEMM_BK_CANDIDATES = (256, 512, 1024)
+
+
+def _autotune_lookup(key_fn, shape, mode):
+    """Consult the measured autotune cache (``repro.kernels.autotune``).
+
+    Returns the cached choice or None (mode "off", miss, demoted or
+    contract-invalid entry — all fall back to the modeled search below).
+    Imported lazily: autotune imports this module for the lattices."""
+    if mode == "off":
+        return None
+    from . import autotune as _autotune
+    return _autotune.lookup(key_fn(*shape), mode)
 
 
 def vmem_bytes(bm: int, bn: int, bk: int, r: int) -> int:
@@ -76,23 +89,82 @@ def fused_vmem_bytes(m: int, k: int, bn: int, r: int) -> int:
 
 
 def use_fused_decode(m: int, k: int, n: int, r: int,
-                     budget: int = VMEM_BUDGET) -> bool:
+                     budget: int = VMEM_BUDGET,
+                     autotune: str = "off") -> bool:
     """Route small-m calls to the fused single-pass kernel when it fits."""
     if m > DECODE_M_MAX:
         return False
-    bn = fused_bn(m, k, n, r, budget=budget)
+    bn = fused_bn(m, k, n, r, budget=budget, autotune=autotune)
     return bn is not None
 
 
 def fused_bn(m: int, k: int, n: int, r: int,
-             budget: int = VMEM_BUDGET) -> int | None:
+             budget: int = VMEM_BUDGET,
+             autotune: str = "off") -> int | None:
     """Largest n-tile (multiple of 128, capped at n) that keeps the fused
-    kernel's working set under budget; None if even bn=128 doesn't fit."""
+    kernel's working set under budget; None if even bn=128 doesn't fit.
+    With ``autotune != "off"`` a measured winner (validated against this
+    same budget) takes precedence over the largest-fitting heuristic."""
+    hit = _autotune_lookup(_fused_key, (m, k, n, r), autotune)
+    if hit is not None and fused_vmem_bytes(m, k, min(hit, n), r) <= budget:
+        return min(hit, n)
     for bn in FUSED_BN_CANDIDATES:
         bn_ = min(bn, n)
         if fused_vmem_bytes(m, k, bn_, r) <= budget:
             return bn_
     return None
+
+
+def fused_tiles(m: int, k: int, n: int, r: int,
+                budget: int = VMEM_BUDGET,
+                autotune: str = "off") -> tuple[int, int] | None:
+    """(bm, bn) for the tiled-m fused kernel at prefill shapes.
+
+    Extends the fused single-pass chain (smooth → quant → GEMM → dequant →
+    low-rank) past ``DECODE_M_MAX`` by tiling m as well as n: each grid
+    step holds a ``bm``-row slab with K whole (the per-token absmax still
+    needs full rows). Modeled choice: the largest row slab whose working
+    set fits, then the widest n-tile — fewer grid steps, same per-step
+    recompute. None when even the smallest tile overshoots (the two-kernel
+    pipeline handles it)."""
+    hit = _autotune_lookup(_fused_tiles_key, (m, k, n, r), autotune)
+    if hit is not None:
+        bm, bn = hit
+        if fused_vmem_bytes(min(bm, m), k, min(bn, n), r) <= budget:
+            return min(bm, m), min(bn, n)
+    for bm in FUSED_BM_CANDIDATES:
+        bm_ = min(bm, m)
+        for bn in FUSED_BN_CANDIDATES:
+            bn_ = min(bn, n)
+            if fused_vmem_bytes(bm_, k, bn_, r) <= budget:
+                return bm_, bn_
+    return None
+
+
+def use_fused_prefill(m: int, k: int, n: int, r: int,
+                      budget: int = VMEM_BUDGET,
+                      autotune: str = "off") -> bool:
+    """Route prefill-m calls (m > DECODE_M_MAX) to the tiled-m fused
+    kernel, sparing chunked prefill the act_quant → GEMM HBM round trip."""
+    if m <= DECODE_M_MAX:
+        return False
+    return fused_tiles(m, k, n, r, budget=budget, autotune=autotune) \
+        is not None
+
+
+def _fused_key(m, k, n, r):
+    from . import autotune as _autotune
+    return _autotune.fused_key(m, k, n, r)
+
+
+def _fused_tiles_key(m, k, n, r):
+    from . import autotune as _autotune
+    return _autotune.fused_tiles_key(m, k, n, r)
+
+
+def _gemm_key(m, k, n, r):
+    from . import autotune as _autotune
+    return _autotune.gemm_key(m, k, n, r)
 
 
 def gather_vmem_bytes(k: int, bn: int, r: int, ra: int) -> int:
@@ -155,7 +227,8 @@ def paged_vmem_bytes(block_size: int, group: int, hd: int,
 
 def use_paged_kernel(batch: int, nb: int, block_size: int, group: int,
                      hd: int, budget: int = VMEM_BUDGET,
-                     quantized: bool = False) -> bool:
+                     quantized: bool = False,
+                     autotune: str = "off") -> bool:
     """Route paged decode attention to the Pallas paged-gather kernel.
 
     Decode is m = 1 token per row by construction; the only way the kernel
@@ -163,8 +236,19 @@ def use_paged_kernel(batch: int, nb: int, block_size: int, group: int,
     (huge head_dim × block_size) — then the XLA gather path is the safer
     bet. ``nb``/``batch`` only scale the grid, not the per-step footprint.
     ``quantized`` adds the dequant epilogue's tiles to the modeled set.
+    A measured routing verdict (autotune cache, kind "paged_attention")
+    overrides the modeled fit check — but only toward the *fallback*:
+    a measured "kernel loses here" is trusted, a measured "kernel wins"
+    still has to fit the budget.
     """
-    return paged_vmem_bytes(block_size, group, hd, quantized) <= budget
+    fits = paged_vmem_bytes(block_size, group, hd, quantized) <= budget
+    if autotune != "off":
+        from . import autotune as _autotune
+        hit = _autotune.lookup(
+            _autotune.paged_key(block_size, group, hd, quantized), autotune)
+        if hit is not None:
+            return bool(hit) and fits
+    return fits
 
 
 # Known-good BlockSpecs for recurring serving shapes, keyed by
@@ -187,11 +271,24 @@ def _m_bucket(m: int) -> int:
 
 @functools.lru_cache(maxsize=512)
 def select_gemm_blocks(m: int, k: int, n: int, r: int,
-                       budget: int = VMEM_BUDGET) -> tuple[int, int, int]:
-    """(bm, bn, bk) for the tiled GEMM: table hit, else modeled search."""
+                       budget: int = VMEM_BUDGET,
+                       autotune: str = "off") -> tuple[int, int, int]:
+    """(bm, bn, bk) for the tiled GEMM: measured winner, table hit, else
+    modeled search. Table and cache hits are validated against the
+    *caller's* budget — an entry recorded under the default budget can
+    overshoot a reduced one, and returning it anyway would hand the kernel
+    a working set the gate just rejected (the search path below respects
+    the budget, so fall through to it)."""
+    hit = _autotune_lookup(_gemm_key, (m, k, n, r), autotune)
+    if hit is not None:
+        bm, bn, bk = (min(hit[0], m), min(hit[1], n), min(hit[2], k))
+        if vmem_bytes(bm, bn, bk, r) <= budget:
+            return bm, bn, bk
     hit = GEMM_BLOCK_TABLE.get((_m_bucket(m), k, n, r))
     if hit is not None:
-        return hit
+        bm, bn, bk = (min(hit[0], m), min(hit[1], n), min(hit[2], k))
+        if vmem_bytes(bm, bn, bk, r) <= budget:
+            return hit
     best, best_ai = (256, 256, 512), -1.0
     for bm in GEMM_BM_CANDIDATES:
         for bn in GEMM_BN_CANDIDATES:

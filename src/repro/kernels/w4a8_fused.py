@@ -64,11 +64,23 @@ def _kernel(x_ref, m_ref, qw_ref, sw_ref, *rest, qmax: int, has_lr: bool):
     out_ref[...] = y
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "bn", "bm", "interpret"))
 def w4a8_fused(x, m_diag, qw, sw, lb, la, *, bits: int = 8,
-               bn: int | None = None, interpret: bool = True):
+               bn: int | None = None, bm: int | None = None,
+               interpret: bool = True):
     """x: [m,k]; m_diag: [k]; qw: [k//2,n] int8 packed; sw: [n]; lb: [k,r];
-    la: [r,n] → y [m,n] f32. Decode shapes: m small, K whole in VMEM.
+    la: [r,n] → y [m,n] f32.
+
+    Decode shapes (``bm`` None): m small, K whole in VMEM, grid over
+    n-tiles only. Prefill shapes pass ``bm`` to tile the rows as well —
+    each grid step holds a ``bm``-row slab with K still whole (the
+    per-token absmax needs full rows), so chunked prefill runs the same
+    single-pass chain instead of the two-kernel HBM round trip. The
+    caller's router (``ops.w4a8_linear`` via ``tuning.fused_bn`` /
+    ``tuning.fused_tiles``) owns the tile choice and threads it through —
+    the ``bn=None`` re-derivation below is a back-compat default for
+    direct API use and runs under the *default* budget only.
 
     r == 0 skips the low-rank epilogue entirely (operands never enter the
     kernel) — the zero-rank fast path."""
@@ -85,25 +97,26 @@ def w4a8_fused(x, m_diag, qw, sw, lb, la, *, bits: int = 8,
                 f"(m={m}, k={k}, n={n}, r={r}); route through the tiled "
                 f"act_quant → w4a8_gemm pipeline instead")
     bn_ = min(bn, n)
-    grid = (pl.cdiv(n, bn_),)
+    bm_ = m if bm is None else min(bm, m)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(n, bn_))
     in_specs = [
-        pl.BlockSpec((m, k), lambda j: (0, 0)),
-        pl.BlockSpec((1, k), lambda j: (0, 0)),
-        pl.BlockSpec((k // 2, bn_), lambda j: (0, j)),
-        pl.BlockSpec((1, bn_), lambda j: (0, j)),
+        pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, k), lambda i, j: (0, 0)),
+        pl.BlockSpec((k // 2, bn_), lambda i, j: (0, j)),
+        pl.BlockSpec((1, bn_), lambda i, j: (0, j)),
     ]
     operands = [x, m_diag.reshape(1, k), qw, sw.reshape(1, n)]
     if has_lr:
         in_specs += [
-            pl.BlockSpec((k, r), lambda j: (0, 0)),
-            pl.BlockSpec((r, bn_), lambda j: (0, j)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn_), lambda i, j: (0, j)),
         ]
         operands += [lb, la]
     return pl.pallas_call(
         functools.partial(_kernel, qmax=qmax, has_lr=has_lr),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((m, bn_), lambda j: (0, j)),
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(*operands)

@@ -29,6 +29,15 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas kernel path (interpret on CPU)")
+    ap.add_argument("--autotune", default="off",
+                    choices=("off", "cache", "force"),
+                    help="measured-autotune mode: 'off' keeps modeled "
+                         "kernel/plan decisions bit-for-bit, 'cache' "
+                         "consults persisted measured winners "
+                         "(~/.cache/repro/autotune_<backend>.json, falling "
+                         "back to the checked-in baseline then the model), "
+                         "'force' additionally measures on a cache miss at "
+                         "engine build and persists the winner")
     ap.add_argument("--adapters", type=int, default=0,
                     help="serve N synthetic LoRA tenants multiplexed over "
                          "the one quantized base (requests round-robin "
@@ -89,7 +98,8 @@ def main():
         overrides["adapter_rank"] = args.adapter_rank
         overrides["adapter_slots"] = args.adapters + 1   # + pinned base slot
     recipe = registry.resolve(args.method, **overrides)
-    rt = recipe.act.runtime(use_pallas=args.pallas)
+    rt = dataclasses.replace(recipe.act.runtime(use_pallas=args.pallas),
+                             autotune=args.autotune)
     if not recipe.is_noop:
         print(f"[serve] calibrating + quantizing with {args.method} "
               f"(W{recipe.base.bits}A{recipe.act.bits}, "

@@ -189,7 +189,8 @@ def _quantized_dense(p, x: jnp.ndarray, rt=None) -> jnp.ndarray:
                                 shape).reshape(-1)
         adapter = (p["alb"], p["ala"], rows)
     y2 = kops.w4a8_linear(x2, p["qw"], p["sw"], p["m"], p["lb"], p["la"],
-                          rt=rt, adapter=adapter, adapter_uniform=uniform)
+                          rt=rt, adapter=adapter, adapter_uniform=uniform,
+                          waug=p.get("waug"), blb=p.get("blb"))
     y2 = y2.astype(x.dtype)
     if "b" in p:
         y2 = y2 + p["b"].astype(y2.dtype)

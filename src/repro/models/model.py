@@ -187,6 +187,26 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
 # Forward
 # ---------------------------------------------------------------------------
 
+class LayerList(list):
+    """Marker for the prepared (unstacked) group layout.
+
+    A ``LayerList`` holds one group-params pytree per scanned group instead
+    of a single stacked pytree. ``_scan_groups`` iterates it with a Python
+    loop at trace time so each group's weights reach their dots as whole
+    loop-invariant buffers — inside a decode ``lax.scan`` that is the
+    difference between the backend's fast GEMM path and a naive
+    slice-fused loop, because XLA never hoists per-iteration slices of a
+    stacked operand out of a while body (see docs/serving_perf.md).
+    Produced by ``repro.kernels.autotune.prepare_params``.
+    """
+
+
+jax.tree_util.register_pytree_node(
+    LayerList,
+    lambda xs: (list(xs), None),
+    lambda _, children: LayerList(children))
+
+
 def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
                  mrope_positions, caches, cross_ctx, train: bool,
                  ragged: bool = False, block_tables=None, adapter_idx=None,
@@ -251,7 +271,28 @@ def _scan_groups(params, cfg: ModelConfig, x, x0, *, positions,
             out["tape"] = tape_g
         return (h, aux), out
 
-    scanned_in = {"p": params["groups"]}
+    groups = params["groups"]
+    if isinstance(groups, LayerList):
+        carry = (x, jnp.zeros((), jnp.float32))
+        outs = []
+        for gi, gp in enumerate(groups):
+            scanned_i = {"p": gp}
+            if caches is not None:
+                scanned_i["c"] = jax.tree.map(lambda a, gi=gi: a[gi],
+                                              caches["groups"])
+            if cross_p is not None:
+                scanned_i["cross_p"] = jax.tree.map(lambda a, gi=gi: a[gi],
+                                                    cross_p)
+                if caches is not None and "cross" in caches:
+                    scanned_i["cross_c"] = jax.tree.map(
+                        lambda a, gi=gi: a[gi], caches["cross"])
+            carry, out_i = group_fn(carry, scanned_i)
+            outs.append(out_i)
+        (x, aux) = carry
+        scanned_out = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return (x, aux, scanned_out.get("c"), scanned_out.get("tape"))
+
+    scanned_in = {"p": groups}
     if caches is not None:
         scanned_in["c"] = caches["groups"]
     if cross_p is not None:

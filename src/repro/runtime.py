@@ -22,6 +22,13 @@ import dataclasses
 SUPPORTED_ACT_BITS = (4, 6, 8, 16)
 ACT_GRANULARITIES = ("per_token", "per_tensor")
 
+# Autotune modes for the measured kernel-plan cache
+# (repro.kernels.autotune). "off" = modeled cost tables only (today's
+# behaviour, bit-for-bit); "cache" = consult persisted measured winners,
+# fall back to the model on a miss; "force" = measure on miss, persist,
+# then use the winner.
+AUTOTUNE_MODES = ("off", "cache", "force")
+
 # KV-cache storage dtypes the serving stack implements. "bf16" means the
 # model's native cache dtype (bf16 on TPU, f32 for float32 smoke configs);
 # "int8"/"int4" store abs-max per-token-per-head quantized codes next to
@@ -47,6 +54,15 @@ class RuntimeConfig:
         the two-kernel act_quant → w4a8_gemm pipeline. Only consulted when
         ``use_pallas`` is on; turn off to pin the tiled pipeline for A/B
         debugging.
+    autotune: measured kernel-plan cache mode ("off" | "cache" | "force",
+        see ``repro.kernels.autotune``). "off" keeps every routing decision
+        on the modeled VMEM cost tables in ``repro.kernels.tuning`` —
+        bit-for-bit today's behaviour. "cache" consults the persisted
+        measured winners first (block shapes, fused-vs-tiled routing, and
+        the decode execution plan) and falls back to the model on a miss;
+        "force" measures on miss and persists the winner. Like every other
+        field this is trace-time Python config: flipping it compiles a
+        different program, it never becomes a traced value.
     force_reference: numeric-guard escape hatch — route every kernel
         entry point to the pure-XLA reference path regardless of
         ``use_pallas``/``fused_decode``. This is the one-shot fallback the
@@ -62,9 +78,13 @@ class RuntimeConfig:
     use_pallas: bool = False
     interpret: bool = True
     fused_decode: bool = True
+    autotune: str = "off"
     force_reference: bool = False
 
     def __post_init__(self):
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(f"autotune must be one of {AUTOTUNE_MODES}: "
+                             f"{self.autotune!r}")
         if self.a_bits not in SUPPORTED_ACT_BITS:
             raise ValueError(f"activation bits must be one of "
                              f"{SUPPORTED_ACT_BITS}: {self.a_bits}")

@@ -184,10 +184,19 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig,
                  scfg: ServeConfig = ServeConfig(),
                  rt: Optional[RuntimeConfig] = None):
-        self.params = params
         self.cfg = cfg
         self.scfg = scfg
         self.rt = rt                # None → ops.default_runtime() at trace
+        # measured-autotune engine hook: under rt.autotune "cache"/"force"
+        # the decode-plan cache entry may rewrite quantized params into the
+        # prepared layout (repro.kernels.autotune); "off"/miss is identity
+        if rt is not None and rt.autotune != "off":
+            from repro.kernels import autotune as _autotune
+            params, self.decode_plan = _autotune.maybe_prepare_engine_params(
+                params, cfg, scfg, rt)
+        else:
+            self.decode_plan = "default"
+        self.params = params
         self.fallback_active = False
         self._build_programs()
 

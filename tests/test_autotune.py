@@ -1,0 +1,405 @@
+"""Tests for the measured autotune cache (``repro.kernels.autotune``).
+
+Covers the cache store (round-trip persistence, the degrade-to-empty
+failure modes: stale version, wrong backend, corrupt JSON), the mode
+contract (``autotune="off"`` reproduces the modeled decisions
+bit-for-bit; ``"cache"`` consults measured winners), the KC001-style
+entry validation the contract checker's KC005 cache mode shares, the
+demotion tombstones serve_bench's routed-vs-displaced assertion writes,
+the prepared decode plan (augmented-GEMM math and the engine hook), and
+the two routing bugfixes shipped with the cache:
+
+* ``select_gemm_blocks`` honored a ``GEMM_BLOCK_TABLE``/cache hit without
+  checking the *caller's* budget — an entry recorded under the default
+  8 MiB budget leaked through a reduced one.
+* ``w4a8_fused`` re-derived ``bn`` from the default budget instead of
+  taking the router's tile — the tile ``ops`` selected (and the contract
+  checker validated) was not the tile the kernel ran.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantizers import W4, pack_int4, quantize_weight
+from repro.kernels import autotune, tuning, w4a8_fused
+from repro.kernels import ref as kref
+
+
+@pytest.fixture
+def cache_tmp(tmp_path, monkeypatch):
+    """Isolate the cache: fresh dir, no checked-in baseline, no singleton."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
+    monkeypatch.setattr(autotune, "_BASELINE", tmp_path / "no_baseline.json")
+    autotune.reset()
+    yield tmp_path
+    autotune.reset()
+
+
+def _quant_leaf(rng, m, k, n, r):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    codes, sw = quantize_weight(w, W4)
+    qw = pack_int4(codes).T
+    mdiag = jnp.asarray(rng.uniform(0.5, 2.0, size=(k,)).astype(np.float32))
+    lb = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32) * 0.02)
+    la = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32) * 0.02)
+    return x, qw, sw[:, 0], mdiag, lb, la
+
+
+# -- cache store ------------------------------------------------------------
+
+def test_cache_round_trip(cache_tmp):
+    key = autotune.gemm_key(128, 2048, 2048, 64)
+    cache = autotune.AutotuneCache("cpu")
+    assert cache._loaded_from == "empty"
+    cache.put(key, (128, 512, 1024), 12.5)
+    path = cache.save()
+    assert path == autotune.cache_path("cpu")
+
+    reloaded = autotune.AutotuneCache("cpu")
+    assert reloaded._loaded_from == "user"
+    assert tuple(reloaded.lookup(key)) == (128, 512, 1024)
+    assert reloaded.get(key)["source"] == "measured"
+
+
+def test_put_refuses_off_lattice_entry(cache_tmp):
+    cache = autotune.AutotuneCache("cpu")
+    with pytest.raises(ValueError, match="lattice"):
+        cache.put(autotune.gemm_key(128, 2048, 2048, 64), (100, 512, 1024),
+                  1.0)
+
+
+@pytest.mark.parametrize("payload", [
+    '{"version": 999, "backend": "cpu", "entries": {}}',   # stale version
+    '{"version": 1, "backend": "tpu", "entries": {}}',     # wrong backend
+    '{"version": 1, "backend": "cpu"',                     # corrupt JSON
+    '[1, 2, 3]',                                           # wrong shape
+])
+def test_bad_cache_file_degrades_to_empty(cache_tmp, payload):
+    autotune.cache_path("cpu").parent.mkdir(parents=True, exist_ok=True)
+    autotune.cache_path("cpu").write_text(payload)
+    cache = autotune.AutotuneCache("cpu")   # must not raise
+    assert cache._loaded_from == "empty"
+    assert cache.entries == {}
+    assert cache.lookup(autotune.gemm_key(128, 2048, 2048, 64)) is None
+
+
+def test_demote_tombstones_entry(cache_tmp):
+    key = autotune.decode_plan_key(8, 256, 512, 64, 4)
+    cache = autotune.AutotuneCache("cpu")
+    cache.put(key, "prepared", 100.0)
+    assert cache.lookup(key) == "prepared"
+    assert cache.demote(key, "slower than displaced path")
+    assert cache.lookup(key) is None                  # consults skip it
+    cache.save()
+    reloaded = autotune.AutotuneCache("cpu")
+    assert reloaded.get(key)["disabled"] is True      # tombstone persists
+    assert reloaded.lookup(key) is None
+    assert not cache.demote("decode_plan|m1|d8|ff8|r1|L1")   # unknown key
+
+
+def test_lookup_skips_invalid_entry(cache_tmp):
+    key = autotune.gemm_key(128, 2048, 2048, 64)
+    cache = autotune.AutotuneCache("cpu")
+    cache.entries[key] = {"choice": [100, 100, 100], "us": 1.0,
+                          "source": "measured"}       # bypasses put()
+    assert cache.lookup(key) is None
+
+
+# -- entry validation (KC005's cache mode) ----------------------------------
+
+def test_validate_entry_accepts_lattice_choices():
+    ok = [
+        (autotune.gemm_key(128, 2048, 2048, 64),
+         {"choice": [128, 512, 1024]}),
+        (autotune.fused_key(1, 2048, 2048, 64), {"choice": 2048}),
+        (autotune.fused_tiles_key(64, 2048, 2048, 64),
+         {"choice": [64, 512]}),     # bm clamped to m is still == lattice∩m
+        (autotune.decode_plan_key(8, 256, 512, 64, 4),
+         {"choice": "prepared"}),
+        (autotune.paged_key(16, 2, 64, False), {"choice": False}),
+    ]
+    for key, entry in ok:
+        assert autotune.validate_entry(key, entry) is None, key
+
+
+def test_validate_entry_rejects_bad_choices():
+    bad = [
+        (autotune.gemm_key(128, 2048, 2048, 64), {"choice": [100, 512, 512]}),
+        (autotune.gemm_key(128, 2048, 2048, 64), {"choice": [128, 512]}),
+        (autotune.fused_key(1, 2048, 2048, 64), {"choice": 100}),
+        (autotune.decode_plan_key(8, 256, 512, 64, 4), {"choice": "magic"}),
+        ("warp_drive|m1|k2|n3|r4", {"choice": 1}),
+        ("w4a8_gemm|mX|k2|n3|r4", {"choice": [128, 256, 512]}),
+    ]
+    for key, entry in bad:
+        assert autotune.validate_entry(key, entry) is not None, key
+
+
+def test_validate_entry_enforces_budget():
+    key = autotune.gemm_key(512, 2048, 8192, 64)
+    entry = {"choice": [512, 512, 1024]}
+    assert autotune.validate_entry(key, entry) is None
+    small = tuning.vmem_bytes(512, 512, 1024, 64) - 1
+    assert "over budget" in autotune.validate_entry(key, entry, small)
+
+
+def test_kc005_flags_invalid_cache_entry(cache_tmp):
+    from repro.analysis import contracts
+    cache = autotune.AutotuneCache()
+    cache.put(autotune.fused_key(1, 2048, 2048, 64), 2048, 10.0)
+    cache.save()
+    assert contracts.check_autotune_cache() == []
+
+    cache.entries[autotune.gemm_key(128, 2048, 2048, 64)] = \
+        {"choice": [100, 100, 100], "us": 1.0, "source": "measured"}
+    cache.save()
+    findings = contracts.check_autotune_cache()
+    assert len(findings) == 1
+    assert findings[0].rule == "KC005"
+    assert "lattice" in findings[0].message
+
+
+# -- mode contract ----------------------------------------------------------
+
+def test_off_mode_is_bit_for_bit_modeled(cache_tmp):
+    """A populated cache must not perturb ``autotune="off"`` decisions."""
+    shape = (128, 2048, 2048, 64)
+    tuning.select_gemm_blocks.cache_clear()
+    modeled = tuning.select_gemm_blocks(*shape)
+
+    cache = autotune.get_cache()
+    cache.put(autotune.gemm_key(*shape), (256, 256, 512), 1.0)
+    cache.put(autotune.fused_key(1, 2048, 2048, 64), 128, 1.0)
+    tuning.select_gemm_blocks.cache_clear()
+
+    assert tuning.select_gemm_blocks(*shape, autotune="off") == modeled
+    assert tuning.select_gemm_blocks(*shape) == modeled     # default is off
+    assert tuning.fused_bn(1, 2048, 2048, 64, autotune="off") == \
+        tuning.fused_bn(1, 2048, 2048, 64)
+
+
+def test_cache_mode_prefers_measured_winner(cache_tmp):
+    shape = (128, 2048, 2048, 64)
+    cache = autotune.get_cache()
+    cache.put(autotune.gemm_key(*shape), (256, 256, 512), 1.0)
+    cache.put(autotune.fused_key(1, 2048, 2048, 64), 128, 1.0)
+    tuning.select_gemm_blocks.cache_clear()
+    # bm clamps to m=128; bn/bk ride through as cached
+    assert tuning.select_gemm_blocks(*shape, autotune="cache") == \
+        (128, 256, 512)
+    assert tuning.fused_bn(1, 2048, 2048, 64, autotune="cache") == 128
+    # off still modeled after the cache consult warmed the lru
+    tuning.select_gemm_blocks.cache_clear()
+    assert tuning.select_gemm_blocks(*shape, autotune="off") == \
+        tuning.select_gemm_blocks(*shape)
+
+
+def test_paged_verdict_trusts_lose_not_win(cache_tmp):
+    cache = autotune.get_cache()
+    cache.put(autotune.paged_key(16, 2, 64, False), False, 1.0)
+    assert tuning.use_paged_kernel(4, 8, 16, 2, 64)           # modeled: fits
+    assert not tuning.use_paged_kernel(4, 8, 16, 2, 64, autotune="cache")
+    # a measured "win" cannot override a budget the modeled check rejects
+    cache.put(autotune.paged_key(16, 2, 64, True), True, 1.0)
+    tiny = 16
+    assert not tuning.use_paged_kernel(4, 8, 16, 2, 64, budget=tiny,
+                                       quantized=True, autotune="cache")
+
+
+# -- bugfix 1: budget-blind table/cache hits --------------------------------
+
+def test_select_gemm_blocks_respects_shrunken_budget():
+    """Regression: the GEMM_BLOCK_TABLE hit for this shape overshoots a
+    reduced budget and used to be returned anyway."""
+    shape = (512, 2048, 8192, 64)
+    assert (tuning._m_bucket(shape[0]),) + shape[1:] in \
+        tuning.GEMM_BLOCK_TABLE
+    table = tuning.GEMM_BLOCK_TABLE[(tuning._m_bucket(shape[0]),)
+                                    + shape[1:]]
+    small = tuning.vmem_bytes(*[min(t, s) for t, s in
+                                zip(table, (shape[0], shape[2],
+                                            shape[1]))], shape[3]) - 1
+    tuning.select_gemm_blocks.cache_clear()
+    bm, bn, bk = tuning.select_gemm_blocks(*shape, budget=small)
+    assert tuning.vmem_bytes(min(bm, shape[0]), min(bn, shape[2]),
+                             min(bk, shape[1]), shape[3]) <= small
+
+
+def test_cached_gemm_hit_respects_shrunken_budget(cache_tmp):
+    shape = (128, 2048, 2048, 64)
+    cache = autotune.get_cache()
+    cache.put(autotune.gemm_key(*shape), (128, 512, 1024), 1.0)
+    small = tuning.vmem_bytes(128, 512, 1024, 64) - 1
+    tuning.select_gemm_blocks.cache_clear()
+    bm, bn, bk = tuning.select_gemm_blocks(*shape, budget=small,
+                                           autotune="cache")
+    assert tuning.vmem_bytes(min(bm, 128), min(bn, 2048),
+                             min(bk, 2048), 64) <= small
+
+
+# -- bugfix 2: the router's bn reaches the kernel ---------------------------
+
+def test_ops_threads_router_bn_to_fused_kernel(cache_tmp, rng, monkeypatch):
+    """Regression: ``ops.w4a8_linear`` gated on ``use_fused_decode`` but
+    called the fused kernel WITHOUT the router's bn — the kernel
+    re-derived it under the default budget, silently discarding a
+    measured winner (pre-fix the call site passed no ``bn`` at all)."""
+    from repro.kernels import ops
+    from repro.runtime import RuntimeConfig
+    x, qw, sw, mdiag, lb, la = _quant_leaf(rng, 4, 256, 512, 16)
+    r_pad = ops.pad_lowrank(lb, la)[0].shape[1]
+    cache = autotune.get_cache()
+    cache.put(autotune.fused_key(4, 256, 512, r_pad), 128, 1.0)
+
+    seen = {}
+    real = ops._w4a8_fused_kernel
+
+    def spy(*a, **kw):
+        seen["bn"] = kw.get("bn")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "_w4a8_fused_kernel", spy)
+    rt = RuntimeConfig(use_pallas=True, autotune="cache")
+    y = ops.w4a8_linear(x, qw, sw, mdiag, lb, la, rt=rt)
+    assert seen.get("bn") == 128, \
+        f"router tile not threaded to the kernel (saw {seen.get('bn')!r})"
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_w4a8_fused_honors_explicit_bn(rng):
+    x, qw, sw, mdiag, lb, la = _quant_leaf(rng, 4, 256, 512, 16)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    for bn in (128, 256, 512):
+        y = w4a8_fused(x, mdiag, qw, sw, lb, la, bn=bn)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=f"bn={bn}")
+
+
+def test_w4a8_fused_tiled_m_matches_single_slab(rng):
+    """The prefill-m (bm-tiled) variant computes what the one-slab kernel
+    and the reference chain compute."""
+    x, qw, sw, mdiag, lb, la = _quant_leaf(rng, 64, 256, 512, 16)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    y_slab = w4a8_fused(x, mdiag, qw, sw, lb, la, bn=256)
+    for bm in (16, 32, 64):
+        y = w4a8_fused(x, mdiag, qw, sw, lb, la, bn=256, bm=bm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_slab),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"bm={bm}")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-3, err_msg=f"bm={bm}")
+
+
+# -- the prepared decode plan -----------------------------------------------
+
+def test_aug_linear_matches_reference(rng):
+    x, qw, sw, mdiag, lb, la = _quant_leaf(rng, 4, 256, 512, 16)
+    leaf = autotune.prepare_leaf({"qw": qw, "sw": sw, "m": mdiag,
+                                  "lb": lb, "la": la})
+    assert leaf["waug"].shape == (256 + 16, 512)
+    assert leaf["blb"].shape == (256, 16)
+    assert "qw" in leaf                       # originals kept for fallbacks
+    y = autotune._aug_linear(x, leaf["waug"], leaf["blb"], mdiag)
+    y_ref = kref.w4a8_linear_ref(x, qw, sw, mdiag, lb, la)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_prepare_leaf_skips_adapter_leaves(rng):
+    _, qw, sw, mdiag, lb, la = _quant_leaf(rng, 1, 64, 64, 8)
+    leaf = {"qw": qw, "sw": sw, "m": mdiag, "lb": lb, "la": la,
+            "alb": jnp.zeros((2, 64, 4))}
+    assert autotune.prepare_leaf(leaf) is leaf    # pinned-reduction path
+
+
+def test_prepare_params_unstacks_groups(rng):
+    from repro.models.model import LayerList
+    k, n, r, L = 64, 64, 8, 3
+    stacked = {
+        "qw": jnp.zeros((L, k // 2, n), jnp.int8),
+        "sw": jnp.ones((L, n)), "m": jnp.ones((L, k)),
+        "lb": jnp.zeros((L, k, r)), "la": jnp.zeros((L, r, n)),
+    }
+    params = {"groups": {"attn": stacked}, "emb": jnp.zeros((4, k))}
+    out = autotune.prepare_params(params)
+    assert isinstance(out["groups"], LayerList)
+    assert len(out["groups"]) == L
+    assert out["groups"][0]["attn"]["waug"].shape == (k + r, n)
+    assert out["groups"][0]["attn"]["qw"].shape == (k // 2, n)
+    # idempotent: preparing prepared params is a no-op shape-wise
+    again = autotune.prepare_params(out)
+    assert isinstance(again["groups"], LayerList)
+    assert len(again["groups"]) == L
+    # fp trees come back unchanged
+    fp = {"groups": {"attn": {"w": jnp.zeros((L, k, n))}}}
+    assert autotune.prepare_params(fp) is fp
+
+
+# -- engine hook ------------------------------------------------------------
+
+def _tiny_quant_model():
+    import dataclasses
+    from repro.configs.registry import get_smoke_config
+    from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+    from repro.models import init_params
+    from repro.quant import calibrate, quantize_model, reduce_shared
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3_8b").reduced(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+            d_ff=128, vocab_size=128, dtype="float32"), remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=cfg.vocab_size))
+    tape = reduce_shared(
+        calibrate(params, cfg, corpus.calibration_batches(1, 2, 16)), cfg)
+    return cfg, quantize_model(params, tape, "aser_as")
+
+
+@pytest.mark.slow
+def test_engine_force_measures_persists_and_stays_token_exact(cache_tmp):
+    from repro.runtime import RuntimeConfig
+    from repro.serve.engine import Engine, ServeConfig
+    cfg, qparams = _tiny_quant_model()
+    scfg = ServeConfig(max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                 cfg.vocab_size)
+
+    eng_off = Engine(qparams, cfg, scfg, rt=RuntimeConfig(use_pallas=False))
+    assert eng_off.decode_plan == "default"
+    out_off = np.asarray(eng_off.generate(prompts, 8))
+
+    rt = RuntimeConfig(use_pallas=False, autotune="force")
+    eng = Engine(qparams, cfg, scfg, rt=rt)
+    key = autotune.engine_plan_key(qparams, cfg, scfg)
+    assert key is not None and key.startswith("decode_plan|m8|d64|ff128|")
+    # force measured and persisted a winner for this engine's key
+    assert autotune.cache_path().exists()
+    entry = autotune.AutotuneCache().get(key)
+    assert entry is not None
+    assert autotune.validate_entry(key, entry) is None
+    assert eng.decode_plan == entry["choice"]
+    # whichever plan won, decoded tokens are identical to the off path
+    np.testing.assert_array_equal(np.asarray(eng.generate(prompts, 8)),
+                                  out_off)
+
+    # demotion flips the cache-mode engine back to the modeled plan
+    cache = autotune.get_cache()
+    cache.demote(key, "test demotion")
+    eng2 = Engine(qparams, cfg, scfg,
+                  rt=RuntimeConfig(use_pallas=False, autotune="cache"))
+    assert eng2.decode_plan == "default"
+
+
+@pytest.mark.slow
+def test_engine_cache_mode_misses_quietly(cache_tmp):
+    from repro.runtime import RuntimeConfig
+    from repro.serve.engine import Engine, ServeConfig
+    cfg, qparams = _tiny_quant_model()
+    eng = Engine(qparams, cfg, ServeConfig(max_len=32),
+                 rt=RuntimeConfig(use_pallas=False, autotune="cache"))
+    assert eng.decode_plan == "default"       # miss → modeled routing
+    assert not autotune.cache_path().exists()  # cache mode never measures

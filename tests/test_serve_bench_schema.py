@@ -8,7 +8,10 @@ baseline subsequent PRs are measured against. v6 adds the steady-state
 sanitizer counters to continuous rows and pins them to exactly zero; v7
 adds the chunked-prefill tail-latency rows (exact TTFT/TPOT percentiles
 for both legs, ordering-checked, with the p95-TTFT and goodput
-improvement gates enforced on non-smoke baselines only).
+improvement gates enforced on non-smoke baselines only); v8 adds the
+measured-autotune columns to static rows — routed-never-slower-than-
+displaced always, and the quantized-decode-beats-fp tokens/sec gate on
+non-smoke baselines.
 """
 import math
 
@@ -17,7 +20,8 @@ import pytest
 from benchmarks.serve_bench import (ADAPTER_ROW_FIELDS, CONT_ROW_FIELDS,
                                     CONT_ROW_FIELDS_V6, KV_ROW_FIELDS,
                                     LATENCY_ROW_FIELDS, PREFIX_ROW_FIELDS,
-                                    ROW_FIELDS, SANITIZER_FIELDS, validate)
+                                    ROW_FIELDS, ROW_FIELDS_V8,
+                                    SANITIZER_FIELDS, validate)
 
 
 def _static_row(mode="fp", **over):
@@ -26,6 +30,25 @@ def _static_row(mode="fp", **over):
            "scan_decode_ms_per_tok": 0.5, "step_decode_ms_per_tok": 1.0,
            "dispatch_overhead_ms_per_tok": 0.5, "scan_speedup": 2.0}
     assert set(row) == set(ROW_FIELDS)
+    row.update(over)
+    return row
+
+
+def _static_row_v8(mode="fp", **over):
+    quant = mode == "w4a8_aser"
+    row = _static_row(mode)
+    row.update({
+        "decode_tokens_per_s": 8000.0 if quant else 2000.0,
+        "autotune": "force" if quant else "off",
+        "decode_plan": "prepared" if quant else "default",
+        "displaced_decode_ms_per_tok": 2.0 if quant else 0.5,
+        "autotune_demoted": False,
+        "decode_vs_fp": 4.0 if quant else 1.0,
+    })
+    if quant:
+        row["decode_ms_per_tok"] = 0.125
+        row["scan_decode_ms_per_tok"] = 0.125
+    assert set(row) == set(ROW_FIELDS_V8)
     row.update(over)
     return row
 
@@ -103,13 +126,16 @@ def _latency_row(mode="fp", **over):
 
 
 def _report(schema, smoke=True):
+    v8 = schema == "serve_bench/v8"
+    mk_static = _static_row_v8 if v8 else _static_row
     rep = {"schema": schema, "smoke": smoke,
            "model": {"name": "t", "n_layers": 2, "d_model": 64,
                      "vocab_size": 128},
            "decode_loop_default": "scan",
-           "rows": [_static_row("fp"), _static_row("w4a8_aser")]}
+           "rows": [mk_static("fp"), mk_static("w4a8_aser")]}
     if schema != "serve_bench/v1":
-        v6 = schema in ("serve_bench/v6", "serve_bench/v7")
+        v6 = schema in ("serve_bench/v6", "serve_bench/v7",
+                        "serve_bench/v8")
         rep["continuous_rows"] = [_cont_row("fp", v6=v6),
                                   _cont_row("w4a8_aser", v6=v6)]
     if schema not in ("serve_bench/v1", "serve_bench/v2"):
@@ -117,9 +143,10 @@ def _report(schema, smoke=True):
     if schema not in ("serve_bench/v1", "serve_bench/v2",
                       "serve_bench/v3"):
         rep["kv_rows"] = [_kv_row("fp"), _kv_row("w4a8_aser")]
-    if schema in ("serve_bench/v5", "serve_bench/v6", "serve_bench/v7"):
+    if schema in ("serve_bench/v5", "serve_bench/v6", "serve_bench/v7",
+                  "serve_bench/v8"):
         rep["adapter_rows"] = [_adapter_row()]
-    if schema == "serve_bench/v7":
+    if schema in ("serve_bench/v7", "serve_bench/v8"):
         rep["latency_rows"] = [_latency_row("fp"),
                                _latency_row("w4a8_aser")]
     return rep
@@ -130,7 +157,7 @@ def _report(schema, smoke=True):
 @pytest.mark.parametrize("schema", ["serve_bench/v1", "serve_bench/v2",
                                     "serve_bench/v3", "serve_bench/v4",
                                     "serve_bench/v5", "serve_bench/v6",
-                                    "serve_bench/v7"])
+                                    "serve_bench/v7", "serve_bench/v8"])
 def test_every_released_schema_validates(schema):
     assert validate(_report(schema)) is True
 
@@ -435,4 +462,75 @@ def test_v6_fixture_ignores_latency_rows():
     a v6 file with stray (even malformed) latency rows is still v6."""
     rep = _report("serve_bench/v6")
     rep["latency_rows"] = [_latency_row("fp", ttft_p95_tok=math.nan)]
+    assert validate(rep) is True
+
+
+# -- measured-autotune static columns (v8) ------------------------------------
+
+def test_v8_missing_autotune_column_named():
+    for field in ("decode_tokens_per_s", "autotune", "decode_plan",
+                  "displaced_decode_ms_per_tok", "autotune_demoted",
+                  "decode_vs_fp"):
+        rep = _report("serve_bench/v8")
+        del rep["rows"][1][field]
+        with pytest.raises(ValueError, match=f"missing fields.*{field}"):
+            validate(rep)
+
+
+def test_v8_bad_autotune_mode_rejected():
+    rep = _report("serve_bench/v8")
+    rep["rows"][1]["autotune"] = "always"
+    with pytest.raises(ValueError, match="bad autotune mode"):
+        validate(rep)
+    rep = _report("serve_bench/v8")
+    rep["rows"][0]["decode_plan"] = 7
+    with pytest.raises(ValueError, match="decode_plan must be a string"):
+        validate(rep)
+    rep = _report("serve_bench/v8")
+    rep["rows"][1]["autotune_demoted"] = "no"
+    with pytest.raises(ValueError, match="autotune_demoted must be a bool"):
+        validate(rep)
+
+
+def test_v8_routed_slower_than_displaced_rejected():
+    """The satellite assertion: a row reporting the autotuned routing
+    slower than the path it displaced means the bench's demotion fallback
+    failed — the file must not become the baseline."""
+    rep = _report("serve_bench/v8")
+    rep["rows"][1]["displaced_decode_ms_per_tok"] = \
+        rep["rows"][1]["decode_ms_per_tok"] / 2
+    with pytest.raises(ValueError, match="slower than the displaced"):
+        validate(rep)
+    # equal-time (a demoted row reports displaced == routed) passes
+    rep = _report("serve_bench/v8")
+    rep["rows"][1]["displaced_decode_ms_per_tok"] = \
+        rep["rows"][1]["decode_ms_per_tok"]
+    rep["rows"][1]["autotune_demoted"] = True
+    assert validate(rep) is True
+
+
+def test_v8_quant_decode_beats_fp_gate_non_smoke_only():
+    """The shipping acceptance: quantized decode tokens/sec >= fp on every
+    quant row of a real baseline; smoke rows are noise and exempt."""
+    rep = _report("serve_bench/v8", smoke=True)
+    rep["rows"][1]["decode_vs_fp"] = 0.5
+    assert validate(rep) is True
+    rep = _report("serve_bench/v8", smoke=False)
+    assert validate(rep) is True           # healthy rows pass either way
+    rep["rows"][1]["decode_vs_fp"] = 0.98
+    with pytest.raises(ValueError, match="quantized decode lost to fp"):
+        validate(rep)
+    # the gate reads quant rows only: an fp row below 1 is meaningless
+    rep = _report("serve_bench/v8", smoke=False)
+    rep["rows"][0]["decode_vs_fp"] = 0.5
+    assert validate(rep) is True
+
+
+def test_v7_fixture_ignores_autotune_columns():
+    """Pre-v8 baselines neither need the autotune columns nor get them
+    enforced: a v7 file with stray (even malformed) autotune fields is
+    still just a v7 file."""
+    rep = _report("serve_bench/v7")
+    rep["rows"][1]["decode_vs_fp"] = 0.1
+    rep["rows"][1]["autotune"] = "always"
     assert validate(rep) is True

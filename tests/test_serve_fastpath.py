@@ -265,13 +265,20 @@ def test_serve_bench_validator():
     lrow = dict({f: 1.0 for f in sb.LATENCY_ROW_FIELDS},
                 chunked_recompiles_after_warmup=0,
                 chunked_h2d_transfers_per_step=0)
+    # v8 static rows carry the measured-autotune columns
+    row8 = dict(row, decode_tokens_per_s=1.0, autotune="off",
+                decode_plan="default", displaced_decode_ms_per_tok=1.0,
+                autotune_demoted=False, decode_vs_fp=1.0)
     rows = [dict(row, mode="fp"), dict(row, mode="w4a8_aser")]
+    rows8 = [dict(row8, mode="fp"),
+             dict(row8, mode="w4a8_aser", autotune="force",
+                  decode_plan="prepared")]
     crows = [dict(crow, mode="fp"), dict(crow, mode="w4a8_aser")]
     crows6 = [dict(crow6, mode="fp"), dict(crow6, mode="w4a8_aser")]
     prows = [dict(prow, mode="fp"), dict(prow, mode="w4a8_aser")]
     krows = [dict(krow, mode="fp"), dict(krow, mode="w4a8_aser")]
     lrows = [dict(lrow, mode="fp"), dict(lrow, mode="w4a8_aser")]
-    good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows,
+    good = {"schema": sb.SCHEMA, "smoke": True, "rows": rows8,
             "continuous_rows": crows6, "prefix_rows": prows,
             "kv_rows": krows, "adapter_rows": [arow],
             "latency_rows": lrows}
@@ -295,10 +302,10 @@ def test_serve_bench_validator():
     with pytest.raises(ValueError):
         sb.validate({"schema": "nope", "rows": rows})
     with pytest.raises(ValueError):
-        sb.validate(dict(good, rows=[dict(row, mode="fp")]))
-    bad = dict(row, mode="fp", prefill_ms=float("nan"))
+        sb.validate(dict(good, rows=[dict(row8, mode="fp")]))
+    bad = dict(row8, mode="fp", prefill_ms=float("nan"))
     with pytest.raises(ValueError):
-        sb.validate(dict(good, rows=[bad, dict(row, mode="w4a8_aser")]))
+        sb.validate(dict(good, rows=[bad, dict(row8, mode="w4a8_aser")]))
     # v2 without goodput rows is invalid; v2 demands positive goodput
     with pytest.raises(ValueError, match="continuous"):
         sb.validate({"schema": sb.SCHEMA_V2, "rows": rows})

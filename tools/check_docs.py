@@ -152,7 +152,8 @@ def run_quickstart() -> list:
             continue
         # never let a documented command clobber the checked-in baseline:
         # full-bench invocations are exercised against a scratch output
-        if "serve_bench" in cmd and "--validate" not in cmd:
+        if ("serve_bench" in cmd or "kernels_bench" in cmd) \
+                and "--validate" not in cmd:
             if "--smoke" not in cmd:
                 runnable = cmd + " --smoke"
             if "--out" not in cmd:
